@@ -1,0 +1,49 @@
+//! Head-to-head on one model: OURS vs the four state-of-the-art
+//! baselines plus NSGA-II — a one-model slice of Fig 7 + Fig 9.
+//!
+//! ```bash
+//! cargo run --release --example baseline_compare -- [model] [episodes]
+//! ```
+
+use anyhow::Result;
+use hapq::config::RunConfig;
+use hapq::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "vgg11".into());
+    let episodes: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let cfg = RunConfig {
+        episodes,
+        warmup: (episodes / 10).max(4),
+        reward_subset: 128,
+        out: "results/compare".into(),
+        ..RunConfig::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+
+    println!(
+        "{:<8} {:>11} {:>13} {:>12} {:>8} {:>8}",
+        "method", "energy-gain", "test-acc-loss", "val-acc-loss", "evals", "secs"
+    );
+    for method in ["ours", "amc", "haq", "asqj", "opq", "nsga2"] {
+        let report = if method == "ours" {
+            coord.compress(&model, false)?
+        } else {
+            coord.run_baseline(&model, method)?
+        };
+        coord.save_report(&report)?;
+        println!(
+            "{:<8} {:>10.1}% {:>12.2}% {:>11.2}% {:>8} {:>7.1}s",
+            method,
+            report.best.energy_gain * 100.0,
+            report.test_acc_loss() * 100.0,
+            report.best.acc_loss * 100.0,
+            report.evals,
+            report.wall_secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! END-TO-END DRIVER (DESIGN.md §4, row E2E — the required full-system
+//! validation): compress vgg11/synth-c10 with the complete composite-RL
+//! stack, logging the per-episode reward curve, then verify the final
+//! policy on the held-out test split and cross-check the L1 Pallas-path
+//! executable against the default XLA-conv executable.
+//!
+//! Proves all layers compose: Pallas kernel (L1) → JAX graph (L2) → HLO
+//! text → PJRT runtime → pruning/quantization/energy/RL (L3).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_e2e
+//! # env knobs: HAPQ_EPISODES (default 120)
+//! ```
+
+use anyhow::Result;
+use hapq::config::RunConfig;
+use hapq::coordinator::Coordinator;
+use hapq::runtime::{InferenceSession, Split};
+
+fn main() -> Result<()> {
+    let episodes: usize = std::env::var("HAPQ_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let cfg = RunConfig {
+        episodes,
+        warmup: (episodes / 10).max(5),
+        reward_subset: 128,
+        out: "results/e2e".into(),
+        ..RunConfig::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+    let model = "vgg11";
+
+    // --- full compression run, logging the loss/reward curve ---
+    let t0 = std::time::Instant::now();
+    let report = coord.compress(model, true)?;
+    println!("\n== reward curve (episode, reward) ==");
+    for (i, r) in report.reward_curve.iter().enumerate() {
+        if i % (episodes / 20).max(1) == 0 || i + 1 == report.reward_curve.len() {
+            println!("  {i:4}  {r:8.2}");
+        }
+    }
+    println!(
+        "\n== result == energy gain {:.1}% | val loss {:.2}% | test acc {:.3} (dense {:.3}) | {:.1}s",
+        report.best.energy_gain * 100.0,
+        report.best.acc_loss * 100.0,
+        report.test_acc,
+        report.test_acc_dense,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- L1 composition proof: Pallas-kernel executable == XLA-conv one ---
+    let entry = coord.entry(model)?.clone();
+    if let Some(pallas_hlo) = entry.pallas_hlo.clone() {
+        println!("\n== verifying Pallas-path executable ==");
+        let (arch, weights, e) = coord.load_arch(model)?;
+        let data = coord.cfg.artifacts.join(format!("{}.data.npz", e.dataset));
+        let hlo = coord.cfg.artifacts.join(&e.hlo);
+        let n = arch.prunable.len();
+        let bits = vec![6.0f32; n];
+        let lax = InferenceSession::new(
+            &coord.runtime, &arch, &hlo,
+            &data, Split::Test, 128,
+        )?;
+        let pal = InferenceSession::with_batch(
+            &coord.runtime, &arch, &coord.cfg.artifacts.join(&pallas_hlo),
+            &data, Split::Test, 128, entry.pallas_batch,
+        )?;
+        let acc_lax = lax.accuracy(&weights, &bits)?;
+        let acc_pal = pal.accuracy(&weights, &bits)?;
+        println!("  XLA-conv path acc@6bit: {acc_lax:.4}");
+        println!("  Pallas-path  acc@6bit: {acc_pal:.4}");
+        anyhow::ensure!(
+            (acc_lax - acc_pal).abs() < 0.02,
+            "Pallas and XLA paths disagree"
+        );
+        println!("  MATCH — L1 kernel composes through the full stack");
+    }
+    let path = coord.save_report(&report)?;
+    println!("\nreport -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load a model artifact, inspect it, run a handful of
+//! compression episodes and print what the framework found.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use hapq::config::RunConfig;
+use hapq::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let cfg = RunConfig {
+        episodes: 30,
+        warmup: 6,
+        reward_subset: 128,
+        out: "results/quickstart".into(),
+        ..RunConfig::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+
+    println!("== models in artifacts/ ==");
+    for e in &coord.models {
+        println!("  {:<14} ({})", e.model, e.dataset);
+    }
+
+    let model = "vgg11";
+    let (arch, weights, _) = coord.load_arch(model)?;
+    println!(
+        "\n== {model} == {} prunable layers, {} params, dense 8-bit acc {:.3}",
+        arch.prunable.len(),
+        weights.n_params(),
+        arch.acc_int8
+    );
+
+    println!("\ncompressing ({} episodes)...", coord.cfg.episodes);
+    let report = coord.compress(model, true)?;
+    println!(
+        "\nbest: energy gain {:.1}%, val acc loss {:.2}%, test acc {:.3} (dense {:.3})",
+        report.best.energy_gain * 100.0,
+        report.best.acc_loss * 100.0,
+        report.test_acc,
+        report.test_acc_dense,
+    );
+    println!("\nper-layer policy:");
+    for (i, a) in report.best.per_layer.iter().enumerate() {
+        println!(
+            "  layer {i:2}  {:<12} sparsity {:.2}  bits {}",
+            a.alg.name(),
+            a.sparsity,
+            a.bits
+        );
+    }
+    let path = coord.save_report(&report)?;
+    println!("\nreport -> {}", path.display());
+    Ok(())
+}

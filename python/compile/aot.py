@@ -1,0 +1,217 @@
+"""AOT exporter: train → calibrate → lower to HLO text → write artifacts.
+
+Python runs ONCE (`make artifacts`); the Rust coordinator is then fully
+self-contained. Interchange is HLO *text* — jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Exported graph signature (DESIGN.md §5), one executable per model:
+
+    f(w0, b0, …, wP, bP, act_bits[f32; P], images[B,H,W,C]) -> (logits,)
+
+so Rust feeds pruned + fake-quantized weights and per-layer activation
+precisions at every RL step without retracing or recompiling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import arch as archmod
+from . import datasets as dsmod
+from .model import forward
+from .train import calibrate, eval_quantized, train
+
+BATCH = 256  # fixed inference batch of the exported executable
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_hlo(spec, act_scales, batch, conv_impl="lax"):
+    """Lower the quantized-inference graph; returns HLO text."""
+    prunable = spec["prunable"]
+    by_name = {L["name"]: L for L in spec["layers"]}
+    nP = len(prunable)
+    sc = jnp.asarray(act_scales)
+
+    def fn(*args):
+        params = {
+            name: (args[2 * i], args[2 * i + 1]) for i, name in enumerate(prunable)
+        }
+        act_bits = args[2 * nP]
+        images = args[2 * nP + 1]
+        return (
+            forward(spec, params, images, act_bits=act_bits, act_scales=sc,
+                    conv_impl=conv_impl),
+        )
+
+    specs = []
+    for name in prunable:
+        L = by_name[name]
+        if L["op"] == "conv":
+            wshape = (L["k"], L["k"], L["in_ch"], L["out_ch"])
+        elif L["op"] == "dwconv":
+            wshape = (L["k"], L["k"], 1, L["out_ch"])  # HW1C
+        else:
+            wshape = (L["in_ch"], L["out_ch"])
+        specs.append(jax.ShapeDtypeStruct(wshape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((L["out_ch"],), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((nP,), jnp.float32))
+    h, w, c = spec["input"]
+    specs.append(jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def export_qmatmul(out_dir):
+    """Standalone L1 kernel HLO for the Rust runtime unit test."""
+    from .kernels.qmatmul import qmatmul
+
+    def fn(x, w, lo, hi, step):
+        return (qmatmul(x, w, lo, hi, step),)
+
+    specs = (
+        jax.ShapeDtypeStruct((64, 48), jnp.float32),
+        jax.ShapeDtypeStruct((48, 32), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(os.path.join(out_dir, "qmatmul_pallas.hlo.txt"), "w") as f:
+        f.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=os.environ.get("HAPQ_MODELS", ""))
+    ap.add_argument(
+        "--steps", type=int, default=int(os.environ.get("HAPQ_TRAIN_STEPS", "600"))
+    )
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    model_names = (
+        [m for m in args.models.split(",") if m]
+        if args.models
+        else list(archmod.MODELS.keys())
+    )
+
+    # ---- datasets ----------------------------------------------------------
+    needed = {archmod.MODELS[m][1] for m in model_names}
+    data = {}
+    for ds in sorted(needed):
+        t0 = time.time()
+        n_train = 12288 if ds == "synth-c100" else 8192
+        tr, va, te = dsmod.splits(ds, n_train, 512, 1024, seed=7)
+        data[ds] = (tr, va, te)
+        np.savez(
+            os.path.join(out, f"{ds}.data.npz"),
+            X_val=va[0], y_val=va[1].astype(np.int32),
+            X_test=te[0], y_test=te[1].astype(np.int32),
+        )
+        print(f"[data] {ds}: train {len(tr[0])} val {len(va[0])} test {len(te[0])} "
+              f"({time.time()-t0:.1f}s)")
+
+    # merge with an existing manifest so partial (--models) rebuilds keep
+    # the untouched entries
+    manifest_path = os.path.join(out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest["models"] = [
+            m for m in manifest.get("models", []) if m["model"] not in model_names
+        ]
+    else:
+        manifest = {"batch": BATCH, "models": [], "datasets": {}}
+    for ds in sorted(needed):
+        classes, h, w, _, _ = dsmod.DATASETS[ds]
+        manifest["datasets"][ds] = {
+            "data": f"{ds}.data.npz", "input": [h, w, 3], "classes": classes,
+        }
+
+    # ---- models ------------------------------------------------------------
+    for name in model_names:
+        spec = archmod.build(name)
+        ds = spec["dataset"]
+        tr, va, te = data[ds]
+        nparams = 0
+        t0 = time.time()
+        print(f"[train] {name} on {ds} ({len(spec['prunable'])} prunable layers)")
+        # harder datasets get proportionally more optimisation steps; deep
+        # plain-VGG stacks (no BN) need a gentler learning rate to escape
+        # the dead-ReLU plateau
+        mult = {"synth-c10": 1, "synth-c100": 3, "synth-inet": 2}[ds]
+        mult *= {"vgg16": 2, "vgg19": 3, "resnet34": 2, "squeezenet": 2}.get(name, 1)
+        lr = 1e-3 if name in ("vgg16", "vgg19") else 2e-3
+        params, hist = train(spec, tr, va, steps=args.steps * mult, lr=lr, seed=42)
+        act_scales, act_signed, sal, chsq = calibrate(
+            spec, params, tr[0][:256], tr[1][:256]
+        )
+        spec["act_signed"] = act_signed  # static: baked into the export
+        acc8 = eval_quantized(spec, params, act_scales, te[0], te[1], bits=8.0)
+        print(f"[train] {name}: test acc @8bit-act {acc8:.3f} "
+              f"({time.time()-t0:.1f}s)")
+
+        # weights + calibration npz
+        blobs = {"act_scale": act_scales}
+        for lname in spec["prunable"]:
+            wq, bq = params[lname]
+            blobs[f"w:{lname}"] = np.asarray(wq, dtype=np.float32)
+            blobs[f"b:{lname}"] = np.asarray(bq, dtype=np.float32)
+            blobs[f"sal:{lname}"] = sal[lname]
+            blobs[f"chsq:{lname}"] = chsq[lname]
+            nparams += wq.size + bq.size
+        np.savez(os.path.join(out, f"{name}__{ds}.weights.npz"), **blobs)
+
+        # arch json (+ calibration metadata for Rust)
+        spec_out = dict(spec)
+        spec_out["act_scales"] = [float(x) for x in act_scales]
+        spec_out["acc_int8"] = acc8
+        spec_out["batch"] = BATCH
+        spec_out["n_params"] = int(nparams)
+        with open(os.path.join(out, f"{name}__{ds}.arch.json"), "w") as f:
+            json.dump(spec_out, f, indent=1)
+
+        # HLO export (lax conv path; plus Pallas path for vgg11)
+        text = export_hlo(spec, act_scales, BATCH)
+        with open(os.path.join(out, f"{name}__{ds}.hlo.txt"), "w") as f:
+            f.write(text)
+        entry = {
+            "model": name, "dataset": ds,
+            "hlo": f"{name}__{ds}.hlo.txt",
+            "weights": f"{name}__{ds}.weights.npz",
+            "arch": f"{name}__{ds}.arch.json",
+            "acc_int8": acc8,
+        }
+        if name == "vgg11":
+            tp = export_hlo(spec, act_scales, 64, conv_impl="pallas")
+            with open(os.path.join(out, f"{name}__{ds}.pallas.hlo.txt"), "w") as f:
+                f.write(tp)
+            entry["pallas_hlo"] = f"{name}__{ds}.pallas.hlo.txt"
+            entry["pallas_batch"] = 64
+        manifest["models"].append(entry)
+        print(f"[aot] {name}: HLO {len(text)/1e6:.2f} MB, {nparams} params")
+
+    export_qmatmul(out)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models -> {out}")
+
+
+if __name__ == "__main__":
+    main()

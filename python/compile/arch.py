@@ -1,0 +1,315 @@
+"""Architecture specs for the nine mini CNNs (DESIGN.md §1 substitution).
+
+A spec is a JSON-serialisable dict shared verbatim with the Rust side
+(`rust/src/model/`). Layers form a DAG over named tensors; ops:
+
+  conv    — 2D conv, NHWC, weights HWIO, optional ReLU
+  dwconv  — depthwise conv (channels = input channels), weights HWC1
+  fc      — dense, weights [in, out]
+  maxpool / gap / flatten / add / concat — parameter-free plumbing
+
+Prunable layers are those with weights (conv/dwconv/fc). `dep_groups`
+lists sets of prunable layers whose *output-channel* coarse-pruning
+masks must be identical (residual adds; depthwise convs couple to their
+producer) — the §4.1 dependency-resolution input for the Rust env.
+"""
+
+from __future__ import annotations
+
+from .datasets import DATASETS
+
+
+def _conv(name, inp, out_ch, k=3, stride=1, relu=True):
+    return {
+        "name": name, "op": "conv", "inputs": [inp], "out_ch": out_ch,
+        "k": k, "stride": stride, "relu": relu,
+    }
+
+
+def _dwconv(name, inp, k=3, stride=1, relu=True):
+    return {"name": name, "op": "dwconv", "inputs": [inp], "k": k,
+            "stride": stride, "relu": relu}
+
+
+def _fc(name, inp, out, relu=False):
+    return {"name": name, "op": "fc", "inputs": [inp], "out": out, "relu": relu}
+
+
+def _pool(name, inp, k=2):
+    return {"name": name, "op": "maxpool", "inputs": [inp], "k": k, "stride": k}
+
+
+def _gap(name, inp):
+    return {"name": name, "op": "gap", "inputs": [inp]}
+
+
+def _flat(name, inp):
+    return {"name": name, "op": "flatten", "inputs": [inp]}
+
+
+def _add(name, a, b, relu=False):
+    # relu=True is the classic ResNet post-add ReLU; MobileNetV2 keeps
+    # linear bottleneck adds (relu=False) — its consumers then need
+    # *signed* activation quantization (see calibrate()).
+    return {"name": name, "op": "add", "inputs": [a, b], "relu": relu}
+
+
+def _concat(name, a, b):
+    return {"name": name, "op": "concat", "inputs": [a, b]}
+
+
+# ----------------------------------------------------------------------------
+# VGG family — width ladder scaled /4 from the originals, capped at 128.
+# 'M' = maxpool. Two FC layers at the head (fine-prunable, per paper Fig 8).
+_VGG_CFG = {
+    "vgg11": [16, "M", 32, "M", 64, 64, "M", 96, 96, "M", 128, 128],
+    "vgg13": [16, 16, "M", 32, 32, "M", 64, 64, "M", 96, 96, "M", 128, 128],
+    "vgg16": [16, 16, "M", 32, 32, "M", 64, 64, 64, "M", 96, 96, 96, "M", 128, 128, 128],
+    "vgg19": [16, 16, "M", 32, 32, "M", 64, 64, 64, 64, "M", 96, 96, 96, 96, "M",
+              128, 128, 128, 128],
+}
+
+
+def vgg(kind, classes):
+    layers, prev, i = [], "input", 0
+    for v in _VGG_CFG[kind]:
+        if v == "M":
+            layers.append(_pool(f"pool{i}", prev)); prev = f"pool{i}"
+        else:
+            layers.append(_conv(f"conv{i}", prev, v)); prev = f"conv{i}"
+        i += 1
+    layers += [_gap("gap", prev), _flat("flat", "gap"),
+               _fc("fc1", "flat", 96, relu=True), _fc("fc2", "fc1", classes)]
+    return layers, []
+
+
+# ----------------------------------------------------------------------------
+# ResNet family — real residual topology (identity + 1x1-conv shortcuts).
+def resnet(blocks, widths, classes, bottleneck=False, expansion=2):
+    layers = [_conv("stem", "input", widths[0])]
+    prev, prev_ch = "stem", widths[0]
+    groups = []
+    bi = 0
+    for si, (n, w) in enumerate(zip(blocks, widths)):
+        for j in range(n):
+            stride = 2 if (si > 0 and j == 0) else 1
+            out_ch = w * expansion if bottleneck else w
+            pre = prev
+            if bottleneck:
+                layers.append(_conv(f"b{bi}_c1", prev, w, k=1))
+                layers.append(_conv(f"b{bi}_c2", f"b{bi}_c1", w, k=3, stride=stride))
+                layers.append(_conv(f"b{bi}_c3", f"b{bi}_c2", out_ch, k=1, relu=False))
+                last = f"b{bi}_c3"
+            else:
+                layers.append(_conv(f"b{bi}_c1", prev, w, k=3, stride=stride))
+                layers.append(_conv(f"b{bi}_c2", f"b{bi}_c1", out_ch, k=3, relu=False))
+                last = f"b{bi}_c2"
+            if stride != 1 or prev_ch != out_ch:
+                layers.append(_conv(f"b{bi}_sc", pre, out_ch, k=1, stride=stride,
+                                    relu=False))
+                sc = f"b{bi}_sc"
+                groups.append([last, sc])
+            else:
+                sc = pre
+                # identity shortcut: add couples `last` with the producer of
+                # `pre` — handled generically below via the add-op scan.
+            layers.append(_add(f"b{bi}_add", last, sc, relu=True))
+            prev, prev_ch = f"b{bi}_add", out_ch
+            bi += 1
+    layers += [_gap("gap", prev), _flat("flat", "gap"),
+               _fc("fc1", "flat", 96, relu=True), _fc("fc2", "fc1", classes)]
+    return layers, groups
+
+
+# ----------------------------------------------------------------------------
+# MobileNetV2-mini — inverted residuals with depthwise convs.
+def mobilenetv2(classes):
+    # (expand t, out channels c, repeats n, stride s) — width-scaled
+    cfg = [(1, 8, 1, 1), (4, 12, 2, 2), (4, 16, 2, 2), (4, 24, 2, 1)]
+    layers = [_conv("stem", "input", 8)]
+    prev, prev_ch, bi = "stem", 8, 0
+    groups = []
+    for t, c, n, s in cfg:
+        for j in range(n):
+            stride = s if j == 0 else 1
+            pre = prev
+            hid = prev_ch * t
+            if t != 1:
+                layers.append(_conv(f"m{bi}_ex", prev, hid, k=1))
+                prev = f"m{bi}_ex"
+            layers.append(_dwconv(f"m{bi}_dw", prev, k=3, stride=stride))
+            layers.append(_conv(f"m{bi}_pj", f"m{bi}_dw", c, k=1, relu=False))
+            last = f"m{bi}_pj"
+            if stride == 1 and prev_ch == c:
+                layers.append(_add(f"m{bi}_add", last, pre))
+                prev = f"m{bi}_add"
+            else:
+                prev = last
+            prev_ch = c
+            bi += 1
+    layers += [_conv("head", prev, 64, k=1), _gap("gap", "head"),
+               _flat("flat", "gap"), _fc("fc", "flat", classes)]
+    return layers, groups
+
+
+# ----------------------------------------------------------------------------
+# SqueezeNet-mini — fire modules (squeeze 1x1 → expand 1x1 ∥ 3x3, concat).
+def squeezenet(classes):
+    def fire(i, inp, s, e):
+        return [
+            _conv(f"f{i}_sq", inp, s, k=1),
+            _conv(f"f{i}_e1", f"f{i}_sq", e, k=1),
+            _conv(f"f{i}_e3", f"f{i}_sq", e, k=3),
+            _concat(f"f{i}_cat", f"f{i}_e1", f"f{i}_e3"),
+        ]
+
+    layers = [_conv("stem", "input", 16, stride=2)]
+    layers += fire(0, "stem", 4, 8) + fire(1, "f0_cat", 4, 8)
+    layers.append(_pool("pool1", "f1_cat"))
+    layers += fire(2, "pool1", 8, 16) + fire(3, "f2_cat", 8, 16)
+    layers.append(_pool("pool2", "f3_cat"))
+    layers += fire(4, "pool2", 12, 24)
+    layers += [_conv("head", "f4_cat", classes, k=1), _gap("gap", "head"),
+               _flat("flat", "gap")]
+    return layers, []
+
+
+# ----------------------------------------------------------------------------
+MODELS = {
+    # model name -> (builder, dataset)   — mirrors the paper's §5.1 grid
+    "vgg11": (lambda c: vgg("vgg11", c), "synth-c10"),
+    "vgg13": (lambda c: vgg("vgg13", c), "synth-c10"),
+    "resnet18": (lambda c: resnet([2, 2, 2, 2], [16, 24, 32, 48], c), "synth-c10"),
+    "vgg16": (lambda c: vgg("vgg16", c), "synth-c100"),
+    "resnet34": (lambda c: resnet([3, 4, 6, 3], [16, 24, 32, 48], c), "synth-c100"),
+    "mobilenetv2": (mobilenetv2, "synth-c100"),
+    "vgg19": (lambda c: vgg("vgg19", c), "synth-inet"),
+    "resnet50": (lambda c: resnet([3, 4, 6, 3], [12, 16, 24, 32], c,
+                                  bottleneck=True), "synth-inet"),
+    "squeezenet": (squeezenet, "synth-inet"),
+}
+
+
+def infer_shapes(layers, input_hw, in_ch=3):
+    """Annotate each layer with in/out shapes [H, W, C] (or [F] post-flatten)."""
+    shapes = {"input": (input_hw[0], input_hw[1], in_ch)}
+    for L in layers:
+        ins = [shapes[i] for i in L["inputs"]]
+        op = L["op"]
+        if op == "conv":
+            h, w, c = ins[0]
+            s = L["stride"]
+            oh, ow = (h + s - 1) // s, (w + s - 1) // s  # SAME padding
+            L["in_shape"], L["out_shape"] = list(ins[0]), [oh, ow, L["out_ch"]]
+            L["in_ch"] = c
+            shapes[L["name"]] = (oh, ow, L["out_ch"])
+        elif op == "dwconv":
+            h, w, c = ins[0]
+            s = L["stride"]
+            oh, ow = (h + s - 1) // s, (w + s - 1) // s
+            L["in_shape"], L["out_shape"] = list(ins[0]), [oh, ow, c]
+            L["in_ch"], L["out_ch"] = c, c
+            shapes[L["name"]] = (oh, ow, c)
+        elif op == "fc":
+            f = ins[0][0] if len(ins[0]) == 1 else ins[0][0] * ins[0][1] * ins[0][2]
+            L["in_shape"], L["out_shape"] = [f], [L["out"]]
+            L["in_ch"], L["out_ch"] = f, L["out"]
+            shapes[L["name"]] = (L["out"],)
+        elif op == "maxpool":
+            h, w, c = ins[0]
+            k = L["k"]
+            shapes[L["name"]] = (max(1, h // k), max(1, w // k), c)
+            L["in_shape"] = list(ins[0])
+            L["out_shape"] = list(shapes[L["name"]])
+        elif op == "gap":
+            h, w, c = ins[0]
+            shapes[L["name"]] = (c,)
+            L["in_shape"], L["out_shape"] = list(ins[0]), [c]
+        elif op == "flatten":
+            t = ins[0]
+            f = t[0] if len(t) == 1 else t[0] * t[1] * t[2]
+            shapes[L["name"]] = (f,)
+            L["in_shape"], L["out_shape"] = list(t), [f]
+        elif op == "add":
+            assert ins[0] == ins[1], f"add shape mismatch {L['name']}: {ins}"
+            shapes[L["name"]] = ins[0]
+            L["in_shape"], L["out_shape"] = list(ins[0]), list(ins[0])
+        elif op == "concat":
+            (h, w, c1), (h2, w2, c2) = ins
+            assert (h, w) == (h2, w2)
+            shapes[L["name"]] = (h, w, c1 + c2)
+            L["in_shape"], L["out_shape"] = [h, w, c1 + c2], [h, w, c1 + c2]
+        else:
+            raise ValueError(op)
+    return layers
+
+
+def weight_producers(layers, tensor, by_name):
+    """Nearest prunable ancestors that determine `tensor`'s channel layout."""
+    if tensor == "input":
+        return []
+    L = by_name[tensor]
+    if L["op"] in ("conv", "dwconv", "fc"):
+        return [L["name"]]
+    if L["op"] == "concat":
+        return []  # concat decouples channel masks
+    out = []
+    for i in L["inputs"]:
+        out += weight_producers(layers, i, by_name)
+    return out
+
+
+def dep_groups(layers, extra):
+    """Union-find over coarse-pruning channel couplings (DESIGN.md §6)."""
+    by_name = {L["name"]: L for L in layers}
+    parent = {}
+
+    def find(x):
+        parent.setdefault(x, x)
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    for L in layers:
+        if L["op"] == "add":
+            prods = []
+            for i in L["inputs"]:
+                prods += weight_producers(layers, i, by_name)
+            for a, b in zip(prods, prods[1:]):
+                union(a, b)
+        if L["op"] == "dwconv":
+            # depthwise channels == producer's output channels
+            prods = weight_producers(layers, L["inputs"][0], by_name)
+            for p in prods:
+                union(L["name"], p)
+    for g in extra:
+        for a, b in zip(g, g[1:]):
+            union(a, b)
+    groups = {}
+    for x in parent:
+        groups.setdefault(find(x), []).append(x)
+    return [sorted(g) for g in groups.values() if len(g) > 1]
+
+
+def build(model_name: str):
+    """Full spec dict for one (model, dataset) pair."""
+    builder, ds = MODELS[model_name]
+    classes, h, w, _, _ = DATASETS[ds]
+    layers, extra = builder(classes)
+    layers = infer_shapes(layers, (h, w))
+    prunable = [L["name"] for L in layers if L["op"] in ("conv", "dwconv", "fc")]
+    return {
+        "name": model_name,
+        "dataset": ds,
+        "input": [h, w, 3],
+        "classes": classes,
+        "layers": layers,
+        "prunable": prunable,
+        "dep_groups": dep_groups(layers, extra),
+    }

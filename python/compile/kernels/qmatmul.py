@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled matmul with fused activation fake-quantization.
+
+The paper's reward oracle runs validation inference at *every* RL step
+(§4.2.3); its hot-spot is the im2col convolution matmul. The kernel
+fuses the per-layer activation fake-quantization (paper §4.1) into the
+tile load, so activations never round-trip to HBM at full precision.
+
+TPU mapping (DESIGN.md §2/§8): grid over (M/bm, N/bn) output tiles; each
+program holds an (bm, K) activation tile and (K, bn) weight tile in VMEM
+(BlockSpec), accumulates in f32 — MXU-shaped, bf16-ready. On this image
+Pallas MUST run interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU perf is estimated from the BlockSpec footprint
+in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: VMEM footprint = (bm*K + K*bn + bm*bn) * 4B.
+# For K <= 1152 (3x3x128 im2col) and bm=bn=128: ~1.3 MB — well under VMEM.
+BM, BN = 128, 128
+
+
+def _kernel(x_ref, w_ref, lo_ref, hi_ref, step_ref, o_ref):
+    lo = lo_ref[0, 0]
+    hi = hi_ref[0, 0]
+    step = step_ref[0, 0]
+    x = x_ref[...]
+    xq = jnp.round((jnp.clip(x, lo, hi) - lo) / step) * step + lo
+    o_ref[...] = xq @ w_ref[...]
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def qmatmul(x, w, lo, hi, step, bm=BM, bn=BN):
+    """Fused fake-quant(x) @ w via Pallas. x:[M,K] w:[K,N] -> [M,N].
+
+    M and N are padded up to the tile grid. Padding the *activation* rows
+    with zeros is safe for any quantization grid: fake_quant(0) lands on
+    some grid value q0, those rows are sliced away below; padded weight
+    columns are zero so extra N columns are sliced away likewise.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    xp = _pad_to(x, bm, 0)
+    wp = _pad_to(w, bn, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    lo2 = jnp.reshape(jnp.asarray(lo, jnp.float32), (1, 1))
+    hi2 = jnp.reshape(jnp.asarray(hi, jnp.float32), (1, 1))
+    step2 = jnp.reshape(jnp.asarray(step, jnp.float32), (1, 1))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, lo2, hi2, step2)
+    return out[:m, :n]
+
+
+def vmem_bytes(k, bm=BM, bn=BN):
+    """VMEM footprint estimate of one program instance (DESIGN.md §8)."""
+    return 4 * (bm * k + k * bn + bm * bn + 2)
+
+
+def mxu_utilization(m, n, k, bm=BM, bn=BN, mxu=128):
+    """Fraction of MXU-issue slots doing useful work for this shape."""
+    import math
+
+    useful = m * n * k
+    issued = (
+        math.ceil(m / bm) * math.ceil(n / bn) * bm * bn
+        * math.ceil(k / mxu) * mxu
+    )
+    return useful / issued

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused quantize-matmul kernel (L1 correctness).
+
+This is the reference semantics the Pallas kernel must reproduce bit-for
+-bit (up to f32 accumulation order): asymmetric, clipped, linear
+fake-quantization of the activation operand (paper §4.1 — per-layer
+precision, Laplace clipping after Banner et al. [21]) fused with the
+matmul that consumes it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Optimal clipping ratio alpha*/b for a Laplace(b) distribution, bits 2..8
+# (Banner et al., "Post training 4-bit quantization", NeurIPS 2019).
+LAPLACE_CLIP = jnp.array([2.83, 3.89, 5.03, 6.20, 7.41, 8.64, 9.90],
+                         dtype=jnp.float32)
+
+
+def quant_params(bits, act_scale, signed=False):
+    """(lo, hi, step) for fake-quantizing an activation tensor.
+
+    `bits` may be a traced f32 scalar; it is rounded and clamped to [2, 8]
+    in-graph so a single compiled executable serves every precision.
+    Post-ReLU tensors use the one-sided grid [0, alpha]; signed tensors
+    (e.g. MobileNetV2 linear-bottleneck outputs) use [-alpha, alpha].
+    """
+    b = jnp.clip(jnp.round(bits), 2.0, 8.0)
+    idx = (b - 2.0).astype(jnp.int32)
+    alpha = act_scale * jnp.take(LAPLACE_CLIP, idx, mode="clip")
+    levels = jnp.exp2(b) - 1.0
+    if signed:
+        return -alpha, alpha, 2.0 * alpha / levels
+    return jnp.zeros_like(alpha), alpha, alpha / levels
+
+
+def fake_quant(x, lo, hi, step):
+    """Asymmetric clipped linear fake-quant onto the [lo, hi] grid."""
+    return jnp.round((jnp.clip(x, lo, hi) - lo) / step) * step + lo
+
+
+def qmatmul_ref(x, w, lo, hi, step):
+    """Reference: fake-quantize `x`, then x @ w. x:[M,K] w:[K,N]."""
+    return fake_quant(x, lo, hi, step) @ w

@@ -1,0 +1,215 @@
+"""L2: functional JAX forward pass for the mini-CNN zoo.
+
+A single graph interpreter executes the arch specs from `arch.py` in two
+modes:
+
+  * float training mode (`act_bits=None`) — used by `train.py`;
+  * quantized inference mode — the AOT-exported graph. Every prunable
+    layer fake-quantizes its *input* activations to `act_bits[i]` using
+    the per-layer Laplace scale measured at calibration (paper §4.1:
+    same precision for weights and activations of a layer; weights are
+    fake-quantized on the Rust side before being fed in).
+
+`conv_impl` selects the convolution path:
+  * "lax"    — XLA's native conv (fast; default export);
+  * "pallas" — im2col + the L1 fused quant-matmul kernel, proving the
+    three-layer composition (exported for vgg11 and unit-tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.qmatmul import qmatmul
+
+
+def init_params(spec, seed=0):
+    """He-normal init; returns {layer_name: (w, b)} for prunable layers."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for L in spec["layers"]:
+        if L["op"] == "conv":
+            k, cin, cout = L["k"], L["in_ch"], L["out_ch"]
+            key, sub = jax.random.split(key)
+            fan_in = k * k * cin
+            w = jax.random.normal(sub, (k, k, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+            params[L["name"]] = (w.astype(jnp.float32), jnp.zeros((cout,), jnp.float32))
+        elif L["op"] == "dwconv":
+            # HW1C: lax group-conv expects rhs I = lhs_C/groups = 1, O = C
+            k, c = L["k"], L["in_ch"]
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (k, k, 1, c)) * jnp.sqrt(2.0 / (k * k))
+            params[L["name"]] = (w.astype(jnp.float32), jnp.zeros((c,), jnp.float32))
+        elif L["op"] == "fc":
+            fin, fout = L["in_ch"], L["out_ch"]
+            key, sub = jax.random.split(key)
+            w = jax.random.normal(sub, (fin, fout)) * jnp.sqrt(2.0 / fin)
+            params[L["name"]] = (w.astype(jnp.float32), jnp.zeros((fout,), jnp.float32))
+    return params
+
+
+def _same_pad(h, k, s):
+    """Explicit SAME padding (lo, hi) for one spatial dim."""
+    out = (h + s - 1) // s
+    pad = max(0, (out - 1) * s + k - h)
+    return (pad // 2, pad - pad // 2)
+
+
+def _conv_lax(x, w, stride, groups=1):
+    h, wdim = x.shape[1], x.shape[2]
+    k = w.shape[0]
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride),
+        [_same_pad(h, k, stride), _same_pad(wdim, k, stride)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _im2col(x, k, stride):
+    """[B,H,W,C] -> patches [B*OH*OW, k*k*C], matching HWIO weight flatten."""
+    b, h, w, c = x.shape
+    ph, pw = _same_pad(h, k, stride), _same_pad(w, k, stride)
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            cols.append(
+                jax.lax.slice(
+                    xp, (0, i, j, 0),
+                    (b, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.stack(cols, axis=3)  # [B,OH,OW,k*k,C]
+    return patches.reshape(b * oh * ow, k * k * c), (b, oh, ow)
+
+
+def _conv_pallas(x, w, stride, lo, hi, step):
+    k, _, cin, cout = w.shape
+    patches, (b, oh, ow) = _im2col(x, k, stride)
+    out = qmatmul(patches, w.reshape(k * k * cin, cout), lo, hi, step)
+    return out.reshape(b, oh, ow, cout)
+
+
+def forward(spec, params, x, act_bits=None, act_scales=None, act_signed=None,
+            conv_impl="lax"):
+    """Run the graph. `act_bits`: f32[n_prunable] (traced OK); None = float.
+
+    `act_signed`: static per-prunable-layer bools — True when the layer's
+    input can be negative (e.g. after a linear-bottleneck add), selecting
+    the symmetric quantization grid.
+    """
+    outs = {"input": x}
+    prunable = spec["prunable"]
+    pidx = {n: i for i, n in enumerate(prunable)}
+    if act_signed is None:
+        act_signed = spec.get("act_signed", [False] * len(prunable))
+    for L in spec["layers"]:
+        name, op = L["name"], L["op"]
+        ins = [outs[i] for i in L["inputs"]]
+        if op in ("conv", "dwconv", "fc"):
+            xin = ins[0]
+            quantize = act_bits is not None
+            if quantize:
+                i = pidx[name]
+                lo, hi, step = kref.quant_params(
+                    act_bits[i], act_scales[i], signed=bool(act_signed[i])
+                )
+            w, bvec = params[name]
+            if op == "conv":
+                if quantize and conv_impl == "pallas":
+                    y = _conv_pallas(xin, w, L["stride"], lo, hi, step)
+                else:
+                    if quantize:
+                        xin = kref.fake_quant(xin, lo, hi, step)
+                    y = _conv_lax(xin, w, L["stride"])
+                y = y + bvec
+            elif op == "dwconv":
+                if quantize:
+                    xin = kref.fake_quant(xin, lo, hi, step)
+                # HW1C with groups=C
+                y = _conv_lax(xin, w, L["stride"], groups=xin.shape[-1]) + bvec
+            else:  # fc
+                flat = xin.reshape(xin.shape[0], -1)
+                if quantize:
+                    if conv_impl == "pallas":
+                        y = qmatmul(flat, w, lo, hi, step) + bvec
+                    else:
+                        y = kref.fake_quant(flat, lo, hi, step) @ w + bvec
+                else:
+                    y = flat @ w + bvec
+            if L.get("relu"):
+                y = jax.nn.relu(y)
+        elif op == "maxpool":
+            k = L["k"]
+            y = jax.lax.reduce_window(
+                ins[0], -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+            )
+        elif op == "gap":
+            y = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "flatten":
+            y = ins[0].reshape(ins[0].shape[0], -1)
+        elif op == "add":
+            y = ins[0] + ins[1]
+            if L.get("relu"):
+                y = jax.nn.relu(y)
+        elif op == "concat":
+            y = jnp.concatenate(ins, axis=-1)
+        else:
+            raise ValueError(op)
+        outs[name] = y
+    return outs[spec["layers"][-1]["name"]]
+
+
+def forward_with_taps(spec, params, x):
+    """Float forward that also returns every named intermediate (calibration)."""
+    outs = {"input": x}
+    saved = {}
+    for L in spec["layers"]:
+        ins = [outs[i] for i in L["inputs"]]
+        name, op = L["name"], L["op"]
+        if op in ("conv", "dwconv", "fc"):
+            saved[f"in:{name}"] = ins[0]
+        # reuse forward() math via a one-layer spec is wasteful; inline:
+        outs[name] = _apply_float(L, params, ins)
+        if op in ("conv", "dwconv", "fc"):
+            saved[f"out:{name}"] = outs[name]
+    return outs[spec["layers"][-1]["name"]], saved
+
+
+def _apply_float(L, params, ins):
+    op = L["op"]
+    if op == "conv":
+        w, b = params[L["name"]]
+        y = _conv_lax(ins[0], w, L["stride"]) + b
+    elif op == "dwconv":
+        w, b = params[L["name"]]
+        y = _conv_lax(ins[0], w, L["stride"], groups=ins[0].shape[-1]) + b
+    elif op == "fc":
+        w, b = params[L["name"]]
+        y = ins[0].reshape(ins[0].shape[0], -1) @ w + b
+    elif op == "maxpool":
+        k = L["k"]
+        return jax.lax.reduce_window(
+            ins[0], -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+        )
+    elif op == "gap":
+        return jnp.mean(ins[0], axis=(1, 2))
+    elif op == "flatten":
+        return ins[0].reshape(ins[0].shape[0], -1)
+    elif op == "add":
+        y = ins[0] + ins[1]
+        if L.get("relu"):
+            y = jax.nn.relu(y)
+        return y
+    elif op == "concat":
+        return jnp.concatenate(ins, axis=-1)
+    else:
+        raise ValueError(op)
+    if L.get("relu"):
+        y = jax.nn.relu(y)
+    return y

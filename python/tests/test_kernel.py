@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas fused quant-matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and quantization parameters; assert_allclose
+against ref.py is THE core correctness signal for the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import mxu_utilization, qmatmul, vmem_bytes
+from compile.kernels.ref import fake_quant, qmatmul_ref, quant_params
+
+
+def _run(m, k, n, bits, scale, seed, signed=False, bm=32, bn=32):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k), jnp.float32) * scale
+    if not signed:
+        x = jax.nn.relu(x)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    lo, hi, step = quant_params(jnp.float32(bits), jnp.float32(scale), signed=signed)
+    got = qmatmul(x, w, lo, hi, step, bm=bm, bn=bn)
+    want = qmatmul_ref(x, w, lo, hi, step)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_exact_small():
+    _run(8, 16, 8, 8.0, 1.0, 0)
+
+
+def test_tile_divisible():
+    _run(64, 48, 64, 4.0, 0.7, 1)
+
+
+def test_needs_padding():
+    # M, N not multiples of the tile — padding path must be exact
+    _run(37, 21, 19, 5.0, 1.3, 2)
+
+
+def test_signed_grid():
+    _run(33, 16, 9, 4.0, 1.0, 3, signed=True)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 7, 8])
+def test_all_precisions(bits):
+    _run(33, 24, 17, float(bits), 0.9, bits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 64),
+    n=st.integers(1, 70),
+    bits=st.floats(2.0, 8.0),
+    scale=st.floats(0.05, 4.0),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(m, k, n, bits, scale, signed, seed):
+    _run(m, k, n, bits, scale, seed, signed=signed)
+
+
+def test_quant_params_monotone():
+    """More bits -> finer step, same-or-larger clip range."""
+    scale = jnp.float32(1.0)
+    steps, his = [], []
+    for b in range(2, 9):
+        _, hi, s = quant_params(jnp.float32(b), scale)
+        his.append(float(hi))
+        steps.append(float(s))
+    assert all(s1 > s2 for s1, s2 in zip(steps, steps[1:]))
+    assert all(a1 <= a2 for a1, a2 in zip(his, his[1:]))
+
+
+def test_signed_grid_symmetric():
+    lo, hi, step = quant_params(jnp.float32(5), jnp.float32(2.0), signed=True)
+    assert float(lo) == -float(hi)
+    assert float(step) == pytest.approx(2 * float(hi) / (2**5 - 1))
+
+
+def test_fake_quant_idempotent():
+    lo, hi, step = quant_params(jnp.float32(4), jnp.float32(1.0))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(3), (128,)))
+    q1 = fake_quant(x, lo, hi, step)
+    q2 = fake_quant(q1, lo, hi, step)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+def test_fake_quant_levels():
+    """Quantized values land on the step grid within [lo, hi]."""
+    lo, hi, step = quant_params(jnp.float32(3), jnp.float32(0.5))
+    x = jnp.linspace(-1, 5, 257)
+    q = np.asarray(fake_quant(x, lo, hi, step))
+    ratio = (q - float(lo)) / float(step)
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-4)
+    assert q.min() >= float(lo) - 1e-6 and q.max() <= float(hi) + 1e-6
+
+
+def test_vmem_estimate_within_budget():
+    assert vmem_bytes(1152) < 16 * 1024 * 1024  # BlockSpec fits VMEM
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization(256, 128, 1152)
+    assert 0.0 < u <= 1.0
+    assert mxu_utilization(128, 128, 128) == 1.0

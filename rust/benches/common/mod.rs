@@ -1,0 +1,37 @@
+//! Shared plumbing for the figure/table bench harnesses (criterion is
+//! not vendored; these are `harness = false` binaries that print the
+//! paper-style rows and basic timing).
+//!
+//! All benches default to scaled-down budgets appropriate for the
+//! single-core CI box; set `HAPQ_BENCH_EPISODES` (and `--episodes` on
+//! the CLI equivalents) to approach the paper's 1100-episode setting.
+
+use hapq::config::RunConfig;
+use hapq::coordinator::Coordinator;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn bench_config() -> RunConfig {
+    let episodes = env_usize("HAPQ_BENCH_EPISODES", 10);
+    RunConfig {
+        episodes,
+        warmup: (episodes / 5).max(2),
+        reward_subset: env_usize("HAPQ_BENCH_SUBSET", 128),
+        test_subset: 512,
+        out: "results/bench".into(),
+        ..RunConfig::default()
+    }
+}
+
+pub fn coordinator() -> Coordinator {
+    Coordinator::new(bench_config()).expect("run `make artifacts` before `cargo bench`")
+}
+
+pub fn banner(name: &str, paper: &str) {
+    println!("\n==================================================================");
+    println!("bench: {name}");
+    println!("paper: {paper}");
+    println!("==================================================================");
+}

@@ -1,0 +1,35 @@
+//! Fig 1: accuracy loss (triangles) and energy gain (diamonds) vs
+//! sparsity for fine-grained (Level [4]) and coarse-grained
+//! (L1-Ranked [7]) pruning across three architectures.
+
+mod common;
+
+use hapq::coordinator::figures;
+
+fn main() {
+    common::banner(
+        "fig1_sparsity_sweep",
+        "Fig 1 — acc-loss & energy-gain vs sparsity, fine vs coarse, \
+         VGG / ResNet / MobileNetV2",
+    );
+    let coord = common::coordinator();
+    // Fig 1 uses VGG16 / ResNet50 / MobileNetV2; fall back to whatever
+    // subset exists in the manifest.
+    let models = figures::fig1_models(&coord);
+    let points: Vec<f64> = (1..=9).map(|i| i as f64 / 10.0).collect();
+    for model in &models {
+        let t0 = std::time::Instant::now();
+        let mut env = coord.build_env(model).unwrap();
+        println!("\n--- {model} (baseline acc {:.3}) ---", env.baseline_acc);
+        println!("{:<12} {:>9} {:>10} {:>12}", "alg", "sparsity", "acc-loss", "energy-gain");
+        for r in figures::fig1_sweep(&mut env, &points).unwrap() {
+            println!(
+                "{:<12} {:>9.1} {:>9.2}% {:>11.2}%",
+                r.alg, r.sparsity, r.acc_loss * 100.0, r.energy_gain * 100.0
+            );
+        }
+        println!("[{model}: {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    println!("\nexpected shape (paper): coarse-grained has higher energy gain AND");
+    println!("higher accuracy loss at equal sparsity; sensitivity is model-specific.");
+}

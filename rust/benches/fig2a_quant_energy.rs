@@ -1,0 +1,28 @@
+//! Fig 2a: accelerator energy reduction when quantizing below 8 bits on
+//! a fixed-precision 8-bit MAC array (reduction from toggling only).
+
+mod common;
+
+use hapq::coordinator::figures;
+
+fn main() {
+    common::banner(
+        "fig2a_quant_energy",
+        "Fig 2a — energy reduction vs (Qw, Qa) on an 8-bit Eyeriss-based \
+         accelerator; paper reports ~29% at 5/5 bits",
+    );
+    let coord = common::coordinator();
+    let env = coord.build_env("vgg11").unwrap();
+    let t0 = std::time::Instant::now();
+    let grid = figures::fig2a_grid(&env);
+    println!("{:>3} {:>3} {:>11}", "Qw", "Qa", "reduction");
+    for (qw, qa, red) in &grid {
+        println!("{qw:>3} {qa:>3} {:>10.2}%", red * 100.0);
+    }
+    let r55 = grid.iter().find(|(w, a, _)| *w == 5 && *a == 5).unwrap().2;
+    let r88 = grid.iter().find(|(w, a, _)| *w == 8 && *a == 8).unwrap().2;
+    println!("\npaper anchor: 5/5 bits -> 29% reduction; measured: {:.1}%", r55 * 100.0);
+    println!("8/8 bits must be 0%: measured {:.2}%", r88 * 100.0);
+    println!("MAC-sim P_FG (paper: 0.2): {:.3}", env.energy.rq.p_fg);
+    println!("[{:.2}s]", t0.elapsed().as_secs_f64());
+}

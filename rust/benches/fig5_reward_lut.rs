@@ -1,0 +1,29 @@
+//! Fig 5: heatmap of the 40x40 LUT-based reward (printed sub-sampled at
+//! 25% resolution, exactly like the paper's figure).
+
+mod common;
+
+use hapq::coordinator::figures;
+use hapq::env::lut::RewardLut;
+
+fn main() {
+    common::banner(
+        "fig5_reward_lut",
+        "Fig 5 — LUT reward heatmap: high for loss<10%, small negative \
+         near (0 gain, 0 loss), strongly negative beyond 10% loss",
+    );
+    let t0 = std::time::Instant::now();
+    let grid = figures::fig5_heatmap(4);
+    println!("rows: acc loss 0..100% (down), cols: energy gain 0..100% (right)\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = (i as f64) * 4.0 / 40.0 * 100.0;
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:6.2}")).collect();
+        println!("loss {label:5.1}% | {}", cells.join(" "));
+    }
+    // structural assertions mirroring §4.2.3
+    let lut = RewardLut::paper();
+    assert!(lut.reward(0.02, 0.6) > lut.reward(0.08, 0.6));
+    assert!(lut.reward(0.12, 0.9) < 0.0);
+    assert!(lut.reward(0.0, 0.0) < 0.0 && lut.reward(0.0, 0.0) > -0.5);
+    println!("\nstructural checks passed [{:.3}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,62 @@
+//! Fig 7: energy gain vs accuracy loss for OURS (a) and the baselines
+//! AMC (b), HAQ (c), ASQJ (d), OPQ (e).
+//!
+//! Scaled-down by default (HAPQ_BENCH_EPISODES=10, two c10 models); the
+//! full grid is `hapq compare --models all --episodes 1100`.
+
+mod common;
+
+fn main() {
+    common::banner(
+        "fig7_compare",
+        "Fig 7 — ours vs AMC/HAQ/ASQJ/OPQ, energy gain vs top-1 loss",
+    );
+    let coord = common::coordinator();
+    let models: Vec<String> = std::env::var("HAPQ_BENCH_MODELS")
+        .unwrap_or_else(|_| "vgg11,resnet18".into())
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    println!(
+        "{:<12} {:<8} {:>11} {:>13} {:>8} {:>8}",
+        "model", "method", "energy-gain", "test-acc-loss", "evals", "secs"
+    );
+    let mut ours_gain = Vec::new();
+    let mut base_gain = Vec::new();
+    for model in &models {
+        for method in ["ours", "amc", "haq", "asqj", "opq"] {
+            let report = if method == "ours" {
+                coord.compress(model, false)
+            } else {
+                coord.run_baseline(model, method)
+            };
+            match report {
+                Ok(r) => {
+                    println!(
+                        "{:<12} {:<8} {:>10.1}% {:>12.2}% {:>8} {:>7.1}s",
+                        model,
+                        method,
+                        r.best.energy_gain * 100.0,
+                        r.test_acc_loss() * 100.0,
+                        r.evals,
+                        r.wall_secs
+                    );
+                    if method == "ours" {
+                        ours_gain.push(r.best.energy_gain);
+                    } else {
+                        base_gain.push(r.best.energy_gain);
+                    }
+                    let _ = coord.save_report(&r);
+                }
+                Err(e) => println!("{model:<12} {method:<8} FAILED: {e:#}"),
+            }
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "\nmean energy gain — ours: {:.1}%, baselines: {:.1}% (paper: ours wins; \
+         gains scale with episode budget)",
+        mean(&ours_gain) * 100.0,
+        mean(&base_gain) * 100.0
+    );
+}

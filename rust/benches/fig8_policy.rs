@@ -1,0 +1,41 @@
+//! Fig 8: the learned per-layer (pruning ratio, precision, algorithm)
+//! policy for ResNet18 — the paper's qualitative analysis: conservative
+//! coarse pruning early, fine-grained aggressive pruning on the FC
+//! head, shortcut layers barely pruned but heavily quantized.
+
+mod common;
+
+use hapq::coordinator::figures;
+use hapq::model::Op;
+
+fn main() {
+    common::banner(
+        "fig8_policy",
+        "Fig 8 — per-layer pruning/quantization decisions, ResNet18",
+    );
+    let coord = common::coordinator();
+    let t0 = std::time::Instant::now();
+    let report = coord.compress("resnet18", false).expect("compress resnet18");
+    let (arch, _, _) = coord.load_arch("resnet18").unwrap();
+    println!(
+        "{:<6} {:<10} {:<6} {:<12} {:>9} {:>6}",
+        "layer", "name", "kind", "alg", "sparsity", "bits"
+    );
+    for (i, alg, sp, bits) in figures::fig8_rows(&report) {
+        let name = &arch.prunable[i];
+        let l = arch.layer(name).unwrap();
+        let kind = match l.op {
+            Op::Fc => "fc",
+            Op::DwConv => "dw",
+            _ => "conv",
+        };
+        println!("{i:<6} {name:<10} {kind:<6} {alg:<12} {sp:>9.2} {bits:>6}");
+    }
+    println!(
+        "\nresult: gain {:.1}%, test loss {:.2}%  [{:.1}s]",
+        report.best.energy_gain * 100.0,
+        report.test_acc_loss() * 100.0,
+        t0.elapsed().as_secs_f64()
+    );
+    let _ = coord.save_report(&report);
+}

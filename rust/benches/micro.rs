@@ -1,0 +1,112 @@
+//! Micro-benchmarks of the L3 hot path (the §Perf foundation):
+//! component latencies that make up one RL step —
+//! prune + quantize + energy + PJRT inference + agent update.
+
+mod common;
+
+use std::time::Instant;
+
+use hapq::env::Action;
+use hapq::hw::dataflow::{map_layer, LayerDims};
+use hapq::hw::mac_sim::RqTable;
+use hapq::hw::Accel;
+use hapq::pruning::{prune, PruneAlg, PruneCtx};
+use hapq::quant::quantize_weights;
+use hapq::tensor::Tensor;
+use hapq::util::rng::Rng;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<38} {:>10.3} ms/iter  ({iters} iters)", per * 1e3);
+    per
+}
+
+fn main() {
+    common::banner("micro", "hot-path component latencies (EXPERIMENTS.md §Perf)");
+
+    // --- hw substrates ---
+    time("mac_sim: RqTable::compute(4000)", 3, || {
+        let t = RqTable::compute(4000, 1);
+        std::hint::black_box(&t);
+    });
+    let acc = Accel::default();
+    let dims = LayerDims::conv(16, 16, 64, 16, 16, 128, 3, 1);
+    time("dataflow: map_layer (64->128ch conv)", 200, || {
+        std::hint::black_box(map_layer(&dims, &acc));
+    });
+
+    // --- pruning/quant on a vgg-sized tensor ---
+    let mut rng = Rng::new(5);
+    let w0 = Tensor::new(
+        vec![3, 3, 96, 128],
+        (0..3 * 3 * 96 * 128).map(|_| rng.normal() as f32 * 0.1).collect(),
+    );
+    let sal = Tensor::full(w0.shape.clone(), 0.5);
+    for alg in [PruneAlg::Level, PruneAlg::L1Ranked, PruneAlg::Splicing] {
+        let name = format!("prune {:<10} (110k weights)", alg.name());
+        time(&name, 20, || {
+            let mut w = w0.clone();
+            let chsq = vec![1.0f32; 128];
+            let mut r = Rng::new(9);
+            let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut r };
+            std::hint::black_box(prune(&mut w, alg, 0.5, &mut ctx));
+        });
+    }
+    time("quantize_weights 4-bit (110k weights)", 20, || {
+        let mut w = w0.clone();
+        std::hint::black_box(quantize_weights(&mut w, 4));
+    });
+
+    // --- RL update ---
+    let mut agent = hapq::rl::ddpg::Ddpg::new(hapq::rl::ddpg::DdpgConfig::default(), 3);
+    let mut r = Rng::new(4);
+    for _ in 0..128 {
+        let s: Vec<f32> = (0..hapq::env::STATE_DIM).map(|_| r.uniform() as f32).collect();
+        agent.observe(hapq::rl::replay::Transition {
+            s: s.clone(),
+            a: vec![0.3, 0.5],
+            alg: 0,
+            r: 0.1,
+            s2: s,
+            done: false,
+        });
+    }
+    time("ddpg update (batch 64, 3x300 nets)", 10, || {
+        agent.update();
+    });
+    let mut rb = hapq::rl::rainbow::Rainbow::new(hapq::rl::rainbow::RainbowConfig::default(), 5);
+    for _ in 0..128 {
+        let f: Vec<f32> = (0..300).map(|_| r.uniform() as f32).collect();
+        rb.observe(f.clone(), 2, 0.3, f, false);
+    }
+    time("rainbow update (batch 64, C51x7)", 10, || {
+        rb.update();
+    });
+
+    // --- full env step & episode (needs artifacts) ---
+    if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
+        let mut env = coord.build_env("vgg11").unwrap();
+        let n = env.n_layers();
+        let mut k = 0usize;
+        time("env full step (prune+quant+E+PJRT)", 20, || {
+            if k % n == 0 {
+                env.reset();
+            }
+            let _ = env
+                .step(Action { ratio: 0.3, bits: 0.7, alg: k % 7 })
+                .unwrap();
+            k += 1;
+        });
+        let actions: Vec<Action> =
+            (0..n).map(|l| Action { ratio: 0.3, bits: 0.7, alg: l % 7 }).collect();
+        time("env full episode (vgg11, 10 layers)", 5, || {
+            env.evaluate_config(&actions).unwrap();
+        });
+    } else {
+        println!("(artifacts missing — skipping env-level timings)");
+    }
+}

@@ -1,0 +1,72 @@
+//! AMC baseline [15]: DDPG learns a per-layer *channel-pruning ratio*
+//! only. Fixed L1-ranked structured pruning, fixed 8-bit quantization
+//! (the paper quantizes AMC's float output to 8 bits for fairness,
+//! §5.2). Uses the same DDPG core as our framework with a 1-d action.
+
+use anyhow::Result;
+
+use crate::env::{Action, CompressionEnv, Solution};
+use crate::pruning::PruneAlg;
+use crate::rl::ddpg::{Ddpg, DdpgConfig};
+use crate::rl::replay::Transition;
+use crate::util::rng::Rng;
+
+pub struct AmcConfig {
+    pub episodes: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Default for AmcConfig {
+    fn default() -> Self {
+        AmcConfig { episodes: 300, warmup: 30, seed: 0 }
+    }
+}
+
+pub fn run(env: &mut CompressionEnv, cfg: &AmcConfig) -> Result<Solution> {
+    let mut agent = Ddpg::new(
+        DdpgConfig { action_dim: 1, ..DdpgConfig::default() },
+        cfg.seed ^ 0xA3C,
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x11);
+    let mut best: Option<Solution> = None;
+    for ep in 0..cfg.episodes {
+        let mut s = env.reset();
+        #[allow(unused_assignments)]
+        let mut last = None;
+        loop {
+            let a = if ep < cfg.warmup {
+                vec![rng.uniform() as f32]
+            } else {
+                agent.act(&s, true)
+            };
+            let action = Action {
+                ratio: a[0] as f64,
+                bits: 1.0, // -> 8 bits
+                alg: PruneAlg::L1Ranked.index(),
+            };
+            let step = env.step(action)?;
+            agent.observe(Transition {
+                s: s.clone(),
+                a: a.clone(),
+                alg: action.alg,
+                r: step.reward as f32,
+                s2: step.state.clone(),
+                done: step.done,
+            });
+            agent.update();
+            s = step.state.clone();
+            let done = step.done;
+            last = Some(step);
+            if done {
+                break;
+            }
+        }
+        if ep >= cfg.warmup {
+            agent.decay_noise();
+        }
+        let sol = env.solution(last.as_ref().unwrap());
+        best = super::better(best, sol);
+    }
+    Ok(best.unwrap())
+}

@@ -1,0 +1,79 @@
+//! ASQJ baseline [24]: joint sparsity-quantization learning via ADMM.
+//!
+//! The original alternates gradient steps on the task loss with
+//! projections onto the sparse set and the quantization grid. In this
+//! no-retraining environment there are no task gradients (DESIGN.md
+//! §1), so we keep the ADMM skeleton — alternating projection plus a
+//! dual/multiplier update per layer — and replace the loss-gradient
+//! primal step with reward feedback from the shared oracle:
+//!
+//!   * primal-W: project onto the fine-grained sparse set at the current
+//!     per-layer ratio (weight-magnitude criterion, as in ASQJ);
+//!   * primal-Q: project onto the per-channel quantization grid at the
+//!     current per-layer precision;
+//!   * dual: layers whose (loss, energy) trade-off improved the reward
+//!     raise their compression multiplier, others back off.
+
+use anyhow::Result;
+
+use crate::env::{Action, CompressionEnv, Solution};
+use crate::pruning::PruneAlg;
+
+pub struct AsqjConfig {
+    /// outer ADMM iterations
+    pub iters: usize,
+    /// dual step size
+    pub rho: f64,
+    pub seed: u64,
+}
+
+impl Default for AsqjConfig {
+    fn default() -> Self {
+        AsqjConfig { iters: 40, rho: 0.15, seed: 0 }
+    }
+}
+
+fn config_actions(sparsity: &[f64], bits: &[f64]) -> Vec<Action> {
+    sparsity
+        .iter()
+        .zip(bits)
+        .map(|(&s, &b)| Action {
+            ratio: (s / crate::env::MAX_RATIO).clamp(0.0, 1.0),
+            bits: b.clamp(0.0, 1.0),
+            // fine-grained weight pruning — ASQJ prunes weights, not filters
+            alg: PruneAlg::Level.index(),
+        })
+        .collect()
+}
+
+pub fn run(env: &mut CompressionEnv, cfg: &AsqjConfig) -> Result<Solution> {
+    let n = env.n_layers();
+    // start conservative: 30% sparsity, 8 bits everywhere
+    let mut sparsity = vec![0.3f64; n];
+    let mut bits = vec![1.0f64; n];
+    let mut dual = vec![0.0f64; n];
+    let mut best: Option<Solution> = None;
+    let mut prev_reward = f64::NEG_INFINITY;
+
+    for it in 0..cfg.iters {
+        let sol = env.evaluate_config(&config_actions(&sparsity, &bits))?;
+        let improved = sol.reward > prev_reward;
+        prev_reward = sol.reward;
+
+        // dual update: push compression harder while the reward tolerates
+        // it, relax the most aggressive layers when it does not.
+        for l in 0..n {
+            if improved && sol.acc_loss < 0.05 {
+                dual[l] += cfg.rho * (1.0 - sol.acc_loss * 10.0);
+            } else {
+                dual[l] -= cfg.rho * (0.5 + sparsity[l]);
+            }
+            dual[l] = dual[l].clamp(-2.0, 2.0);
+            sparsity[l] = (0.3 + 0.25 * dual[l]).clamp(0.0, 0.85);
+            bits[l] = (1.0 - 0.3 * dual[l].max(0.0) - 0.02 * (it % 5) as f64)
+                .clamp(0.0, 1.0);
+        }
+        best = super::better(best, sol);
+    }
+    Ok(best.unwrap())
+}

@@ -1,0 +1,65 @@
+//! HAQ baseline [17]: DDPG learns per-layer *mixed precision* only —
+//! no pruning. Same hardware-aware feedback loop as our framework.
+
+use anyhow::Result;
+
+use crate::env::{Action, CompressionEnv, Solution};
+use crate::rl::ddpg::{Ddpg, DdpgConfig};
+use crate::rl::replay::Transition;
+use crate::util::rng::Rng;
+
+pub struct HaqConfig {
+    pub episodes: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Default for HaqConfig {
+    fn default() -> Self {
+        HaqConfig { episodes: 300, warmup: 30, seed: 0 }
+    }
+}
+
+pub fn run(env: &mut CompressionEnv, cfg: &HaqConfig) -> Result<Solution> {
+    let mut agent = Ddpg::new(
+        DdpgConfig { action_dim: 1, ..DdpgConfig::default() },
+        cfg.seed ^ 0x4A9,
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x22);
+    let mut best: Option<Solution> = None;
+    for ep in 0..cfg.episodes {
+        let mut s = env.reset();
+        #[allow(unused_assignments)]
+        let mut last = None;
+        loop {
+            let a = if ep < cfg.warmup {
+                vec![rng.uniform() as f32]
+            } else {
+                agent.act(&s, true)
+            };
+            let action = Action { ratio: 0.0, bits: a[0] as f64, alg: 0 };
+            let step = env.step(action)?;
+            agent.observe(Transition {
+                s: s.clone(),
+                a: a.clone(),
+                alg: 0,
+                r: step.reward as f32,
+                s2: step.state.clone(),
+                done: step.done,
+            });
+            agent.update();
+            s = step.state.clone();
+            let done = step.done;
+            last = Some(step);
+            if done {
+                break;
+            }
+        }
+        if ep >= cfg.warmup {
+            agent.decay_noise();
+        }
+        let sol = env.solution(last.as_ref().unwrap());
+        best = super::better(best, sol);
+    }
+    Ok(best.unwrap())
+}

@@ -1,0 +1,297 @@
+//! NSGA-II [45] — the heuristic-exploration comparison of §5.3.2.
+//!
+//! Full implementation: genome of 3·L continuous genes (ratio, bits,
+//! algorithm index per layer), tournament selection, simulated binary
+//! crossover, polynomial mutation, fast non-dominated sorting and
+//! crowding-distance truncation. Per the paper the fitness is the
+//! single inverse reward (the LUT already fuses accuracy & energy),
+//! evaluated with the exact same oracle as the RL agent, and the eval
+//! budget is matched to the RL episode count (55 generations × 20
+//! population ≡ 1100 episodes).
+
+use anyhow::Result;
+
+use crate::env::{Action, CompressionEnv, Solution};
+use crate::util::rng::Rng;
+
+pub struct Nsga2Config {
+    pub pop: usize,
+    pub generations: usize,
+    /// SBX distribution index
+    pub eta_c: f64,
+    /// polynomial-mutation distribution index
+    pub eta_m: f64,
+    pub p_mut: f64,
+    pub seed: u64,
+}
+
+impl Default for Nsga2Config {
+    fn default() -> Self {
+        Nsga2Config { pop: 20, generations: 55, eta_c: 15.0, eta_m: 20.0, p_mut: 0.1, seed: 0 }
+    }
+}
+
+#[derive(Clone)]
+struct Individual {
+    genes: Vec<f64>, // 3L in [0,1]
+    /// objectives to MINIMISE: [-reward] (single-objective per §5.3.2,
+    /// footnote 2: NSGA-II minimises, so the inverse reward is used)
+    obj: Vec<f64>,
+    sol: Option<Solution>,
+}
+
+fn decode(genes: &[f64]) -> Vec<Action> {
+    genes
+        .chunks(3)
+        .map(|g| Action {
+            ratio: g[0],
+            bits: g[1],
+            // continuous gene rounded to a discrete technique index (§5.3.2)
+            alg: (g[2] * 6.999) as usize,
+        })
+        .collect()
+}
+
+fn evaluate(env: &mut CompressionEnv, ind: &mut Individual) -> Result<()> {
+    let sol = env.evaluate_config(&decode(&ind.genes))?;
+    ind.obj = vec![-sol.reward];
+    ind.sol = Some(sol);
+    Ok(())
+}
+
+/// a dominates b (all ≤, one <).
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort; returns front index per individual.
+pub fn nondominated_sort(objs: &[Vec<f64>]) -> Vec<usize> {
+    let n = objs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&objs[i], &objs[j]) {
+                dominates_list[i].push(j);
+            }
+        }
+    }
+    for (i, dl) in dominates_list.iter().enumerate() {
+        let _ = i;
+        for &j in dl {
+            dominated_by[j] += 1;
+        }
+    }
+    let mut front = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut f = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            front[i] = f;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        f += 1;
+    }
+    front
+}
+
+/// Crowding distance within one front.
+pub fn crowding(objs: &[Vec<f64>], members: &[usize]) -> Vec<f64> {
+    let m = objs[0].len();
+    let mut dist = vec![0.0f64; members.len()];
+    for k in 0..m {
+        let mut order: Vec<usize> = (0..members.len()).collect();
+        order.sort_by(|&a, &b| {
+            objs[members[a]][k].partial_cmp(&objs[members[b]][k]).unwrap()
+        });
+        let lo = objs[members[order[0]]][k];
+        let hi = objs[members[*order.last().unwrap()]][k];
+        let span = (hi - lo).max(1e-12);
+        dist[order[0]] = f64::INFINITY;
+        dist[*order.last().unwrap()] = f64::INFINITY;
+        for w in 1..order.len().saturating_sub(1) {
+            dist[order[w]] +=
+                (objs[members[order[w + 1]]][k] - objs[members[order[w - 1]]][k]) / span;
+        }
+    }
+    dist
+}
+
+fn sbx(a: &[f64], b: &[f64], eta: f64, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+    let mut c1 = a.to_vec();
+    let mut c2 = b.to_vec();
+    for i in 0..a.len() {
+        if rng.uniform() < 0.5 {
+            let u = rng.uniform();
+            let beta = if u <= 0.5 {
+                (2.0 * u).powf(1.0 / (eta + 1.0))
+            } else {
+                (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+            };
+            c1[i] = (0.5 * ((1.0 + beta) * a[i] + (1.0 - beta) * b[i])).clamp(0.0, 1.0);
+            c2[i] = (0.5 * ((1.0 - beta) * a[i] + (1.0 + beta) * b[i])).clamp(0.0, 1.0);
+        }
+    }
+    (c1, c2)
+}
+
+fn poly_mutate(g: &mut [f64], eta: f64, p: f64, rng: &mut Rng) {
+    for x in g.iter_mut() {
+        if rng.uniform() < p {
+            let u = rng.uniform();
+            let delta = if u < 0.5 {
+                (2.0 * u).powf(1.0 / (eta + 1.0)) - 1.0
+            } else {
+                1.0 - (2.0 * (1.0 - u)).powf(1.0 / (eta + 1.0))
+            };
+            *x = (*x + delta).clamp(0.0, 1.0);
+        }
+    }
+}
+
+pub fn run(env: &mut CompressionEnv, cfg: &Nsga2Config) -> Result<Solution> {
+    let n_genes = 3 * env.n_layers();
+    let mut rng = Rng::new(cfg.seed ^ 0x6A);
+    let mut pop: Vec<Individual> = (0..cfg.pop)
+        .map(|_| Individual {
+            genes: (0..n_genes).map(|_| rng.uniform()).collect(),
+            obj: vec![],
+            sol: None,
+        })
+        .collect();
+    for ind in pop.iter_mut() {
+        evaluate(env, ind)?;
+    }
+    let mut best: Option<Solution> = None;
+    for ind in &pop {
+        best = super::better(best, ind.sol.clone().unwrap());
+    }
+
+    for _gen in 0..cfg.generations {
+        // tournament selection + SBX + mutation -> offspring
+        let mut offspring = Vec::with_capacity(cfg.pop);
+        while offspring.len() < cfg.pop {
+            let pick = |rng: &mut Rng, pop: &[Individual]| {
+                let i = rng.below(pop.len());
+                let j = rng.below(pop.len());
+                if pop[i].obj[0] <= pop[j].obj[0] { i } else { j }
+            };
+            let (i, j) = (pick(&mut rng, &pop), pick(&mut rng, &pop));
+            let (mut c1, mut c2) = sbx(&pop[i].genes, &pop[j].genes, cfg.eta_c, &mut rng);
+            poly_mutate(&mut c1, cfg.eta_m, cfg.p_mut, &mut rng);
+            poly_mutate(&mut c2, cfg.eta_m, cfg.p_mut, &mut rng);
+            offspring.push(Individual { genes: c1, obj: vec![], sol: None });
+            if offspring.len() < cfg.pop {
+                offspring.push(Individual { genes: c2, obj: vec![], sol: None });
+            }
+        }
+        for ind in offspring.iter_mut() {
+            evaluate(env, ind)?;
+            best = super::better(best, ind.sol.clone().unwrap());
+        }
+        // elitist survivor selection: fronts + crowding
+        let mut combined = pop;
+        combined.append(&mut offspring);
+        let objs: Vec<Vec<f64>> = combined.iter().map(|i| i.obj.clone()).collect();
+        let fronts = nondominated_sort(&objs);
+        let mut order: Vec<usize> = (0..combined.len()).collect();
+        // sort by (front, -crowding)
+        let max_front = fronts.iter().max().copied().unwrap_or(0);
+        let mut crowd = vec![0.0f64; combined.len()];
+        for f in 0..=max_front {
+            let members: Vec<usize> =
+                (0..combined.len()).filter(|&i| fronts[i] == f).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let d = crowding(&objs, &members);
+            for (mi, &i) in members.iter().enumerate() {
+                crowd[i] = d[mi];
+            }
+        }
+        order.sort_by(|&a, &b| {
+            fronts[a]
+                .cmp(&fronts[b])
+                .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
+        });
+        pop = order[..cfg.pop]
+            .iter()
+            .map(|&i| combined[i].clone())
+            .collect();
+    }
+    Ok(best.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nondominated_sort_fronts() {
+        let objs = vec![
+            vec![1.0, 1.0], // dominates everything below
+            vec![2.0, 2.0],
+            vec![1.0, 3.0],
+            vec![0.5, 4.0], // trades off against (1,1): front 0
+        ];
+        let f = nondominated_sort(&objs);
+        assert_eq!(f[0], 0);
+        assert_eq!(f[1], 1);
+        assert_eq!(f[2], 1); // dominated by (1,1)
+        assert_eq!(f[3], 0);
+    }
+
+    #[test]
+    fn dominates_semantics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[3.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn crowding_boundary_infinite() {
+        let objs = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let d = crowding(&objs, &[0, 1, 2]);
+        assert!(d[0].is_infinite() && d[2].is_infinite());
+        assert!(d[1].is_finite());
+    }
+
+    #[test]
+    fn operators_stay_in_unit_box() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f64> = (0..12).map(|_| rng.uniform()).collect();
+        let b: Vec<f64> = (0..12).map(|_| rng.uniform()).collect();
+        for _ in 0..50 {
+            let (mut c1, c2) = sbx(&a, &b, 15.0, &mut rng);
+            poly_mutate(&mut c1, 20.0, 0.5, &mut rng);
+            for &x in c1.iter().chain(&c2) {
+                assert!((0.0..=1.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_covers_all_algorithms() {
+        let genes: Vec<f64> = vec![0.5, 0.5, 0.999, 0.5, 0.5, 0.0];
+        let acts = decode(&genes);
+        assert_eq!(acts[0].alg, 6);
+        assert_eq!(acts[1].alg, 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Run configuration + the hand-rolled CLI argument parser (clap is not
+//! in the vendored registry — DESIGN.md §1).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Options shared by every HAPQ run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// artifact directory (`make artifacts` output)
+    pub artifacts: PathBuf,
+    /// output directory for result JSON
+    pub out: PathBuf,
+    /// RL training episodes (paper: 1100; default scaled for 1 core)
+    pub episodes: usize,
+    /// warm-up episodes (paper: 100)
+    pub warmup: usize,
+    /// reward-oracle validation subset size (paper: 10% of validation)
+    pub reward_subset: usize,
+    /// test-set size for final reporting
+    pub test_subset: usize,
+    pub seed: u64,
+    /// MAC-sim sample count (R_Q table fidelity)
+    pub mac_samples: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: PathBuf::from("artifacts"),
+            out: PathBuf::from("results"),
+            episodes: 150,
+            warmup: 15,
+            reward_subset: 256,
+            test_subset: 1024,
+            seed: 42,
+            mac_samples: 4000,
+        }
+    }
+}
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub cmd: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.cmd = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(name.to_string(), val);
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects an integer, got `{v}`"),
+            },
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_flag(name, default as usize)? as u64)
+    }
+
+    /// Build the shared RunConfig from flags.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            artifacts: PathBuf::from(self.str_flag("artifacts", "artifacts")),
+            out: PathBuf::from(self.str_flag("out", "results")),
+            episodes: self.usize_flag("episodes", d.episodes)?,
+            warmup: self.usize_flag("warmup", d.warmup)?,
+            reward_subset: self.usize_flag("reward-subset", d.reward_subset)?,
+            test_subset: self.usize_flag("test-subset", d.test_subset)?,
+            seed: self.u64_flag("seed", d.seed)?,
+            mac_samples: self.usize_flag("mac-samples", d.mac_samples)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let c = Cli::parse(&args("compress --model vgg11 --episodes 50 extra")).unwrap();
+        assert_eq!(c.cmd, "compress");
+        assert_eq!(c.str_flag("model", ""), "vgg11");
+        assert_eq!(c.usize_flag("episodes", 0).unwrap(), 50);
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let c = Cli::parse(&args("bench --quick --model x")).unwrap();
+        assert_eq!(c.str_flag("quick", ""), "true");
+    }
+
+    #[test]
+    fn bad_integer_rejected() {
+        let c = Cli::parse(&args("x --episodes soon")).unwrap();
+        assert!(c.usize_flag("episodes", 1).is_err());
+    }
+}

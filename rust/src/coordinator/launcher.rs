@@ -1,0 +1,143 @@
+//! Multi-process launcher — the distributed-runtime face of the
+//! coordinator. `hapq compare --jobs N` fans the (model × method) grid
+//! out over N child `hapq` processes (one leader, N workers), collects
+//! their result JSON from the shared output directory and merges the
+//! summary. Process isolation (rather than threads) keeps one PJRT
+//! client per worker, mirrors how the paper's per-model optimizations
+//! are independent, and sidesteps FFI thread-safety questions.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+
+use anyhow::{Context, Result};
+
+use crate::io::json;
+
+/// One unit of work for a child process.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub model: String,
+    pub method: String,
+}
+
+impl Job {
+    /// CLI args for the child (`compress` for ours, `baseline` otherwise).
+    fn args(&self, cfg: &crate::config::RunConfig) -> Vec<String> {
+        let mut v = if self.method == "ours" {
+            vec!["compress".into(), "--model".into(), self.model.clone()]
+        } else {
+            vec![
+                "baseline".into(),
+                "--model".into(),
+                self.model.clone(),
+                "--method".into(),
+                self.method.clone(),
+            ]
+        };
+        v.extend([
+            "--artifacts".into(),
+            cfg.artifacts.display().to_string(),
+            "--out".into(),
+            cfg.out.display().to_string(),
+            "--episodes".into(),
+            cfg.episodes.to_string(),
+            "--warmup".into(),
+            cfg.warmup.to_string(),
+            "--reward-subset".into(),
+            cfg.reward_subset.to_string(),
+            "--seed".into(),
+            cfg.seed.to_string(),
+        ]);
+        v
+    }
+
+    pub fn report_path(&self, out: &Path) -> PathBuf {
+        out.join(format!("{}__{}.json", self.model, self.method))
+    }
+}
+
+/// Run the grid with at most `jobs` children alive at once. Returns the
+/// merged per-job result JSON (jobs that failed are reported as errors
+/// in the summary rather than aborting the sweep).
+pub fn run_grid(
+    cfg: &crate::config::RunConfig,
+    grid: Vec<Job>,
+    jobs: usize,
+) -> Result<Vec<(Job, Result<json::Value>)>> {
+    std::fs::create_dir_all(&cfg.out)?;
+    let exe = std::env::current_exe().context("locating hapq binary")?;
+    let mut pending: VecDeque<Job> = grid.into();
+    let mut running: Vec<(Job, Child)> = Vec::new();
+    let mut done: Vec<(Job, Result<json::Value>)> = Vec::new();
+
+    while !pending.is_empty() || !running.is_empty() {
+        while running.len() < jobs.max(1) {
+            let Some(job) = pending.pop_front() else { break };
+            let child = Command::new(&exe)
+                .args(job.args(cfg))
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .with_context(|| format!("spawning worker for {job:?}"))?;
+            eprintln!("[launcher] started {} [{}] (pid {})", job.model, job.method, child.id());
+            running.push((job, child));
+        }
+        // reap any finished child
+        let mut i = 0;
+        let mut reaped = false;
+        while i < running.len() {
+            if let Some(status) = running[i].1.try_wait()? {
+                let (job, _) = running.remove(i);
+                let res = if status.success() {
+                    std::fs::read_to_string(job.report_path(&cfg.out))
+                        .map_err(anyhow::Error::from)
+                        .and_then(|t| json::parse(&t))
+                } else {
+                    Err(anyhow::anyhow!("worker exited with {status}"))
+                };
+                eprintln!(
+                    "[launcher] finished {} [{}]: {}",
+                    job.model,
+                    job.method,
+                    if res.is_ok() { "ok" } else { "FAILED" }
+                );
+                done.push((job, res));
+                reaped = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !reaped {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        }
+    }
+    Ok(done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_args_shape() {
+        let cfg = crate::config::RunConfig::default();
+        let ours = Job { model: "vgg11".into(), method: "ours".into() };
+        let a = ours.args(&cfg);
+        assert_eq!(a[0], "compress");
+        assert!(a.contains(&"--episodes".to_string()));
+        let base = Job { model: "vgg11".into(), method: "amc".into() };
+        let b = base.args(&cfg);
+        assert_eq!(b[0], "baseline");
+        assert!(b.contains(&"amc".to_string()));
+    }
+
+    #[test]
+    fn report_path_convention_matches_save_report() {
+        let j = Job { model: "m".into(), method: "ours".into() };
+        assert_eq!(
+            j.report_path(Path::new("out")),
+            PathBuf::from("out/m__ours.json")
+        );
+    }
+}

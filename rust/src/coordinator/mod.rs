@@ -1,0 +1,422 @@
+//! The coordinator — HAPQ's L3 driver.
+//!
+//! Owns the PJRT runtime, the artifact manifest, the shared R_Q table,
+//! and the training loops: it builds a [`CompressionEnv`] per model,
+//! runs the composite agent (or a baseline) against it, extracts the
+//! final greedy policy, re-scores it on the held-out test split and
+//! emits result JSON + metrics. Everything the CLI, the examples and
+//! the benches do goes through this module.
+
+pub mod figures;
+pub mod launcher;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::RunConfig;
+use crate::env::{CompressionEnv, Metric, Solution};
+use crate::hw::energy::EnergyModel;
+use crate::hw::mac_sim::RqTable;
+use crate::hw::Accel;
+use crate::io::json::{self, arr, num, obj, s, Value};
+use crate::model::{ModelArch, Weights};
+use crate::rl::composite::{CompositeAgent, CompositeConfig};
+use crate::runtime::{InferenceSession, Runtime, Split};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub model: String,
+    pub dataset: String,
+    pub hlo: String,
+    pub weights: String,
+    pub arch: String,
+    pub pallas_hlo: Option<String>,
+    pub pallas_batch: usize,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub cfg: RunConfig,
+    pub runtime: Runtime,
+    pub rq: RqTable,
+    pub models: Vec<ModelEntry>,
+}
+
+/// Full record of one compression run (one Fig 7 point).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub model: String,
+    pub dataset: String,
+    pub method: String,
+    pub best: Solution,
+    /// dense 8-bit baseline accuracy on the test split
+    pub test_acc_dense: f64,
+    /// compressed-model accuracy on the test split
+    pub test_acc: f64,
+    pub episodes: usize,
+    pub evals: u64,
+    pub wall_secs: f64,
+    /// episode-reward curve (ours only)
+    pub reward_curve: Vec<f64>,
+}
+
+impl RunReport {
+    pub fn test_acc_loss(&self) -> f64 {
+        (self.test_acc_dense - self.test_acc).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = self
+            .best
+            .per_layer
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("alg", s(a.alg.name())),
+                    ("sparsity", num(a.sparsity)),
+                    ("bits", num(a.bits as f64)),
+                    ("overridden", Value::Bool(a.overridden)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("model", s(&self.model)),
+            ("dataset", s(&self.dataset)),
+            ("method", s(&self.method)),
+            ("energy_gain", num(self.best.energy_gain)),
+            ("val_acc_loss", num(self.best.acc_loss)),
+            ("test_acc_dense", num(self.test_acc_dense)),
+            ("test_acc", num(self.test_acc)),
+            ("test_acc_loss", num(self.test_acc_loss())),
+            ("reward", num(self.best.reward)),
+            ("episodes", num(self.episodes as f64)),
+            ("evals", num(self.evals as f64)),
+            ("wall_secs", num(self.wall_secs)),
+            ("per_layer", arr(layers)),
+            (
+                "reward_curve",
+                arr(self.reward_curve.iter().map(|&r| num(r)).collect()),
+            ),
+        ])
+    }
+}
+
+impl Coordinator {
+    pub fn new(cfg: RunConfig) -> Result<Coordinator> {
+        let runtime = Runtime::cpu()?;
+        let manifest_path = cfg.artifacts.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text)?;
+        let mut models = Vec::new();
+        for m in v.req("models")?.as_arr()? {
+            models.push(ModelEntry {
+                model: m.req("model")?.as_str()?.to_string(),
+                dataset: m.req("dataset")?.as_str()?.to_string(),
+                hlo: m.req("hlo")?.as_str()?.to_string(),
+                weights: m.req("weights")?.as_str()?.to_string(),
+                arch: m.req("arch")?.as_str()?.to_string(),
+                pallas_hlo: m.get("pallas_hlo").and_then(|x| x.as_str().ok()).map(str::to_string),
+                pallas_batch: m
+                    .get("pallas_batch")
+                    .and_then(|x| x.as_usize().ok())
+                    .unwrap_or(64),
+            });
+        }
+        let rq = RqTable::compute(cfg.mac_samples, 0xEC0);
+        Ok(Coordinator { cfg, runtime, rq, models })
+    }
+
+    pub fn entry(&self, model: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.model == model)
+            .ok_or_else(|| anyhow!("model `{model}` not in manifest; have: {:?}",
+                self.models.iter().map(|m| &m.model).collect::<Vec<_>>()))
+    }
+
+    pub fn load_arch(&self, model: &str) -> Result<(ModelArch, Weights, &ModelEntry)> {
+        let e = self.entry(model)?;
+        let arch = ModelArch::load(&self.cfg.artifacts.join(&e.arch))?;
+        let weights = Weights::load(&arch, &self.cfg.artifacts.join(&e.weights))?;
+        Ok((arch, weights, e))
+    }
+
+    fn data_path(&self, e: &ModelEntry) -> PathBuf {
+        self.cfg.artifacts.join(format!("{}.data.npz", e.dataset))
+    }
+
+    /// Build the reward-oracle environment for one model.
+    pub fn build_env(&self, model: &str) -> Result<CompressionEnv> {
+        let (arch, weights, e) = self.load_arch(model)?;
+        let energy = EnergyModel::new(arch.layer_dims()?, Accel::default(), self.rq.clone());
+        let session = InferenceSession::new(
+            &self.runtime,
+            &arch,
+            &self.cfg.artifacts.join(&e.hlo),
+            &self.data_path(e),
+            Split::Val,
+            self.cfg.reward_subset,
+        )?;
+        CompressionEnv::new(arch, weights, energy, session, self.cfg.seed)
+    }
+
+    /// Test-split session for final reporting.
+    pub fn test_session(&self, model: &str) -> Result<InferenceSession> {
+        let (arch, _, e) = self.load_arch(model)?;
+        InferenceSession::new(
+            &self.runtime,
+            &arch,
+            &self.cfg.artifacts.join(&e.hlo),
+            &self.data_path(e),
+            Split::Test,
+            self.cfg.test_subset,
+        )
+    }
+
+    /// Re-apply a solution and score it on the test split.
+    pub fn score_on_test(
+        &self,
+        env: &mut CompressionEnv,
+        test: &InferenceSession,
+        sol: &Solution,
+    ) -> Result<(f64, f64)> {
+        let n = env.n_layers();
+        test.invalidate_all(); // different weight sets share this session
+        let dense_acc = test.accuracy(env.dense_weights(), &vec![8.0f32; n])?;
+        env.evaluate_config(&sol.actions)?;
+        let (w, bits) = env.compressed();
+        test.invalidate_all();
+        let acc = test.accuracy(w, bits)?;
+        Ok((dense_acc, acc))
+    }
+
+    /// Run OUR composite-agent compression on one model (Fig 7a).
+    pub fn compress(&self, model: &str, progress: bool) -> Result<RunReport> {
+        self.compress_with(model, progress, Variant::Full)
+    }
+
+    /// Ablation-aware compression driver (DESIGN.md ablations: the
+    /// composite agent's pieces, and the §4.2.3 alternative metric).
+    pub fn compress_with(
+        &self,
+        model: &str,
+        progress: bool,
+        variant: Variant,
+    ) -> Result<RunReport> {
+        let t0 = Instant::now();
+        let mut env = self.build_env(model)?;
+        if let Variant::WithMetric(m) = variant {
+            env.metric = m;
+        }
+        let episodes = self.cfg.episodes;
+        let mut agent_cfg = CompositeConfig {
+            warmup_episodes: self.cfg.warmup,
+            ..CompositeConfig::default()
+        };
+        agent_cfg.monitor_window = (episodes / 6).clamp(6, 40);
+        agent_cfg.max_frozen_episodes = episodes / 2;
+        let mut agent = CompositeAgent::new(agent_cfg, self.cfg.seed);
+        let mut best: Option<Solution> = None;
+        let mut curve = Vec::with_capacity(episodes);
+
+        for ep in 0..episodes {
+            let mut state = env.reset();
+            let mut total = 0.0;
+            #[allow(unused_assignments)]
+            #[allow(unused_assignments)]
+        let mut last = None;
+            loop {
+                let action = agent.act(&state);
+                let step = env.step(action)?;
+                agent.observe_and_update(&state, &action, step.reward, &step.state, step.done);
+                total += step.reward;
+                state = step.state.clone();
+                let done = step.done;
+                last = Some(step);
+                if done {
+                    break;
+                }
+            }
+            agent.end_episode(total, episodes);
+            curve.push(total);
+            let sol = env.solution(last.as_ref().unwrap());
+            if progress && (ep % 10 == 0 || ep + 1 == episodes) {
+                eprintln!(
+                    "[{model}] ep {ep:4}  reward {total:7.2}  loss {:.3}  gain {:.3}  rainbow={}",
+                    sol.acc_loss, sol.energy_gain, agent.rainbow_unlocked
+                );
+            }
+            best = crate::baselines::better(best, sol);
+        }
+
+        // final greedy rollout with the learned policy
+        let mut state = env.reset();
+        #[allow(unused_assignments)]
+        let mut last = None;
+        loop {
+            let mut action = agent.act_greedy(&state);
+            if let Variant::SingleAlg(alg) = variant {
+                action.alg = alg.index();
+            }
+            let step = env.step(action)?;
+            state = step.state.clone();
+            let done = step.done;
+            last = Some(step);
+            if done {
+                break;
+            }
+        }
+        let greedy = env.solution(last.as_ref().unwrap());
+        best = crate::baselines::better(best, greedy);
+        let best = best.unwrap();
+
+        // optional agent checkpoint (resume-on-device story, §4)
+        if let Ok(ckpt) = std::env::var("HAPQ_CHECKPOINT") {
+            crate::rl::checkpoint::save(&agent, std::path::Path::new(&ckpt))?;
+            if progress {
+                eprintln!("[{model}] agent checkpoint -> {ckpt}");
+            }
+        }
+
+        let test = self.test_session(model)?;
+        let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
+        let e = self.entry(model)?;
+        Ok(RunReport {
+            model: model.to_string(),
+            dataset: e.dataset.clone(),
+            method: variant.method_name().to_string(),
+            best,
+            test_acc_dense: dense_acc,
+            test_acc,
+            episodes,
+            evals: env.n_evals,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            reward_curve: curve,
+        })
+    }
+
+    /// Run one of the comparison baselines on one model (Fig 7b–e, 9).
+    pub fn run_baseline(&self, model: &str, method: &str) -> Result<RunReport> {
+        use crate::baselines as b;
+        let t0 = Instant::now();
+        let mut env = self.build_env(model)?;
+        let episodes = self.cfg.episodes;
+        let seed = self.cfg.seed;
+        let best = match method {
+            "amc" => b::amc::run(
+                &mut env,
+                &b::amc::AmcConfig { episodes, warmup: self.cfg.warmup, seed },
+            )?,
+            "haq" => b::haq::run(
+                &mut env,
+                &b::haq::HaqConfig { episodes, warmup: self.cfg.warmup, seed },
+            )?,
+            "asqj" => b::asqj::run(
+                &mut env,
+                &b::asqj::AsqjConfig { iters: (episodes / 4).max(10), ..Default::default() },
+            )?,
+            "opq" => b::opq::run(&mut env, &b::opq::OpqConfig::default())?,
+            "nsga2" => b::nsga2::run(
+                &mut env,
+                &b::nsga2::Nsga2Config {
+                    pop: 20,
+                    generations: (episodes / 20).max(2),
+                    seed,
+                    ..Default::default()
+                },
+            )?,
+            other => anyhow::bail!("unknown baseline `{other}`"),
+        };
+        let test = self.test_session(model)?;
+        let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
+        let e = self.entry(model)?;
+        Ok(RunReport {
+            model: model.to_string(),
+            dataset: e.dataset.clone(),
+            method: method.to_string(),
+            best,
+            test_acc_dense: dense_acc,
+            test_acc,
+            episodes,
+            evals: env.n_evals,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            reward_curve: vec![],
+        })
+    }
+
+    /// Persist a report under `out/`.
+    pub fn save_report(&self, report: &RunReport) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.cfg.out)?;
+        let path = self
+            .cfg
+            .out
+            .join(format!("{}__{}.json", report.model, report.method));
+        std::fs::write(&path, report.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
+/// Ablation / extension variants of the main compression loop.
+#[derive(Clone, Copy, Debug)]
+pub enum Variant {
+    /// the paper's full composite agent, energy metric
+    Full,
+    /// Rainbow never unlocks — pruning algorithms stay randomly sampled
+    NoRainbow,
+    /// a single monolithic pruning algorithm (paper §3.1 motivation)
+    SingleAlg(crate::pruning::PruneAlg),
+    /// alternative hardware metric in the reward (§4.2.3)
+    WithMetric(Metric),
+}
+
+impl Variant {
+    pub fn method_name(&self) -> &'static str {
+        match self {
+            Variant::Full => "ours",
+            Variant::NoRainbow => "ours-norainbow",
+            Variant::SingleAlg(_) => "ours-singlealg",
+            Variant::WithMetric(Metric::Latency) => "ours-latency",
+            Variant::WithMetric(Metric::Edp) => "ours-edp",
+            Variant::WithMetric(Metric::Energy) => "ours",
+        }
+    }
+}
+
+/// Peak resident-set size of this process in KiB (Table 4 accounting).
+pub fn max_rss_kib() -> u64 {
+    if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                return rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+/// Current resident-set size in KiB.
+pub fn rss_kib() -> u64 {
+    if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                return rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_readable() {
+        assert!(rss_kib() > 0);
+        assert!(max_rss_kib() >= rss_kib() / 2);
+    }
+}

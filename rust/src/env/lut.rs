@@ -1,0 +1,96 @@
+//! The LUT-based hardware-aware reward (paper §4.2.3, Fig 5).
+//!
+//! A 40×40 table indexed by (accuracy loss, energy gain), built once.
+//! Shape requirements from the paper:
+//!   * reward is *significantly* higher for accuracy loss < 10 % — the
+//!     realistic target region of a no-retraining framework;
+//!   * within that region it grows with energy gain;
+//!   * small negative for (gain < 5 %, loss < 5 %) to discourage
+//!     close-to-zero compression actions;
+//!   * large and increasingly negative beyond 10 % loss.
+
+/// Table resolution (paper: 40×40).
+pub const N: usize = 40;
+
+#[derive(Clone, Debug)]
+pub struct RewardLut {
+    /// grid[loss_bin][gain_bin]
+    pub grid: Vec<Vec<f64>>,
+}
+
+impl RewardLut {
+    /// The paper's reward surface (Fig 5).
+    pub fn paper() -> RewardLut {
+        let mut grid = vec![vec![0.0; N]; N];
+        for (li, row) in grid.iter_mut().enumerate() {
+            // bin centres over [0, 1]
+            let loss = (li as f64 + 0.5) / N as f64;
+            for (gi, cell) in row.iter_mut().enumerate() {
+                let gain = (gi as f64 + 0.5) / N as f64;
+                *cell = if loss < 0.10 {
+                    let quality = (0.10 - loss) / 0.10; // 1 at zero loss
+                    if gain < 0.05 && loss < 0.05 {
+                        // §4.2.3: slightly discourage do-nothing actions
+                        -0.1
+                    } else {
+                        quality * (1.0 + 9.0 * gain)
+                    }
+                } else {
+                    // outside the useful region: strongly negative,
+                    // monotonically worse with loss
+                    -1.0 - 8.0 * (loss - 0.10)
+                };
+            }
+        }
+        RewardLut { grid }
+    }
+
+    /// Look up the reward for (accuracy-loss, energy-gain), both fractions.
+    pub fn reward(&self, acc_loss: f64, energy_gain: f64) -> f64 {
+        let li = ((acc_loss.clamp(0.0, 1.0)) * N as f64) as usize;
+        let gi = ((energy_gain.clamp(0.0, 1.0)) * N as f64) as usize;
+        self.grid[li.min(N - 1)][gi.min(N - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_are_40x40() {
+        let l = RewardLut::paper();
+        assert_eq!(l.grid.len(), 40);
+        assert!(l.grid.iter().all(|r| r.len() == 40));
+    }
+
+    #[test]
+    fn favours_low_loss() {
+        let l = RewardLut::paper();
+        // same gain, less loss -> more reward inside the useful region
+        assert!(l.reward(0.01, 0.4) > l.reward(0.05, 0.4));
+        assert!(l.reward(0.05, 0.4) > l.reward(0.09, 0.4));
+        // 10 %+ loss is sharply penalised
+        assert!(l.reward(0.12, 0.9) < 0.0);
+        assert!(l.reward(0.30, 0.9) < l.reward(0.12, 0.9));
+    }
+
+    #[test]
+    fn favours_energy_gain_in_region() {
+        let l = RewardLut::paper();
+        assert!(l.reward(0.02, 0.6) > l.reward(0.02, 0.2));
+    }
+
+    #[test]
+    fn discourages_nop_compression() {
+        let l = RewardLut::paper();
+        let r = l.reward(0.0, 0.0);
+        assert!(r < 0.0 && r > -0.5, "small negative, got {r}");
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let l = RewardLut::paper();
+        assert_eq!(l.reward(-1.0, 2.0), l.reward(0.0, 1.0));
+    }
+}

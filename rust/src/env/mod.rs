@@ -1,0 +1,387 @@
+//! The compression environment (paper §4.1–§4.2.3).
+//!
+//! One episode walks the prunable layers of the target DNN in order; at
+//! each step the composite agent supplies (pruning ratio, precision,
+//! pruning algorithm) for layer *t*, the env applies them to a working
+//! copy of the weights (dependency-resolved, §4.1), quantizes, queries
+//! the energy model, runs validation inference through the PJRT
+//! executable, and returns the LUT-based hardware-aware reward —
+//! exactly the loop of Fig 3. Rewards arrive at *every* step (§4.2.2:
+//! Rainbow requires an update before each action).
+
+pub mod lut;
+
+use anyhow::Result;
+
+use crate::hw::energy::{Compression, EnergyModel};
+use crate::model::{ModelArch, Op, Weights};
+use crate::pruning::{prune, prune_channels, PruneAlg, PruneCtx};
+use crate::quant::quantize_weights;
+use crate::runtime::InferenceSession;
+use crate::util::rng::Rng;
+use lut::RewardLut;
+
+pub const MIN_BITS: u32 = 2;
+pub const MAX_BITS: u32 = 8;
+/// Never prune more than this fraction of one layer (no retraining to recover).
+pub const MAX_RATIO: f64 = 0.9;
+
+/// State vector dimension — the paper's 13-feature layer embedding
+/// (eq. 1/2) with the 2-d previous action appended.
+pub const STATE_DIM: usize = 14;
+
+/// Hardware metric driving the reward (§4.2.3: "any other hardware
+/// metric (e.g., latency) is seamlessly supported").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Energy,
+    Latency,
+    /// energy-delay product (gain = 1 - (E/E0)·(T/T0))
+    Edp,
+}
+
+/// Raw agent action for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Action {
+    /// pruning ratio control ∈ [0,1] → sparsity target [0, MAX_RATIO]
+    pub ratio: f64,
+    /// precision control ∈ [0,1] → bits [MIN_BITS, MAX_BITS]
+    pub bits: f64,
+    /// pruning-technique index (Rainbow's discrete action)
+    pub alg: usize,
+}
+
+impl Action {
+    pub fn sparsity(&self) -> f64 {
+        self.ratio.clamp(0.0, 1.0) * MAX_RATIO
+    }
+
+    pub fn precision(&self) -> u32 {
+        let span = (MAX_BITS - MIN_BITS) as f64;
+        (MIN_BITS as f64 + self.bits.clamp(0.0, 1.0) * span).round() as u32
+    }
+}
+
+/// What the env reports after each step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub state: Vec<f32>,
+    pub reward: f64,
+    pub done: bool,
+    /// top-1 accuracy of the partially-compressed model (reward subset)
+    pub accuracy: f64,
+    /// accuracy loss vs the dense 8-bit baseline (fraction)
+    pub acc_loss: f64,
+    /// energy gain vs the dense 8-bit baseline (fraction)
+    pub energy_gain: f64,
+    /// latency gain vs the dense baseline (fraction)
+    pub latency_gain: f64,
+    /// the gain fed to the reward LUT (depends on the chosen [`Metric`])
+    pub hw_gain: f64,
+    /// what was actually applied after dependency resolution
+    pub applied: Applied,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Applied {
+    pub alg: PruneAlg,
+    pub sparsity: f64,
+    pub bits: u32,
+    /// true when the §4.1 rule rewrote the agent's choice
+    pub overridden: bool,
+}
+
+/// A finished configuration (one point of Fig 7/8/9).
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub per_layer: Vec<Applied>,
+    /// the raw actions that produced it (replayable via evaluate_config)
+    pub actions: Vec<Action>,
+    pub accuracy: f64,
+    pub acc_loss: f64,
+    pub energy_gain: f64,
+    pub latency_gain: f64,
+    pub reward: f64,
+}
+
+/// The environment.
+pub struct CompressionEnv {
+    pub arch: ModelArch,
+    dense: Weights,
+    pub energy: EnergyModel,
+    session: InferenceSession,
+    pub lut: RewardLut,
+    pub baseline_acc: f64,
+    /// which hardware gain feeds the reward (default: energy, as the paper)
+    pub metric: Metric,
+    group_of: Vec<usize>,
+
+    // episode state
+    work: Weights,
+    cfgs: Vec<Compression>,
+    act_bits: Vec<f32>,
+    applied: Vec<Applied>,
+    actions_taken: Vec<Action>,
+    group_mask: Vec<Option<(f64, Vec<usize>)>>,
+    t: usize,
+    last_action: (f64, f64),
+    rng: Rng,
+
+    // normalisation constants for the state embedding
+    norm: StateNorm,
+    /// count of reward-oracle invocations (Table 3/4 accounting)
+    pub n_evals: u64,
+}
+
+struct StateNorm {
+    max_ch: f64,
+    max_hw: f64,
+    max_e: f64,
+    max_p: f64,
+}
+
+impl CompressionEnv {
+    pub fn new(
+        arch: ModelArch,
+        weights: Weights,
+        energy: EnergyModel,
+        session: InferenceSession,
+        seed: u64,
+    ) -> Result<CompressionEnv> {
+        let n = arch.prunable.len();
+        let baseline_acc =
+            session.accuracy(&weights, &vec![MAX_BITS as f32; n])?;
+        let norm = {
+            let mut max_ch = 1f64;
+            let mut max_hw = 1f64;
+            let mut max_e = 1e-12f64;
+            let mut max_p = 1f64;
+            for i in 0..n {
+                let d = energy.dims(i);
+                max_ch = max_ch.max(d.co as f64).max(d.ci as f64);
+                max_hw = max_hw.max(d.ih as f64).max(d.iw as f64);
+                max_e = max_e.max(energy.dense_layer(i));
+                max_p = max_p.max(d.weights() as f64);
+            }
+            StateNorm { max_ch, max_hw, max_e, max_p }
+        };
+        let group_of = arch.group_of();
+        let n_groups = arch.dep_groups.len();
+        let work = weights.clone();
+        Ok(CompressionEnv {
+            arch,
+            energy,
+            session,
+            lut: RewardLut::paper(),
+            baseline_acc,
+            metric: Metric::Energy,
+            group_of,
+            work,
+            cfgs: vec![Compression::dense(); n],
+            act_bits: vec![MAX_BITS as f32; n],
+            applied: Vec::new(),
+            actions_taken: Vec::new(),
+            group_mask: vec![None; n_groups],
+            t: 0,
+            last_action: (0.0, 1.0),
+            rng: Rng::new(seed),
+            norm,
+            dense: weights,
+            n_evals: 0,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.arch.prunable.len()
+    }
+
+    /// Begin a new episode; returns the layer-0 state.
+    pub fn reset(&mut self) -> Vec<f32> {
+        let n = self.n_layers();
+        self.work = self.dense.clone();
+        self.cfgs = vec![Compression::dense(); n];
+        self.act_bits = vec![MAX_BITS as f32; n];
+        self.applied.clear();
+        self.actions_taken.clear();
+        self.group_mask.iter_mut().for_each(|m| *m = None);
+        self.t = 0;
+        self.last_action = (0.0, 1.0);
+        self.session.invalidate_all();
+        self.state(0)
+    }
+
+    /// The paper's layer embedding (eq. 1/2), min-max normalised.
+    pub fn state(&self, t: usize) -> Vec<f32> {
+        let d = self.energy.dims(t);
+        let layer = self.arch.layer(&self.arch.prunable[t]).unwrap();
+        let is_fc = matches!(layer.op, Op::Fc) as u32 as f32;
+        let e_dense = self.energy.dense_layer(t);
+        let e_now = self.energy.layer(t, &self.cfgs[t]);
+        let n = self.n_layers() as f32;
+        vec![
+            t as f32 / n,                                      // layer index
+            is_fc,                                             // layer kind
+            d.co as f32 / self.norm.max_ch as f32,             // C_out / N
+            d.ci as f32 / self.norm.max_ch as f32,             // C_in / M
+            d.ih as f32 / self.norm.max_hw as f32,             // h_in
+            d.iw as f32 / self.norm.max_hw as f32,             // w_in
+            d.stride as f32 / 4.0,                             // stride
+            d.k as f32 / 7.0,                                  // kernel
+            (e_dense / self.norm.max_e) as f32,                // E_t
+            (d.weights() as f64 / self.norm.max_p) as f32,     // P_t
+            (d.weights() as f64 * 32.0 / (self.norm.max_p * 32.0)) as f32, // M_t
+            ((e_dense - e_now) / self.norm.max_e) as f32,      // E_t^red
+            self.last_action.0 as f32,                         // a_{t-1} ratio
+            self.last_action.1 as f32,                         // a_{t-1} bits
+        ]
+    }
+
+    /// §4.1 dependency + sanity resolution: returns the algorithm that
+    /// will actually run, and an optional forced channel mask.
+    fn resolve(&self, t: usize, alg: PruneAlg) -> (PruneAlg, Option<(f64, Vec<usize>)>, bool) {
+        let layer = self.arch.layer(&self.arch.prunable[t]).unwrap();
+        // classifier output layer: structured pruning would drop classes
+        let is_classifier = t == self.n_layers() - 1;
+        if alg.coarse() && is_classifier {
+            return (PruneAlg::Level, None, true);
+        }
+        let g = self.group_of[t];
+        if alg.coarse() && g != usize::MAX {
+            if let Some(mask) = &self.group_mask[g] {
+                // a group member already fixed the structured mask — the
+                // dependent layer inherits it (resolved at first dependent
+                // layer, §4.1)
+                return (alg, Some(mask.clone()), true);
+            }
+        }
+        // depthwise convs inherit channel structure from their group; a
+        // standalone coarse prune on them is fine (mask recorded below)
+        let _ = layer;
+        (alg, None, false)
+    }
+
+    /// Apply one layer's action; returns reward & next state (Fig 3 loop).
+    pub fn step(&mut self, action: Action) -> Result<StepResult> {
+        let t = self.t;
+        let n = self.n_layers();
+        assert!(t < n, "episode finished; call reset()");
+        let want_alg = PruneAlg::from_index(action.alg);
+        let sparsity_target = action.sparsity();
+        let bits = action.precision();
+
+        let (alg, forced_mask, mut overridden) = self.resolve(t, want_alg);
+        let result = if let Some((ratio, chans)) = forced_mask {
+            let _ = ratio;
+            prune_channels(&mut self.work.w[t], &chans)
+        } else {
+            let mut ctx = PruneCtx {
+                saliency: &self.dense.sal[t],
+                chsq: &self.dense.chsq[t],
+                dwconv: false,
+                rng: &mut self.rng,
+            };
+            let r = prune(&mut self.work.w[t], alg, sparsity_target, &mut ctx);
+            // record a fresh structured mask for the group
+            if let (Some(ch), g) = (&r.channels, self.group_of[t]) {
+                if g != usize::MAX && self.group_mask[g].is_none() {
+                    self.group_mask[g] = Some((sparsity_target, ch.clone()));
+                }
+            }
+            r
+        };
+        // §4.1: quantization second, on the pruned weights
+        quantize_weights(&mut self.work.w[t], bits);
+        self.session.invalidate(t);
+        self.act_bits[t] = bits as f32;
+        let sparsity = result.sparsity;
+        if alg.coarse() && result.channels.is_none() {
+            overridden = true;
+        }
+        self.cfgs[t] = Compression { sparsity, coarse: alg.coarse(), bits };
+        let applied = Applied { alg, sparsity, bits, overridden };
+        self.applied.push(applied);
+        self.actions_taken.push(action);
+
+        // hardware feedback: energy/latency model + validation inference
+        let energy_gain = self.energy.gain(&self.cfgs);
+        let latency_gain = self.energy.latency_gain(&self.cfgs);
+        let hw_gain = match self.metric {
+            Metric::Energy => energy_gain,
+            Metric::Latency => latency_gain,
+            Metric::Edp => 1.0 - (1.0 - energy_gain) * (1.0 - latency_gain),
+        };
+        let accuracy = self.session.accuracy(&self.work, &self.act_bits)?;
+        self.n_evals += 1;
+        let acc_loss = (self.baseline_acc - accuracy).max(0.0);
+        let reward = self.lut.reward(acc_loss, hw_gain);
+
+        self.last_action = (action.ratio.clamp(0.0, 1.0), action.bits.clamp(0.0, 1.0));
+        self.t += 1;
+        let done = self.t == n;
+        let state = if done { vec![0.0; STATE_DIM] } else { self.state(self.t) };
+        Ok(StepResult {
+            state,
+            reward,
+            done,
+            accuracy,
+            acc_loss,
+            energy_gain,
+            latency_gain,
+            hw_gain,
+            applied,
+        })
+    }
+
+    /// Snapshot the finished episode as a solution record.
+    pub fn solution(&self, last: &StepResult) -> Solution {
+        Solution {
+            per_layer: self.applied.clone(),
+            actions: self.actions_taken.clone(),
+            accuracy: last.accuracy,
+            acc_loss: last.acc_loss,
+            energy_gain: last.energy_gain,
+            latency_gain: last.latency_gain,
+            reward: last.reward,
+        }
+    }
+
+    /// Current compressed weights + act bits (for test-set evaluation).
+    pub fn compressed(&self) -> (&Weights, &[f32]) {
+        (&self.work, &self.act_bits)
+    }
+
+    /// The untouched dense weights (analytical baselines read these).
+    pub fn dense_weights(&self) -> &Weights {
+        &self.dense
+    }
+
+    /// Evaluate an arbitrary full configuration in one shot (used by the
+    /// NSGA-II / OPQ / ASQJ baselines — same oracle as the RL path).
+    pub fn evaluate_config(&mut self, actions: &[Action]) -> Result<Solution> {
+        assert_eq!(actions.len(), self.n_layers());
+        self.reset();
+        let mut last = None;
+        for &a in actions {
+            last = Some(self.step(a)?);
+        }
+        let last = last.unwrap();
+        Ok(self.solution(&last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_mapping() {
+        let a = Action { ratio: 0.5, bits: 0.0, alg: 0 };
+        assert!((a.sparsity() - 0.45).abs() < 1e-9);
+        assert_eq!(a.precision(), 2);
+        let b = Action { ratio: 2.0, bits: 1.0, alg: 0 };
+        assert!((b.sparsity() - MAX_RATIO).abs() < 1e-9);
+        assert_eq!(b.precision(), 8);
+        let c = Action { ratio: 0.0, bits: 0.5, alg: 0 };
+        assert_eq!(c.precision(), 5);
+    }
+}

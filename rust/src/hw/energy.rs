@@ -1,0 +1,208 @@
+//! The paper's energy model, eqs (3)–(8).
+//!
+//! E_total = Σ_l E_mem^l + E_comp^l            (3)
+//! E_mem   = #acc  · e_mem  · R_mem            (4)
+//! E_comp  = #comp · e_comp · (R_pruned + R_unpruned)   (5)
+//!
+//! with reduction coefficients (7) for fine-grained pruning
+//! (R_mem = 1, R_pruned = P_FG·S, R_unpruned = (1−S)·R_Q) and (8) for
+//! coarse-grained (R_mem = 1−S, R_pruned = 0, R_unpruned = (1−S)·R_Q).
+//! #acc/#comp come from the dataflow mapper, R_Q/P_FG from the MAC
+//! switching simulator — both measured once and cached, so an energy
+//! query on the RL hot path is a handful of multiplies.
+
+use super::dataflow::{map_layer, LayerDims, Mapping};
+use super::mac_sim::RqTable;
+use super::Accel;
+
+/// Per-layer compression configuration chosen by the agent.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Compression {
+    /// fraction of zeroed parameters, S ∈ [0, 1]
+    pub sparsity: f64,
+    /// true → structured (filter/channel) pruning, eq (8); false → eq (7)
+    pub coarse: bool,
+    /// operand precision (weights & activations share it, §4.1), 2..=8
+    pub bits: u32,
+}
+
+impl Compression {
+    pub fn dense() -> Self {
+        Compression { sparsity: 0.0, coarse: false, bits: 8 }
+    }
+}
+
+/// Cached energy oracle for one model on one accelerator.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub acc: Accel,
+    pub rq: RqTable,
+    /// (dims, mapping, weighted mem energy, comp energy) per layer — dense/8-bit
+    layers: Vec<(LayerDims, Mapping, f64, f64)>,
+}
+
+impl EnergyModel {
+    pub fn new(dims: Vec<LayerDims>, acc: Accel, rq: RqTable) -> Self {
+        let layers = dims
+            .into_iter()
+            .map(|d| {
+                let m = map_layer(&d, &acc);
+                let e_mem = m.mem_energy(&acc);
+                let e_comp = m.macs as f64 * acc.e_mac;
+                (d, m, e_mem, e_comp)
+            })
+            .collect();
+        EnergyModel { acc, rq, layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn dims(&self, l: usize) -> &LayerDims {
+        &self.layers[l].0
+    }
+
+    pub fn mapping(&self, l: usize) -> &Mapping {
+        &self.layers[l].1
+    }
+
+    /// Dense 8-bit baseline energy of layer `l` (the paper's reference).
+    pub fn dense_layer(&self, l: usize) -> f64 {
+        self.layers[l].2 + self.layers[l].3
+    }
+
+    /// Energy of layer `l` under a compression config — eqs (4), (5).
+    pub fn layer(&self, l: usize, cfg: &Compression) -> f64 {
+        let (_, _, e_mem, e_comp) = self.layers[l];
+        let s = cfg.sparsity.clamp(0.0, 1.0);
+        let rq = self.rq.rq(cfg.bits, cfg.bits);
+        let (r_mem, r_pruned, r_unpruned) = if cfg.coarse {
+            (1.0 - s, 0.0, (1.0 - s) * rq) // eq (8)
+        } else {
+            (1.0, self.rq.p_fg * s, (1.0 - s) * rq) // eq (7)
+        };
+        e_mem * r_mem + e_comp * (r_pruned + r_unpruned)
+    }
+
+    /// E_total (eq. 3) for a full per-layer configuration.
+    pub fn total(&self, cfgs: &[Compression]) -> f64 {
+        assert_eq!(cfgs.len(), self.layers.len());
+        cfgs.iter()
+            .enumerate()
+            .map(|(l, c)| self.layer(l, c))
+            .sum()
+    }
+
+    /// Dense 8-bit total (denominator of every energy-gain number).
+    pub fn baseline(&self) -> f64 {
+        (0..self.layers.len()).map(|l| self.dense_layer(l)).sum()
+    }
+
+    /// Energy gain (fraction) of a configuration w.r.t. the baseline.
+    pub fn gain(&self, cfgs: &[Compression]) -> f64 {
+        1.0 - self.total(cfgs) / self.baseline()
+    }
+
+    /// Latency (cycles) of a configuration — §4.2.3's "any other
+    /// hardware metric" hook, backed by [`super::latency`].
+    pub fn cycles(&self, cfgs: &[Compression]) -> f64 {
+        assert_eq!(cfgs.len(), self.layers.len());
+        self.layers
+            .iter()
+            .zip(cfgs)
+            .map(|((_, m, _, _), c)| super::latency::layer_cycles(m, &self.acc, c))
+            .sum()
+    }
+
+    /// Latency gain (fraction) w.r.t. the dense baseline.
+    pub fn latency_gain(&self, cfgs: &[Compression]) -> f64 {
+        let dense = vec![Compression::dense(); self.layers.len()];
+        1.0 - self.cycles(cfgs) / self.cycles(&dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> EnergyModel {
+        let dims = vec![
+            LayerDims::conv(16, 16, 3, 16, 16, 16, 3, 1),
+            LayerDims::conv(16, 16, 16, 8, 8, 32, 3, 2),
+            LayerDims::fc(512, 10),
+        ];
+        EnergyModel::new(dims, Accel::default(), RqTable::compute(1500, 7))
+    }
+
+    #[test]
+    fn dense_config_is_baseline() {
+        let m = model();
+        let cfgs = vec![Compression::dense(); 3];
+        assert!((m.total(&cfgs) - m.baseline()).abs() / m.baseline() < 1e-9);
+        assert!(m.gain(&cfgs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_never_exceeds_baseline() {
+        use crate::util::proptest::forall;
+        let m = model();
+        forall(
+            "compressed energy <= dense baseline",
+            |r| {
+                (0..3)
+                    .map(|_| Compression {
+                        sparsity: r.uniform(),
+                        coarse: r.uniform() < 0.5,
+                        bits: 2 + r.below(7) as u32,
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |cfgs| m.total(cfgs) <= m.baseline() * (1.0 + 1e-9),
+        );
+    }
+
+    #[test]
+    fn coarse_beats_fine_at_same_sparsity() {
+        // eq (7) vs (8): structured pruning reduces memory traffic and
+        // skips pruned MACs entirely — strictly larger gains (Fig 1).
+        let m = model();
+        for s in [0.2, 0.5, 0.8] {
+            let fine = Compression { sparsity: s, coarse: false, bits: 8 };
+            let coarse = Compression { sparsity: s, coarse: true, bits: 8 };
+            assert!(m.layer(0, &coarse) < m.layer(0, &fine), "s={s}");
+        }
+    }
+
+    #[test]
+    fn lower_bits_lower_energy() {
+        let m = model();
+        let mut prev = f64::INFINITY;
+        for bits in [8u32, 6, 4, 2] {
+            let c = Compression { sparsity: 0.0, coarse: false, bits };
+            let e = m.total(&[c, c, c]);
+            assert!(e <= prev + 1e-9, "bits={bits}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn monotone_in_sparsity() {
+        let m = model();
+        let mut prev = f64::INFINITY;
+        for i in 0..=10 {
+            let s = i as f64 / 10.0;
+            let c = Compression { sparsity: s, coarse: true, bits: 8 };
+            let e = m.layer(1, &c);
+            assert!(e <= prev + 1e-9);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn full_coarse_prune_zeroes_layer() {
+        let m = model();
+        let c = Compression { sparsity: 1.0, coarse: true, bits: 8 };
+        assert!(m.layer(0, &c) < 1e-9);
+    }
+}

@@ -1,0 +1,44 @@
+//! Hardware substrates: the gate-level MAC switching-activity simulator
+//! (Synopsys-flow substitute), the Eyeriss-style dataflow mapper
+//! (NN-Dataflow substitute), and the paper's energy model (eqs 3–8).
+
+pub mod dataflow;
+pub mod energy;
+pub mod latency;
+pub mod mac_sim;
+pub mod report;
+
+/// Eyeriss-based accelerator configuration (paper §5.1, Fig 6).
+#[derive(Clone, Debug)]
+pub struct Accel {
+    /// PE array per tile (paper: 64×64)
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// per-PE register file bytes (paper: 64 B)
+    pub rf_bytes: usize,
+    /// shared global buffer bytes (paper: 32 KB)
+    pub gb_bytes: usize,
+    /// native MAC precision in bits (paper: 8)
+    pub mac_bits: u32,
+    /// normalised access energies (Eyeriss: RF 1×, GB 6×, DRAM 200× a MAC)
+    pub e_mac: f64,
+    pub e_rf: f64,
+    pub e_gb: f64,
+    pub e_dram: f64,
+}
+
+impl Default for Accel {
+    fn default() -> Self {
+        Accel {
+            pe_rows: 64,
+            pe_cols: 64,
+            rf_bytes: 64,
+            gb_bytes: 32 * 1024,
+            mac_bits: 8,
+            e_mac: 1.0,
+            e_rf: 1.0,
+            e_gb: 6.0,
+            e_dram: 200.0,
+        }
+    }
+}

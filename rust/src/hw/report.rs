@@ -1,0 +1,113 @@
+//! Per-layer energy breakdown reports — the analysis view behind the
+//! paper's Fig 8 narrative ("quantization drives the gains on the
+//! barely-pruned shortcut layer", etc.).
+
+use super::energy::{Compression, EnergyModel};
+
+/// One row of the breakdown table.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub macs: u64,
+    pub dram: u64,
+    pub e_dense: f64,
+    pub e_compressed: f64,
+    /// share of the *dense model's* total energy this layer holds
+    pub dense_share: f64,
+    /// fraction of this layer's energy removed by the config
+    pub layer_gain: f64,
+}
+
+/// Full breakdown for a configuration.
+pub fn breakdown(model: &EnergyModel, cfgs: &[Compression]) -> Vec<LayerReport> {
+    let baseline = model.baseline();
+    (0..model.n_layers())
+        .map(|l| {
+            let e_dense = model.dense_layer(l);
+            let e_c = model.layer(l, &cfgs[l]);
+            LayerReport {
+                layer: l,
+                macs: model.mapping(l).macs,
+                dram: model.mapping(l).dram,
+                e_dense,
+                e_compressed: e_c,
+                dense_share: e_dense / baseline,
+                layer_gain: 1.0 - e_c / e_dense.max(1e-12),
+            }
+        })
+        .collect()
+}
+
+/// The layers responsible for ≥`frac` of remaining energy, biggest first
+/// — the perf-pass "where to look next" helper.
+pub fn hotspots(model: &EnergyModel, cfgs: &[Compression], frac: f64) -> Vec<usize> {
+    let rows = breakdown(model, cfgs);
+    let total: f64 = rows.iter().map(|r| r.e_compressed).sum();
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    order.sort_by(|&a, &b| {
+        rows[b].e_compressed.partial_cmp(&rows[a].e_compressed).unwrap()
+    });
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for &l in &order {
+        out.push(l);
+        acc += rows[l].e_compressed;
+        if acc >= frac * total {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::dataflow::LayerDims;
+    use crate::hw::mac_sim::RqTable;
+    use crate::hw::Accel;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(
+            vec![
+                LayerDims::conv(16, 16, 3, 16, 16, 16, 3, 1),
+                LayerDims::conv(16, 16, 16, 8, 8, 64, 3, 2),
+                LayerDims::fc(256, 10),
+            ],
+            Accel::default(),
+            RqTable::compute(1000, 3),
+        )
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let m = model();
+        let rows = breakdown(&m, &vec![Compression::dense(); 3]);
+        let s: f64 = rows.iter().map(|r| r.dense_share).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(rows.iter().all(|r| r.layer_gain.abs() < 1e-9));
+    }
+
+    #[test]
+    fn gain_shows_up_per_layer() {
+        let m = model();
+        let mut cfgs = vec![Compression::dense(); 3];
+        cfgs[1] = Compression { sparsity: 0.5, coarse: true, bits: 4 };
+        let rows = breakdown(&m, &cfgs);
+        assert!(rows[1].layer_gain > 0.3);
+        assert!(rows[0].layer_gain.abs() < 1e-9);
+    }
+
+    #[test]
+    fn hotspots_ordered_and_cover() {
+        let m = model();
+        let cfgs = vec![Compression::dense(); 3];
+        let hs = hotspots(&m, &cfgs, 0.99);
+        assert!(!hs.is_empty());
+        let rows = breakdown(&m, &cfgs);
+        // first hotspot is the most expensive layer
+        let max = (0..3)
+            .max_by(|&a, &b| rows[a].e_compressed.partial_cmp(&rows[b].e_compressed).unwrap())
+            .unwrap();
+        assert_eq!(hs[0], max);
+    }
+}

@@ -1,0 +1,5 @@
+//! IO substrates: minimal JSON (serde is not vendored) and NPZ/NPY
+//! readers for the artifact contract (DESIGN.md §5).
+
+pub mod json;
+pub mod npz;

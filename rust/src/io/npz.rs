@@ -1,0 +1,361 @@
+//! NPZ/NPY reader (and a small writer for checkpoints).
+//!
+//! `np.savez` produces a ZIP archive of `.npy` members with compression
+//! method 0 (stored) — exactly what the artifact contract uses. We
+//! parse the ZIP end-of-central-directory + central directory + local
+//! headers ourselves (the vendored `zip` crate drags in crypto/zstd
+//! deps we don't need) and the NPY v1/v2 header dict by hand.
+//!
+//! Supported dtypes: `<f4`, `<f8`, `<i4`, `<i8` — everything the
+//! exporter emits.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// One array loaded from an archive.
+#[derive(Clone, Debug)]
+pub struct Npy {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Clone, Debug)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I64(Vec<i64>),
+}
+
+impl Npy {
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        match &self.data {
+            NpyData::F32(v) => Ok(Tensor::new(self.shape.clone(), v.clone())),
+            NpyData::I64(_) => bail!("integer array where f32 expected"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &self.data {
+            NpyData::I64(v) => Ok(v),
+            NpyData::F32(_) => bail!("float array where integers expected"),
+        }
+    }
+}
+
+/// Parsed NPZ archive: name -> array.
+pub struct Npz {
+    pub entries: HashMap<String, Npy>,
+}
+
+impl Npz {
+    pub fn load(path: &Path) -> Result<Npz> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Npz> {
+        let mut entries = HashMap::new();
+        for (name, data) in zip_entries(bytes)? {
+            let name = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            entries.insert(name, parse_npy(data)?);
+        }
+        Ok(Npz { entries })
+    }
+
+    pub fn tensor(&self, key: &str) -> Result<Tensor> {
+        self.entries
+            .get(key)
+            .ok_or_else(|| anyhow!("npz missing key `{key}`"))?
+            .to_tensor()
+    }
+
+    pub fn i64s(&self, key: &str) -> Result<Vec<i64>> {
+        Ok(self
+            .entries
+            .get(key)
+            .ok_or_else(|| anyhow!("npz missing key `{key}`"))?
+            .as_i64()?
+            .to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ZIP (stored entries only)
+
+fn rd_u16(b: &[u8], o: usize) -> usize {
+    u16::from_le_bytes([b[o], b[o + 1]]) as usize
+}
+
+fn rd_u32(b: &[u8], o: usize) -> usize {
+    u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]]) as usize
+}
+
+/// Iterate (name, raw bytes) of all stored entries.
+fn zip_entries(b: &[u8]) -> Result<Vec<(String, &[u8])>> {
+    // find End Of Central Directory record (sig 0x06054b50), scanning back
+    let eocd = (0..=b.len().saturating_sub(22))
+        .rev()
+        .find(|&i| b[i..i + 4] == [0x50, 0x4b, 0x05, 0x06])
+        .ok_or_else(|| anyhow!("not a zip: EOCD not found"))?;
+    let n_entries = rd_u16(b, eocd + 10);
+    let cd_off = rd_u32(b, eocd + 16);
+    let mut out = Vec::with_capacity(n_entries);
+    let mut o = cd_off;
+    for _ in 0..n_entries {
+        if b[o..o + 4] != [0x50, 0x4b, 0x01, 0x02] {
+            bail!("bad central directory signature at {o}");
+        }
+        let method = rd_u16(b, o + 10);
+        let mut size = rd_u32(b, o + 20); // compressed == uncompressed (stored)
+        let name_len = rd_u16(b, o + 28);
+        let extra_len = rd_u16(b, o + 30);
+        let comment_len = rd_u16(b, o + 32);
+        let lho = rd_u32(b, o + 42);
+        let name = String::from_utf8_lossy(&b[o + 46..o + 46 + name_len]).to_string();
+        if method != 0 {
+            bail!("zip entry `{name}` uses compression method {method}; only stored (0) supported — use np.savez, not savez_compressed");
+        }
+        if size == 0xFFFF_FFFF {
+            // zip64: real size lives in the extra field (tag 0x0001)
+            let mut e = o + 46 + name_len;
+            let end = e + extra_len;
+            let mut found = false;
+            while e + 4 <= end {
+                let tag = rd_u16(b, e);
+                let len = rd_u16(b, e + 2);
+                if tag == 0x0001 && len >= 8 {
+                    size = u64::from_le_bytes(b[e + 4..e + 12].try_into().unwrap()) as usize;
+                    found = true;
+                    break;
+                }
+                e += 4 + len;
+            }
+            if !found {
+                bail!("zip64 entry `{name}` without zip64 extra field");
+            }
+        }
+        // local header only locates the payload; sizes come from the CD
+        // (numpy writes zip64 placeholders in local headers)
+        if b[lho..lho + 4] != [0x50, 0x4b, 0x03, 0x04] {
+            bail!("bad local header signature for `{name}`");
+        }
+        let l_name = rd_u16(b, lho + 26);
+        let l_extra = rd_u16(b, lho + 28);
+        let start = lho + 30 + l_name + l_extra;
+        if start + size > b.len() {
+            bail!("zip entry `{name}` overruns archive ({start}+{size} > {})", b.len());
+        }
+        out.push((name, &b[start..start + size]));
+        o += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// NPY
+
+fn parse_npy(b: &[u8]) -> Result<Npy> {
+    if b.len() < 10 || &b[0..6] != b"\x93NUMPY" {
+        bail!("bad npy magic");
+    }
+    let major = b[6];
+    let (header, data_off) = if major == 1 {
+        let hlen = rd_u16(b, 8);
+        (std::str::from_utf8(&b[10..10 + hlen])?, 10 + hlen)
+    } else {
+        let hlen = rd_u32(b, 8);
+        (std::str::from_utf8(&b[12..12 + hlen])?, 12 + hlen)
+    };
+    let descr = dict_str(header, "descr")?;
+    if dict_bool(header, "fortran_order")? {
+        bail!("fortran_order arrays unsupported");
+    }
+    let shape = dict_shape(header)?;
+    let n: usize = shape.iter().product();
+    let raw = &b[data_off..];
+    let data = match descr.as_str() {
+        "<f4" => NpyData::F32(
+            raw.chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        "<f8" => NpyData::F32(
+            raw.chunks_exact(8)
+                .take(n)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect(),
+        ),
+        "<i4" => NpyData::I64(
+            raw.chunks_exact(4)
+                .take(n)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64)
+                .collect(),
+        ),
+        "<i8" => NpyData::I64(
+            raw.chunks_exact(8)
+                .take(n)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        d => bail!("unsupported npy dtype `{d}`"),
+    };
+    let got = match &data {
+        NpyData::F32(v) => v.len(),
+        NpyData::I64(v) => v.len(),
+    };
+    if got != n {
+        bail!("npy truncated: want {n} elements, got {got}");
+    }
+    Ok(Npy { shape, data })
+}
+
+fn dict_str(h: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let i = h.find(&pat).ok_or_else(|| anyhow!("npy header missing {key}"))?;
+    let rest = &h[i + pat.len()..];
+    let q1 = rest.find('\'').ok_or_else(|| anyhow!("bad {key}"))?;
+    let q2 = rest[q1 + 1..].find('\'').ok_or_else(|| anyhow!("bad {key}"))?;
+    Ok(rest[q1 + 1..q1 + 1 + q2].to_string())
+}
+
+fn dict_bool(h: &str, key: &str) -> Result<bool> {
+    let pat = format!("'{key}':");
+    let i = h.find(&pat).ok_or_else(|| anyhow!("npy header missing {key}"))?;
+    let rest = h[i + pat.len()..].trim_start();
+    Ok(rest.starts_with("True"))
+}
+
+fn dict_shape(h: &str) -> Result<Vec<usize>> {
+    let i = h.find("'shape':").ok_or_else(|| anyhow!("npy header missing shape"))?;
+    let rest = &h[i + 8..];
+    let o = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
+    let c = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
+    let inner = &rest[o + 1..c];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.parse::<usize>()?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Writer (checkpoints): stored-zip of f32 npy members.
+
+pub fn save_npz(path: &Path, arrays: &[(String, &Tensor)]) -> Result<()> {
+    let mut zip_buf: Vec<u8> = Vec::new();
+    let mut central: Vec<u8> = Vec::new();
+    let mut n = 0u16;
+    for (name, t) in arrays {
+        let fname = format!("{name}.npy");
+        let member = npy_bytes(t);
+        let crc = crc32(&member);
+        let off = zip_buf.len() as u32;
+        // local header
+        zip_buf.extend_from_slice(&[0x50, 0x4b, 0x03, 0x04, 20, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        zip_buf.extend_from_slice(&crc.to_le_bytes());
+        zip_buf.extend_from_slice(&(member.len() as u32).to_le_bytes());
+        zip_buf.extend_from_slice(&(member.len() as u32).to_le_bytes());
+        zip_buf.extend_from_slice(&(fname.len() as u16).to_le_bytes());
+        zip_buf.extend_from_slice(&0u16.to_le_bytes());
+        zip_buf.extend_from_slice(fname.as_bytes());
+        zip_buf.extend_from_slice(&member);
+        // central directory entry
+        central.extend_from_slice(&[0x50, 0x4b, 0x01, 0x02, 20, 0, 20, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&(member.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(member.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(fname.len() as u16).to_le_bytes());
+        central.extend_from_slice(&[0u8; 12]);
+        central.extend_from_slice(&off.to_le_bytes());
+        central.extend_from_slice(fname.as_bytes());
+        n += 1;
+    }
+    let cd_off = zip_buf.len() as u32;
+    let cd_len = central.len() as u32;
+    zip_buf.extend_from_slice(&central);
+    zip_buf.extend_from_slice(&[0x50, 0x4b, 0x05, 0x06, 0, 0, 0, 0]);
+    zip_buf.extend_from_slice(&n.to_le_bytes());
+    zip_buf.extend_from_slice(&n.to_le_bytes());
+    zip_buf.extend_from_slice(&cd_len.to_le_bytes());
+    zip_buf.extend_from_slice(&cd_off.to_le_bytes());
+    zip_buf.extend_from_slice(&0u16.to_le_bytes());
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&zip_buf)?;
+    Ok(())
+}
+
+fn npy_bytes(t: &Tensor) -> Vec<u8> {
+    let shape = t
+        .shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let trail = if t.shape.len() == 1 { "," } else { "" };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({shape}{trail}), }}"
+    );
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + t.data.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for x in &t.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    // standard CRC-32 (IEEE), small table-less implementation
+    let mut crc = 0xFFFF_FFFFu32;
+    for &byte in data {
+        crc ^= byte as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_writer() {
+        let t1 = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t2 = Tensor::new(vec![4], vec![-1., 0., 1., 2.]);
+        let dir = std::env::temp_dir().join("hapq_npz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.npz");
+        save_npz(&p, &[("a".into(), &t1), ("b".into(), &t2)]).unwrap();
+        let npz = Npz::load(&p).unwrap();
+        assert_eq!(npz.tensor("a").unwrap(), t1);
+        assert_eq!(npz.tensor("b").unwrap(), t2);
+    }
+
+    #[test]
+    fn rejects_non_zip() {
+        assert!(Npz::from_bytes(b"hello world, definitely not a zip").is_err());
+    }
+
+    #[test]
+    fn crc_known_value() {
+        // CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

@@ -1,0 +1,31 @@
+//! # HAPQ — Hardware-Aware DNN Compression via Diverse Pruning and
+//! Mixed-Precision Quantization
+//!
+//! Rust (L3) side of the three-layer reproduction of Balaskas et al.,
+//! IEEE TETC 2023 (DOI 10.1109/TETC.2023.3346944). This crate owns the
+//! *entire request path*: the composite RL agent (DDPG + Rainbow), the
+//! seven pruning algorithms of Table 2, per-channel post-training
+//! quantization, the Eyeriss-style energy model (gate-level MAC
+//! switching simulator + dataflow mapper), the LUT-based hardware-aware
+//! reward, all five comparison baselines and the coordinator/CLI.
+//!
+//! The JAX/Pallas layers (L2/L1) run only at build time (`make
+//! artifacts`); their output — HLO text + weights + arch descriptors —
+//! is loaded by [`runtime`] through the PJRT C API and executed for the
+//! accuracy term of the reward at every RL step. Python is never on
+//! this path.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod hw;
+pub mod io;
+pub mod model;
+pub mod nn;
+pub mod pruning;
+pub mod quant;
+pub mod rl;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

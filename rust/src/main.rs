@@ -1,0 +1,326 @@
+//! `hapq` — CLI for the HAPQ compression framework.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §4):
+//!
+//! ```text
+//! hapq list                                  # models in the artifact manifest
+//! hapq compress  --model vgg11 [--episodes N]   # ours (Fig 7a)
+//! hapq baseline  --model vgg11 --method amc|haq|asqj|opq|nsga2
+//! hapq compare   [--models a,b] [--methods ...] # Fig 7 grid
+//! hapq fig1      --model vgg16                  # sparsity sweep
+//! hapq fig2a                                    # quantization energy grid
+//! hapq fig2b     --model resnet18               # uniform vs mixed
+//! hapq fig5                                     # reward LUT heatmap
+//! hapq fig8      --model resnet18               # per-layer policy dump
+//! hapq ablate    --model vgg11                  # agent-design ablations
+//! hapq perf      --model vgg11                  # hot-path latency metrics
+//! ```
+//!
+//! `compare --jobs N` fans out over N worker processes.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use hapq::config::{Cli, RunConfig};
+use hapq::coordinator::{figures, Coordinator};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "hapq — Hardware-Aware DNN Compression via Diverse Pruning and \
+         Mixed-Precision Quantization\n\
+         commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
+         fig5, fig8, perf\n\
+         common flags: --artifacts DIR --out DIR --episodes N --seed N \
+         --reward-subset N --model NAME"
+    );
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    let cfg: RunConfig = cli.run_config()?;
+    match cli.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "list" => {
+            let coord = Coordinator::new(cfg)?;
+            println!("{:<14} {:<12} {:>9}", "model", "dataset", "acc@8bit");
+            for e in &coord.models {
+                let arch = hapq::model::ModelArch::load(&coord.cfg.artifacts.join(&e.arch))?;
+                println!("{:<14} {:<12} {:>9.3}", e.model, e.dataset, arch.acc_int8);
+            }
+            Ok(())
+        }
+        "compress" => {
+            let model = cli.str_flag("model", "vgg11");
+            let coord = Coordinator::new(cfg)?;
+            let report = coord.compress(&model, true)?;
+            let path = coord.save_report(&report)?;
+            println!(
+                "{}: energy gain {:.1}% | test acc {:.3} (dense {:.3}, loss {:.2}%) | {} evals | {:.1}s -> {}",
+                model,
+                report.best.energy_gain * 100.0,
+                report.test_acc,
+                report.test_acc_dense,
+                report.test_acc_loss() * 100.0,
+                report.evals,
+                report.wall_secs,
+                path.display()
+            );
+            Ok(())
+        }
+        "baseline" => {
+            let model = cli.str_flag("model", "vgg11");
+            let method = cli.str_flag("method", "amc");
+            let coord = Coordinator::new(cfg)?;
+            let report = coord.run_baseline(&model, &method)?;
+            let path = coord.save_report(&report)?;
+            println!(
+                "{} [{}]: energy gain {:.1}% | test loss {:.2}% | {} evals | {:.1}s -> {}",
+                model,
+                method,
+                report.best.energy_gain * 100.0,
+                report.test_acc_loss() * 100.0,
+                report.evals,
+                report.wall_secs,
+                path.display()
+            );
+            Ok(())
+        }
+        "compare" => {
+            let coord = Coordinator::new(cfg)?;
+            let models: Vec<String> = match cli.flags.get("models") {
+                Some(ms) if ms != "all" => ms.split(',').map(str::to_string).collect(),
+                _ => coord.models.iter().map(|e| e.model.clone()).collect(),
+            };
+            let methods: Vec<String> = cli
+                .str_flag("methods", "ours,amc,haq,asqj,opq")
+                .split(',')
+                .map(str::to_string)
+                .collect();
+            let jobs = cli.usize_flag("jobs", 1)?;
+            if jobs > 1 {
+                // multi-process fan-out (coordinator::launcher)
+                let grid: Vec<hapq::coordinator::launcher::Job> = models
+                    .iter()
+                    .flat_map(|m| {
+                        methods.iter().map(move |me| hapq::coordinator::launcher::Job {
+                            model: m.clone(),
+                            method: me.clone(),
+                        })
+                    })
+                    .collect();
+                let results =
+                    hapq::coordinator::launcher::run_grid(&coord.cfg, grid, jobs)?;
+                println!(
+                    "{:<12} {:<8} {:>11} {:>13}",
+                    "model", "method", "energy-gain", "test-acc-loss"
+                );
+                for (job, res) in results {
+                    match res {
+                        Ok(v) => println!(
+                            "{:<12} {:<8} {:>10.1}% {:>12.2}%",
+                            job.model,
+                            job.method,
+                            v.req("energy_gain")?.as_f64()? * 100.0,
+                            v.req("test_acc_loss")?.as_f64()? * 100.0
+                        ),
+                        Err(e) => println!("{:<12} {:<8} FAILED: {e}", job.model, job.method),
+                    }
+                }
+                return Ok(());
+            }
+            println!(
+                "{:<12} {:<8} {:>11} {:>10} {:>8} {:>9}",
+                "model", "method", "energy-gain", "acc-loss", "evals", "secs"
+            );
+            for model in &models {
+                for method in &methods {
+                    let report = if method == "ours" {
+                        coord.compress(model, false)?
+                    } else {
+                        coord.run_baseline(model, method)?
+                    };
+                    coord.save_report(&report)?;
+                    println!(
+                        "{:<12} {:<8} {:>10.1}% {:>9.2}% {:>8} {:>8.1}s",
+                        model,
+                        method,
+                        report.best.energy_gain * 100.0,
+                        report.test_acc_loss() * 100.0,
+                        report.evals,
+                        report.wall_secs
+                    );
+                }
+            }
+            Ok(())
+        }
+        "fig1" => {
+            let coord = Coordinator::new(cfg)?;
+            let model = cli.str_flag("model", "vgg16");
+            let mut env = coord.build_env(&model)?;
+            let pts: Vec<f64> = (1..=9).map(|i| i as f64 / 10.0).collect();
+            println!("# Fig 1 — {model}: sparsity vs (acc loss, energy gain)");
+            println!("{:<12} {:>9} {:>10} {:>12}", "alg", "sparsity", "acc-loss", "energy-gain");
+            for r in figures::fig1_sweep(&mut env, &pts)? {
+                println!(
+                    "{:<12} {:>9.1} {:>9.2}% {:>11.2}%",
+                    r.alg,
+                    r.sparsity,
+                    r.acc_loss * 100.0,
+                    r.energy_gain * 100.0
+                );
+            }
+            Ok(())
+        }
+        "fig2a" => {
+            let coord = Coordinator::new(cfg)?;
+            let model = cli.str_flag("model", "vgg11");
+            let env = coord.build_env(&model)?;
+            println!("# Fig 2a — accelerator energy reduction vs (Qw, Qa), model {model}");
+            println!("{:>3} {:>3} {:>10}", "Qw", "Qa", "reduction");
+            for (qw, qa, red) in figures::fig2a_grid(&env) {
+                println!("{qw:>3} {qa:>3} {:>9.2}%", red * 100.0);
+            }
+            Ok(())
+        }
+        "fig2b" => {
+            let coord = Coordinator::new(cfg)?;
+            let model = cli.str_flag("model", "resnet18");
+            let samples = cli.usize_flag("samples", 40)?;
+            let mut env = coord.build_env(&model)?;
+            println!("# Fig 2b — uniform vs mixed precision, model {model}");
+            for p in figures::fig2b_points(&mut env, samples, coord.cfg.seed)? {
+                println!(
+                    "{:<8} loss {:>6.2}%  gain {:>6.2}%",
+                    p.kind,
+                    p.acc_loss * 100.0,
+                    p.energy_gain * 100.0
+                );
+            }
+            Ok(())
+        }
+        "fig5" => {
+            println!("# Fig 5 — reward LUT heatmap (sub-sampled 10x10 of 40x40)");
+            for row in figures::fig5_heatmap(4) {
+                let cells: Vec<String> = row.iter().map(|v| format!("{v:6.2}")).collect();
+                println!("{}", cells.join(" "));
+            }
+            Ok(())
+        }
+        "fig8" => {
+            let model = cli.str_flag("model", "resnet18");
+            let coord = Coordinator::new(cfg)?;
+            let report = coord.compress(&model, true)?;
+            println!("# Fig 8 — per-layer policy, {model}");
+            println!("{:<6} {:<12} {:>9} {:>6}", "layer", "alg", "sparsity", "bits");
+            for (i, alg, sp, bits) in figures::fig8_rows(&report) {
+                println!("{i:<6} {alg:<12} {sp:>9.2} {bits:>6}");
+            }
+            coord.save_report(&report)?;
+            Ok(())
+        }
+        "ablate" => {
+            // ablations of the composite agent's design choices + the
+            // §4.2.3 alternative-metric extension
+            use hapq::coordinator::Variant;
+            use hapq::env::Metric;
+            use hapq::pruning::PruneAlg;
+            let model = cli.str_flag("model", "vgg11");
+            let coord = Coordinator::new(cfg)?;
+            let variants: Vec<(&str, Variant)> = vec![
+                ("full composite (paper)", Variant::Full),
+                ("no Rainbow (random algs)", Variant::NoRainbow),
+                ("single alg: l1-ranked", Variant::SingleAlg(PruneAlg::L1Ranked)),
+                ("single alg: level", Variant::SingleAlg(PruneAlg::Level)),
+                ("latency-driven reward", Variant::WithMetric(Metric::Latency)),
+                ("EDP-driven reward", Variant::WithMetric(Metric::Edp)),
+            ];
+            println!(
+                "{:<26} {:>11} {:>13} {:>12}",
+                "variant", "energy-gain", "latency-gain", "acc-loss"
+            );
+            for (name, v) in variants {
+                let r = coord.compress_with(&model, false, v)?;
+                coord.save_report(&r)?;
+                println!(
+                    "{:<26} {:>10.1}% {:>12.1}% {:>11.2}%",
+                    name,
+                    r.best.energy_gain * 100.0,
+                    r.best.latency_gain * 100.0,
+                    r.test_acc_loss() * 100.0
+                );
+            }
+            Ok(())
+        }
+        "report" => {
+            // per-layer energy breakdown of a configuration (hw::report)
+            let model = cli.str_flag("model", "vgg11");
+            let coord = Coordinator::new(cfg)?;
+            let env = coord.build_env(&model)?;
+            let n = env.n_layers();
+            let dense = vec![hapq::hw::energy::Compression::dense(); n];
+            println!("# {model}: dense-baseline energy breakdown");
+            println!(
+                "{:<6} {:>12} {:>12} {:>12} {:>8}",
+                "layer", "MACs", "DRAM-words", "E(dense)", "share"
+            );
+            for r in hapq::hw::report::breakdown(&env.energy, &dense) {
+                println!(
+                    "{:<6} {:>12} {:>12} {:>12.0} {:>7.1}%",
+                    r.layer, r.macs, r.dram, r.e_dense, r.dense_share * 100.0
+                );
+            }
+            let hs = hapq::hw::report::hotspots(&env.energy, &dense, 0.5);
+            println!("
+hotspots holding 50% of energy: {hs:?}");
+            Ok(())
+        }
+        "perf" => {
+            let coord = Coordinator::new(cfg)?;
+            let model = cli.str_flag("model", "vgg11");
+            let mut env = coord.build_env(&model)?;
+            let n = env.n_layers();
+            // reward-oracle latency
+            let t0 = Instant::now();
+            let iters = 10;
+            for i in 0..iters {
+                let actions: Vec<hapq::env::Action> = (0..n)
+                    .map(|l| hapq::env::Action {
+                        ratio: 0.3,
+                        bits: 0.8,
+                        alg: (l + i) % 7,
+                    })
+                    .collect();
+                env.evaluate_config(&actions)?;
+            }
+            let per_ep = t0.elapsed().as_secs_f64() / iters as f64;
+            println!(
+                "{model}: episode {:.1} ms ({} layers, {:.1} ms/step incl. PJRT inference), rss {} MiB",
+                per_ep * 1e3,
+                n,
+                per_ep * 1e3 / n as f64,
+                hapq::coordinator::rss_kib() / 1024
+            );
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}

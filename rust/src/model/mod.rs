@@ -1,0 +1,313 @@
+//! Model graph: the Rust-side view of an exported architecture.
+//!
+//! Loads the `*.arch.json` descriptor and `*.weights.npz` blobs written
+//! by `python/compile/aot.py` (artifact contract, DESIGN.md §5). The
+//! prunable-layer ordering here *is* the HLO parameter ordering — the
+//! runtime feeds `[w0, b0, …, wP, bP, act_bits, images]` positionally.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::hw::dataflow::LayerDims;
+use crate::io::json::{self, Value};
+use crate::io::npz::Npz;
+use crate::tensor::Tensor;
+
+/// Layer operator (mirrors python/compile/arch.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Conv,
+    DwConv,
+    Fc,
+    MaxPool,
+    Gap,
+    Flatten,
+    Add,
+    Concat,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Result<Op> {
+        Ok(match s {
+            "conv" => Op::Conv,
+            "dwconv" => Op::DwConv,
+            "fc" => Op::Fc,
+            "maxpool" => Op::MaxPool,
+            "gap" => Op::Gap,
+            "flatten" => Op::Flatten,
+            "add" => Op::Add,
+            "concat" => Op::Concat,
+            other => bail!("unknown op `{other}`"),
+        })
+    }
+
+    pub fn prunable(&self) -> bool {
+        matches!(self, Op::Conv | Op::DwConv | Op::Fc)
+    }
+}
+
+/// One layer of the graph (shape-annotated by the exporter).
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub k: usize,
+    pub stride: usize,
+    pub relu: bool,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub in_ch: usize,
+    pub out_ch: usize,
+}
+
+/// Full architecture descriptor.
+#[derive(Clone, Debug)]
+pub struct ModelArch {
+    pub name: String,
+    pub dataset: String,
+    pub input: [usize; 3],
+    pub classes: usize,
+    pub batch: usize,
+    pub layers: Vec<Layer>,
+    /// prunable layer names, in HLO parameter order
+    pub prunable: Vec<String>,
+    pub prunable_idx: HashMap<String, usize>,
+    /// sets of prunable layers whose coarse channel masks must match (§4.1)
+    pub dep_groups: Vec<Vec<String>>,
+    pub act_scales: Vec<f32>,
+    pub act_signed: Vec<bool>,
+    /// test accuracy of the dense 8-bit-activation model (the baseline)
+    pub acc_int8: f64,
+    pub n_params: usize,
+}
+
+impl ModelArch {
+    pub fn load(path: &Path) -> Result<ModelArch> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelArch> {
+        let layers = v
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(layer_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let prunable = v.req("prunable")?.str_vec()?;
+        let prunable_idx: HashMap<String, usize> = prunable
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        let input = v.req("input")?.usize_vec()?;
+        if input.len() != 3 {
+            bail!("input shape must be [H, W, C]");
+        }
+        let act_signed = match v.get("act_signed") {
+            Some(a) => a
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_bool())
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![false; prunable.len()],
+        };
+        Ok(ModelArch {
+            name: v.req("name")?.as_str()?.to_string(),
+            dataset: v.req("dataset")?.as_str()?.to_string(),
+            input: [input[0], input[1], input[2]],
+            classes: v.req("classes")?.as_usize()?,
+            batch: v.get("batch").map(|b| b.as_usize()).transpose()?.unwrap_or(256),
+            dep_groups: v
+                .req("dep_groups")?
+                .as_arr()?
+                .iter()
+                .map(|g| g.str_vec())
+                .collect::<Result<Vec<_>>>()?,
+            act_scales: v
+                .get("act_scales")
+                .map(|a| a.f64_vec())
+                .transpose()?
+                .unwrap_or_default()
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            act_signed,
+            acc_int8: v.get("acc_int8").map(|a| a.as_f64()).transpose()?.unwrap_or(0.0),
+            n_params: v.get("n_params").map(|a| a.as_usize()).transpose()?.unwrap_or(0),
+            layers,
+            prunable,
+            prunable_idx,
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&Layer> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("no layer `{name}`"))
+    }
+
+    /// Prunable-layer index of `name` (panics on non-prunable).
+    pub fn pidx(&self, name: &str) -> usize {
+        self.prunable_idx[name]
+    }
+
+    /// Dataflow dims of every prunable layer, in prunable order —
+    /// the energy model's input.
+    pub fn layer_dims(&self) -> Result<Vec<LayerDims>> {
+        self.prunable
+            .iter()
+            .map(|n| {
+                let l = self.layer(n)?;
+                Ok(match l.op {
+                    Op::Conv => LayerDims::conv(
+                        l.in_shape[0], l.in_shape[1], l.in_ch,
+                        l.out_shape[0], l.out_shape[1], l.out_ch,
+                        l.k, l.stride,
+                    ),
+                    Op::DwConv => LayerDims::dwconv(
+                        l.in_shape[0], l.in_shape[1], l.in_ch,
+                        l.out_shape[0], l.out_shape[1],
+                        l.k, l.stride,
+                    ),
+                    Op::Fc => LayerDims::fc(l.in_ch, l.out_ch),
+                    _ => unreachable!("non-prunable in prunable list"),
+                })
+            })
+            .collect()
+    }
+
+    /// Group id per prunable layer (usize::MAX = ungrouped).
+    pub fn group_of(&self) -> Vec<usize> {
+        let mut g = vec![usize::MAX; self.prunable.len()];
+        for (gi, group) in self.dep_groups.iter().enumerate() {
+            for name in group {
+                if let Some(&i) = self.prunable_idx.get(name) {
+                    g[i] = gi;
+                }
+            }
+        }
+        g
+    }
+}
+
+fn layer_from_json(v: &Value) -> Result<Layer> {
+    let op = Op::parse(v.req("op")?.as_str()?)?;
+    let get_us = |k: &str| -> usize { v.get(k).and_then(|x| x.as_usize().ok()).unwrap_or(0) };
+    Ok(Layer {
+        name: v.req("name")?.as_str()?.to_string(),
+        op,
+        inputs: v.req("inputs")?.str_vec()?,
+        k: get_us("k").max(1),
+        stride: get_us("stride").max(1),
+        relu: v.get("relu").and_then(|x| x.as_bool().ok()).unwrap_or(false),
+        in_shape: v.get("in_shape").map(|x| x.usize_vec()).transpose()?.unwrap_or_default(),
+        out_shape: v.get("out_shape").map(|x| x.usize_vec()).transpose()?.unwrap_or_default(),
+        in_ch: get_us("in_ch"),
+        out_ch: get_us("out_ch"),
+    })
+}
+
+/// Loaded weights + calibration stats, indexed by prunable order.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub w: Vec<Tensor>,
+    pub b: Vec<Tensor>,
+    /// SNIP saliency |w ⊙ ∂L/∂w| per weight tensor (Sensitivity pruning)
+    pub sal: Vec<Tensor>,
+    /// per-output-channel feature-map energy (FM-Reconstruction pruning)
+    pub chsq: Vec<Vec<f32>>,
+}
+
+impl Weights {
+    pub fn load(arch: &ModelArch, path: &Path) -> Result<Weights> {
+        let npz = Npz::load(path)?;
+        Self::from_npz(arch, &npz)
+    }
+
+    pub fn from_npz(arch: &ModelArch, npz: &Npz) -> Result<Weights> {
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        let mut sal = Vec::new();
+        let mut chsq = Vec::new();
+        for name in &arch.prunable {
+            w.push(npz.tensor(&format!("w:{name}"))?);
+            b.push(npz.tensor(&format!("b:{name}"))?);
+            sal.push(npz.tensor(&format!("sal:{name}"))?);
+            chsq.push(npz.tensor(&format!("chsq:{name}"))?.data);
+        }
+        Ok(Weights { w, b, sal, chsq })
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.w.iter().map(Tensor::len).sum::<usize>()
+            + self.b.iter().map(Tensor::len).sum::<usize>()
+    }
+
+    /// Overall weight sparsity.
+    pub fn sparsity(&self) -> f64 {
+        let zeros: usize = self
+            .w
+            .iter()
+            .map(|t| t.data.iter().filter(|x| **x == 0.0).count())
+            .sum();
+        let total: usize = self.w.iter().map(Tensor::len).sum();
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) const TOY_ARCH: &str = r#"{
+      "name": "toy", "dataset": "synth-c10", "input": [8, 8, 3], "classes": 4,
+      "batch": 16,
+      "layers": [
+        {"name": "c1", "op": "conv", "inputs": ["input"], "out_ch": 4, "k": 3,
+         "stride": 1, "relu": true, "in_shape": [8,8,3], "out_shape": [8,8,4],
+         "in_ch": 3},
+        {"name": "d1", "op": "dwconv", "inputs": ["c1"], "k": 3, "stride": 1,
+         "relu": true, "in_shape": [8,8,4], "out_shape": [8,8,4], "in_ch": 4,
+         "out_ch": 4},
+        {"name": "gap", "op": "gap", "inputs": ["d1"], "in_shape": [8,8,4],
+         "out_shape": [4]},
+        {"name": "f1", "op": "fc", "inputs": ["gap"], "out": 4, "relu": false,
+         "in_shape": [4], "out_shape": [4], "in_ch": 4, "out_ch": 4}
+      ],
+      "prunable": ["c1", "d1", "f1"],
+      "dep_groups": [["c1", "d1"]],
+      "act_scales": [0.5, 0.4, 0.3],
+      "act_signed": [false, false, false],
+      "acc_int8": 0.9, "n_params": 200
+    }"#;
+
+    pub(crate) fn toy_arch() -> ModelArch {
+        ModelArch::from_json(&crate::io::json::parse(TOY_ARCH).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parse_toy_arch() {
+        let arch = toy_arch();
+        assert_eq!(arch.prunable, vec!["c1", "d1", "f1"]);
+        assert_eq!(arch.layer("d1").unwrap().op, Op::DwConv);
+        let dims = arch.layer_dims().unwrap();
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[1].groups, 4); // depthwise
+        assert_eq!(dims[2].macs(), 16);
+        let groups = arch.group_of();
+        assert_eq!(groups[0], groups[1]);
+        assert_eq!(groups[2], usize::MAX);
+    }
+
+    #[test]
+    fn rejects_bad_ops() {
+        assert!(Op::parse("conv3d").is_err());
+    }
+}

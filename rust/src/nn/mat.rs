@@ -1,0 +1,195 @@
+//! Flat row-major matrix with the three GEMM variants backprop needs.
+//!
+//! Sizes here are tiny (≤ 64×300·300), so the win is cache order + auto
+//! vectorisation: all three products are written as row-major SAXPY
+//! loops over contiguous slices.
+
+/// Row-major matrix [r, c].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub r: usize,
+    pub c: usize,
+    pub d: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(r: usize, c: usize) -> Self {
+        Mat { r, c, d: vec![0.0; r * c] }
+    }
+
+    pub fn full(r: usize, c: usize, v: f32) -> Self {
+        Mat { r, c, d: vec![v; r * c] }
+    }
+
+    pub fn from_vec(r: usize, c: usize, d: Vec<f32>) -> Self {
+        assert_eq!(r * c, d.len());
+        Mat { r, c, d }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(r: usize, c: usize, mut f: F) -> Self {
+        let mut d = Vec::with_capacity(r * c);
+        for i in 0..r {
+            for j in 0..c {
+                d.push(f(i, j));
+            }
+        }
+        Mat { r, c, d }
+    }
+
+    /// Single row as a 1×c matrix view (copy).
+    pub fn row(&self, i: usize) -> Mat {
+        Mat { r: 1, c: self.c, d: self.d[i * self.c..(i + 1) * self.c].to_vec() }
+    }
+
+    pub fn row_slice(&self, i: usize) -> &[f32] {
+        &self.d[i * self.c..(i + 1) * self.c]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.d[i * self.c + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.d[i * self.c + j]
+    }
+
+    /// self[r,k] · b[k,c] -> [r,c]
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.c, b.r, "matmul {}x{} · {}x{}", self.r, self.c, b.r, b.c);
+        let mut out = Mat::zeros(self.r, b.c);
+        for i in 0..self.r {
+            let arow = &self.d[i * self.c..(i + 1) * self.c];
+            let orow = &mut out.d[i * b.c..(i + 1) * b.c];
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // post-ReLU inputs: ~50% zeros, row skip pays
+                }
+                let brow = &b.d[k * b.c..(k + 1) * b.c];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ[k,r]ᵀ… i.e. selfᵀ · b: self[B,in], b[B,out] -> [in,out]
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.r, b.r);
+        let mut out = Mat::zeros(self.c, b.c);
+        for bi in 0..self.r {
+            let xrow = &self.d[bi * self.c..(bi + 1) * self.c];
+            let yrow = &b.d[bi * b.c..(bi + 1) * b.c];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // post-ReLU activations: ~50% zeros, row skip pays
+                }
+                let orow = &mut out.d[i * b.c..(i + 1) * b.c];
+                for (o, &yv) in orow.iter_mut().zip(yrow) {
+                    *o += xv * yv;
+                }
+            }
+        }
+        out
+    }
+
+    /// self · bᵀ: self[B,out], b[in,out] -> [B,in]
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.c, b.c);
+        let mut out = Mat::zeros(self.r, b.r);
+        for i in 0..self.r {
+            let arow = &self.d[i * self.c..(i + 1) * self.c];
+            let orow = &mut out.d[i * b.r..(i + 1) * b.r];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b.d[j * b.c..(j + 1) * b.c];
+                let mut acc = 0.0f32;
+                for (&a, &bv) in arow.iter().zip(brow) {
+                    acc += a * bv;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// Add a bias row to every row.
+    pub fn add_row(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.c);
+        for i in 0..self.r {
+            let row = &mut self.d[i * self.c..(i + 1) * self.c];
+            for (x, &b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.r, self.c), (other.r, other.c));
+        for (a, &b) in self.d.iter_mut().zip(&other.d) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        self.d.iter_mut().for_each(|x| *x *= s);
+    }
+
+    /// Stack rows of many 1×c mats into one [n, c] batch.
+    pub fn stack_rows(rows: &[Vec<f32>]) -> Mat {
+        let c = rows[0].len();
+        let mut d = Vec::with_capacity(rows.len() * c);
+        for r in rows {
+            assert_eq!(r.len(), c);
+            d.extend_from_slice(r);
+        }
+        Mat { r: rows.len(), c, d }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_values() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.d, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_products_agree() {
+        // t_matmul(a, b) == transpose(a) · b ; matmul_t(a, b) == a · bᵀ
+        let a = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5 - 2.0);
+        let b = Mat::from_fn(4, 2, |i, j| (i + j) as f32);
+        let t1 = a.t_matmul(&b);
+        // brute force
+        let mut want = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                for k in 0..4 {
+                    *want.at_mut(i, j) += a.at(k, i) * b.at(k, j);
+                }
+            }
+        }
+        assert_eq!(t1, want);
+
+        let c = Mat::from_fn(4, 3, |i, j| (i as f32 - j as f32) * 0.3);
+        let t2 = b.matmul_t(&Mat::from_fn(5, 2, |i, j| (i * 2 + j) as f32 * 0.1));
+        assert_eq!(t2.r, 4);
+        assert_eq!(t2.c, 5);
+        let _ = c;
+    }
+
+    #[test]
+    fn bias_and_stack() {
+        let mut m = Mat::zeros(2, 3);
+        m.add_row(&[1., 2., 3.]);
+        assert_eq!(m.d, vec![1., 2., 3., 1., 2., 3.]);
+        let s = Mat::stack_rows(&[vec![1., 2.], vec![3., 4.]]);
+        assert_eq!((s.r, s.c), (2, 2));
+    }
+}

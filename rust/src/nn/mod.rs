@@ -1,0 +1,607 @@
+//! Tiny neural-network substrate with manual backprop — powers the RL
+//! agents (DDPG actor/critic, Rainbow dueling/noisy/C51 heads).
+//!
+//! Design: flat row-major [`Mat`] matrices, explicit
+//! forward/backward on [`Dense`]/[`NoisyDense`], Adam per layer, and an
+//! [`Mlp`] convenience wrapper with activation bookkeeping. The
+//! networks are small (3×300 per the paper §5.1) so a cache-friendly
+//! blocked matmul is all the performance this path needs; gradients are
+//! verified against finite differences in the tests below.
+
+pub mod mat;
+
+use mat::Mat;
+
+use crate::util::rng::Rng;
+
+/// Activation functions used by the agents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+    Sigmoid,
+    None,
+}
+
+pub fn act_forward(a: Act, m: &mut Mat) {
+    match a {
+        Act::Relu => m.d.iter_mut().for_each(|x| *x = x.max(0.0)),
+        Act::Tanh => m.d.iter_mut().for_each(|x| *x = x.tanh()),
+        Act::Sigmoid => m.d.iter_mut().for_each(|x| *x = 1.0 / (1.0 + (-*x).exp())),
+        Act::None => {}
+    }
+}
+
+/// dL/dpre from dL/dpost given the *post-activation* values y.
+pub fn act_backward(a: Act, y: &Mat, dy: &mut Mat) {
+    match a {
+        Act::Relu => {
+            for (g, &v) in dy.d.iter_mut().zip(&y.d) {
+                if v <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        Act::Tanh => {
+            for (g, &v) in dy.d.iter_mut().zip(&y.d) {
+                *g *= 1.0 - v * v;
+            }
+        }
+        Act::Sigmoid => {
+            for (g, &v) in dy.d.iter_mut().zip(&y.d) {
+                *g *= v * (1.0 - v);
+            }
+        }
+        Act::None => {}
+    }
+}
+
+/// Adam state for one parameter blob.
+#[derive(Clone, Debug, Default)]
+struct AdamState {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl AdamState {
+    fn sized(n: usize) -> Self {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    fn step(&mut self, p: &mut [f32], g: &[f32], lr: f32, t: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let c1 = 1.0 - B1.powf(t);
+        let c2 = 1.0 - B2.powf(t);
+        for i in 0..p.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g[i] * g[i];
+            let mh = self.m[i] / c1;
+            let vh = self.v[i] / c2;
+            p[i] -= lr * mh / (vh.sqrt() + EPS);
+        }
+    }
+}
+
+/// Fully-connected layer, weights [in, out].
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Mat,
+    pub b: Vec<f32>,
+    pub gw: Mat,
+    pub gb: Vec<f32>,
+    aw: AdamState,
+    ab: AdamState,
+}
+
+impl Dense {
+    pub fn new(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
+        // uniform fan-in init (DDPG paper style)
+        let lim = 1.0 / (fan_in as f32).sqrt();
+        let w = Mat::from_fn(fan_in, fan_out, |_, _| rng.range(-lim as f64, lim as f64) as f32);
+        Dense {
+            gw: Mat::zeros(fan_in, fan_out),
+            gb: vec![0.0; fan_out],
+            aw: AdamState::sized(fan_in * fan_out),
+            ab: AdamState::sized(fan_out),
+            w,
+            b: vec![0.0; fan_out],
+        }
+    }
+
+    /// y = x·W + b, x: [B, in] -> [B, out]
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut y = x.matmul(&self.w);
+        y.add_row(&self.b);
+        y
+    }
+
+    /// Accumulate grads; return dx.
+    pub fn backward(&mut self, x: &Mat, dy: &Mat) -> Mat {
+        self.gw.add_assign(&x.t_matmul(dy)); // [in,B]·[B,out]
+        for r in 0..dy.r {
+            for c in 0..dy.c {
+                self.gb[c] += dy.at(r, c);
+            }
+        }
+        dy.matmul_t(&self.w) // [B,out]·[out,in]
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gw.d.iter_mut().for_each(|x| *x = 0.0);
+        self.gb.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn adam(&mut self, lr: f32, t: f32) {
+        self.aw.step(&mut self.w.d, &self.gw.d, lr, t);
+        self.ab.step(&mut self.b, &self.gb, lr, t);
+    }
+
+    /// Polyak averaging toward `src`: θ ← τ·θ_src + (1−τ)·θ.
+    pub fn soft_update_from(&mut self, src: &Dense, tau: f32) {
+        for (a, b) in self.w.d.iter_mut().zip(&src.w.d) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+        for (a, b) in self.b.iter_mut().zip(&src.b) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.d.len() + self.b.len()
+    }
+
+    /// Export parameters as named tensors (checkpointing).
+    pub fn export(&self, prefix: &str, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        out.push((
+            format!("{prefix}.w"),
+            crate::tensor::Tensor::new(vec![self.w.r, self.w.c], self.w.d.clone()),
+        ));
+        out.push((
+            format!("{prefix}.b"),
+            crate::tensor::Tensor::new(vec![self.b.len()], self.b.clone()),
+        ));
+    }
+
+    /// Import parameters from a checkpoint map (shape-checked).
+    pub fn import(
+        &mut self,
+        prefix: &str,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        let w = get(&format!("{prefix}.w"))?;
+        anyhow::ensure!(w.shape == vec![self.w.r, self.w.c], "{prefix}.w shape");
+        self.w.d = w.data;
+        let b = get(&format!("{prefix}.b"))?;
+        anyhow::ensure!(b.data.len() == self.b.len(), "{prefix}.b len");
+        self.b = b.data;
+        Ok(())
+    }
+}
+
+/// Factorized-Gaussian noisy layer (Rainbow): w = μ + σ⊙(f(εo)f(εi)ᵀ).
+#[derive(Clone, Debug)]
+pub struct NoisyDense {
+    pub mu_w: Mat,
+    pub sig_w: Mat,
+    pub mu_b: Vec<f32>,
+    pub sig_b: Vec<f32>,
+    pub eps_in: Vec<f32>,
+    pub eps_out: Vec<f32>,
+    g_mu_w: Mat,
+    g_sig_w: Mat,
+    g_mu_b: Vec<f32>,
+    g_sig_b: Vec<f32>,
+    a_mu_w: AdamState,
+    a_sig_w: AdamState,
+    a_mu_b: AdamState,
+    a_sig_b: AdamState,
+    /// when false, behaves as a plain μ-only layer (evaluation mode)
+    pub noisy: bool,
+}
+
+fn fnoise(x: f32) -> f32 {
+    x.signum() * x.abs().sqrt()
+}
+
+impl NoisyDense {
+    pub fn new(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
+        let lim = 1.0 / (fan_in as f32).sqrt();
+        let sigma0 = 0.5 / (fan_in as f32).sqrt();
+        NoisyDense {
+            mu_w: Mat::from_fn(fan_in, fan_out, |_, _| rng.range(-lim as f64, lim as f64) as f32),
+            sig_w: Mat::full(fan_in, fan_out, sigma0),
+            mu_b: (0..fan_out).map(|_| rng.range(-lim as f64, lim as f64) as f32).collect(),
+            sig_b: vec![sigma0; fan_out],
+            eps_in: vec![0.0; fan_in],
+            eps_out: vec![0.0; fan_out],
+            g_mu_w: Mat::zeros(fan_in, fan_out),
+            g_sig_w: Mat::zeros(fan_in, fan_out),
+            g_mu_b: vec![0.0; fan_out],
+            g_sig_b: vec![0.0; fan_out],
+            a_mu_w: AdamState::sized(fan_in * fan_out),
+            a_sig_w: AdamState::sized(fan_in * fan_out),
+            a_mu_b: AdamState::sized(fan_out),
+            a_sig_b: AdamState::sized(fan_out),
+            noisy: true,
+        }
+    }
+
+    pub fn resample(&mut self, rng: &mut Rng) {
+        for e in self.eps_in.iter_mut() {
+            *e = fnoise(rng.normal() as f32);
+        }
+        for e in self.eps_out.iter_mut() {
+            *e = fnoise(rng.normal() as f32);
+        }
+    }
+
+    fn eff_w(&self) -> Mat {
+        let mut w = self.mu_w.clone();
+        if self.noisy {
+            for i in 0..w.r {
+                for o in 0..w.c {
+                    let e = self.eps_in[i] * self.eps_out[o];
+                    *w.at_mut(i, o) += self.sig_w.at(i, o) * e;
+                }
+            }
+        }
+        w
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let w = self.eff_w();
+        let mut y = x.matmul(&w);
+        for r in 0..y.r {
+            for c in 0..y.c {
+                let noise = if self.noisy { self.sig_b[c] * self.eps_out[c] } else { 0.0 };
+                *y.at_mut(r, c) += self.mu_b[c] + noise;
+            }
+        }
+        y
+    }
+
+    pub fn backward(&mut self, x: &Mat, dy: &Mat) -> Mat {
+        let gw = x.t_matmul(dy); // [in,out] grad wrt effective w
+        for i in 0..gw.r {
+            for o in 0..gw.c {
+                let g = gw.at(i, o);
+                *self.g_mu_w.at_mut(i, o) += g;
+                if self.noisy {
+                    *self.g_sig_w.at_mut(i, o) += g * self.eps_in[i] * self.eps_out[o];
+                }
+            }
+        }
+        for r in 0..dy.r {
+            for c in 0..dy.c {
+                let g = dy.at(r, c);
+                self.g_mu_b[c] += g;
+                if self.noisy {
+                    self.g_sig_b[c] += g * self.eps_out[c];
+                }
+            }
+        }
+        let w = self.eff_w();
+        dy.matmul_t(&w)
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.g_mu_w.d.iter_mut().for_each(|x| *x = 0.0);
+        self.g_sig_w.d.iter_mut().for_each(|x| *x = 0.0);
+        self.g_mu_b.iter_mut().for_each(|x| *x = 0.0);
+        self.g_sig_b.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn adam(&mut self, lr: f32, t: f32) {
+        self.a_mu_w.step(&mut self.mu_w.d, &self.g_mu_w.d, lr, t);
+        self.a_sig_w.step(&mut self.sig_w.d, &self.g_sig_w.d, lr, t);
+        self.a_mu_b.step(&mut self.mu_b, &self.g_mu_b, lr, t);
+        self.a_sig_b.step(&mut self.sig_b, &self.g_sig_b, lr, t);
+    }
+
+    pub fn soft_update_from(&mut self, src: &NoisyDense, tau: f32) {
+        for (a, b) in self.mu_w.d.iter_mut().zip(&src.mu_w.d) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+        for (a, b) in self.sig_w.d.iter_mut().zip(&src.sig_w.d) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+        for (a, b) in self.mu_b.iter_mut().zip(&src.mu_b) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+        for (a, b) in self.sig_b.iter_mut().zip(&src.sig_b) {
+            *a = tau * b + (1.0 - tau) * *a;
+        }
+    }
+
+    /// Export parameters as named tensors (checkpointing).
+    pub fn export(&self, prefix: &str, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        use crate::tensor::Tensor;
+        out.push((format!("{prefix}.mu_w"),
+            Tensor::new(vec![self.mu_w.r, self.mu_w.c], self.mu_w.d.clone())));
+        out.push((format!("{prefix}.sig_w"),
+            Tensor::new(vec![self.sig_w.r, self.sig_w.c], self.sig_w.d.clone())));
+        out.push((format!("{prefix}.mu_b"),
+            Tensor::new(vec![self.mu_b.len()], self.mu_b.clone())));
+        out.push((format!("{prefix}.sig_b"),
+            Tensor::new(vec![self.sig_b.len()], self.sig_b.clone())));
+    }
+
+    /// Import parameters from a checkpoint map.
+    pub fn import(
+        &mut self,
+        prefix: &str,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        let mw = get(&format!("{prefix}.mu_w"))?;
+        anyhow::ensure!(mw.shape == vec![self.mu_w.r, self.mu_w.c], "{prefix}.mu_w");
+        self.mu_w.d = mw.data;
+        let sw = get(&format!("{prefix}.sig_w"))?;
+        self.sig_w.d = sw.data;
+        self.mu_b = get(&format!("{prefix}.mu_b"))?.data;
+        self.sig_b = get(&format!("{prefix}.sig_b"))?.data;
+        Ok(())
+    }
+}
+
+/// Sequential MLP with per-layer activations and a forward cache.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+    pub acts: Vec<Act>,
+}
+
+/// Forward cache: post-activation outputs of every layer (+ input).
+pub struct MlpCache {
+    pub outs: Vec<Mat>,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize], acts: &[Act], rng: &mut Rng) -> Self {
+        assert_eq!(dims.len() - 1, acts.len());
+        let layers = dims
+            .windows(2)
+            .map(|w| Dense::new(w[0], w[1], rng))
+            .collect();
+        Mlp { layers, acts: acts.to_vec() }
+    }
+
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut cur = x.clone();
+        for (l, a) in self.layers.iter().zip(&self.acts) {
+            cur = l.forward(&cur);
+            act_forward(*a, &mut cur);
+        }
+        cur
+    }
+
+    pub fn forward_cached(&self, x: &Mat) -> MlpCache {
+        let mut outs = vec![x.clone()];
+        for (l, a) in self.layers.iter().zip(&self.acts) {
+            let mut y = l.forward(outs.last().unwrap());
+            act_forward(*a, &mut y);
+            outs.push(y);
+        }
+        MlpCache { outs }
+    }
+
+    /// Backprop dL/d(output); returns dL/d(input). Grads accumulate.
+    pub fn backward(&mut self, cache: &MlpCache, dout: &Mat) -> Mat {
+        let mut dy = dout.clone();
+        for i in (0..self.layers.len()).rev() {
+            act_backward(self.acts[i], &cache.outs[i + 1], &mut dy);
+            dy = self.layers[i].backward(&cache.outs[i], &dy);
+        }
+        dy
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.layers.iter_mut().for_each(Dense::zero_grad);
+    }
+
+    pub fn adam(&mut self, lr: f32, t: f32) {
+        self.layers.iter_mut().for_each(|l| l.adam(lr, t));
+    }
+
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        for (a, b) in self.layers.iter_mut().zip(&src.layers) {
+            a.soft_update_from(b, tau);
+        }
+    }
+
+    /// Output of hidden layer `k` (post-activation) — the composite
+    /// agent taps the DDPG actor's last hidden layer as Rainbow input.
+    pub fn hidden(&self, x: &Mat, k: usize) -> Mat {
+        let mut cur = x.clone();
+        for (i, (l, a)) in self.layers.iter().zip(&self.acts).enumerate() {
+            cur = l.forward(&cur);
+            act_forward(*a, &mut cur);
+            if i == k {
+                break;
+            }
+        }
+        cur
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(Dense::n_params).sum()
+    }
+
+    /// Export all layers (checkpointing).
+    pub fn export(&self, prefix: &str, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        for (i, l) in self.layers.iter().enumerate() {
+            l.export(&format!("{prefix}.{i}"), out);
+        }
+    }
+
+    /// Import all layers from a checkpoint map.
+    pub fn import(
+        &mut self,
+        prefix: &str,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            l.import(&format!("{prefix}.{i}"), get)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numeric_grad<F: FnMut() -> f32>(p: &mut f32, mut f: F) -> f32 {
+        let h = 1e-3;
+        let orig = *p;
+        *p = orig + h;
+        let fp = f();
+        *p = orig - h;
+        let fm = f();
+        *p = orig;
+        (fp - fm) / (2.0 * h)
+    }
+
+    /// loss = sum(y^2)/2 so dL/dy = y.
+    fn loss_and_grad(net: &Mlp, x: &Mat) -> (f32, Mat) {
+        let y = net.forward(x);
+        let loss = 0.5 * y.d.iter().map(|v| v * v).sum::<f32>();
+        (loss, y)
+    }
+
+    #[test]
+    fn dense_gradcheck() {
+        let mut rng = Rng::new(11);
+        let mut net = Mlp::new(&[4, 8, 3], &[Act::Tanh, Act::None], &mut rng);
+        let x = Mat::from_fn(2, 4, |r, c| ((r * 4 + c) as f32 * 0.3).sin());
+        let cache = net.forward_cached(&x);
+        let (_, dy) = loss_and_grad(&net, &x);
+        net.zero_grad();
+        net.backward(&cache, &dy);
+        // check a scatter of weight grads against finite differences
+        for (li, wi) in [(0usize, 0usize), (0, 17), (1, 5), (1, 23)] {
+            let analytic = net.layers[li].gw.d[wi];
+            let mut net2 = net.clone();
+            let x2 = x.clone();
+            let num = {
+                let f = |n: &Mlp| loss_and_grad(n, &x2).0;
+                let h = 1e-3f32;
+                let orig = net2.layers[li].w.d[wi];
+                net2.layers[li].w.d[wi] = orig + h;
+                let fp = f(&net2);
+                net2.layers[li].w.d[wi] = orig - h;
+                let fm = f(&net2);
+                net2.layers[li].w.d[wi] = orig;
+                (fp - fm) / (2.0 * h)
+            };
+            assert!(
+                (analytic - num).abs() < 2e-2 * (1.0 + num.abs()),
+                "layer {li} w[{wi}]: analytic {analytic} vs numeric {num}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_sigmoid_gradcheck() {
+        let mut rng = Rng::new(5);
+        let mut net = Mlp::new(&[3, 6, 2], &[Act::Relu, Act::Sigmoid], &mut rng);
+        let x = Mat::from_fn(4, 3, |r, c| ((r + c) as f32 * 0.7).cos());
+        let cache = net.forward_cached(&x);
+        let (_, dy) = loss_and_grad(&net, &x);
+        net.zero_grad();
+        net.backward(&cache, &dy);
+        let analytic = net.layers[0].gb[2];
+        let mut net2 = net.clone();
+        let h = 1e-3f32;
+        net2.layers[0].b[2] += h;
+        let fp = loss_and_grad(&net2, &x).0;
+        net2.layers[0].b[2] -= 2.0 * h;
+        let fm = loss_and_grad(&net2, &x).0;
+        let num = (fp - fm) / (2.0 * h);
+        assert!((analytic - num).abs() < 2e-2 * (1.0 + num.abs()));
+    }
+
+    #[test]
+    fn noisy_dense_grad_and_eval_mode() {
+        let mut rng = Rng::new(9);
+        let mut nl = NoisyDense::new(5, 4, &mut rng);
+        nl.resample(&mut rng);
+        let x = Mat::from_fn(3, 5, |r, c| ((r * 5 + c) as f32).sin());
+        let y = nl.forward(&x);
+        nl.zero_grad();
+        let dy = y.clone();
+        let _ = nl.backward(&x, &dy);
+        // numeric vs analytic for mu_w[7] and sig_w[7]
+        let f = |nl: &NoisyDense| {
+            let y = nl.forward(&x);
+            0.5 * y.d.iter().map(|v| v * v).sum::<f32>()
+        };
+        let h = 1e-3f32;
+        for (blob, grad) in [(true, nl.g_mu_w.d[7]), (false, nl.g_sig_w.d[7])] {
+            let mut n2 = nl.clone();
+            let p = if blob { &mut n2.mu_w.d[7] } else { &mut n2.sig_w.d[7] };
+            let orig = *p;
+            *p = orig + h;
+            let fp = f(&n2);
+            let p = if blob { &mut n2.mu_w.d[7] } else { &mut n2.sig_w.d[7] };
+            *p = orig - h;
+            let fm = f(&n2);
+            let num = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad - num).abs() < 2e-2 * (1.0 + num.abs()),
+                "mu? {blob}: {grad} vs {num}"
+            );
+        }
+        // eval mode: noise off => same as mu-only layer
+        let mut nl2 = nl.clone();
+        nl2.noisy = false;
+        let y1 = nl2.forward(&x);
+        nl2.resample(&mut rng);
+        let y2 = nl2.forward(&x);
+        assert_eq!(y1.d, y2.d);
+    }
+
+    #[test]
+    fn adam_reduces_loss() {
+        let mut rng = Rng::new(2);
+        let mut net = Mlp::new(&[2, 16, 1], &[Act::Relu, Act::None], &mut rng);
+        // fit y = x0 + 2*x1 on a fixed batch
+        let x = Mat::from_fn(16, 2, |r, c| ((r * 2 + c) as f32 * 0.37).sin());
+        let target: Vec<f32> = (0..16).map(|r| x.at(r, 0) + 2.0 * x.at(r, 1)).collect();
+        let mut first = None;
+        let mut last = 0.0;
+        for t in 1..=400 {
+            let cache = net.forward_cached(&x);
+            let y = cache.outs.last().unwrap();
+            let mut dy = y.clone();
+            let mut loss = 0.0;
+            for r in 0..16 {
+                let e = y.at(r, 0) - target[r];
+                loss += 0.5 * e * e;
+                *dy.at_mut(r, 0) = e;
+            }
+            net.zero_grad();
+            net.backward(&cache, &dy);
+            net.adam(1e-2, t as f32);
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        assert!(last < 0.05 * first.unwrap(), "loss {last} vs {first:?}");
+    }
+
+    #[test]
+    fn soft_update_moves_toward_source() {
+        let mut rng = Rng::new(3);
+        let a = Mlp::new(&[2, 3], &[Act::None], &mut rng);
+        let mut b = Mlp::new(&[2, 3], &[Act::None], &mut rng);
+        let before = (b.layers[0].w.d[0] - a.layers[0].w.d[0]).abs();
+        b.soft_update_from(&a, 0.5);
+        let after = (b.layers[0].w.d[0] - a.layers[0].w.d[0]).abs();
+        assert!(after < before);
+        b.soft_update_from(&a, 1.0);
+        assert!((b.layers[0].w.d[0] - a.layers[0].w.d[0]).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,358 @@
+//! The diverse pruning-algorithm set (paper Table 2).
+//!
+//! | Algorithm         | Granularity | Criterion                                |
+//! |-------------------|-------------|------------------------------------------|
+//! | Level [4]         | fine        | weight magnitude                         |
+//! | Sensitivity [5]   | fine        | SNIP saliency |w ⊙ ∂L/∂w| (calibration)  |
+//! | Splicing [6]      | fine        | magnitude + recoverable band arbitration |
+//! | L1-Ranked [7]     | coarse      | filter/neuron L1 norm                    |
+//! | L2-Ranked [7]     | coarse      | filter/neuron L2 norm                    |
+//! | Bernoulli [36]    | coarse      | random filter dropping (DropFilter)      |
+//! | FM Recon. [35]    | coarse      | output feature-map energy (calibration)  |
+//!
+//! One-shot adaptations (no training data on this path): Sensitivity
+//! uses the calibration-batch saliency exported by the L2 trainer;
+//! Splicing approximates Dynamic Network Surgery's recoverable band by
+//! arbitrating the borderline magnitude band with saliency; FM
+//! Reconstruction ranks channels by the calibration feature-map energy
+//! (the reconstruction-error proxy). All documented in DESIGN.md §1.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Pruning algorithm id — the Rainbow agent's discrete action space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneAlg {
+    Level,
+    Sensitivity,
+    Splicing,
+    L1Ranked,
+    L2Ranked,
+    Bernoulli,
+    FmRecon,
+}
+
+impl PruneAlg {
+    pub const ALL: [PruneAlg; 7] = [
+        PruneAlg::Sensitivity,
+        PruneAlg::Level,
+        PruneAlg::Splicing,
+        PruneAlg::L1Ranked,
+        PruneAlg::L2Ranked,
+        PruneAlg::Bernoulli,
+        PruneAlg::FmRecon,
+    ];
+
+    pub fn from_index(i: usize) -> PruneAlg {
+        Self::ALL[i % Self::ALL.len()]
+    }
+
+    pub fn index(&self) -> usize {
+        Self::ALL.iter().position(|a| a == self).unwrap()
+    }
+
+    /// Structured (filter/channel) pruning? Drives eq (7) vs (8) and the
+    /// §4.1 dependency rule.
+    pub fn coarse(&self) -> bool {
+        matches!(
+            self,
+            PruneAlg::L1Ranked | PruneAlg::L2Ranked | PruneAlg::Bernoulli | PruneAlg::FmRecon
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneAlg::Level => "level",
+            PruneAlg::Sensitivity => "sensitivity",
+            PruneAlg::Splicing => "splicing",
+            PruneAlg::L1Ranked => "l1-ranked",
+            PruneAlg::L2Ranked => "l2-ranked",
+            PruneAlg::Bernoulli => "bernoulli",
+            PruneAlg::FmRecon => "fm-recon",
+        }
+    }
+}
+
+/// Per-layer inputs the criteria need beyond the weights themselves.
+pub struct PruneCtx<'a> {
+    /// SNIP saliency tensor (same shape as weights)
+    pub saliency: &'a Tensor,
+    /// per-output-channel feature-map energy
+    pub chsq: &'a [f32],
+    /// depthwise layer? (affects nothing under HW1C layout, kept for clarity)
+    pub dwconv: bool,
+    pub rng: &'a mut Rng,
+}
+
+/// What a pruning call did.
+#[derive(Clone, Debug, Default)]
+pub struct PruneResult {
+    /// fraction of weights now zero
+    pub sparsity: f64,
+    /// channels removed (coarse only) — propagated across dep groups
+    pub channels: Option<Vec<usize>>,
+}
+
+/// Apply `alg` at `ratio` to `w` in place. `ratio` is the target fraction
+/// of zeroed weights (fine) or of removed channels (coarse).
+pub fn prune(w: &mut Tensor, alg: PruneAlg, ratio: f64, ctx: &mut PruneCtx) -> PruneResult {
+    let ratio = ratio.clamp(0.0, 0.95); // never fully erase a layer
+    if ratio == 0.0 || w.is_empty() {
+        return PruneResult { sparsity: w.sparsity() as f64, channels: None };
+    }
+    match alg {
+        PruneAlg::Level => fine_by_score(w, ratio, |i, x| {
+            let _ = i;
+            x.abs()
+        }),
+        PruneAlg::Sensitivity => {
+            let sal = &ctx.saliency.data;
+            fine_by_score(w, ratio, |i, _| sal.get(i).copied().unwrap_or(0.0))
+        }
+        PruneAlg::Splicing => splice(w, ratio, ctx),
+        PruneAlg::L1Ranked => coarse_by_score(w, ratio, &w.channel_l1(false)),
+        PruneAlg::L2Ranked => coarse_by_score(w, ratio, &w.channel_l2(false)),
+        PruneAlg::Bernoulli => {
+            let c = w.out_channels(false);
+            let n_drop = target_channels(c, ratio);
+            let chans = ctx.rng.choose_k(c, n_drop);
+            apply_channels(w, chans)
+        }
+        PruneAlg::FmRecon => {
+            let c = w.out_channels(false);
+            let mut score = ctx.chsq.to_vec();
+            score.resize(c, 0.0);
+            coarse_by_score(w, ratio, &score)
+        }
+    }
+}
+
+/// Zero the lowest-scoring weights until `ratio` of the tensor is zero.
+fn fine_by_score<F: Fn(usize, f32) -> f32>(w: &mut Tensor, ratio: f64, score: F) -> PruneResult {
+    let n = w.len();
+    let k = ((n as f64) * ratio).round() as usize;
+    if k == 0 {
+        return PruneResult { sparsity: w.sparsity() as f64, channels: None };
+    }
+    // selection, not a full sort: O(n) expected vs O(n log n) — this runs
+    // on the RL hot path for every fine-grained action (§Perf)
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let cmp = |a: &u32, b: &u32| {
+        let sa = score(*a as usize, w.data[*a as usize]);
+        let sb = score(*b as usize, w.data[*b as usize]);
+        sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    if k < n {
+        idx.select_nth_unstable_by(k, cmp);
+    }
+    for &i in idx.iter().take(k) {
+        w.data[i as usize] = 0.0;
+    }
+    PruneResult { sparsity: w.sparsity() as f64, channels: None }
+}
+
+/// Dynamic-network-surgery-style: certain prune below 0.9·t, keep above
+/// 1.1·t, and arbitrate the "recoverable" band by saliency (splice back
+/// the half of the band the calibration batch says matters).
+fn splice(w: &mut Tensor, ratio: f64, ctx: &mut PruneCtx) -> PruneResult {
+    let n = w.len();
+    let k = ((n as f64) * ratio).round() as usize;
+    if k == 0 {
+        return PruneResult { sparsity: w.sparsity() as f64, channels: None };
+    }
+    let mut mags: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+    mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let t = mags[(k - 1).min(n - 1)];
+    let (t_lo, t_hi) = (0.9 * t, 1.1 * t);
+    let sal = &ctx.saliency.data;
+    // median saliency inside the band
+    let mut band_sal: Vec<f32> = w
+        .data
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| {
+            let a = x.abs();
+            a > t_lo && a <= t_hi && **x != 0.0
+        })
+        .map(|(i, _)| sal.get(i).copied().unwrap_or(0.0))
+        .collect();
+    band_sal.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = band_sal.get(band_sal.len() / 2).copied().unwrap_or(0.0);
+    for i in 0..n {
+        let a = w.data[i].abs();
+        if a <= t_lo {
+            w.data[i] = 0.0;
+        } else if a <= t_hi && sal.get(i).copied().unwrap_or(0.0) < med {
+            w.data[i] = 0.0;
+        }
+    }
+    PruneResult { sparsity: w.sparsity() as f64, channels: None }
+}
+
+fn target_channels(c: usize, ratio: f64) -> usize {
+    (((c as f64) * ratio).round() as usize).min(c.saturating_sub(1))
+}
+
+/// Zero the lowest-scoring output channels.
+fn coarse_by_score(w: &mut Tensor, ratio: f64, score: &[f32]) -> PruneResult {
+    let c = w.out_channels(false);
+    let n_drop = target_channels(c, ratio);
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_unstable_by(|&a, &b| {
+        score[a].partial_cmp(&score[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    apply_channels(w, order.into_iter().take(n_drop).collect())
+}
+
+fn apply_channels(w: &mut Tensor, mut chans: Vec<usize>) -> PruneResult {
+    chans.sort_unstable();
+    chans.dedup();
+    w.zero_channels(&chans, false);
+    PruneResult { sparsity: w.sparsity() as f64, channels: Some(chans) }
+}
+
+/// Force a specific channel mask (dependency-group propagation, §4.1).
+pub fn prune_channels(w: &mut Tensor, chans: &[usize]) -> PruneResult {
+    w.zero_channels(chans, false);
+    PruneResult { sparsity: w.sparsity() as f64, channels: Some(chans.to_vec()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n_per_ch: usize, c: usize) -> Tensor {
+        // values 1..=n so magnitude ordering is known; layout [n_per_ch, c]
+        let data: Vec<f32> = (0..n_per_ch * c).map(|i| (i + 1) as f32).collect();
+        Tensor::new(vec![n_per_ch, c], data)
+    }
+
+    fn ctx_for<'a>(sal: &'a Tensor, chsq: &'a [f32], rng: &'a mut Rng) -> PruneCtx<'a> {
+        PruneCtx { saliency: sal, chsq, dwconv: false, rng }
+    }
+
+    #[test]
+    fn level_prunes_smallest_magnitudes() {
+        let mut w = toy(4, 3); // 12 weights: 1..12
+        let sal = Tensor::zeros(vec![12]);
+        let mut rng = Rng::new(0);
+        let r = prune(&mut w, PruneAlg::Level, 0.5, &mut ctx_for(&sal, &[], &mut rng));
+        assert!((r.sparsity - 0.5).abs() < 1e-6);
+        // smallest six (1..6) zeroed
+        assert!(w.data[..6].iter().all(|&x| x == 0.0));
+        assert!(w.data[6..].iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sensitivity_follows_saliency_not_magnitude() {
+        let mut w = toy(4, 3);
+        // saliency inverted: big weights have LOW saliency
+        let sal = Tensor::new(vec![12], (0..12).map(|i| 12.0 - i as f32).collect());
+        let mut rng = Rng::new(0);
+        prune(&mut w, PruneAlg::Sensitivity, 0.25, &mut ctx_for(&sal, &[], &mut rng));
+        // the three HIGHEST-magnitude weights got pruned (lowest saliency)
+        assert_eq!(w.data[9..], [0.0, 0.0, 0.0]);
+        assert!(w.data[..9].iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn l1_ranked_removes_weakest_channels() {
+        let mut w = toy(4, 3); // ch0 sums 1+4+7+10=22 < ch1=26 < ch2=30
+        let sal = Tensor::zeros(vec![12]);
+        let mut rng = Rng::new(0);
+        let r = prune(&mut w, PruneAlg::L1Ranked, 0.34, &mut ctx_for(&sal, &[], &mut rng));
+        assert_eq!(r.channels.unwrap(), vec![0]);
+        assert_eq!(w.channel_l1(false)[0], 0.0);
+    }
+
+    #[test]
+    fn coarse_never_kills_all_channels() {
+        let mut w = toy(2, 4);
+        let sal = Tensor::zeros(vec![8]);
+        let mut rng = Rng::new(0);
+        let r = prune(&mut w, PruneAlg::L2Ranked, 0.99, &mut ctx_for(&sal, &[], &mut rng));
+        let ch = r.channels.unwrap();
+        assert!(ch.len() < 4, "must keep >= 1 channel, pruned {ch:?}");
+    }
+
+    #[test]
+    fn bernoulli_is_random_but_sized() {
+        let mut w1 = toy(2, 8);
+        let mut w2 = toy(2, 8);
+        let sal = Tensor::zeros(vec![16]);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let a = prune(&mut w1, PruneAlg::Bernoulli, 0.5, &mut ctx_for(&sal, &[], &mut r1));
+        let b = prune(&mut w2, PruneAlg::Bernoulli, 0.5, &mut ctx_for(&sal, &[], &mut r2));
+        assert_eq!(a.channels.as_ref().unwrap().len(), 4);
+        assert_eq!(b.channels.as_ref().unwrap().len(), 4);
+        assert_ne!(a.channels, b.channels, "different seeds, different filters");
+    }
+
+    #[test]
+    fn fm_recon_uses_feature_map_energy() {
+        let mut w = toy(4, 3);
+        let sal = Tensor::zeros(vec![12]);
+        let chsq = [5.0, 0.1, 9.0]; // channel 1 has least FM energy
+        let mut rng = Rng::new(0);
+        let r = prune(&mut w, PruneAlg::FmRecon, 0.34, &mut ctx_for(&sal, &chsq, &mut rng));
+        assert_eq!(r.channels.unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn splicing_prunes_band_by_saliency() {
+        let mut w = toy(4, 3);
+        let sal = Tensor::new(vec![12], (0..12).map(|i| i as f32).collect());
+        let mut rng = Rng::new(0);
+        let r = prune(&mut w, PruneAlg::Splicing, 0.5, &mut ctx_for(&sal, &[], &mut rng));
+        // sparsity close to target (band arbitration wiggles it slightly)
+        assert!(r.sparsity > 0.3 && r.sparsity < 0.7, "{}", r.sparsity);
+    }
+
+    #[test]
+    fn property_sparsity_reaches_target_fine() {
+        use crate::util::proptest::{forall, gen_sparsity, gen_weights};
+        forall(
+            "fine pruning hits requested sparsity",
+            |r| (gen_weights(r, 256), gen_sparsity(r)),
+            |(wdata, s)| {
+                let mut w = Tensor::new(vec![wdata.len()], wdata.clone());
+                let sal = Tensor::zeros(vec![wdata.len()]);
+                let mut rng = Rng::new(1);
+                let res = prune(
+                    &mut w,
+                    PruneAlg::Level,
+                    *s as f64,
+                    &mut ctx_for(&sal, &[], &mut rng),
+                );
+                // achieved >= requested (ties/zeros can only add)
+                res.sparsity + 1.0 / wdata.len() as f64 >= *s as f64
+            },
+        );
+    }
+
+    #[test]
+    fn property_coarse_sparsity_matches_channel_fraction() {
+        use crate::util::proptest::forall;
+        forall(
+            "coarse sparsity == dropped/total channels",
+            |r| (2 + r.below(16), 1 + r.below(8), r.range(0.0, 0.9)),
+            |&(c, rows, ratio)| {
+                let mut w = Tensor::new(
+                    vec![rows, c],
+                    (0..rows * c).map(|i| 1.0 + i as f32).collect(),
+                );
+                let sal = Tensor::zeros(vec![rows * c]);
+                let mut rng = Rng::new(2);
+                let res = prune(
+                    &mut w,
+                    PruneAlg::L1Ranked,
+                    ratio,
+                    &mut ctx_for(&sal, &[], &mut rng),
+                );
+                let dropped = res.channels.unwrap().len();
+                (res.sparsity - dropped as f64 / c as f64).abs() < 1e-6
+            },
+        );
+    }
+}

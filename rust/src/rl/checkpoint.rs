@@ -1,0 +1,124 @@
+//! Composite-agent checkpointing: the full agent state (DDPG actor/
+//! critic + targets, Rainbow online/target nets, exploration schedule,
+//! unlock state) serialises to a single NPZ file via [`crate::io::npz`].
+//!
+//! Enables the paper's on-device-optimization story (§4): a compression
+//! run can be suspended and resumed on the embedded target without
+//! redoing the warm-up. Replay buffers are not persisted (stale
+//! experiences are harmful after any environment change; fresh ones are
+//! one episode away).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::io::npz::{save_npz, Npz};
+use crate::tensor::Tensor;
+
+use super::composite::CompositeAgent;
+
+/// Write the agent to `path` (.npz).
+pub fn save(agent: &CompositeAgent, path: &Path) -> Result<()> {
+    let mut blobs: Vec<(String, Tensor)> = Vec::new();
+    agent.ddpg.export(&mut blobs);
+    agent.rainbow.export(&mut blobs);
+    blobs.push((
+        "composite.meta".into(),
+        Tensor::new(
+            vec![2],
+            vec![agent.episode as f32, agent.rainbow_unlocked as u32 as f32],
+        ),
+    ));
+    let refs: Vec<(String, &Tensor)> =
+        blobs.iter().map(|(k, t)| (k.clone(), t)).collect();
+    save_npz(path, &refs)
+}
+
+/// Load a checkpoint into an existing (same-config) agent.
+pub fn load(agent: &mut CompositeAgent, path: &Path) -> Result<()> {
+    let npz = Npz::load(path)?;
+    let get = |k: &str| -> Result<Tensor> {
+        npz.entries
+            .get(k)
+            .ok_or_else(|| anyhow!("checkpoint missing `{k}`"))?
+            .to_tensor()
+    };
+    agent.ddpg.import(&get)?;
+    agent.rainbow.import(&get)?;
+    let meta = get("composite.meta")?;
+    agent.episode = meta.data[0] as usize;
+    agent.rainbow_unlocked = meta.data[1] != 0.0;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::composite::{CompositeAgent, CompositeConfig};
+    use crate::rl::ddpg::DdpgConfig;
+    use crate::rl::rainbow::RainbowConfig;
+
+    fn cfg() -> CompositeConfig {
+        CompositeConfig {
+            ddpg: DdpgConfig { hidden: 24, batch: 8, replay_cap: 64, ..DdpgConfig::default() },
+            rainbow: RainbowConfig {
+                hidden: 12,
+                atoms: 11,
+                batch: 8,
+                replay_cap: 64,
+                ..RainbowConfig::default()
+            },
+            warmup_episodes: 1,
+            ..CompositeConfig::default()
+        }
+    }
+
+    #[test]
+    fn roundtrip_restores_policy() {
+        let dir = std::env::temp_dir().join("hapq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("agent.npz");
+
+        let mut a = CompositeAgent::new(cfg(), 5);
+        // burn in some training so weights differ from init
+        let s = vec![0.4f32; crate::env::STATE_DIM];
+        let s2 = vec![0.6f32; crate::env::STATE_DIM];
+        for i in 0..30 {
+            let act = a.act(&s);
+            a.observe_and_update(&s, &act, 0.7, &s2, i % 5 == 4);
+            if i % 5 == 4 {
+                a.end_episode(1.0, 10);
+            }
+        }
+        a.rainbow_unlocked = true;
+        save(&a, &path).unwrap();
+
+        let mut b = CompositeAgent::new(cfg(), 999); // different seed/init
+        let before = b.ddpg.act_greedy(&s);
+        load(&mut b, &path).unwrap();
+        let after = b.ddpg.act_greedy(&s);
+        let a_out = a.ddpg.act_greedy(&s);
+        assert_ne!(before, after, "load must change the policy");
+        assert_eq!(after, a_out, "restored policy must match saved one");
+        assert!(b.rainbow_unlocked);
+        assert_eq!(b.episode, a.episode);
+    }
+
+    #[test]
+    fn load_rejects_wrong_shapes() {
+        let dir = std::env::temp_dir().join("hapq_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("agent.npz");
+        let a = CompositeAgent::new(cfg(), 5);
+        save(&a, &path).unwrap();
+
+        let mut big = CompositeAgent::new(
+            CompositeConfig {
+                ddpg: DdpgConfig { hidden: 48, ..DdpgConfig::default() },
+                ..cfg()
+            },
+            5,
+        );
+        assert!(load(&mut big, &path).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! The composite agent (paper §4.2, Fig 4): DDPG supplies the
+//! continuous (ratio, precision) action and its actor's last hidden
+//! layer is the feature input to Rainbow, which supplies the discrete
+//! pruning-algorithm action.
+//!
+//! The reward-monitoring scheme of §4.2.2 keeps Rainbow frozen through
+//! the primary exploratory period: random pruning techniques are
+//! sampled (removing bias toward any technique) until the episode-
+//! reward moving average shows consistent improvement; then Rainbow is
+//! unlocked and takes over using the already-mature DDPG features.
+//! Rainbow's loss never back-propagates into the DDPG actor.
+
+use crate::env::Action;
+use crate::pruning::PruneAlg;
+use crate::util::rng::Rng;
+
+use super::ddpg::{Ddpg, DdpgConfig};
+use super::rainbow::{Rainbow, RainbowConfig};
+use super::replay::Transition;
+
+#[derive(Clone, Debug)]
+pub struct CompositeConfig {
+    pub ddpg: DdpgConfig,
+    pub rainbow: RainbowConfig,
+    /// episodes of pure exploration before any unlock check (paper: 100)
+    pub warmup_episodes: usize,
+    /// sliding window length for the reward monitor
+    pub monitor_window: usize,
+    /// unlock when mean(recent half) > mean(older half)·(1+margin)
+    pub unlock_margin: f64,
+    /// hard unlock point (never stay frozen forever)
+    pub max_frozen_episodes: usize,
+}
+
+impl Default for CompositeConfig {
+    fn default() -> Self {
+        CompositeConfig {
+            ddpg: DdpgConfig::default(),
+            rainbow: RainbowConfig::default(),
+            warmup_episodes: 100,
+            monitor_window: 40,
+            unlock_margin: 0.02,
+            max_frozen_episodes: 300,
+        }
+    }
+}
+
+pub struct CompositeAgent {
+    pub cfg: CompositeConfig,
+    pub ddpg: Ddpg,
+    pub rainbow: Rainbow,
+    pub episode: usize,
+    pub rainbow_unlocked: bool,
+    reward_history: Vec<f64>,
+    rng: Rng,
+}
+
+impl CompositeAgent {
+    pub fn new(mut cfg: CompositeConfig, seed: u64) -> CompositeAgent {
+        cfg.rainbow.feat_dim = cfg.ddpg.hidden;
+        CompositeAgent {
+            ddpg: Ddpg::new(cfg.ddpg.clone(), seed ^ 0xD0),
+            rainbow: Rainbow::new(cfg.rainbow.clone(), seed ^ 0x5A),
+            episode: 0,
+            rainbow_unlocked: false,
+            reward_history: Vec::new(),
+            rng: Rng::new(seed ^ 0xC0),
+            cfg,
+        }
+    }
+
+    /// Warm-up = pure random exploration for DDPG too (paper §5.1: the
+    /// first 100 episodes constitute the warm-up).
+    fn in_warmup(&self) -> bool {
+        self.episode < self.cfg.warmup_episodes
+    }
+
+    /// Choose the full 3-part action for the current layer state.
+    pub fn act(&mut self, state: &[f32]) -> Action {
+        let cont = if self.in_warmup() {
+            vec![self.rng.uniform() as f32, self.rng.uniform() as f32]
+        } else {
+            self.ddpg.act(state, true)
+        };
+        let alg = if self.rainbow_unlocked {
+            let feats = self.ddpg.features(state);
+            self.rainbow.act(&feats)
+        } else {
+            // frozen Rainbow: unbiased random technique sampling (§4.2.2)
+            self.rng.below(PruneAlg::ALL.len())
+        };
+        Action { ratio: cont[0] as f64, bits: cont[1] as f64, alg }
+    }
+
+    /// Greedy (no-noise) action for final policy extraction.
+    pub fn act_greedy(&mut self, state: &[f32]) -> Action {
+        let cont = self.ddpg.act_greedy(state);
+        let feats = self.ddpg.features(state);
+        self.rainbow.set_eval(true);
+        let alg = self.rainbow.act(&feats);
+        self.rainbow.set_eval(false);
+        Action { ratio: cont[0] as f64, bits: cont[1] as f64, alg }
+    }
+
+    /// Store the step and update both agents (rewards are fed at every
+    /// step — Rainbow requires an update before each action, §4.2.2).
+    pub fn observe_and_update(
+        &mut self,
+        s: &[f32],
+        action: &Action,
+        reward: f64,
+        s2: &[f32],
+        done: bool,
+    ) {
+        self.ddpg.observe(Transition {
+            s: s.to_vec(),
+            a: vec![action.ratio as f32, action.bits as f32],
+            alg: action.alg,
+            r: reward as f32,
+            s2: s2.to_vec(),
+            done,
+        });
+        self.ddpg.update();
+        // Rainbow consumes the *post-update* DDPG features (Fig 4: after
+        // DDPG is updated, its actor hidden layer feeds Rainbow).
+        let f = self.ddpg.features(s);
+        let f2 = self.ddpg.features(s2);
+        self.rainbow.observe(f, action.alg, reward as f32, f2, done);
+        if self.rainbow_unlocked {
+            self.rainbow.update();
+        }
+    }
+
+    /// Per-episode bookkeeping: noise decay, β anneal, reward monitor.
+    pub fn end_episode(&mut self, episode_reward: f64, total_episodes: usize) {
+        self.episode += 1;
+        self.reward_history.push(episode_reward);
+        if self.episode >= self.cfg.warmup_episodes {
+            self.ddpg.decay_noise();
+        }
+        let frac = self.episode as f64 / total_episodes.max(1) as f64;
+        self.ddpg.replay.anneal_beta(frac);
+        self.rainbow.replay.anneal_beta(frac);
+
+        if !self.rainbow_unlocked {
+            self.check_unlock();
+        }
+    }
+
+    /// Reward monitor (§4.2.2): unlock once the moving average shows
+    /// consistent improvement (or after a hard cap, so a flat reward
+    /// landscape cannot freeze Rainbow forever).
+    fn check_unlock(&mut self) {
+        if self.episode < self.cfg.warmup_episodes + self.cfg.monitor_window {
+            if self.episode >= self.cfg.max_frozen_episodes {
+                self.rainbow_unlocked = true;
+            }
+            return;
+        }
+        let w = self.cfg.monitor_window;
+        let recent = &self.reward_history[self.reward_history.len() - w / 2..];
+        let older =
+            &self.reward_history[self.reward_history.len() - w..self.reward_history.len() - w / 2];
+        let mr: f64 = recent.iter().sum::<f64>() / recent.len() as f64;
+        let mo: f64 = older.iter().sum::<f64>() / older.len() as f64;
+        let improved = mr > mo + self.cfg.unlock_margin * mo.abs().max(0.1);
+        if improved || self.episode >= self.cfg.max_frozen_episodes {
+            self.rainbow_unlocked = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CompositeConfig {
+        CompositeConfig {
+            ddpg: DdpgConfig { hidden: 32, batch: 16, replay_cap: 128, ..DdpgConfig::default() },
+            rainbow: RainbowConfig {
+                hidden: 16,
+                atoms: 11,
+                batch: 16,
+                replay_cap: 128,
+                ..RainbowConfig::default()
+            },
+            warmup_episodes: 3,
+            monitor_window: 6,
+            unlock_margin: 0.0,
+            max_frozen_episodes: 30,
+            ..CompositeConfig::default()
+        }
+    }
+
+    #[test]
+    fn warmup_is_random_then_policy() {
+        let mut agent = CompositeAgent::new(small_cfg(), 3);
+        assert!(agent.in_warmup());
+        let s = vec![0.5; crate::env::STATE_DIM];
+        let a = agent.act(&s);
+        assert!((0.0..=1.0).contains(&a.ratio));
+        assert!(a.alg < PruneAlg::ALL.len());
+    }
+
+    #[test]
+    fn unlocks_on_improving_reward() {
+        let mut agent = CompositeAgent::new(small_cfg(), 4);
+        for ep in 0..12 {
+            agent.end_episode(ep as f64, 40); // strictly improving
+        }
+        assert!(agent.rainbow_unlocked, "monitor should unlock Rainbow");
+    }
+
+    #[test]
+    fn stays_frozen_on_flat_reward_until_cap() {
+        let mut agent = CompositeAgent::new(small_cfg(), 5);
+        for _ in 0..20 {
+            agent.end_episode(1.0, 40);
+        }
+        assert!(!agent.rainbow_unlocked);
+        for _ in 0..12 {
+            agent.end_episode(1.0, 40);
+        }
+        assert!(agent.rainbow_unlocked, "hard cap must unlock");
+    }
+
+    #[test]
+    fn full_loop_smoke() {
+        let mut agent = CompositeAgent::new(small_cfg(), 6);
+        let s = vec![0.2; crate::env::STATE_DIM];
+        let s2 = vec![0.3; crate::env::STATE_DIM];
+        for i in 0..40 {
+            let a = agent.act(&s);
+            agent.observe_and_update(&s, &a, 0.5, &s2, i % 4 == 3);
+            if i % 4 == 3 {
+                agent.end_episode(2.0, 10);
+            }
+        }
+        let g = agent.act_greedy(&s);
+        assert!(g.alg < PruneAlg::ALL.len());
+    }
+}

@@ -1,0 +1,326 @@
+//! DDPG agent (paper §4.2.1): actor-critic over the continuous 2-d
+//! action (pruning ratio, precision), target networks, truncated-normal
+//! exploration noise, prioritized replay.
+//!
+//! Hyper-parameters follow §5.1 verbatim: 3×300 hidden layers, actor lr
+//! 1e-3 / critic lr 1e-4, noise σ₀ = 0.6 with ×0.99 per-episode decay
+//! after warm-up, γ = 1, batch 64, replay capacity 1000.
+
+use crate::nn::mat::Mat;
+use crate::nn::{Act, Mlp};
+use crate::util::rng::Rng;
+
+use super::replay::{PrioritizedReplay, Transition};
+
+#[derive(Clone, Debug)]
+pub struct DdpgConfig {
+    pub state_dim: usize,
+    pub action_dim: usize,
+    pub hidden: usize,
+    pub actor_lr: f32,
+    pub critic_lr: f32,
+    pub tau: f32,
+    pub gamma: f32,
+    pub batch: usize,
+    pub replay_cap: usize,
+    pub noise_init: f64,
+    pub noise_decay: f64,
+}
+
+impl Default for DdpgConfig {
+    fn default() -> Self {
+        DdpgConfig {
+            state_dim: crate::env::STATE_DIM,
+            action_dim: 2,
+            hidden: 300,
+            actor_lr: 1e-3,
+            critic_lr: 1e-4,
+            tau: 0.01,
+            gamma: 1.0,
+            batch: 64,
+            replay_cap: 1000,
+            noise_init: 0.6,
+            noise_decay: 0.99,
+        }
+    }
+}
+
+pub struct Ddpg {
+    pub cfg: DdpgConfig,
+    pub actor: Mlp,
+    pub critic: Mlp,
+    target_actor: Mlp,
+    target_critic: Mlp,
+    pub replay: PrioritizedReplay,
+    pub noise: f64,
+    t: u64,
+    rng: Rng,
+}
+
+impl Ddpg {
+    pub fn new(cfg: DdpgConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let h = cfg.hidden;
+        // actor: s -> [ratio, bits] in [0,1]^2 (sigmoid head)
+        let actor = Mlp::new(
+            &[cfg.state_dim, h, h, h, cfg.action_dim],
+            &[Act::Relu, Act::Relu, Act::Relu, Act::Sigmoid],
+            &mut rng,
+        );
+        // critic: [s, a] -> Q
+        let critic = Mlp::new(
+            &[cfg.state_dim + cfg.action_dim, h, h, h, 1],
+            &[Act::Relu, Act::Relu, Act::Relu, Act::None],
+            &mut rng,
+        );
+        let target_actor = actor.clone();
+        let target_critic = critic.clone();
+        Ddpg {
+            replay: PrioritizedReplay::new(cfg.replay_cap),
+            noise: cfg.noise_init,
+            t: 0,
+            rng,
+            actor,
+            critic,
+            target_actor,
+            target_critic,
+            cfg,
+        }
+    }
+
+    /// Deterministic policy output for one state.
+    pub fn act_greedy(&self, s: &[f32]) -> Vec<f32> {
+        let x = Mat::from_vec(1, s.len(), s.to_vec());
+        self.actor.forward(&x).d
+    }
+
+    /// Exploratory action: truncated-normal noise around the policy
+    /// (§4.2.1), clamped to the unit box.
+    pub fn act(&mut self, s: &[f32], explore: bool) -> Vec<f32> {
+        let mut a = self.act_greedy(s);
+        if explore {
+            for x in a.iter_mut() {
+                *x = self
+                    .rng
+                    .trunc_normal(*x as f64, self.noise, 0.0, 1.0) as f32;
+            }
+        }
+        a
+    }
+
+    /// Last hidden layer of the actor — the feature tap the Rainbow
+    /// agent consumes (§4.2.2, Fig 4).
+    pub fn features(&self, s: &[f32]) -> Vec<f32> {
+        let x = Mat::from_vec(1, s.len(), s.to_vec());
+        // hidden index: layer (depth-2) output == last hidden
+        self.actor.hidden(&x, self.actor.layers.len() - 2).d
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.cfg.hidden
+    }
+
+    pub fn observe(&mut self, tr: Transition) {
+        self.replay.push(tr);
+    }
+
+    /// Decay exploration noise once per episode (after warm-up).
+    pub fn decay_noise(&mut self) {
+        self.noise *= self.cfg.noise_decay;
+    }
+
+    /// Export agent parameters (actor/critic + targets) for checkpointing.
+    pub fn export(&self, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        self.actor.export("ddpg.actor", out);
+        self.critic.export("ddpg.critic", out);
+        self.target_actor.export("ddpg.target_actor", out);
+        self.target_critic.export("ddpg.target_critic", out);
+        out.push((
+            "ddpg.meta".into(),
+            crate::tensor::Tensor::new(vec![2], vec![self.noise as f32, self.t as f32]),
+        ));
+    }
+
+    /// Import a checkpoint written by [`Self::export`]. Replay contents
+    /// are deliberately not persisted (fresh experiences are cheap and
+    /// stale ones harmful after environment changes).
+    pub fn import(
+        &mut self,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        self.actor.import("ddpg.actor", get)?;
+        self.critic.import("ddpg.critic", get)?;
+        self.target_actor.import("ddpg.target_actor", get)?;
+        self.target_critic.import("ddpg.target_critic", get)?;
+        let meta = get("ddpg.meta")?;
+        self.noise = meta.data[0] as f64;
+        self.t = meta.data[1] as u64;
+        Ok(())
+    }
+
+    /// One gradient update from replay; returns the critic TD loss.
+    pub fn update(&mut self) -> Option<f32> {
+        let b = self.cfg.batch;
+        if self.replay.len() < b {
+            return None;
+        }
+        self.t += 1;
+        let (idx, isw) = self.replay.sample(b, &mut self.rng);
+        let sd = self.cfg.state_dim;
+        let ad = self.cfg.action_dim;
+
+        // batched tensors
+        let mut s = Mat::zeros(b, sd);
+        let mut s2 = Mat::zeros(b, sd);
+        let mut sa = Mat::zeros(b, sd + ad);
+        let mut r = vec![0f32; b];
+        let mut done = vec![false; b];
+        for (bi, &i) in idx.iter().enumerate() {
+            let tr = self.replay.get(i);
+            s.d[bi * sd..(bi + 1) * sd].copy_from_slice(&tr.s);
+            s2.d[bi * sd..(bi + 1) * sd].copy_from_slice(&tr.s2);
+            sa.d[bi * (sd + ad)..bi * (sd + ad) + sd].copy_from_slice(&tr.s);
+            sa.d[bi * (sd + ad) + sd..(bi + 1) * (sd + ad)].copy_from_slice(&tr.a);
+            r[bi] = tr.r;
+            done[bi] = tr.done;
+        }
+
+        // target: y = r + γ (1-done) Q'(s2, μ'(s2))
+        let a2 = self.target_actor.forward(&s2);
+        let mut s2a2 = Mat::zeros(b, sd + ad);
+        for bi in 0..b {
+            s2a2.d[bi * (sd + ad)..bi * (sd + ad) + sd]
+                .copy_from_slice(s2.row_slice(bi));
+            s2a2.d[bi * (sd + ad) + sd..(bi + 1) * (sd + ad)]
+                .copy_from_slice(a2.row_slice(bi));
+        }
+        let q2 = self.target_critic.forward(&s2a2);
+        let y: Vec<f32> = (0..b)
+            .map(|bi| {
+                r[bi] + if done[bi] { 0.0 } else { self.cfg.gamma * q2.at(bi, 0) }
+            })
+            .collect();
+
+        // critic update (IS-weighted MSE)
+        let cache = self.critic.forward_cached(&sa);
+        let q = cache.outs.last().unwrap().clone();
+        let mut dq = Mat::zeros(b, 1);
+        let mut td = vec![0f32; b];
+        let mut loss = 0.0;
+        for bi in 0..b {
+            let e = q.at(bi, 0) - y[bi];
+            td[bi] = e;
+            let wgt = isw[bi] / b as f32;
+            *dq.at_mut(bi, 0) = e * wgt;
+            loss += 0.5 * e * e * wgt;
+        }
+        self.critic.zero_grad();
+        self.critic.backward(&cache, &dq);
+        self.critic.adam(self.cfg.critic_lr, self.t as f32);
+        self.replay.update_priorities(&idx, &td);
+
+        // actor update: ascend Q(s, μ(s))
+        let acache = self.actor.forward_cached(&s);
+        let a = acache.outs.last().unwrap().clone();
+        let mut sa2 = Mat::zeros(b, sd + ad);
+        for bi in 0..b {
+            sa2.d[bi * (sd + ad)..bi * (sd + ad) + sd].copy_from_slice(s.row_slice(bi));
+            sa2.d[bi * (sd + ad) + sd..(bi + 1) * (sd + ad)]
+                .copy_from_slice(a.row_slice(bi));
+        }
+        let ccache = self.critic.forward_cached(&sa2);
+        let ones = Mat::full(b, 1, -1.0 / b as f32); // maximize Q => minimize -Q
+        self.critic.zero_grad(); // grads only used to get dQ/da
+        let dinput = self.critic.backward(&ccache, &ones);
+        // slice out dQ/da
+        let mut da = Mat::zeros(b, ad);
+        for bi in 0..b {
+            da.d[bi * ad..(bi + 1) * ad]
+                .copy_from_slice(&dinput.d[bi * (sd + ad) + sd..(bi + 1) * (sd + ad)]);
+        }
+        self.actor.zero_grad();
+        self.actor.backward(&acache, &da);
+        self.actor.adam(self.cfg.actor_lr, self.t as f32);
+        self.critic.zero_grad(); // don't leak actor-pass grads into next step
+
+        // polyak targets
+        self.target_actor.soft_update_from(&self.actor, self.cfg.tau);
+        self.target_critic.soft_update_from(&self.critic, self.cfg.tau);
+        Some(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 1-step bandit-ish control problem: state in R^14, best action is
+    /// a = clamp(state[0..2]); reward = -(a - target)^2. DDPG must push
+    /// its policy toward the target.
+    #[test]
+    fn learns_simple_bandit() {
+        let cfg = DdpgConfig {
+            batch: 32,
+            replay_cap: 512,
+            noise_init: 0.4,
+            actor_lr: 3e-3,
+            critic_lr: 3e-3,
+            hidden: 32,
+            ..DdpgConfig::default()
+        };
+        let mut agent = Ddpg::new(cfg, 7);
+        let mut rng = Rng::new(1);
+        let mut final_err = f64::MAX;
+        for ep in 0..600 {
+            let mut s = vec![0f32; crate::env::STATE_DIM];
+            s[0] = rng.uniform() as f32;
+            s[1] = rng.uniform() as f32;
+            let target = [s[0] * 0.5 + 0.25, 0.8 - 0.5 * s[1]];
+            let a = agent.act(&s, true);
+            let r = -((a[0] - target[0]).powi(2) + (a[1] - target[1]).powi(2));
+            agent.observe(Transition {
+                s: s.clone(),
+                a: a.clone(),
+                alg: 0,
+                r,
+                s2: vec![0.0; crate::env::STATE_DIM],
+                done: true,
+            });
+            agent.update();
+            if ep % 10 == 0 {
+                agent.decay_noise();
+            }
+            if ep > 550 {
+                let g = agent.act_greedy(&s);
+                final_err = ((g[0] - target[0]).powi(2) + (g[1] - target[1]).powi(2))
+                    .sqrt() as f64;
+            }
+        }
+        assert!(final_err < 0.35, "policy error {final_err}");
+    }
+
+    #[test]
+    fn features_have_hidden_dim() {
+        let agent = Ddpg::new(DdpgConfig::default(), 3);
+        let f = agent.features(&vec![0.1; crate::env::STATE_DIM]);
+        assert_eq!(f.len(), 300);
+    }
+
+    #[test]
+    fn noise_decays() {
+        let mut agent = Ddpg::new(DdpgConfig::default(), 3);
+        let n0 = agent.noise;
+        agent.decay_noise();
+        assert!(agent.noise < n0);
+    }
+
+    #[test]
+    fn actions_in_unit_box() {
+        let mut agent = Ddpg::new(DdpgConfig::default(), 4);
+        for i in 0..50 {
+            let s = vec![(i as f32 * 0.13).sin(); crate::env::STATE_DIM];
+            let a = agent.act(&s, true);
+            assert!(a.iter().all(|&x| (0.0..=1.0).contains(&x)), "{a:?}");
+        }
+    }
+}

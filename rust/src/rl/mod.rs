@@ -1,0 +1,10 @@
+//! The composite RL agent (paper §4.2): DDPG for the continuous
+//! (pruning-ratio, precision) actions, Rainbow for the discrete
+//! pruning-algorithm action, both fed from prioritized replay, glued by
+//! the DDPG-actor feature tap and the reward-monitor unlock.
+
+pub mod checkpoint;
+pub mod composite;
+pub mod ddpg;
+pub mod rainbow;
+pub mod replay;

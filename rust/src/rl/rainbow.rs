@@ -1,0 +1,485 @@
+//! Rainbow agent (paper §4.2.2) for the discrete pruning-algorithm
+//! action: Double Q-learning + dueling heads + noisy nets + C51
+//! distributional output + prioritized replay + n-step returns.
+//!
+//! Its input is NOT the raw env state: it consumes the output of the
+//! DDPG actor's feature extractor (the last hidden layer), per Fig 4 —
+//! "the Rainbow model learns to associate abstract features of pruning
+//! and quantization with the best fitted technique". The loss does not
+//! back-propagate into the DDPG actor (§4.2.2).
+
+use crate::nn::mat::Mat;
+use crate::nn::{act_backward, act_forward, Act, Dense, NoisyDense};
+use crate::pruning::PruneAlg;
+use crate::util::rng::Rng;
+
+use super::replay::{PrioritizedReplay, Transition};
+
+#[derive(Clone, Debug)]
+pub struct RainbowConfig {
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub n_actions: usize,
+    pub atoms: usize,
+    pub v_min: f32,
+    pub v_max: f32,
+    pub lr: f32,
+    pub gamma: f32,
+    pub batch: usize,
+    pub replay_cap: usize,
+    pub n_step: usize,
+    pub target_sync: u64,
+}
+
+impl Default for RainbowConfig {
+    fn default() -> Self {
+        RainbowConfig {
+            feat_dim: 300,
+            hidden: 128,
+            n_actions: PruneAlg::ALL.len(),
+            atoms: 51,
+            v_min: -8.0,
+            v_max: 12.0,
+            lr: 6.25e-5 * 4.0, // Rainbow lr scaled for the small net
+            gamma: 1.0,
+            batch: 64,
+            replay_cap: 1000,
+            n_step: 3,
+            target_sync: 100,
+        }
+    }
+}
+
+struct Net {
+    trunk: Dense,
+    value: NoisyDense,
+    adv: NoisyDense,
+}
+
+impl Net {
+    fn new(cfg: &RainbowConfig, rng: &mut Rng) -> Net {
+        Net {
+            trunk: Dense::new(cfg.feat_dim, cfg.hidden, rng),
+            value: NoisyDense::new(cfg.hidden, cfg.atoms, rng),
+            adv: NoisyDense::new(cfg.hidden, cfg.n_actions * cfg.atoms, rng),
+        }
+    }
+
+    fn resample(&mut self, rng: &mut Rng) {
+        self.value.resample(rng);
+        self.adv.resample(rng);
+    }
+
+    fn set_noisy(&mut self, on: bool) {
+        self.value.noisy = on;
+        self.adv.noisy = on;
+    }
+
+    /// Returns (h post-relu, per-action atom log-probabilities flattened
+    /// [b, nA*Z] as probabilities p, and the pre-softmax logits).
+    fn forward(&self, cfg: &RainbowConfig, f: &Mat) -> (Mat, Mat, Mat) {
+        let mut h = self.trunk.forward(f);
+        act_forward(Act::Relu, &mut h);
+        let v = self.value.forward(&h); // [b, Z]
+        let a = self.adv.forward(&h); // [b, nA*Z]
+        let (na, z) = (cfg.n_actions, cfg.atoms);
+        let b = f.r;
+        let mut logits = Mat::zeros(b, na * z);
+        for bi in 0..b {
+            for zi in 0..z {
+                let mut mean = 0.0f32;
+                for ai in 0..na {
+                    mean += a.at(bi, ai * z + zi);
+                }
+                mean /= na as f32;
+                for ai in 0..na {
+                    *logits.at_mut(bi, ai * z + zi) =
+                        v.at(bi, zi) + a.at(bi, ai * z + zi) - mean;
+                }
+            }
+        }
+        // softmax over atoms per action
+        let mut p = logits.clone();
+        for bi in 0..b {
+            for ai in 0..na {
+                let row = &mut p.d[bi * na * z + ai * z..bi * na * z + (ai + 1) * z];
+                let m = row.iter().cloned().fold(f32::MIN, f32::max);
+                let mut sum = 0.0;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    sum += *x;
+                }
+                for x in row.iter_mut() {
+                    *x /= sum;
+                }
+            }
+        }
+        (h, p, logits)
+    }
+
+    fn zero_grad(&mut self) {
+        self.trunk.zero_grad();
+        self.value.zero_grad();
+        self.adv.zero_grad();
+    }
+
+    fn adam(&mut self, lr: f32, t: f32) {
+        self.trunk.adam(lr, t);
+        self.value.adam(lr, t);
+        self.adv.adam(lr, t);
+    }
+
+    fn clone_weights_from(&mut self, src: &Net) {
+        self.trunk.soft_update_from(&src.trunk, 1.0);
+        self.value.soft_update_from(&src.value, 1.0);
+        self.adv.soft_update_from(&src.adv, 1.0);
+    }
+
+    fn export(&self, prefix: &str, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        self.trunk.export(&format!("{prefix}.trunk"), out);
+        self.value.export(&format!("{prefix}.value"), out);
+        self.adv.export(&format!("{prefix}.adv"), out);
+    }
+
+    fn import(
+        &mut self,
+        prefix: &str,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        self.trunk.import(&format!("{prefix}.trunk"), get)?;
+        self.value.import(&format!("{prefix}.value"), get)?;
+        self.adv.import(&format!("{prefix}.adv"), get)?;
+        Ok(())
+    }
+}
+
+pub struct Rainbow {
+    pub cfg: RainbowConfig,
+    online: Net,
+    target: Net,
+    pub replay: PrioritizedReplay,
+    support: Vec<f32>,
+    /// pending n-step window: (features, action, reward)
+    pending: Vec<(Vec<f32>, usize, f32)>,
+    t: u64,
+    rng: Rng,
+}
+
+impl Rainbow {
+    pub fn new(cfg: RainbowConfig, seed: u64) -> Rainbow {
+        let mut rng = Rng::new(seed);
+        let online = Net::new(&cfg, &mut rng);
+        let mut target = Net::new(&cfg, &mut rng);
+        target.clone_weights_from(&online);
+        let z = cfg.atoms;
+        let support = (0..z)
+            .map(|i| cfg.v_min + (cfg.v_max - cfg.v_min) * i as f32 / (z - 1) as f32)
+            .collect();
+        Rainbow {
+            replay: PrioritizedReplay::new(cfg.replay_cap),
+            support,
+            pending: Vec::new(),
+            t: 0,
+            rng,
+            online,
+            target,
+            cfg,
+        }
+    }
+
+    /// Expected Q per action for one feature vector.
+    pub fn q_values(&mut self, f: &[f32]) -> Vec<f32> {
+        self.online.resample(&mut self.rng);
+        let x = Mat::from_vec(1, f.len(), f.to_vec());
+        let (_, p, _) = self.online.forward(&self.cfg, &x);
+        let (na, z) = (self.cfg.n_actions, self.cfg.atoms);
+        (0..na)
+            .map(|ai| {
+                (0..z)
+                    .map(|zi| p.at(0, ai * z + zi) * self.support[zi])
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// Greedy action under the (noisy — exploration comes from the noise)
+    /// online network.
+    pub fn act(&mut self, f: &[f32]) -> usize {
+        let q = self.q_values(f);
+        q.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Record a step; n-step transitions are assembled internally (γ = 1
+    /// per §5.1 makes the n-step return a plain sum).
+    pub fn observe(&mut self, f: Vec<f32>, action: usize, r: f32, f2: Vec<f32>, done: bool) {
+        self.pending.push((f, action, r));
+        let n = self.cfg.n_step;
+        if self.pending.len() >= n {
+            let ret: f32 = self.pending[self.pending.len() - n..]
+                .iter()
+                .map(|(_, _, r)| *r)
+                .sum();
+            let (s, a, _) = self.pending[self.pending.len() - n].clone();
+            self.replay.push(Transition {
+                s,
+                a: vec![],
+                alg: a,
+                r: ret,
+                s2: f2.clone(),
+                done,
+            });
+        }
+        if done {
+            // flush the shorter tails
+            let len = self.pending.len();
+            let lo = len.saturating_sub(n - 1);
+            for i in lo..len {
+                let ret: f32 = self.pending[i..].iter().map(|(_, _, r)| *r).sum();
+                let (s, a, _) = self.pending[i].clone();
+                self.replay.push(Transition {
+                    s,
+                    a: vec![],
+                    alg: a,
+                    r: ret,
+                    s2: f2.clone(),
+                    done: true,
+                });
+            }
+            self.pending.clear();
+        }
+    }
+
+    /// One distributional-RL update; returns mean cross-entropy loss.
+    pub fn update(&mut self) -> Option<f32> {
+        let b = self.cfg.batch;
+        if self.replay.len() < b {
+            return None;
+        }
+        self.t += 1;
+        let (idx, isw) = self.replay.sample(b, &mut self.rng);
+        let fd = self.cfg.feat_dim;
+        let (na, z) = (self.cfg.n_actions, self.cfg.atoms);
+        let dz = (self.cfg.v_max - self.cfg.v_min) / (z - 1) as f32;
+
+        let mut s = Mat::zeros(b, fd);
+        let mut s2 = Mat::zeros(b, fd);
+        let mut acts = vec![0usize; b];
+        let mut rews = vec![0f32; b];
+        let mut dones = vec![false; b];
+        for (bi, &i) in idx.iter().enumerate() {
+            let tr = self.replay.get(i);
+            s.d[bi * fd..(bi + 1) * fd].copy_from_slice(&tr.s);
+            s2.d[bi * fd..(bi + 1) * fd].copy_from_slice(&tr.s2);
+            acts[bi] = tr.alg;
+            rews[bi] = tr.r;
+            dones[bi] = tr.done;
+        }
+
+        // --- target distribution (Double DQN + C51 projection) ---
+        self.online.resample(&mut self.rng);
+        let (_, p2_online, _) = self.online.forward(&self.cfg, &s2);
+        self.target.resample(&mut self.rng);
+        let (_, p2_target, _) = self.target.forward(&self.cfg, &s2);
+        let gamma_n = self.cfg.gamma.powi(self.cfg.n_step as i32);
+        let mut m = Mat::zeros(b, z);
+        for bi in 0..b {
+            // a* from the online net
+            let mut best_a = 0;
+            let mut best_q = f32::MIN;
+            for ai in 0..na {
+                let q: f32 = (0..z)
+                    .map(|zi| p2_online.at(bi, ai * z + zi) * self.support[zi])
+                    .sum();
+                if q > best_q {
+                    best_q = q;
+                    best_a = ai;
+                }
+            }
+            for zi in 0..z {
+                let pz = p2_target.at(bi, best_a * z + zi);
+                let tz = (rews[bi]
+                    + if dones[bi] { 0.0 } else { gamma_n * self.support[zi] })
+                    .clamp(self.cfg.v_min, self.cfg.v_max);
+                let pos = (tz - self.cfg.v_min) / dz;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                if lo == hi {
+                    *m.at_mut(bi, lo) += pz;
+                } else {
+                    *m.at_mut(bi, lo) += pz * (hi as f32 - pos);
+                    *m.at_mut(bi, hi.min(z - 1)) += pz * (pos - lo as f32);
+                }
+            }
+        }
+
+        // --- online forward + cross-entropy backward ---
+        self.online.resample(&mut self.rng);
+        let (h, p, _) = self.online.forward(&self.cfg, &s);
+        let mut dlogits = Mat::zeros(b, na * z);
+        let mut td = vec![0f32; b];
+        let mut loss = 0.0f32;
+        for bi in 0..b {
+            let a = acts[bi];
+            let wgt = isw[bi] / b as f32;
+            let mut ce = 0.0f32;
+            for zi in 0..z {
+                let pi = p.at(bi, a * z + zi).max(1e-8);
+                let mi = m.at(bi, zi);
+                ce -= mi * pi.ln();
+                *dlogits.at_mut(bi, a * z + zi) = (pi - mi) * wgt;
+            }
+            td[bi] = ce;
+            loss += ce * wgt;
+        }
+        self.replay.update_priorities(&idx, &td);
+
+        // dueling backward: dV = Σ_a dlogits, dA = dlogits - mean_a dlogits
+        let mut dv = Mat::zeros(b, z);
+        let mut da = Mat::zeros(b, na * z);
+        for bi in 0..b {
+            for zi in 0..z {
+                let mut sum = 0.0f32;
+                for ai in 0..na {
+                    sum += dlogits.at(bi, ai * z + zi);
+                }
+                *dv.at_mut(bi, zi) = sum;
+                let mean = sum / na as f32;
+                for ai in 0..na {
+                    *da.at_mut(bi, ai * z + zi) = dlogits.at(bi, ai * z + zi) - mean;
+                }
+            }
+        }
+        self.online.zero_grad();
+        let dh_v = self.online.value.backward(&h, &dv);
+        let dh_a = self.online.adv.backward(&h, &da);
+        let mut dh = dh_v;
+        dh.add_assign(&dh_a);
+        act_backward(Act::Relu, &h, &mut dh);
+        let _ = self.online.trunk.backward(&s, &dh);
+        self.online.adam(self.cfg.lr, self.t as f32);
+
+        if self.t % self.cfg.target_sync == 0 {
+            self.target.clone_weights_from(&self.online);
+        }
+        Some(loss)
+    }
+
+    /// Export agent parameters for checkpointing.
+    pub fn export(&self, out: &mut Vec<(String, crate::tensor::Tensor)>) {
+        self.online.export("rainbow.online", out);
+        self.target.export("rainbow.target", out);
+        out.push((
+            "rainbow.meta".into(),
+            crate::tensor::Tensor::new(vec![1], vec![self.t as f32]),
+        ));
+    }
+
+    /// Import a checkpoint written by [`Self::export`].
+    pub fn import(
+        &mut self,
+        get: &dyn Fn(&str) -> anyhow::Result<crate::tensor::Tensor>,
+    ) -> anyhow::Result<()> {
+        self.online.import("rainbow.online", get)?;
+        self.target.import("rainbow.target", get)?;
+        self.t = get("rainbow.meta")?.data[0] as u64;
+        Ok(())
+    }
+
+    /// Disable noise (greedy evaluation mode).
+    pub fn set_eval(&mut self, eval: bool) {
+        self.online.set_noisy(!eval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Contextual bandit: feature f ∈ R^8; the correct discrete action is
+    /// determined by which of 3 slots of f is largest. Reward 1/0.
+    #[test]
+    fn learns_contextual_bandit() {
+        let cfg = RainbowConfig {
+            feat_dim: 8,
+            hidden: 32,
+            n_actions: 3,
+            atoms: 21,
+            v_min: -1.0,
+            v_max: 2.0,
+            lr: 2e-3,
+            batch: 32,
+            replay_cap: 512,
+            n_step: 1,
+            target_sync: 50,
+            ..RainbowConfig::default()
+        };
+        let mut agent = Rainbow::new(cfg, 11);
+        let mut rng = Rng::new(3);
+        for _ in 0..900 {
+            let mut f = vec![0f32; 8];
+            for x in f.iter_mut() {
+                *x = rng.uniform() as f32;
+            }
+            let best = f[..3]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let a = agent.act(&f);
+            let r = if a == best { 1.0 } else { 0.0 };
+            agent.observe(f, a, r, vec![0.0; 8], true);
+            agent.update();
+        }
+        // evaluate greedily
+        agent.set_eval(true);
+        let mut correct = 0;
+        for _ in 0..100 {
+            let mut f = vec![0f32; 8];
+            for x in f.iter_mut() {
+                *x = rng.uniform() as f32;
+            }
+            let best = f[..3]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if agent.act(&f) == best {
+                correct += 1;
+            }
+        }
+        assert!(correct > 65, "bandit accuracy {correct}/100");
+    }
+
+    #[test]
+    fn n_step_assembles_returns() {
+        let cfg = RainbowConfig {
+            feat_dim: 2,
+            n_step: 3,
+            replay_cap: 64,
+            ..RainbowConfig::default()
+        };
+        let mut agent = Rainbow::new(cfg, 1);
+        for i in 0..5 {
+            let done = i == 4;
+            agent.observe(vec![i as f32, 0.0], 0, 1.0, vec![i as f32 + 1.0, 0.0], done);
+        }
+        // 5 steps with n=3: windows (0..3),(1..4),(2..5) + tail flush (3..5),(4..5)
+        assert_eq!(agent.replay.len(), 5);
+        let rs: Vec<f32> = (0..agent.replay.len()).map(|i| agent.replay.get(i).r).collect();
+        assert!(rs.contains(&3.0) && rs.contains(&2.0) && rs.contains(&1.0), "{rs:?}");
+    }
+
+    #[test]
+    fn q_values_finite_and_sized() {
+        let mut agent = Rainbow::new(RainbowConfig::default(), 5);
+        let q = agent.q_values(&vec![0.3; 300]);
+        assert_eq!(q.len(), PruneAlg::ALL.len());
+        assert!(q.iter().all(|x| x.is_finite()));
+    }
+}

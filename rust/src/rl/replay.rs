@@ -1,0 +1,218 @@
+//! Prioritized experience replay (paper §4.2: both agent components use
+//! one, "to favor experiences with higher temporal difference error").
+//!
+//! Sum-tree proportional sampling with importance-sampling weights
+//! (Schaul et al.), α/β defaults from the Rainbow paper.
+
+use crate::util::rng::Rng;
+
+/// One stored transition. `a` carries the continuous action (DDPG) and
+/// `alg` the discrete one (Rainbow) — each agent reads its half.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub s: Vec<f32>,
+    pub a: Vec<f32>,
+    pub alg: usize,
+    pub r: f32,
+    pub s2: Vec<f32>,
+    pub done: bool,
+}
+
+/// Array-backed sum tree over leaf priorities.
+struct SumTree {
+    n: usize,
+    tree: Vec<f64>,
+}
+
+impl SumTree {
+    fn new(n: usize) -> Self {
+        SumTree { n, tree: vec![0.0; 2 * n] }
+    }
+
+    fn set(&mut self, i: usize, p: f64) {
+        let mut idx = self.n + i;
+        let delta = p - self.tree[idx];
+        while idx > 0 {
+            self.tree[idx] += delta;
+            idx /= 2;
+        }
+    }
+
+    fn get(&self, i: usize) -> f64 {
+        self.tree[self.n + i]
+    }
+
+    fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Find the leaf whose prefix-sum interval contains `v`.
+    fn find(&self, mut v: f64) -> usize {
+        let mut idx = 1;
+        while idx < self.n {
+            let left = 2 * idx;
+            if v <= self.tree[left] || self.tree[left + 1] <= 0.0 {
+                idx = left;
+            } else {
+                v -= self.tree[left];
+                idx = left + 1;
+            }
+        }
+        idx - self.n
+    }
+}
+
+/// Proportional prioritized replay buffer.
+pub struct PrioritizedReplay {
+    cap: usize,
+    data: Vec<Transition>,
+    tree: SumTree,
+    pos: usize,
+    alpha: f64,
+    pub beta: f64,
+    max_pri: f64,
+}
+
+impl PrioritizedReplay {
+    pub fn new(cap: usize) -> Self {
+        PrioritizedReplay {
+            cap,
+            data: Vec::with_capacity(cap),
+            tree: SumTree::new(cap.next_power_of_two()),
+            pos: 0,
+            alpha: 0.6,
+            beta: 0.4,
+            max_pri: 1.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Insert with max priority (new experiences sampled at least once).
+    pub fn push(&mut self, t: Transition) {
+        let p = self.max_pri.powf(self.alpha);
+        if self.data.len() < self.cap {
+            self.data.push(t);
+            self.tree.set(self.data.len() - 1, p);
+        } else {
+            self.data[self.pos] = t;
+            self.tree.set(self.pos, p);
+            self.pos = (self.pos + 1) % self.cap;
+        }
+    }
+
+    /// Sample `batch` indices with IS weights (normalised to max 1).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> (Vec<usize>, Vec<f32>) {
+        let n = self.data.len();
+        assert!(n > 0);
+        let total = self.tree.total().max(1e-12);
+        let mut idx = Vec::with_capacity(batch);
+        let mut w = Vec::with_capacity(batch);
+        let seg = total / batch as f64;
+        for b in 0..batch {
+            let v = seg * (b as f64 + rng.uniform());
+            let i = self.tree.find(v.min(total - 1e-9)).min(n - 1);
+            let p = (self.tree.get(i) / total).max(1e-12);
+            idx.push(i);
+            w.push(((n as f64 * p).powf(-self.beta)) as f32);
+        }
+        let wmax = w.iter().cloned().fold(f32::MIN, f32::max).max(1e-12);
+        w.iter_mut().for_each(|x| *x /= wmax);
+        (idx, w)
+    }
+
+    pub fn get(&self, i: usize) -> &Transition {
+        &self.data[i]
+    }
+
+    /// Feed back |TD error| for the sampled indices.
+    pub fn update_priorities(&mut self, idx: &[usize], td: &[f32]) {
+        for (&i, &e) in idx.iter().zip(td) {
+            let p = (e.abs() as f64 + 1e-3).min(100.0);
+            self.max_pri = self.max_pri.max(p);
+            self.tree.set(i, p.powf(self.alpha));
+        }
+    }
+
+    /// Anneal β toward 1 (standard PER schedule).
+    pub fn anneal_beta(&mut self, frac: f64) {
+        self.beta = 0.4 + 0.6 * frac.clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(r: f32) -> Transition {
+        Transition { s: vec![r], a: vec![0.0], alg: 0, r, s2: vec![r], done: false }
+    }
+
+    #[test]
+    fn sum_tree_prefix_find() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 2.0);
+        t.set(2, 3.0);
+        t.set(3, 4.0);
+        assert_eq!(t.total(), 10.0);
+        assert_eq!(t.find(0.5), 0);
+        assert_eq!(t.find(1.5), 1);
+        assert_eq!(t.find(3.5), 2);
+        assert_eq!(t.find(9.9), 3);
+    }
+
+    #[test]
+    fn ring_buffer_wraps() {
+        let mut r = PrioritizedReplay::new(4);
+        for i in 0..10 {
+            r.push(tr(i as f32));
+        }
+        assert_eq!(r.len(), 4);
+        // newest 4 survive: 6,7,8,9 in some ring order
+        let vals: Vec<f32> = (0..4).map(|i| r.get(i).r).collect();
+        for v in [6.0, 7.0, 8.0, 9.0] {
+            assert!(vals.contains(&v), "{vals:?}");
+        }
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let mut r = PrioritizedReplay::new(8);
+        for i in 0..8 {
+            r.push(tr(i as f32));
+        }
+        // index 3 gets huge TD error
+        r.update_priorities(&[3], &[50.0]);
+        r.update_priorities(&[0, 1, 2, 4, 5, 6, 7], &[0.01; 7]);
+        let mut rng = Rng::new(5);
+        let mut count3 = 0;
+        let mut total = 0;
+        for _ in 0..200 {
+            let (idx, _) = r.sample(4, &mut rng);
+            count3 += idx.iter().filter(|&&i| i == 3).count();
+            total += 4;
+        }
+        assert!(
+            count3 as f64 / total as f64 > 0.5,
+            "index 3 sampled {count3}/{total}"
+        );
+    }
+
+    #[test]
+    fn is_weights_bounded() {
+        let mut r = PrioritizedReplay::new(16);
+        for i in 0..16 {
+            r.push(tr(i as f32));
+        }
+        let mut rng = Rng::new(9);
+        let (_, w) = r.sample(8, &mut rng);
+        assert!(w.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-6), "{w:?}");
+    }
+}

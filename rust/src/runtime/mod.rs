@@ -1,0 +1,243 @@
+//! PJRT runtime: load AOT-compiled HLO text, execute it on the hot path.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`).
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! [`InferenceSession`] is the reward oracle: it owns one compiled
+//! executable per model plus the validation/test batches, and answers
+//! "top-1 accuracy of (pruned+quantized weights, per-layer act bits)"
+//! in a single PJRT call per batch — compiled once, executed at every
+//! RL step, Python never involved.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::npz::Npz;
+use crate::model::{ModelArch, Weights};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// One compiled model graph.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute; unwraps the 1-tuple the exporter emits (return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} vs data len {}", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Which split of the dataset artifact to evaluate on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// reward subset (paper §5.1: a slice of the validation set)
+    Val,
+    /// final top-1 reporting
+    Test,
+}
+
+/// The accuracy oracle for one model.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the RL loop changes exactly ONE
+/// layer's weights per step, so the session keeps the marshalled weight
+/// literals in a per-layer cache; [`Self::invalidate`] marks a layer
+/// dirty and only dirty layers are re-marshalled on the next
+/// [`Self::accuracy`] call. Image batches are marshalled once at
+/// construction.
+pub struct InferenceSession {
+    exe: Executable,
+    pub batch: usize,
+    pub n_prunable: usize,
+    /// pre-marshalled image literals, one per batch
+    image_batches: Vec<xla::Literal>,
+    /// labels per batch
+    label_batches: Vec<Vec<i64>>,
+    pub n_examples: usize,
+    /// per-layer (w, b) literal cache
+    wcache: RefCell<Vec<Option<(xla::Literal, xla::Literal)>>>,
+}
+
+impl InferenceSession {
+    /// `limit` truncates the number of examples (reward subset size).
+    pub fn new(
+        rt: &Runtime,
+        arch: &ModelArch,
+        hlo_path: &Path,
+        data_npz: &Path,
+        split: Split,
+        limit: usize,
+    ) -> Result<InferenceSession> {
+        Self::with_batch(rt, arch, hlo_path, data_npz, split, limit, arch.batch)
+    }
+
+    /// Like [`Self::new`] but with an explicit executable batch size
+    /// (the Pallas-path artifact is exported at a smaller batch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_batch(
+        rt: &Runtime,
+        arch: &ModelArch,
+        hlo_path: &Path,
+        data_npz: &Path,
+        split: Split,
+        limit: usize,
+        batch: usize,
+    ) -> Result<InferenceSession> {
+        let exe = rt.load_hlo(hlo_path)?;
+        let npz = Npz::load(data_npz)?;
+        let (xk, yk) = match split {
+            Split::Val => ("X_val", "y_val"),
+            Split::Test => ("X_test", "y_test"),
+        };
+        let images = npz.tensor(xk)?;
+        let labels = npz.i64s(yk)?;
+        let [h, w, c] = arch.input;
+        let per = h * w * c;
+        let total = labels.len().min(limit.max(1));
+        let mut image_batches = Vec::new();
+        let mut label_batches = Vec::new();
+        let mut i = 0;
+        while i < total {
+            let n = (total - i).min(batch);
+            // pad the tail batch by repeating the first example; padded
+            // rows are ignored at scoring time
+            let mut buf = Vec::with_capacity(batch * per);
+            buf.extend_from_slice(&images.data[i * per..(i + n) * per]);
+            while buf.len() < batch * per {
+                buf.extend_from_slice(&images.data[i * per..i * per + per]);
+            }
+            image_batches.push(literal_f32(&[batch, h, w, c], &buf)?);
+            label_batches.push(labels[i..i + n].to_vec());
+            i += n;
+        }
+        Ok(InferenceSession {
+            exe,
+            batch,
+            n_prunable: arch.prunable.len(),
+            image_batches,
+            label_batches,
+            n_examples: total,
+            wcache: RefCell::new(vec![None; arch.prunable.len()]),
+        })
+    }
+
+    /// Mark one layer's cached weight literal dirty (its tensor changed).
+    pub fn invalidate(&self, layer: usize) {
+        self.wcache.borrow_mut()[layer] = None;
+    }
+
+    /// Mark everything dirty (episode reset / unknown provenance).
+    pub fn invalidate_all(&self) {
+        self.wcache.borrow_mut().iter_mut().for_each(|c| *c = None);
+    }
+
+    /// Top-1 accuracy of the given compressed weights + activation bits.
+    pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
+        if act_bits.len() != self.n_prunable {
+            bail!("act_bits len {} vs {} prunable", act_bits.len(), self.n_prunable);
+        }
+        // only dirty layers are re-marshalled (see struct-level perf note)
+        {
+            let mut cache = self.wcache.borrow_mut();
+            for i in 0..self.n_prunable {
+                if cache[i].is_none() {
+                    cache[i] = Some((
+                        literal_f32(&weights.w[i].shape, &weights.w[i].data)?,
+                        literal_f32(&weights.b[i].shape, &weights.b[i].data)?,
+                    ));
+                }
+            }
+        }
+        let cache = self.wcache.borrow();
+        let mut base: Vec<xla::Literal> = Vec::with_capacity(2 * self.n_prunable + 2);
+        for entry in cache.iter() {
+            let (w, b) = entry.as_ref().unwrap();
+            base.push(w.clone());
+            base.push(b.clone());
+        }
+        base.push(literal_f32(&[self.n_prunable], act_bits)?);
+
+        let mut correct = 0usize;
+        for (img, labels) in self.image_batches.iter().zip(&self.label_batches) {
+            let mut inputs: Vec<xla::Literal> = base.clone();
+            inputs.push(img.clone());
+            let logits = self.exe.run(&inputs)?;
+            let vals: Vec<f32> = logits.to_vec()?;
+            let classes = vals.len() / self.batch;
+            for (r, &y) in labels.iter().enumerate() {
+                let row = &vals[r * classes..(r + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i64)
+                    .unwrap_or(-1);
+                if pred == y {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / self.n_examples as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime round-trip tests that need artifacts live in
+    // rust/tests/integration.rs; here we only exercise the literal helper.
+    #[test]
+    fn literal_shape_checks() {
+        assert!(literal_f32(&[2, 3], &[0.0; 5]).is_err());
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Minimal n-d f32 tensor substrate.
+//!
+//! HAPQ only needs what the compression path touches: contiguous f32
+//! storage, shape bookkeeping, channel-major views for pruning
+//! (conv weights are HWIO, fc weights are [in, out] — matching the JAX
+//! export), and a handful of reductions. This is deliberately *not* a
+//! general autodiff tensor — the RL networks live in [`crate::nn`] on
+//! flat matrices.
+
+/// Dense, contiguous, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of output channels under the export layout:
+    /// conv HWIO -> last dim; dwconv HWC1 -> dim 2; fc [in,out] -> last dim.
+    pub fn out_channels(&self, dwconv: bool) -> usize {
+        if dwconv {
+            self.shape[self.shape.len() - 2]
+        } else {
+            *self.shape.last().unwrap()
+        }
+    }
+
+    /// Sum of |x|.
+    pub fn l1(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    /// sqrt(sum x^2).
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Fraction of exact zeros (post-pruning sparsity).
+    pub fn sparsity(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|x| **x == 0.0).count() as f32 / self.data.len() as f32
+    }
+
+    /// Iterate (flat_index, output_channel) pairs for the export layouts.
+    /// `ch_stride` semantics: for HWIO / [in,out] the channel is
+    /// `idx % out_ch`; for dwconv HWC1 it is `(idx / 1) % C` (last dim 1).
+    pub fn channel_of(&self, idx: usize, dwconv: bool) -> usize {
+        if dwconv {
+            // HWC1: dims [k, k, C, 1] -> channel = (idx) % C (last dim 1)
+            let c = self.shape[self.shape.len() - 2];
+            idx % c
+        } else {
+            idx % self.shape.last().unwrap()
+        }
+    }
+
+    /// Per-output-channel L1 norms.
+    pub fn channel_l1(&self, dwconv: bool) -> Vec<f32> {
+        let c = self.out_channels(dwconv);
+        let mut out = vec![0.0f32; c];
+        for (i, x) in self.data.iter().enumerate() {
+            out[self.channel_of(i, dwconv)] += x.abs();
+        }
+        out
+    }
+
+    /// Per-output-channel L2 norms.
+    pub fn channel_l2(&self, dwconv: bool) -> Vec<f32> {
+        let c = self.out_channels(dwconv);
+        let mut out = vec![0.0f32; c];
+        for (i, x) in self.data.iter().enumerate() {
+            out[self.channel_of(i, dwconv)] += x * x;
+        }
+        out.iter_mut().for_each(|v| *v = v.sqrt());
+        out
+    }
+
+    /// Zero all weights belonging to the given output channels.
+    pub fn zero_channels(&mut self, channels: &[usize], dwconv: bool) {
+        let dead: std::collections::HashSet<usize> = channels.iter().copied().collect();
+        for i in 0..self.data.len() {
+            if dead.contains(&self.channel_of(i, dwconv)) {
+                self.data[i] = 0.0;
+            }
+        }
+    }
+
+    /// Per-output-channel (min, max) over the *non-zero* weights —
+    /// the per-channel asymmetric quantization grid (paper §4.1).
+    pub fn channel_minmax(&self, dwconv: bool) -> Vec<(f32, f32)> {
+        let c = self.out_channels(dwconv);
+        let mut mm = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+        for (i, &x) in self.data.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let ch = self.channel_of(i, dwconv);
+            if x < mm[ch].0 {
+                mm[ch].0 = x;
+            }
+            if x > mm[ch].1 {
+                mm[ch].1 = x;
+            }
+        }
+        mm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t4() -> Tensor {
+        // HWIO: [1,1,2,3]
+        Tensor::new(vec![1, 1, 2, 3], vec![1., -2., 3., 4., 5., -6.])
+    }
+
+    #[test]
+    fn norms() {
+        let t = t4();
+        assert_eq!(t.l1(), 21.0);
+        assert!((t.l2() - (1. + 4. + 9. + 16. + 25. + 36f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn channel_l1_hwio() {
+        let t = t4();
+        // channels (last dim 3): ch0 = |1|+|4|, ch1 = |-2|+|5|, ch2 = |3|+|-6|
+        assert_eq!(t.channel_l1(false), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn zero_channels_sparsity() {
+        let mut t = t4();
+        t.zero_channels(&[1], false);
+        assert_eq!(t.data, vec![1., 0., 3., 4., 0., -6.]);
+        assert!((t.sparsity() - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dwconv_channels() {
+        // HWC1: [1,1,3,1]
+        let mut t = Tensor::new(vec![1, 1, 3, 1], vec![1., 2., 3.]);
+        assert_eq!(t.out_channels(true), 3);
+        t.zero_channels(&[0, 2], true);
+        assert_eq!(t.data, vec![0., 2., 0.]);
+    }
+
+    #[test]
+    fn minmax_skips_zeros() {
+        let mut t = t4();
+        t.data[0] = 0.0;
+        let mm = t.channel_minmax(false);
+        assert_eq!(mm[0], (4.0, 4.0));
+        assert_eq!(mm[1], (-2.0, 5.0));
+    }
+}

@@ -1,0 +1,69 @@
+//! Hand-rolled property-test harness (the `proptest` crate is not in
+//! the vendored registry — DESIGN.md §1). Provides seeded generators
+//! and a `forall` runner with failure reporting including the seed, so
+//! a failing property is reproducible with `Rng::new(seed)`.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept moderate: single-core CI box).
+pub const CASES: usize = 64;
+
+/// Run `prop` on `CASES` generated inputs; panic with the failing seed.
+pub fn forall<T, G, P>(name: &str, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..CASES {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {input:?}");
+        }
+    }
+}
+
+/// Generate a random weight-like vector with mixed magnitudes & signs.
+pub fn gen_weights(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    (0..n)
+        .map(|_| {
+            let scale = 10f64.powf(rng.range(-3.0, 0.5));
+            (rng.normal() * scale) as f32
+        })
+        .collect()
+}
+
+/// Generate a sparsity target in [0, 1).
+pub fn gen_sparsity(rng: &mut Rng) -> f32 {
+    rng.range(0.0, 0.95) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("x*x >= 0", |r| r.normal(), |x| x * x >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false`")]
+    fn forall_reports_failure() {
+        forall("always false", |r| r.uniform(), |_| false);
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..100 {
+            let w = gen_weights(&mut r, 64);
+            assert!(!w.is_empty() && w.len() <= 64);
+            let s = gen_sparsity(&mut r);
+            assert!((0.0..0.95).contains(&s));
+        }
+    }
+}

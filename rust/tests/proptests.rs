@@ -1,0 +1,227 @@
+//! Cross-module property tests (util::proptest harness): coordinator-
+//! level invariants over routing (dependency groups), batching (episode
+//! walk order) and state management that unit tests in each module
+//! don't cover jointly. Artifact-free — everything here runs on
+//! synthetic specs.
+
+use hapq::hw::dataflow::{map_layer, LayerDims};
+use hapq::hw::energy::{Compression, EnergyModel};
+use hapq::hw::mac_sim::RqTable;
+use hapq::hw::Accel;
+use hapq::pruning::{prune, PruneAlg, PruneCtx};
+use hapq::quant::quantize_weights;
+use hapq::tensor::Tensor;
+use hapq::util::proptest::forall;
+use hapq::util::rng::Rng;
+
+fn rand_weights(rng: &mut Rng, rows: usize, c: usize) -> Tensor {
+    Tensor::new(
+        vec![rows, c],
+        (0..rows * c).map(|_| (rng.normal() * 0.3) as f32).collect(),
+    )
+}
+
+#[test]
+fn prune_then_quantize_preserves_sparsity_any_alg_any_ratio() {
+    forall(
+        "quantize never resurrects or kills weights",
+        |r| {
+            let rows = 4 + r.below(24);
+            let c = 2 + r.below(16);
+            (
+                rand_weights(r, rows, c),
+                r.below(7),
+                r.range(0.0, 0.9),
+                2 + r.below(7) as u32,
+            )
+        },
+        |(w0, alg_i, ratio, bits)| {
+            let mut w = w0.clone();
+            let sal = Tensor::full(w.shape.clone(), 1.0);
+            let chsq = vec![1.0f32; w.out_channels(false)];
+            let mut rng = Rng::new(3);
+            let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut rng };
+            let res = prune(&mut w, PruneAlg::from_index(*alg_i), *ratio, &mut ctx);
+            let s_before = w.sparsity();
+            quantize_weights(&mut w, *bits);
+            (w.sparsity() - s_before).abs() < 1e-7 && res.sparsity >= 0.0
+        },
+    );
+}
+
+#[test]
+fn coarse_masks_are_whole_channels() {
+    forall(
+        "every coarse-pruned channel is fully zero, others fully alive",
+        |r| {
+            let rows = 4 + r.below(12);
+            let c = 3 + r.below(12);
+            (rand_weights(r, rows, c), r.range(0.1, 0.8))
+        },
+        |(w0, ratio)| {
+            let mut w = w0.clone();
+            let sal = Tensor::full(w.shape.clone(), 1.0);
+            let chsq = vec![1.0f32; w.out_channels(false)];
+            let mut rng = Rng::new(7);
+            let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut rng };
+            let res = prune(&mut w, PruneAlg::L1Ranked, *ratio, &mut ctx);
+            let dead: std::collections::HashSet<usize> =
+                res.channels.unwrap().into_iter().collect();
+            let c = w.out_channels(false);
+            let l1 = w.channel_l1(false);
+            (0..c).all(|ch| {
+                if dead.contains(&ch) {
+                    l1[ch] == 0.0
+                } else {
+                    l1[ch] > 0.0 || w0.channel_l1(false)[ch] == 0.0
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn energy_model_dominance_coarse_ge_fine_everywhere() {
+    let rq = RqTable::compute(1200, 11);
+    forall(
+        "eq(8) energy <= eq(7) energy at equal sparsity/bits",
+        |r| {
+            let hw = 4 + r.below(20);
+            let ci = 2 + r.below(48);
+            let co = 2 + r.below(48);
+            let model = EnergyModel::new(
+                vec![LayerDims::conv(hw, hw, ci, hw, hw, co, 3, 1)],
+                Accel::default(),
+                rq.clone(),
+            );
+            (model, r.uniform(), 2 + r.below(7) as u32)
+        },
+        |(model, s, bits)| {
+            let fine = Compression { sparsity: *s, coarse: false, bits: *bits };
+            let coarse = Compression { sparsity: *s, coarse: true, bits: *bits };
+            model.layer(0, &coarse) <= model.layer(0, &fine) + 1e-9
+        },
+    );
+}
+
+#[test]
+fn latency_never_below_compute_roofline() {
+    let acc = Accel::default();
+    forall(
+        "cycles >= effective MACs / PEs",
+        |r| {
+            let hw = 2 + r.below(24);
+            let c = 2 + r.below(64);
+            (
+                LayerDims::conv(hw, hw, c, hw, hw, c, 3, 1),
+                r.uniform(),
+                r.uniform() < 0.5,
+            )
+        },
+        |(d, s, coarse)| {
+            let m = map_layer(d, &acc);
+            let cfg = Compression { sparsity: *s, coarse: *coarse, bits: 8 };
+            let cycles = hapq::hw::latency::layer_cycles(&m, &acc, &cfg);
+            let eff = if *coarse { 1.0 - s } else { 1.0 };
+            cycles + 1e-9 >= m.macs as f64 * eff / (acc.pe_rows * acc.pe_cols) as f64
+        },
+    );
+}
+
+#[test]
+fn dataflow_mapping_deterministic_and_fits_buffer() {
+    let acc = Accel::default();
+    forall(
+        "map_layer is deterministic and within compulsory bounds",
+        |r| LayerDims::conv(
+            2 + r.below(30), 2 + r.below(30), 1 + r.below(96),
+            2 + r.below(30), 2 + r.below(30), 1 + r.below(96),
+            1 + 2 * r.below(3), 1 + r.below(2),
+        ),
+        |d| {
+            // normalise: oh/ow derived from ih/iw under SAME padding
+            let d = LayerDims::conv(
+                d.ih, d.iw, d.ci,
+                d.ih.div_ceil(d.stride), d.iw.div_ceil(d.stride), d.co,
+                d.k, d.stride,
+            );
+            let m1 = map_layer(&d, &acc);
+            let m2 = map_layer(&d, &acc);
+            m1.dram == m2.dram
+                && m1.gb == m2.gb
+                && m1.dram >= d.ifmap() + d.weights() + d.ofmap()
+        },
+    );
+}
+
+#[test]
+fn reward_lut_monotone_in_gain_within_target_region() {
+    let lut = hapq::env::lut::RewardLut::paper();
+    forall(
+        "inside loss<10%, more gain never reduces reward",
+        |r| (r.range(0.0, 0.099), r.range(0.06, 0.9), r.range(0.02, 0.09)),
+        |&(loss, g, dg)| {
+            lut.reward(loss, (g + dg).min(1.0)) + 1e-12 >= lut.reward(loss, g)
+        },
+    );
+}
+
+#[test]
+fn json_roundtrip_arbitrary_trees() {
+    use hapq::io::json::{arr, num, obj, parse, s, Value};
+    forall(
+        "emit->parse is identity on generated trees",
+        |r| {
+            fn gen(r: &mut Rng, depth: usize) -> Value {
+                match if depth == 0 { r.below(3) } else { r.below(5) } {
+                    0 => num((r.normal() * 100.0 * 8.0).round() / 8.0),
+                    1 => s(&format!("k{}", r.below(1000))),
+                    2 => Value::Bool(r.uniform() < 0.5),
+                    3 => arr((0..r.below(4)).map(|_| gen(r, depth - 1)).collect()),
+                    _ => obj(vec![
+                        ("a", gen(r, depth - 1)),
+                        ("b", gen(r, depth - 1)),
+                    ]),
+                }
+            }
+            gen(r, 3)
+        },
+        |v| parse(&v.to_string()).map(|p| p == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn npz_roundtrip_arbitrary_tensors() {
+    use hapq::io::npz::{save_npz, Npz};
+    let dir = std::env::temp_dir().join("hapq_prop_npz");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        "save_npz -> Npz::load is identity",
+        |r| {
+            let n = 1 + r.below(5);
+            (0..n)
+                .map(|i| {
+                    let rows = 1 + r.below(8);
+                    let cols = 1 + r.below(8);
+                    (
+                        format!("t{i}"),
+                        Tensor::new(
+                            vec![rows, cols],
+                            (0..rows * cols).map(|_| r.normal() as f32).collect(),
+                        ),
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |tensors| {
+            let path = dir.join("t.npz");
+            let refs: Vec<(String, &Tensor)> =
+                tensors.iter().map(|(k, t)| (k.clone(), t)).collect();
+            save_npz(&path, &refs).unwrap();
+            let npz = Npz::load(&path).unwrap();
+            tensors
+                .iter()
+                .all(|(k, t)| npz.tensor(k).map(|got| got == *t).unwrap_or(false))
+        },
+    );
+}
