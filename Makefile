@@ -1,0 +1,21 @@
+# Convenience targets. The Rust side never needs Python at run time;
+# `artifacts` is the one-time L2/L1 export (needs a JAX environment).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts build test doc bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+doc:
+	cargo doc --no-deps
+
+bench:
+	cargo bench

@@ -1,36 +1,44 @@
 //! END-TO-END DRIVER (DESIGN.md §4, row E2E — the required full-system
 //! validation): compress vgg11/synth-c10 with the complete composite-RL
 //! stack, logging the per-episode reward curve, then verify the final
-//! policy on the held-out test split and cross-check the L1 Pallas-path
-//! executable against the default XLA-conv executable.
+//! policy on the held-out test split. When built with `--features
+//! pjrt` (and a real PJRT binding linked), it additionally cross-checks
+//! the L1 Pallas-path executable against the default XLA-conv
+//! executable.
 //!
 //! Proves all layers compose: Pallas kernel (L1) → JAX graph (L2) → HLO
-//! text → PJRT runtime → pruning/quantization/energy/RL (L3).
+//! text → inference backend → pruning/quantization/energy/RL (L3).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example compress_e2e
-//! # env knobs: HAPQ_EPISODES (default 120)
+//! # env knobs: HAPQ_EPISODES (default 120), HAPQ_BACKEND (native|pjrt)
 //! ```
 
 use anyhow::Result;
 use hapq::config::RunConfig;
 use hapq::coordinator::Coordinator;
-use hapq::runtime::{InferenceSession, Split};
+use hapq::runtime::BackendKind;
 
 fn main() -> Result<()> {
     let episodes: usize = std::env::var("HAPQ_EPISODES")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(120);
+    let backend = match std::env::var("HAPQ_BACKEND") {
+        Ok(s) => BackendKind::parse(&s)?,
+        Err(_) => BackendKind::Native,
+    };
     let cfg = RunConfig {
         episodes,
         warmup: (episodes / 10).max(5),
         reward_subset: 128,
         out: "results/e2e".into(),
+        backend,
         ..RunConfig::default()
     };
     let coord = Coordinator::new(cfg)?;
     let model = "vgg11";
+    println!("backend: {}", coord.cfg.backend.name());
 
     // --- full compression run, logging the loss/reward curve ---
     let t0 = std::time::Instant::now();
@@ -50,34 +58,56 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    // --- L1 composition proof: Pallas-kernel executable == XLA-conv one ---
-    let entry = coord.entry(model)?.clone();
-    if let Some(pallas_hlo) = entry.pallas_hlo.clone() {
-        println!("\n== verifying Pallas-path executable ==");
-        let (arch, weights, e) = coord.load_arch(model)?;
-        let data = coord.cfg.artifacts.join(format!("{}.data.npz", e.dataset));
-        let hlo = coord.cfg.artifacts.join(&e.hlo);
-        let n = arch.prunable.len();
-        let bits = vec![6.0f32; n];
-        let lax = InferenceSession::new(
-            &coord.runtime, &arch, &hlo,
-            &data, Split::Test, 128,
-        )?;
-        let pal = InferenceSession::with_batch(
-            &coord.runtime, &arch, &coord.cfg.artifacts.join(&pallas_hlo),
-            &data, Split::Test, 128, entry.pallas_batch,
-        )?;
-        let acc_lax = lax.accuracy(&weights, &bits)?;
-        let acc_pal = pal.accuracy(&weights, &bits)?;
-        println!("  XLA-conv path acc@6bit: {acc_lax:.4}");
-        println!("  Pallas-path  acc@6bit: {acc_pal:.4}");
-        anyhow::ensure!(
-            (acc_lax - acc_pal).abs() < 0.02,
-            "Pallas and XLA paths disagree"
-        );
-        println!("  MATCH — L1 kernel composes through the full stack");
-    }
+    pallas_crosscheck(&coord, model)?;
+
     let path = coord.save_report(&report)?;
     println!("\nreport -> {}", path.display());
+    Ok(())
+}
+
+/// L1 composition proof: the Pallas-kernel executable must agree with
+/// the XLA-conv executable on identical examples. PJRT-only — the
+/// native interpreter has no separate Pallas path to compare.
+#[cfg(feature = "pjrt")]
+fn pallas_crosscheck(coord: &Coordinator, model: &str) -> Result<()> {
+    use hapq::runtime::{InferenceSession, Split};
+    let entry = coord.entry(model)?.clone();
+    let Some(pallas_hlo) = entry.pallas_hlo.clone() else {
+        println!("\n(no pallas artifact — skipping cross-check)");
+        return Ok(());
+    };
+    println!("\n== verifying Pallas-path executable ==");
+    let (arch, weights, e) = coord.load_arch(model)?;
+    let data = coord.cfg.artifacts.join(format!("{}.data.npz", e.dataset));
+    let hlo = coord.cfg.artifacts.join(&e.hlo);
+    let n = arch.prunable.len();
+    let bits = vec![6.0f32; n];
+    let lax = InferenceSession::open(
+        BackendKind::Pjrt, &arch, Some(&hlo), &data, Split::Test, 128, None,
+    )?;
+    let pal = InferenceSession::open(
+        BackendKind::Pjrt,
+        &arch,
+        Some(&coord.cfg.artifacts.join(&pallas_hlo)),
+        &data,
+        Split::Test,
+        128,
+        Some(entry.pallas_batch),
+    )?;
+    let acc_lax = lax.accuracy(&weights, &bits)?;
+    let acc_pal = pal.accuracy(&weights, &bits)?;
+    println!("  XLA-conv path acc@6bit: {acc_lax:.4}");
+    println!("  Pallas-path  acc@6bit: {acc_pal:.4}");
+    anyhow::ensure!(
+        (acc_lax - acc_pal).abs() < 0.02,
+        "Pallas and XLA paths disagree"
+    );
+    println!("  MATCH — L1 kernel composes through the full stack");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pallas_crosscheck(_coord: &Coordinator, _model: &str) -> Result<()> {
+    println!("\n(built without --features pjrt — skipping Pallas cross-check)");
     Ok(())
 }

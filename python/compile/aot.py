@@ -3,7 +3,7 @@
 Python runs ONCE (`make artifacts`); the Rust coordinator is then fully
 self-contained. Interchange is HLO *text* — jax ≥ 0.5 emits protos with
 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-reassigns ids (see /opt/xla-example/README.md).
+reassigns ids (rationale in the rustdoc of rust/src/runtime/pjrt.rs).
 
 Exported graph signature (DESIGN.md §5), one executable per model:
 

@@ -1,6 +1,6 @@
 //! Micro-benchmarks of the L3 hot path (the §Perf foundation):
 //! component latencies that make up one RL step —
-//! prune + quantize + energy + PJRT inference + agent update.
+//! prune + quantize + energy + oracle inference + agent update.
 
 mod common;
 
@@ -92,7 +92,7 @@ fn main() {
         let mut env = coord.build_env("vgg11").unwrap();
         let n = env.n_layers();
         let mut k = 0usize;
-        time("env full step (prune+quant+E+PJRT)", 20, || {
+        time("env full step (prune+quant+E+infer)", 20, || {
             if k % n == 0 {
                 env.reset();
             }

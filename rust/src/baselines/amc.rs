@@ -11,9 +11,13 @@ use crate::rl::ddpg::{Ddpg, DdpgConfig};
 use crate::rl::replay::Transition;
 use crate::util::rng::Rng;
 
+/// AMC budget knobs.
 pub struct AmcConfig {
+    /// DDPG training episodes
     pub episodes: usize,
+    /// random-exploration episodes before learning
     pub warmup: usize,
+    /// RNG seed
     pub seed: u64,
 }
 
@@ -23,6 +27,7 @@ impl Default for AmcConfig {
     }
 }
 
+/// Run AMC against the shared environment; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &AmcConfig) -> Result<Solution> {
     let mut agent = Ddpg::new(
         DdpgConfig { action_dim: 1, ..DdpgConfig::default() },

@@ -19,11 +19,13 @@ use anyhow::Result;
 use crate::env::{Action, CompressionEnv, Solution};
 use crate::pruning::PruneAlg;
 
+/// ASQJ budget knobs.
 pub struct AsqjConfig {
     /// outer ADMM iterations
     pub iters: usize,
     /// dual step size
     pub rho: f64,
+    /// RNG seed
     pub seed: u64,
 }
 
@@ -46,6 +48,7 @@ fn config_actions(sparsity: &[f64], bits: &[f64]) -> Vec<Action> {
         .collect()
 }
 
+/// Run ASQJ against the shared environment; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &AsqjConfig) -> Result<Solution> {
     let n = env.n_layers();
     // start conservative: 30% sparsity, 8 bits everywhere

@@ -8,9 +8,13 @@ use crate::rl::ddpg::{Ddpg, DdpgConfig};
 use crate::rl::replay::Transition;
 use crate::util::rng::Rng;
 
+/// HAQ budget knobs.
 pub struct HaqConfig {
+    /// DDPG training episodes
     pub episodes: usize,
+    /// random-exploration episodes before learning
     pub warmup: usize,
+    /// RNG seed
     pub seed: u64,
 }
 
@@ -20,6 +24,7 @@ impl Default for HaqConfig {
     }
 }
 
+/// Run HAQ against the shared environment; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &HaqConfig) -> Result<Solution> {
     let mut agent = Ddpg::new(
         DdpgConfig { action_dim: 1, ..DdpgConfig::default() },

@@ -1,8 +1,9 @@
 //! State-of-the-art comparison baselines (paper §5.2, Fig 7/9, Tab 3/4).
 //!
 //! All five run against the *same* environment — identical energy
-//! model, quantizer, pruning kernels and PJRT accuracy oracle — which
-//! is exactly the level playing field the paper's comparison assumes.
+//! model, quantizer, pruning kernels and accuracy oracle (whichever
+//! inference backend the run selected) — which is exactly the level
+//! playing field the paper's comparison assumes.
 //! Per DESIGN.md §1, none of them get their original fine-tuning steps
 //! (no retraining exists anywhere in this reproduction), so their
 //! accuracy losses are upper bounds; the paper's qualitative ordering
@@ -19,10 +20,13 @@ use crate::env::{CompressionEnv, Solution};
 /// Common result record for Fig 7-style reporting.
 #[derive(Clone, Debug)]
 pub struct BaselineRun {
+    /// baseline name
     pub method: &'static str,
+    /// best solution found
     pub best: Solution,
     /// reward-oracle invocations consumed (Table 3 accounting)
     pub evals: u64,
+    /// wall-clock seconds spent
     pub wall_secs: f64,
 }
 

@@ -14,14 +14,19 @@ use anyhow::Result;
 use crate::env::{Action, CompressionEnv, Solution};
 use crate::util::rng::Rng;
 
+/// NSGA-II budget & operator knobs.
 pub struct Nsga2Config {
+    /// population size
     pub pop: usize,
+    /// generations to evolve
     pub generations: usize,
     /// SBX distribution index
     pub eta_c: f64,
     /// polynomial-mutation distribution index
     pub eta_m: f64,
+    /// per-gene mutation probability
     pub p_mut: f64,
+    /// RNG seed
     pub seed: u64,
 }
 
@@ -165,6 +170,7 @@ fn poly_mutate(g: &mut [f64], eta: f64, p: f64, rng: &mut Rng) {
     }
 }
 
+/// Evolve the population; returns the best individual's solution.
 pub fn run(env: &mut CompressionEnv, cfg: &Nsga2Config) -> Result<Solution> {
     let n_genes = 3 * env.n_layers();
     let mut rng = Rng::new(cfg.seed ^ 0x6A);

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::env::{Action, CompressionEnv, Solution, MAX_BITS, MIN_BITS};
 use crate::pruning::PruneAlg;
 
+/// OPQ operating-point sweep.
 pub struct OpqConfig {
     /// global sparsity budgets to sweep
     pub budgets: Vec<f64>,
@@ -88,6 +89,7 @@ fn bit_allocation(env: &CompressionEnv, avg_bits: f64) -> Vec<f64> {
         .collect()
 }
 
+/// Run OPQ's analytical allocation sweep; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &OpqConfig) -> Result<Solution> {
     let mut best: Option<Solution> = None;
     for &budget in &cfg.budgets {

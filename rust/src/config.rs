@@ -6,6 +6,8 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::runtime::BackendKind;
+
 /// Options shared by every HAPQ run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -21,9 +23,12 @@ pub struct RunConfig {
     pub reward_subset: usize,
     /// test-set size for final reporting
     pub test_subset: usize,
+    /// RNG seed shared by every sampled component (runs are reproducible)
     pub seed: u64,
     /// MAC-sim sample count (R_Q table fidelity)
     pub mac_samples: usize,
+    /// which inference backend answers accuracy queries (`--backend`)
+    pub backend: BackendKind,
 }
 
 impl Default for RunConfig {
@@ -37,6 +42,7 @@ impl Default for RunConfig {
             test_subset: 1024,
             seed: 42,
             mac_samples: 4000,
+            backend: BackendKind::Native,
         }
     }
 }
@@ -44,12 +50,16 @@ impl Default for RunConfig {
 /// Parsed command line: subcommand, flags, positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// the subcommand (first argument)
     pub cmd: String,
+    /// `--flag value` pairs (`--flag` alone stores `"true"`)
     pub flags: HashMap<String, String>,
+    /// arguments that are neither the subcommand nor flags
     pub positional: Vec<String>,
 }
 
 impl Cli {
+    /// Parse raw arguments (without the binary name).
     pub fn parse(args: &[String]) -> Result<Cli> {
         let mut cli = Cli::default();
         let mut it = args.iter().peekable();
@@ -70,10 +80,12 @@ impl Cli {
         Ok(cli)
     }
 
+    /// String flag with a default.
     pub fn str_flag(&self, name: &str, default: &str) -> String {
         self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Integer flag with a default; errors on non-numeric values.
     pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
         match self.flags.get(name) {
             None => Ok(default),
@@ -84,6 +96,7 @@ impl Cli {
         }
     }
 
+    /// `u64` flag with a default; errors on non-numeric values.
     pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
         Ok(self.usize_flag(name, default as usize)? as u64)
     }
@@ -100,6 +113,7 @@ impl Cli {
             test_subset: self.usize_flag("test-subset", d.test_subset)?,
             seed: self.u64_flag("seed", d.seed)?,
             mac_samples: self.usize_flag("mac-samples", d.mac_samples)?,
+            backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
         })
     }
 }
@@ -131,5 +145,18 @@ mod tests {
     fn bad_integer_rejected() {
         let c = Cli::parse(&args("x --episodes soon")).unwrap();
         assert!(c.usize_flag("episodes", 1).is_err());
+    }
+
+    #[test]
+    fn backend_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --backend native")).unwrap();
+        assert_eq!(c.run_config().unwrap().backend, BackendKind::Native);
+        let c = Cli::parse(&args("compress --backend pjrt")).unwrap();
+        assert_eq!(c.run_config().unwrap().backend, BackendKind::Pjrt);
+        let c = Cli::parse(&args("compress --backend vax")).unwrap();
+        assert!(c.run_config().is_err());
+        // default is native
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().backend, BackendKind::Native);
     }
 }

@@ -15,12 +15,17 @@ use super::Coordinator;
 /// Fig 1: accuracy loss & energy gain vs sparsity, fine (Level) vs
 /// coarse (L1-Ranked), at 8-bit precision.
 pub struct Fig1Row {
+    /// uniform per-layer sparsity applied
     pub sparsity: f64,
+    /// pruning algorithm name
     pub alg: &'static str,
+    /// accuracy loss vs the dense baseline (fraction)
     pub acc_loss: f64,
+    /// energy gain vs the dense baseline (fraction)
     pub energy_gain: f64,
 }
 
+/// Evaluate the Fig 1 sweep on `points` sparsity levels.
 pub fn fig1_sweep(env: &mut CompressionEnv, points: &[f64]) -> Result<Vec<Fig1Row>> {
     let n = env.n_layers();
     let mut rows = Vec::new();
@@ -72,11 +77,15 @@ pub fn fig2a_grid(env: &CompressionEnv) -> Vec<(u32, u32, f64)> {
 /// (no pruning). Mixed points come from a seeded random search, which
 /// is what populates the paper's richer Pareto front.
 pub struct Fig2bPoint {
+    /// `uniform` or `mixed`
     pub kind: &'static str,
+    /// accuracy loss vs the dense baseline (fraction)
     pub acc_loss: f64,
+    /// energy gain vs the dense baseline (fraction)
     pub energy_gain: f64,
 }
 
+/// Evaluate the Fig 2b uniform sweep + mixed-precision samples.
 pub fn fig2b_points(
     env: &mut CompressionEnv,
     mixed_samples: usize,

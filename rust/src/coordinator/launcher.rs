@@ -2,9 +2,11 @@
 //! coordinator. `hapq compare --jobs N` fans the (model × method) grid
 //! out over N child `hapq` processes (one leader, N workers), collects
 //! their result JSON from the shared output directory and merges the
-//! summary. Process isolation (rather than threads) keeps one PJRT
-//! client per worker, mirrors how the paper's per-model optimizations
-//! are independent, and sidesteps FFI thread-safety questions.
+//! summary. Process isolation (rather than threads) keeps one inference
+//! backend per worker (one PJRT client each on `--backend pjrt`),
+//! mirrors how the paper's per-model optimizations are independent, and
+//! sidesteps FFI thread-safety questions. The configured `--backend` is
+//! forwarded to every worker.
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
@@ -17,7 +19,9 @@ use crate::io::json;
 /// One unit of work for a child process.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// model to compress
     pub model: String,
+    /// method to run (`ours` or a baseline name)
     pub method: String,
 }
 
@@ -48,10 +52,13 @@ impl Job {
             cfg.reward_subset.to_string(),
             "--seed".into(),
             cfg.seed.to_string(),
+            "--backend".into(),
+            cfg.backend.name().to_string(),
         ]);
         v
     }
 
+    /// Where the child process writes its result JSON.
     pub fn report_path(&self, out: &Path) -> PathBuf {
         out.join(format!("{}__{}.json", self.model, self.method))
     }
@@ -126,6 +133,9 @@ mod tests {
         let a = ours.args(&cfg);
         assert_eq!(a[0], "compress");
         assert!(a.contains(&"--episodes".to_string()));
+        // workers inherit the leader's backend choice
+        assert!(a.contains(&"--backend".to_string()));
+        assert!(a.contains(&"native".to_string()));
         let base = Job { model: "vgg11".into(), method: "amc".into() };
         let b = base.args(&cfg);
         assert_eq!(b[0], "baseline");

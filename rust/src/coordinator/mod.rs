@@ -1,11 +1,15 @@
 //! The coordinator — HAPQ's L3 driver.
 //!
-//! Owns the PJRT runtime, the artifact manifest, the shared R_Q table,
-//! and the training loops: it builds a [`CompressionEnv`] per model,
-//! runs the composite agent (or a baseline) against it, extracts the
-//! final greedy policy, re-scores it on the held-out test split and
-//! emits result JSON + metrics. Everything the CLI, the examples and
-//! the benches do goes through this module.
+//! Owns the artifact manifest, the shared R_Q table, the backend
+//! selection, and the training loops: it builds a [`CompressionEnv`]
+//! per model, runs the composite agent (or a baseline) against it,
+//! extracts the final greedy policy, re-scores it on the held-out test
+//! split and emits result JSON + metrics. Everything the CLI, the
+//! examples and the benches do goes through this module.
+//!
+//! Accuracy queries go through [`InferenceSession::open`], so the same
+//! driver serves the pure-Rust [`crate::runtime::NativeBackend`]
+//! (default) and the feature-gated PJRT executor (`--backend pjrt`).
 
 pub mod figures;
 pub mod launcher;
@@ -23,51 +27,69 @@ use crate::hw::Accel;
 use crate::io::json::{self, arr, num, obj, s, Value};
 use crate::model::{ModelArch, Weights};
 use crate::rl::composite::{CompositeAgent, CompositeConfig};
-use crate::runtime::{InferenceSession, Runtime, Split};
+use crate::runtime::{InferenceSession, Split};
 
 /// One manifest entry.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// model name (`vgg11`, `resnet18`, …)
     pub model: String,
+    /// dataset the model was trained on
     pub dataset: String,
+    /// HLO-text artifact file (relative to the artifact dir)
     pub hlo: String,
+    /// weights + calibration `.npz` file
     pub weights: String,
+    /// arch descriptor `.json` file
     pub arch: String,
+    /// optional Pallas-path HLO artifact (exported for vgg11 only)
     pub pallas_hlo: Option<String>,
+    /// executor batch size of the Pallas-path artifact
     pub pallas_batch: usize,
 }
 
 /// The coordinator.
 pub struct Coordinator {
+    /// the shared run configuration (backend, budgets, paths)
     pub cfg: RunConfig,
-    pub runtime: Runtime,
+    /// precomputed MAC-sim R_Q table shared by every model's energy model
     pub rq: RqTable,
+    /// models available in the artifact manifest
     pub models: Vec<ModelEntry>,
 }
 
 /// Full record of one compression run (one Fig 7 point).
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// model name
     pub model: String,
+    /// dataset name
     pub dataset: String,
+    /// method that produced the solution (`ours`, `amc`, …)
     pub method: String,
+    /// the best solution found (per-layer policy + metrics)
     pub best: Solution,
     /// dense 8-bit baseline accuracy on the test split
     pub test_acc_dense: f64,
     /// compressed-model accuracy on the test split
     pub test_acc: f64,
+    /// training episodes spent
     pub episodes: usize,
+    /// reward-oracle invocations consumed (Table 3 accounting)
     pub evals: u64,
+    /// wall-clock seconds of the whole run
     pub wall_secs: f64,
     /// episode-reward curve (ours only)
     pub reward_curve: Vec<f64>,
 }
 
 impl RunReport {
+    /// Accuracy loss on the held-out test split (fraction, clamped ≥ 0).
     pub fn test_acc_loss(&self) -> f64 {
         (self.test_acc_dense - self.test_acc).max(0.0)
     }
 
+    /// Serialise the full report to the result-JSON schema.
     pub fn to_json(&self) -> Value {
         let layers: Vec<Value> = self
             .best
@@ -105,8 +127,8 @@ impl RunReport {
 }
 
 impl Coordinator {
+    /// Load the artifact manifest and precompute the shared R_Q table.
     pub fn new(cfg: RunConfig) -> Result<Coordinator> {
-        let runtime = Runtime::cpu()?;
         let manifest_path = cfg.artifacts.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
@@ -127,9 +149,10 @@ impl Coordinator {
             });
         }
         let rq = RqTable::compute(cfg.mac_samples, 0xEC0);
-        Ok(Coordinator { cfg, runtime, rq, models })
+        Ok(Coordinator { cfg, rq, models })
     }
 
+    /// Manifest entry for one model (error lists what exists).
     pub fn entry(&self, model: &str) -> Result<&ModelEntry> {
         self.models
             .iter()
@@ -138,6 +161,7 @@ impl Coordinator {
                 self.models.iter().map(|m| &m.model).collect::<Vec<_>>()))
     }
 
+    /// Load arch descriptor + weights for one model.
     pub fn load_arch(&self, model: &str) -> Result<(ModelArch, Weights, &ModelEntry)> {
         let e = self.entry(model)?;
         let arch = ModelArch::load(&self.cfg.artifacts.join(&e.arch))?;
@@ -149,32 +173,37 @@ impl Coordinator {
         self.cfg.artifacts.join(format!("{}.data.npz", e.dataset))
     }
 
+    /// Open an accuracy-oracle session on the configured backend.
+    pub fn session(
+        &self,
+        arch: &ModelArch,
+        e: &ModelEntry,
+        split: Split,
+        limit: usize,
+    ) -> Result<InferenceSession> {
+        InferenceSession::open(
+            self.cfg.backend,
+            arch,
+            Some(&self.cfg.artifacts.join(&e.hlo)),
+            &self.data_path(e),
+            split,
+            limit,
+            None,
+        )
+    }
+
     /// Build the reward-oracle environment for one model.
     pub fn build_env(&self, model: &str) -> Result<CompressionEnv> {
         let (arch, weights, e) = self.load_arch(model)?;
         let energy = EnergyModel::new(arch.layer_dims()?, Accel::default(), self.rq.clone());
-        let session = InferenceSession::new(
-            &self.runtime,
-            &arch,
-            &self.cfg.artifacts.join(&e.hlo),
-            &self.data_path(e),
-            Split::Val,
-            self.cfg.reward_subset,
-        )?;
+        let session = self.session(&arch, e, Split::Val, self.cfg.reward_subset)?;
         CompressionEnv::new(arch, weights, energy, session, self.cfg.seed)
     }
 
     /// Test-split session for final reporting.
     pub fn test_session(&self, model: &str) -> Result<InferenceSession> {
         let (arch, _, e) = self.load_arch(model)?;
-        InferenceSession::new(
-            &self.runtime,
-            &arch,
-            &self.cfg.artifacts.join(&e.hlo),
-            &self.data_path(e),
-            Split::Test,
-            self.cfg.test_subset,
-        )
+        self.session(&arch, e, Split::Test, self.cfg.test_subset)
     }
 
     /// Re-apply a solution and score it on the test split.
@@ -227,8 +256,7 @@ impl Coordinator {
             let mut state = env.reset();
             let mut total = 0.0;
             #[allow(unused_assignments)]
-            #[allow(unused_assignments)]
-        let mut last = None;
+            let mut last = None;
             loop {
                 let action = agent.act(&state);
                 let step = env.step(action)?;
@@ -374,6 +402,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Method string recorded in reports (`ours`, `ours-latency`, …).
     pub fn method_name(&self) -> &'static str {
         match self {
             Variant::Full => "ours",

@@ -12,6 +12,7 @@
 /// Table resolution (paper: 40×40).
 pub const N: usize = 40;
 
+/// The precomputed reward lookup table.
 #[derive(Clone, Debug)]
 pub struct RewardLut {
     /// grid[loss_bin][gain_bin]

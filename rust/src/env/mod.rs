@@ -4,10 +4,11 @@
 //! each step the composite agent supplies (pruning ratio, precision,
 //! pruning algorithm) for layer *t*, the env applies them to a working
 //! copy of the weights (dependency-resolved, §4.1), quantizes, queries
-//! the energy model, runs validation inference through the PJRT
-//! executable, and returns the LUT-based hardware-aware reward —
-//! exactly the loop of Fig 3. Rewards arrive at *every* step (§4.2.2:
-//! Rainbow requires an update before each action).
+//! the energy model, runs validation inference through the configured
+//! [`InferenceSession`] backend (native interpreter or PJRT), and
+//! returns the LUT-based hardware-aware reward — exactly the loop of
+//! Fig 3. Rewards arrive at *every* step (§4.2.2: Rainbow requires an
+//! update before each action).
 
 pub mod lut;
 
@@ -21,7 +22,9 @@ use crate::runtime::InferenceSession;
 use crate::util::rng::Rng;
 use lut::RewardLut;
 
+/// Lowest precision the agent can pick (paper §4.1).
 pub const MIN_BITS: u32 = 2;
+/// Highest precision — also the dense baseline's activation precision.
 pub const MAX_BITS: u32 = 8;
 /// Never prune more than this fraction of one layer (no retraining to recover).
 pub const MAX_RATIO: f64 = 0.9;
@@ -34,7 +37,9 @@ pub const STATE_DIM: usize = 14;
 /// metric (e.g., latency) is seamlessly supported").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {
+    /// accelerator energy (the paper's default)
     Energy,
+    /// roofline-model latency
     Latency,
     /// energy-delay product (gain = 1 - (E/E0)·(T/T0))
     Edp,
@@ -52,10 +57,12 @@ pub struct Action {
 }
 
 impl Action {
+    /// Target sparsity the ratio control maps to (`ratio · MAX_RATIO`).
     pub fn sparsity(&self) -> f64 {
         self.ratio.clamp(0.0, 1.0) * MAX_RATIO
     }
 
+    /// Precision in bits the continuous control maps to (2..=8).
     pub fn precision(&self) -> u32 {
         let span = (MAX_BITS - MIN_BITS) as f64;
         (MIN_BITS as f64 + self.bits.clamp(0.0, 1.0) * span).round() as u32
@@ -65,8 +72,11 @@ impl Action {
 /// What the env reports after each step.
 #[derive(Clone, Debug)]
 pub struct StepResult {
+    /// next layer's state embedding (zeros when the episode is done)
     pub state: Vec<f32>,
+    /// LUT reward for this step (paper §4.2.3)
     pub reward: f64,
+    /// true when every prunable layer has been visited
     pub done: bool,
     /// top-1 accuracy of the partially-compressed model (reward subset)
     pub accuracy: f64,
@@ -82,10 +92,14 @@ pub struct StepResult {
     pub applied: Applied,
 }
 
+/// What the env actually applied to one layer (post §4.1 resolution).
 #[derive(Clone, Copy, Debug)]
 pub struct Applied {
+    /// pruning algorithm that ran
     pub alg: PruneAlg,
+    /// achieved weight sparsity
     pub sparsity: f64,
+    /// applied precision (weights & activations, §4.1)
     pub bits: u32,
     /// true when the §4.1 rule rewrote the agent's choice
     pub overridden: bool,
@@ -94,23 +108,33 @@ pub struct Applied {
 /// A finished configuration (one point of Fig 7/8/9).
 #[derive(Clone, Debug)]
 pub struct Solution {
+    /// what was applied to each prunable layer
     pub per_layer: Vec<Applied>,
     /// the raw actions that produced it (replayable via evaluate_config)
     pub actions: Vec<Action>,
+    /// top-1 accuracy on the reward subset
     pub accuracy: f64,
+    /// accuracy loss vs the dense 8-bit baseline (fraction)
     pub acc_loss: f64,
+    /// energy gain vs the dense baseline (fraction)
     pub energy_gain: f64,
+    /// latency gain vs the dense baseline (fraction)
     pub latency_gain: f64,
+    /// final-step LUT reward
     pub reward: f64,
 }
 
 /// The environment.
 pub struct CompressionEnv {
+    /// the target model's architecture descriptor
     pub arch: ModelArch,
     dense: Weights,
+    /// the cached accelerator energy model (eqs 3–8)
     pub energy: EnergyModel,
     session: InferenceSession,
+    /// the reward lookup table (Fig 5)
     pub lut: RewardLut,
+    /// dense 8-bit accuracy on the reward subset (loss reference)
     pub baseline_acc: f64,
     /// which hardware gain feeds the reward (default: energy, as the paper)
     pub metric: Metric,
@@ -141,6 +165,7 @@ struct StateNorm {
 }
 
 impl CompressionEnv {
+    /// Build the environment; scores the dense baseline once up front.
     pub fn new(
         arch: ModelArch,
         weights: Weights,
@@ -191,6 +216,7 @@ impl CompressionEnv {
         })
     }
 
+    /// Number of prunable layers (= episode length).
     pub fn n_layers(&self) -> usize {
         self.arch.prunable.len()
     }

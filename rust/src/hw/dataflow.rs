@@ -14,19 +14,28 @@ use super::Accel;
 /// Shape of one layer's computation (fc layers: oh = ow = k = 1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LayerDims {
+    /// input height
     pub ih: usize,
+    /// input width
     pub iw: usize,
+    /// input channels
     pub ci: usize,
+    /// output height
     pub oh: usize,
+    /// output width
     pub ow: usize,
+    /// output channels
     pub co: usize,
+    /// kernel size
     pub k: usize,
+    /// spatial stride
     pub stride: usize,
     /// grouped convolution factor; depthwise = ci (MACs and weights scale 1/groups)
     pub groups: usize,
 }
 
 impl LayerDims {
+    /// Standard convolution dims.
     pub fn conv(ih: usize, iw: usize, ci: usize, oh: usize, ow: usize, co: usize,
                 k: usize, stride: usize) -> Self {
         LayerDims { ih, iw, ci, oh, ow, co, k, stride, groups: 1 }
@@ -38,22 +47,27 @@ impl LayerDims {
         LayerDims { ih, iw, ci: c, oh, ow, co: c, k, stride, groups: c }
     }
 
+    /// Fully-connected layer dims (1×1 spatial).
     pub fn fc(ci: usize, co: usize) -> Self {
         LayerDims { ih: 1, iw: 1, ci, oh: 1, ow: 1, co, k: 1, stride: 1, groups: 1 }
     }
 
+    /// Multiply-accumulate count of the layer.
     pub fn macs(&self) -> u64 {
         (self.oh * self.ow * self.co * self.ci * self.k * self.k / self.groups) as u64
     }
 
+    /// Weight count of the layer.
     pub fn weights(&self) -> u64 {
         (self.k * self.k * self.ci * self.co / self.groups) as u64
     }
 
+    /// Input feature-map size in words.
     pub fn ifmap(&self) -> u64 {
         (self.ih * self.iw * self.ci) as u64
     }
 
+    /// Output feature-map size in words.
     pub fn ofmap(&self) -> u64 {
         (self.oh * self.ow * self.co) as u64
     }
@@ -62,13 +76,20 @@ impl LayerDims {
 /// A chosen loop blocking and its access counts.
 #[derive(Clone, Copy, Debug)]
 pub struct Mapping {
-    pub t_hw: usize, // spatial tile (output pixels)
-    pub t_co: usize, // output-channel tile
-    pub t_ci: usize, // input-channel tile
+    /// spatial tile (output pixels)
+    pub t_hw: usize,
+    /// output-channel tile
+    pub t_co: usize,
+    /// input-channel tile
+    pub t_ci: usize,
+    /// MAC count of the mapped layer
     pub macs: u64,
-    pub dram: u64, // DRAM word accesses
-    pub gb: u64,   // global-buffer word accesses
-    pub rf: u64,   // register-file word accesses
+    /// DRAM word accesses
+    pub dram: u64,
+    /// global-buffer word accesses
+    pub gb: u64,
+    /// register-file word accesses
+    pub rf: u64,
 }
 
 impl Mapping {

@@ -27,6 +27,7 @@ pub struct Compression {
 }
 
 impl Compression {
+    /// The uncompressed reference config (S = 0, 8 bits).
     pub fn dense() -> Self {
         Compression { sparsity: 0.0, coarse: false, bits: 8 }
     }
@@ -35,13 +36,16 @@ impl Compression {
 /// Cached energy oracle for one model on one accelerator.
 #[derive(Clone, Debug)]
 pub struct EnergyModel {
+    /// the accelerator's access-energy configuration
     pub acc: Accel,
+    /// the MAC-sim R_Q / P_FG table
     pub rq: RqTable,
     /// (dims, mapping, weighted mem energy, comp energy) per layer — dense/8-bit
     layers: Vec<(LayerDims, Mapping, f64, f64)>,
 }
 
 impl EnergyModel {
+    /// Map every layer once and cache its dense access/energy numbers.
     pub fn new(dims: Vec<LayerDims>, acc: Accel, rq: RqTable) -> Self {
         let layers = dims
             .into_iter()
@@ -55,14 +59,17 @@ impl EnergyModel {
         EnergyModel { acc, rq, layers }
     }
 
+    /// Number of modelled layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Dataflow dims of layer `l`.
     pub fn dims(&self, l: usize) -> &LayerDims {
         &self.layers[l].0
     }
 
+    /// Chosen loop blocking of layer `l`.
     pub fn mapping(&self, l: usize) -> &Mapping {
         &self.layers[l].1
     }

@@ -87,6 +87,7 @@ pub struct RqTable {
 }
 
 impl RqTable {
+    /// Simulate the MAC on `samples` operand pairs per precision pair.
     pub fn compute(samples: usize, seed: u64) -> Self {
         let base = mac_power(8, 8, false, samples, seed);
         let mut rq = [[0.0; 7]; 7];

@@ -11,8 +11,9 @@ pub mod report;
 /// Eyeriss-based accelerator configuration (paper §5.1, Fig 6).
 #[derive(Clone, Debug)]
 pub struct Accel {
-    /// PE array per tile (paper: 64×64)
+    /// PE array rows per tile (paper: 64×64)
     pub pe_rows: usize,
+    /// PE array columns per tile
     pub pe_cols: usize,
     /// per-PE register file bytes (paper: 64 B)
     pub rf_bytes: usize,
@@ -22,8 +23,11 @@ pub struct Accel {
     pub mac_bits: u32,
     /// normalised access energies (Eyeriss: RF 1×, GB 6×, DRAM 200× a MAC)
     pub e_mac: f64,
+    /// register-file access energy (relative to a MAC)
     pub e_rf: f64,
+    /// global-buffer access energy (relative to a MAC)
     pub e_gb: f64,
+    /// DRAM access energy (relative to a MAC)
     pub e_dram: f64,
 }
 

@@ -7,10 +7,15 @@ use super::energy::{Compression, EnergyModel};
 /// One row of the breakdown table.
 #[derive(Clone, Debug)]
 pub struct LayerReport {
+    /// prunable layer index
     pub layer: usize,
+    /// MAC count of the mapped layer
     pub macs: u64,
+    /// DRAM word accesses of the mapped layer
     pub dram: u64,
+    /// energy at the dense 8-bit reference
     pub e_dense: f64,
+    /// energy under the evaluated configuration
     pub e_compressed: f64,
     /// share of the *dense model's* total energy this layer holds
     pub dense_share: f64,

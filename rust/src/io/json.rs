@@ -6,17 +6,25 @@
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number (f64-backed)
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Value>),
+    /// an object; key order preserved
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
+    /// Object field lookup (None on missing key or non-object).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -24,10 +32,12 @@ impl Value {
         }
     }
 
+    /// Required object field (error names the missing key).
     pub fn req(&self, key: &str) -> Result<&Value> {
         self.get(key).ok_or_else(|| anyhow!("missing key `{key}`"))
     }
 
+    /// Read as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(x) => Ok(*x),
@@ -35,10 +45,12 @@ impl Value {
         }
     }
 
+    /// Read as a non-negative integer (truncating).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// Read as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -46,6 +58,7 @@ impl Value {
         }
     }
 
+    /// Read as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -53,6 +66,7 @@ impl Value {
         }
     }
 
+    /// Read as an array slice.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -60,6 +74,7 @@ impl Value {
         }
     }
 
+    /// Read as an array of strings.
     pub fn str_vec(&self) -> Result<Vec<String>> {
         self.as_arr()?
             .iter()
@@ -67,10 +82,12 @@ impl Value {
             .collect()
     }
 
+    /// Read as an array of numbers.
     pub fn f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
+    /// Read as an array of non-negative integers.
     pub fn usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
@@ -141,18 +158,22 @@ pub fn obj(kv: Vec<(&str, Value)>) -> Value {
     Value::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number value.
 pub fn num(x: f64) -> Value {
     Value::Num(x)
 }
 
+/// String value.
 pub fn s(x: &str) -> Value {
     Value::Str(x.to_string())
 }
 
+/// Array value.
 pub fn arr(v: Vec<Value>) -> Value {
     Value::Arr(v)
 }
 
+/// Parse a complete JSON document (trailing garbage is an error).
 pub fn parse(text: &str) -> Result<Value> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.ws();

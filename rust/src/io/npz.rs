@@ -20,17 +20,23 @@ use crate::tensor::Tensor;
 /// One array loaded from an archive.
 #[derive(Clone, Debug)]
 pub struct Npy {
+    /// dimension sizes, outermost first
     pub shape: Vec<usize>,
+    /// the payload, widened to one of two host types
     pub data: NpyData,
 }
 
+/// Array payload: floats widen to f32-compatible, ints to i64.
 #[derive(Clone, Debug)]
 pub enum NpyData {
+    /// `<f4` / `<f8` sources
     F32(Vec<f32>),
+    /// `<i4` / `<i8` sources
     I64(Vec<i64>),
 }
 
 impl Npy {
+    /// Convert to a float [`Tensor`] (errors on integer arrays).
     pub fn to_tensor(&self) -> Result<Tensor> {
         match &self.data {
             NpyData::F32(v) => Ok(Tensor::new(self.shape.clone(), v.clone())),
@@ -38,6 +44,7 @@ impl Npy {
         }
     }
 
+    /// Borrow as integers (errors on float arrays).
     pub fn as_i64(&self) -> Result<&[i64]> {
         match &self.data {
             NpyData::I64(v) => Ok(v),
@@ -48,15 +55,18 @@ impl Npy {
 
 /// Parsed NPZ archive: name -> array.
 pub struct Npz {
+    /// member name (without `.npy`) → parsed array
     pub entries: HashMap<String, Npy>,
 }
 
 impl Npz {
+    /// Read and parse an archive from disk.
     pub fn load(path: &Path) -> Result<Npz> {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
         Self::from_bytes(&bytes)
     }
 
+    /// Parse an archive from memory.
     pub fn from_bytes(bytes: &[u8]) -> Result<Npz> {
         let mut entries = HashMap::new();
         for (name, data) in zip_entries(bytes)? {
@@ -66,6 +76,7 @@ impl Npz {
         Ok(Npz { entries })
     }
 
+    /// Required float member as a [`Tensor`].
     pub fn tensor(&self, key: &str) -> Result<Tensor> {
         self.entries
             .get(key)
@@ -73,6 +84,7 @@ impl Npz {
             .to_tensor()
     }
 
+    /// Required integer member.
     pub fn i64s(&self, key: &str) -> Result<Vec<i64>> {
         Ok(self
             .entries
@@ -250,6 +262,7 @@ fn dict_shape(h: &str) -> Result<Vec<usize>> {
 // ---------------------------------------------------------------------------
 // Writer (checkpoints): stored-zip of f32 npy members.
 
+/// Write f32 tensors as a stored-zip NPZ (checkpoint format).
 pub fn save_npz(path: &Path, arrays: &[(String, &Tensor)]) -> Result<()> {
     let mut zip_buf: Vec<u8> = Vec::new();
     let mut central: Vec<u8> = Vec::new();

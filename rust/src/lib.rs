@@ -9,11 +9,20 @@
 //! switching simulator + dataflow mapper), the LUT-based hardware-aware
 //! reward, all five comparison baselines and the coordinator/CLI.
 //!
-//! The JAX/Pallas layers (L2/L1) run only at build time (`make
-//! artifacts`); their output — HLO text + weights + arch descriptors —
-//! is loaded by [`runtime`] through the PJRT C API and executed for the
-//! accuracy term of the reward at every RL step. Python is never on
-//! this path.
+//! The accuracy term of the reward is answered by a pluggable
+//! [`runtime::InferenceBackend`]:
+//!
+//! * the default [`runtime::NativeBackend`] interprets the exported
+//!   model graph in pure Rust — no FFI, works everywhere;
+//! * with `--features pjrt`, the AOT-exported HLO (produced by the
+//!   JAX/Pallas L2/L1 layers at `make artifacts` time: HLO text +
+//!   weights + arch descriptors) executes through the XLA PJRT C API.
+//!
+//! Either way Python is never on the hot path. See
+//! `docs/ARCHITECTURE.md` (repository root) for the module map, the
+//! Fig 3 step loop, and where the backend seam sits.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod config;

@@ -17,6 +17,11 @@
 //! ```
 //!
 //! `compare --jobs N` fans out over N worker processes.
+//!
+//! Every command accepts `--backend {native,pjrt}` selecting the
+//! accuracy-oracle executor: `native` (default) interprets the model
+//! graph in pure Rust; `pjrt` runs the AOT-compiled HLO through the
+//! XLA PJRT C API and needs a binary built with `--features pjrt`.
 
 use std::time::Instant;
 
@@ -43,7 +48,7 @@ fn print_help() {
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
          fig5, fig8, perf\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
-         --reward-subset N --model NAME"
+         --reward-subset N --model NAME --backend native|pjrt"
     );
 }
 
@@ -309,10 +314,11 @@ hotspots holding 50% of energy: {hs:?}");
             }
             let per_ep = t0.elapsed().as_secs_f64() / iters as f64;
             println!(
-                "{model}: episode {:.1} ms ({} layers, {:.1} ms/step incl. PJRT inference), rss {} MiB",
+                "{model}: episode {:.1} ms ({} layers, {:.1} ms/step incl. {} inference), rss {} MiB",
                 per_ep * 1e3,
                 n,
                 per_ep * 1e3 / n as f64,
+                coord.cfg.backend.name(),
                 hapq::coordinator::rss_kib() / 1024
             );
             Ok(())

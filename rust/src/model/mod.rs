@@ -18,17 +18,26 @@ use crate::tensor::Tensor;
 /// Layer operator (mirrors python/compile/arch.py).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
+    /// 2-d convolution (HWIO weights, SAME padding)
     Conv,
+    /// depthwise convolution (`[k,k,1,C]` weights, groups = C)
     DwConv,
+    /// fully-connected layer (`[in,out]` weights, input flattened)
     Fc,
+    /// k×k max-pooling, stride k, VALID
     MaxPool,
+    /// global average pooling over H,W
     Gap,
+    /// reshape to `[B, -1]`
     Flatten,
+    /// elementwise residual add (optionally followed by ReLU)
     Add,
+    /// channel-axis concatenation
     Concat,
 }
 
 impl Op {
+    /// Parse the exporter's op string (`conv`, `dwconv`, `fc`, …).
     pub fn parse(s: &str) -> Result<Op> {
         Ok(match s {
             "conv" => Op::Conv,
@@ -43,6 +52,7 @@ impl Op {
         })
     }
 
+    /// Does this op carry prunable weights (conv/dwconv/fc)?
     pub fn prunable(&self) -> bool {
         matches!(self, Op::Conv | Op::DwConv | Op::Fc)
     }
@@ -51,46 +61,68 @@ impl Op {
 /// One layer of the graph (shape-annotated by the exporter).
 #[derive(Clone, Debug)]
 pub struct Layer {
+    /// unique layer name (referenced by `inputs` of later layers)
     pub name: String,
+    /// operator kind
     pub op: Op,
+    /// names of the layers feeding this one (`input` = the images)
     pub inputs: Vec<String>,
+    /// kernel size (convs and pooling; 1 otherwise)
     pub k: usize,
+    /// spatial stride (1 for non-spatial ops)
     pub stride: usize,
+    /// apply ReLU after the op?
     pub relu: bool,
+    /// input activation shape (without the batch dim)
     pub in_shape: Vec<usize>,
+    /// output activation shape (without the batch dim)
     pub out_shape: Vec<usize>,
+    /// input channels (fan-in for fc)
     pub in_ch: usize,
+    /// output channels (fan-out for fc)
     pub out_ch: usize,
 }
 
 /// Full architecture descriptor.
 #[derive(Clone, Debug)]
 pub struct ModelArch {
+    /// model name (`vgg11`, `resnet18`, …)
     pub name: String,
+    /// dataset the model was trained on
     pub dataset: String,
+    /// input geometry `[H, W, C]`
     pub input: [usize; 3],
+    /// number of output classes
     pub classes: usize,
+    /// executor batch size the graph was exported at
     pub batch: usize,
+    /// the full layer graph, topologically ordered
     pub layers: Vec<Layer>,
     /// prunable layer names, in HLO parameter order
     pub prunable: Vec<String>,
+    /// prunable name → prunable index
     pub prunable_idx: HashMap<String, usize>,
     /// sets of prunable layers whose coarse channel masks must match (§4.1)
     pub dep_groups: Vec<Vec<String>>,
+    /// per-prunable-layer Laplace calibration scale (activation quant)
     pub act_scales: Vec<f32>,
+    /// per-prunable-layer signedness of the input activations
     pub act_signed: Vec<bool>,
     /// test accuracy of the dense 8-bit-activation model (the baseline)
     pub acc_int8: f64,
+    /// total parameter count recorded by the exporter
     pub n_params: usize,
 }
 
 impl ModelArch {
+    /// Load a `*.arch.json` descriptor from disk.
     pub fn load(path: &Path) -> Result<ModelArch> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path:?}"))?;
         Self::from_json(&json::parse(&text)?)
     }
 
+    /// Build from parsed JSON (the exporter's schema).
     pub fn from_json(v: &Value) -> Result<ModelArch> {
         let layers = v
             .req("layers")?
@@ -145,6 +177,7 @@ impl ModelArch {
         })
     }
 
+    /// Look up a layer by name.
     pub fn layer(&self, name: &str) -> Result<&Layer> {
         self.layers
             .iter()
@@ -216,7 +249,9 @@ fn layer_from_json(v: &Value) -> Result<Layer> {
 /// Loaded weights + calibration stats, indexed by prunable order.
 #[derive(Clone, Debug)]
 pub struct Weights {
+    /// weight tensors, prunable order (HWIO / `[k,k,1,C]` / `[in,out]`)
     pub w: Vec<Tensor>,
+    /// bias vectors, prunable order
     pub b: Vec<Tensor>,
     /// SNIP saliency |w ⊙ ∂L/∂w| per weight tensor (Sensitivity pruning)
     pub sal: Vec<Tensor>,
@@ -225,11 +260,13 @@ pub struct Weights {
 }
 
 impl Weights {
+    /// Load a `*.weights.npz` artifact for `arch`.
     pub fn load(arch: &ModelArch, path: &Path) -> Result<Weights> {
         let npz = Npz::load(path)?;
         Self::from_npz(arch, &npz)
     }
 
+    /// Extract the per-layer blobs from an already-open archive.
     pub fn from_npz(arch: &ModelArch, npz: &Npz) -> Result<Weights> {
         let mut w = Vec::new();
         let mut b = Vec::new();

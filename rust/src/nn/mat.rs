@@ -7,25 +7,32 @@
 /// Row-major matrix [r, c].
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// rows
     pub r: usize,
+    /// columns
     pub c: usize,
+    /// row-major storage, length `r * c`
     pub d: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(r: usize, c: usize) -> Self {
         Mat { r, c, d: vec![0.0; r * c] }
     }
 
+    /// Constant-filled matrix.
     pub fn full(r: usize, c: usize, v: f32) -> Self {
         Mat { r, c, d: vec![v; r * c] }
     }
 
+    /// Wrap an existing row-major buffer (panics on size mismatch).
     pub fn from_vec(r: usize, c: usize, d: Vec<f32>) -> Self {
         assert_eq!(r * c, d.len());
         Mat { r, c, d }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn<F: FnMut(usize, usize) -> f32>(r: usize, c: usize, mut f: F) -> Self {
         let mut d = Vec::with_capacity(r * c);
         for i in 0..r {
@@ -41,15 +48,18 @@ impl Mat {
         Mat { r: 1, c: self.c, d: self.d[i * self.c..(i + 1) * self.c].to_vec() }
     }
 
+    /// Borrow one row as a slice.
     pub fn row_slice(&self, i: usize) -> &[f32] {
         &self.d[i * self.c..(i + 1) * self.c]
     }
 
+    /// Element read.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.d[i * self.c + j]
     }
 
+    /// Element write access.
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         &mut self.d[i * self.c + j]
@@ -125,6 +135,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise `self += other` (shapes must match).
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.r, self.c), (other.r, other.c));
         for (a, &b) in self.d.iter_mut().zip(&other.d) {
@@ -132,6 +143,7 @@ impl Mat {
         }
     }
 
+    /// Multiply every element by `s`.
     pub fn scale(&mut self, s: f32) {
         self.d.iter_mut().for_each(|x| *x *= s);
     }

@@ -17,12 +17,17 @@ use crate::util::rng::Rng;
 /// Activation functions used by the agents.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Act {
+    /// max(0, x)
     Relu,
+    /// tanh(x)
     Tanh,
+    /// 1 / (1 + e^-x)
     Sigmoid,
+    /// identity
     None,
 }
 
+/// Apply an activation in place.
 pub fn act_forward(a: Act, m: &mut Mat) {
     match a {
         Act::Relu => m.d.iter_mut().for_each(|x| *x = x.max(0.0)),
@@ -87,15 +92,20 @@ impl AdamState {
 /// Fully-connected layer, weights [in, out].
 #[derive(Clone, Debug)]
 pub struct Dense {
+    /// weights `[in, out]`
     pub w: Mat,
+    /// bias, length `out`
     pub b: Vec<f32>,
+    /// accumulated weight gradient
     pub gw: Mat,
+    /// accumulated bias gradient
     pub gb: Vec<f32>,
     aw: AdamState,
     ab: AdamState,
 }
 
 impl Dense {
+    /// Uniform fan-in init (DDPG paper style).
     pub fn new(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
         // uniform fan-in init (DDPG paper style)
         let lim = 1.0 / (fan_in as f32).sqrt();
@@ -128,11 +138,13 @@ impl Dense {
         dy.matmul_t(&self.w) // [B,out]·[out,in]
     }
 
+    /// Reset accumulated gradients.
     pub fn zero_grad(&mut self) {
         self.gw.d.iter_mut().for_each(|x| *x = 0.0);
         self.gb.iter_mut().for_each(|x| *x = 0.0);
     }
 
+    /// One Adam step on weights and bias (`t` = 1-based step count).
     pub fn adam(&mut self, lr: f32, t: f32) {
         self.aw.step(&mut self.w.d, &self.gw.d, lr, t);
         self.ab.step(&mut self.b, &self.gb, lr, t);
@@ -148,6 +160,7 @@ impl Dense {
         }
     }
 
+    /// Parameter count (weights + bias).
     pub fn n_params(&self) -> usize {
         self.w.d.len() + self.b.len()
     }
@@ -183,11 +196,17 @@ impl Dense {
 /// Factorized-Gaussian noisy layer (Rainbow): w = μ + σ⊙(f(εo)f(εi)ᵀ).
 #[derive(Clone, Debug)]
 pub struct NoisyDense {
+    /// weight means `[in, out]`
     pub mu_w: Mat,
+    /// weight noise scales `[in, out]`
     pub sig_w: Mat,
+    /// bias means
     pub mu_b: Vec<f32>,
+    /// bias noise scales
     pub sig_b: Vec<f32>,
+    /// current factorized input noise
     pub eps_in: Vec<f32>,
+    /// current factorized output noise
     pub eps_out: Vec<f32>,
     g_mu_w: Mat,
     g_sig_w: Mat,
@@ -206,6 +225,7 @@ fn fnoise(x: f32) -> f32 {
 }
 
 impl NoisyDense {
+    /// Init per the noisy-nets paper (σ₀ = 0.5/√fan_in).
     pub fn new(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
         let lim = 1.0 / (fan_in as f32).sqrt();
         let sigma0 = 0.5 / (fan_in as f32).sqrt();
@@ -228,6 +248,7 @@ impl NoisyDense {
         }
     }
 
+    /// Draw fresh factorized noise for both factors.
     pub fn resample(&mut self, rng: &mut Rng) {
         for e in self.eps_in.iter_mut() {
             *e = fnoise(rng.normal() as f32);
@@ -250,6 +271,7 @@ impl NoisyDense {
         w
     }
 
+    /// `y = x·(μ_w + σ_w⊙ε) + μ_b + σ_b⊙ε_out` (noise off in eval mode).
     pub fn forward(&self, x: &Mat) -> Mat {
         let w = self.eff_w();
         let mut y = x.matmul(&w);
@@ -262,6 +284,7 @@ impl NoisyDense {
         y
     }
 
+    /// Accumulate grads for μ and σ; returns dL/dx.
     pub fn backward(&mut self, x: &Mat, dy: &Mat) -> Mat {
         let gw = x.t_matmul(dy); // [in,out] grad wrt effective w
         for i in 0..gw.r {
@@ -286,6 +309,7 @@ impl NoisyDense {
         dy.matmul_t(&w)
     }
 
+    /// Reset accumulated gradients.
     pub fn zero_grad(&mut self) {
         self.g_mu_w.d.iter_mut().for_each(|x| *x = 0.0);
         self.g_sig_w.d.iter_mut().for_each(|x| *x = 0.0);
@@ -293,6 +317,7 @@ impl NoisyDense {
         self.g_sig_b.iter_mut().for_each(|x| *x = 0.0);
     }
 
+    /// One Adam step on all four parameter blobs.
     pub fn adam(&mut self, lr: f32, t: f32) {
         self.a_mu_w.step(&mut self.mu_w.d, &self.g_mu_w.d, lr, t);
         self.a_sig_w.step(&mut self.sig_w.d, &self.g_sig_w.d, lr, t);
@@ -300,6 +325,7 @@ impl NoisyDense {
         self.a_sig_b.step(&mut self.sig_b, &self.g_sig_b, lr, t);
     }
 
+    /// Polyak averaging toward `src`: θ ← τ·θ_src + (1−τ)·θ.
     pub fn soft_update_from(&mut self, src: &NoisyDense, tau: f32) {
         for (a, b) in self.mu_w.d.iter_mut().zip(&src.mu_w.d) {
             *a = tau * b + (1.0 - tau) * *a;
@@ -348,16 +374,20 @@ impl NoisyDense {
 /// Sequential MLP with per-layer activations and a forward cache.
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// the dense layers, input to output
     pub layers: Vec<Dense>,
+    /// per-layer activation functions
     pub acts: Vec<Act>,
 }
 
 /// Forward cache: post-activation outputs of every layer (+ input).
 pub struct MlpCache {
+    /// `outs[0]` is the input; `outs[i+1]` is layer i's output
     pub outs: Vec<Mat>,
 }
 
 impl Mlp {
+    /// Build from layer widths + one activation per layer.
     pub fn new(dims: &[usize], acts: &[Act], rng: &mut Rng) -> Self {
         assert_eq!(dims.len() - 1, acts.len());
         let layers = dims
@@ -367,6 +397,7 @@ impl Mlp {
         Mlp { layers, acts: acts.to_vec() }
     }
 
+    /// Plain forward pass.
     pub fn forward(&self, x: &Mat) -> Mat {
         let mut cur = x.clone();
         for (l, a) in self.layers.iter().zip(&self.acts) {
@@ -376,6 +407,7 @@ impl Mlp {
         cur
     }
 
+    /// Forward pass that keeps every intermediate for backprop.
     pub fn forward_cached(&self, x: &Mat) -> MlpCache {
         let mut outs = vec![x.clone()];
         for (l, a) in self.layers.iter().zip(&self.acts) {
@@ -396,14 +428,17 @@ impl Mlp {
         dy
     }
 
+    /// Reset accumulated gradients in every layer.
     pub fn zero_grad(&mut self) {
         self.layers.iter_mut().for_each(Dense::zero_grad);
     }
 
+    /// One Adam step on every layer.
     pub fn adam(&mut self, lr: f32, t: f32) {
         self.layers.iter_mut().for_each(|l| l.adam(lr, t));
     }
 
+    /// Polyak averaging of every layer toward `src`.
     pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
         for (a, b) in self.layers.iter_mut().zip(&src.layers) {
             a.soft_update_from(b, tau);
@@ -424,6 +459,7 @@ impl Mlp {
         cur
     }
 
+    /// Total parameter count.
     pub fn n_params(&self) -> usize {
         self.layers.iter().map(Dense::n_params).sum()
     }

@@ -23,16 +23,24 @@ use crate::util::rng::Rng;
 /// Pruning algorithm id — the Rainbow agent's discrete action space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PruneAlg {
+    /// fine: weight-magnitude threshold [4]
     Level,
+    /// fine: SNIP saliency from the calibration batch [5]
     Sensitivity,
+    /// fine: magnitude + recoverable-band saliency arbitration [6]
     Splicing,
+    /// coarse: filter/neuron L1 norm [7]
     L1Ranked,
+    /// coarse: filter/neuron L2 norm [7]
     L2Ranked,
+    /// coarse: random filter dropping (DropFilter) [36]
     Bernoulli,
+    /// coarse: output feature-map energy [35]
     FmRecon,
 }
 
 impl PruneAlg {
+    /// Every algorithm, in the Rainbow action-index order.
     pub const ALL: [PruneAlg; 7] = [
         PruneAlg::Sensitivity,
         PruneAlg::Level,
@@ -43,10 +51,12 @@ impl PruneAlg {
         PruneAlg::FmRecon,
     ];
 
+    /// Algorithm for a (wrapped) Rainbow action index.
     pub fn from_index(i: usize) -> PruneAlg {
         Self::ALL[i % Self::ALL.len()]
     }
 
+    /// This algorithm's Rainbow action index.
     pub fn index(&self) -> usize {
         Self::ALL.iter().position(|a| a == self).unwrap()
     }
@@ -60,6 +70,7 @@ impl PruneAlg {
         )
     }
 
+    /// Short name used in reports and figures.
     pub fn name(&self) -> &'static str {
         match self {
             PruneAlg::Level => "level",
@@ -81,6 +92,7 @@ pub struct PruneCtx<'a> {
     pub chsq: &'a [f32],
     /// depthwise layer? (affects nothing under HW1C layout, kept for clarity)
     pub dwconv: bool,
+    /// randomness source (Bernoulli pruning)
     pub rng: &'a mut Rng,
 }
 

@@ -6,9 +6,11 @@
 //! "centroid-based quantization benefits from a pruned model" effect
 //! the paper cites from Deep Compression [26].
 //!
-//! Activation quantization lives in the exported HLO graph (L2),
-//! parameterised per layer by the `act_bits` input — see
-//! python/compile/kernels/ref.py for the shared grid math.
+//! Activation quantization lives in the inference backend — baked into
+//! the exported HLO graph (L2) on the PJRT path, and implemented by
+//! [`crate::runtime::native`] on the default path — parameterised per
+//! layer by the `act_bits` input; see python/compile/kernels/ref.py
+//! for the shared grid math.
 
 use crate::tensor::Tensor;
 

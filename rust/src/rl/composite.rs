@@ -18,9 +18,12 @@ use super::ddpg::{Ddpg, DdpgConfig};
 use super::rainbow::{Rainbow, RainbowConfig};
 use super::replay::Transition;
 
+/// Composite-agent configuration (DDPG + Rainbow + unlock monitor).
 #[derive(Clone, Debug)]
 pub struct CompositeConfig {
+    /// DDPG hyper-parameters
     pub ddpg: DdpgConfig,
+    /// Rainbow hyper-parameters (feat_dim is overwritten to match DDPG)
     pub rainbow: RainbowConfig,
     /// episodes of pure exploration before any unlock check (paper: 100)
     pub warmup_episodes: usize,
@@ -45,17 +48,24 @@ impl Default for CompositeConfig {
     }
 }
 
+/// The paper's composite agent (Fig 4).
 pub struct CompositeAgent {
+    /// configuration
     pub cfg: CompositeConfig,
+    /// continuous half: (pruning ratio, precision)
     pub ddpg: Ddpg,
+    /// discrete half: pruning-algorithm selection
     pub rainbow: Rainbow,
+    /// episodes finished so far
     pub episode: usize,
+    /// has the §4.2.2 reward monitor unlocked Rainbow yet?
     pub rainbow_unlocked: bool,
     reward_history: Vec<f64>,
     rng: Rng,
 }
 
 impl CompositeAgent {
+    /// Build both agents; Rainbow's input is wired to the DDPG feature tap.
     pub fn new(mut cfg: CompositeConfig, seed: u64) -> CompositeAgent {
         cfg.rainbow.feat_dim = cfg.ddpg.hidden;
         CompositeAgent {

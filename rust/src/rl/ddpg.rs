@@ -12,18 +12,30 @@ use crate::util::rng::Rng;
 
 use super::replay::{PrioritizedReplay, Transition};
 
+/// DDPG hyper-parameters (§5.1 defaults).
 #[derive(Clone, Debug)]
 pub struct DdpgConfig {
+    /// state embedding dimension
     pub state_dim: usize,
+    /// continuous action dimension (2 = ratio + precision)
     pub action_dim: usize,
+    /// hidden width of actor & critic (paper: 300)
     pub hidden: usize,
+    /// actor learning rate
     pub actor_lr: f32,
+    /// critic learning rate
     pub critic_lr: f32,
+    /// Polyak target-update coefficient
     pub tau: f32,
+    /// discount factor (paper: 1)
     pub gamma: f32,
+    /// replay sample batch
     pub batch: usize,
+    /// replay capacity
     pub replay_cap: usize,
+    /// initial truncated-normal exploration σ
     pub noise_init: f64,
+    /// per-episode σ decay after warm-up
     pub noise_decay: f64,
 }
 
@@ -45,19 +57,26 @@ impl Default for DdpgConfig {
     }
 }
 
+/// The DDPG actor-critic agent.
 pub struct Ddpg {
+    /// hyper-parameters
     pub cfg: DdpgConfig,
+    /// the policy network (sigmoid head onto the unit box)
     pub actor: Mlp,
+    /// the Q network over [state, action]
     pub critic: Mlp,
     target_actor: Mlp,
     target_critic: Mlp,
+    /// prioritized experience replay
     pub replay: PrioritizedReplay,
+    /// current exploration σ
     pub noise: f64,
     t: u64,
     rng: Rng,
 }
 
 impl Ddpg {
+    /// Build actor/critic + targets from the config.
     pub fn new(cfg: DdpgConfig, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let h = cfg.hidden;
@@ -116,10 +135,12 @@ impl Ddpg {
         self.actor.hidden(&x, self.actor.layers.len() - 2).d
     }
 
+    /// Width of the feature tap ([`Self::features`]).
     pub fn feature_dim(&self) -> usize {
         self.cfg.hidden
     }
 
+    /// Store one transition in replay.
     pub fn observe(&mut self, tr: Transition) {
         self.replay.push(tr);
     }

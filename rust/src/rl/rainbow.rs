@@ -15,19 +15,32 @@ use crate::util::rng::Rng;
 
 use super::replay::{PrioritizedReplay, Transition};
 
+/// Rainbow hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct RainbowConfig {
+    /// input feature dimension (= DDPG actor hidden width)
     pub feat_dim: usize,
+    /// trunk hidden width
     pub hidden: usize,
+    /// discrete action count (= number of pruning algorithms)
     pub n_actions: usize,
+    /// C51 distribution support size
     pub atoms: usize,
+    /// support lower bound
     pub v_min: f32,
+    /// support upper bound
     pub v_max: f32,
+    /// learning rate
     pub lr: f32,
+    /// discount factor (paper: 1)
     pub gamma: f32,
+    /// replay sample batch
     pub batch: usize,
+    /// replay capacity
     pub replay_cap: usize,
+    /// n-step return length
     pub n_step: usize,
+    /// target-network sync period (updates)
     pub target_sync: u64,
 }
 
@@ -153,10 +166,13 @@ impl Net {
     }
 }
 
+/// The Rainbow distributional agent.
 pub struct Rainbow {
+    /// hyper-parameters
     pub cfg: RainbowConfig,
     online: Net,
     target: Net,
+    /// prioritized experience replay
     pub replay: PrioritizedReplay,
     support: Vec<f32>,
     /// pending n-step window: (features, action, reward)
@@ -166,6 +182,7 @@ pub struct Rainbow {
 }
 
 impl Rainbow {
+    /// Build online + target nets and the C51 support.
     pub fn new(cfg: RainbowConfig, seed: u64) -> Rainbow {
         let mut rng = Rng::new(seed);
         let online = Net::new(&cfg, &mut rng);

@@ -10,11 +10,17 @@ use crate::util::rng::Rng;
 /// `alg` the discrete one (Rainbow) — each agent reads its half.
 #[derive(Clone, Debug)]
 pub struct Transition {
+    /// state (or feature vector, for Rainbow)
     pub s: Vec<f32>,
+    /// continuous action (empty for Rainbow transitions)
     pub a: Vec<f32>,
+    /// discrete pruning-algorithm action
     pub alg: usize,
+    /// (n-step) reward
     pub r: f32,
+    /// successor state / features
     pub s2: Vec<f32>,
+    /// episode terminated at this step?
     pub done: bool,
 }
 
@@ -69,11 +75,13 @@ pub struct PrioritizedReplay {
     tree: SumTree,
     pos: usize,
     alpha: f64,
+    /// importance-sampling exponent (annealed toward 1)
     pub beta: f64,
     max_pri: f64,
 }
 
 impl PrioritizedReplay {
+    /// Empty buffer with the given capacity.
     pub fn new(cap: usize) -> Self {
         PrioritizedReplay {
             cap,
@@ -86,10 +94,12 @@ impl PrioritizedReplay {
         }
     }
 
+    /// Stored transition count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when nothing is stored yet.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -127,6 +137,7 @@ impl PrioritizedReplay {
         (idx, w)
     }
 
+    /// Borrow a stored transition by index.
     pub fn get(&self, i: usize) -> &Transition {
         &self.data[i]
     }

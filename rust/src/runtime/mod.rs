@@ -1,78 +1,40 @@
-//! PJRT runtime: load AOT-compiled HLO text, execute it on the hot path.
+//! The accuracy oracle — pluggable inference backends.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`).
-//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! The RL loop (paper Fig 3) asks one question at *every* step: "what
+//! is the top-1 accuracy of (pruned + fake-quantized weights, per-layer
+//! activation bits)?". This module owns that question behind the
+//! [`InferenceBackend`] trait so the answer can come from different
+//! executors:
 //!
-//! [`InferenceSession`] is the reward oracle: it owns one compiled
-//! executable per model plus the validation/test batches, and answers
-//! "top-1 accuracy of (pruned+quantized weights, per-layer act bits)"
-//! in a single PJRT call per batch — compiled once, executed at every
-//! RL step, Python never involved.
+//! * [`native::NativeBackend`] (default, pure Rust, zero FFI) — a
+//!   direct interpreter of the [`ModelArch`] graph over [`Weights`],
+//!   with the same fake-quant activation semantics the exported HLO
+//!   graphs encode (`python/compile/kernels/ref.py`);
+//! * `pjrt::PjrtBackend` (`--features pjrt`) — the AOT-compiled HLO
+//!   executed through the XLA PJRT C API, kept behind a feature gate
+//!   because the `xla` binding cannot be vendored.
+//!
+//! [`InferenceSession`] is the concrete handle the environment holds:
+//! a thin owner of one boxed backend plus the batch/example metadata
+//! every caller needs. Backends are constructed through
+//! [`InferenceSession::open`], keyed by [`BackendKind`] (the CLI's
+//! `--backend` flag).
 
-use std::cell::RefCell;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{literal_f32, Executable, PjrtBackend, Runtime};
+
 use crate::io::npz::Npz;
 use crate::model::{ModelArch, Weights};
-
-/// Thin wrapper over the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile an HLO-text artifact into an executable.
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let path_str = path.to_str().context("non-utf8 path")?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe })
-    }
-}
-
-/// One compiled model graph.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute; unwraps the 1-tuple the exporter emits (return_tuple=True).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple1()?)
-    }
-}
-
-/// Build an f32 literal of the given shape from a slice.
-pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("literal shape {shape:?} vs data len {}", data.len());
-    }
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes,
-    )?)
-}
+use crate::tensor::Tensor;
 
 /// Which split of the dataset artifact to evaluate on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,62 +45,123 @@ pub enum Split {
     Test,
 }
 
-/// The accuracy oracle for one model.
-///
-/// Perf note (EXPERIMENTS.md §Perf): the RL loop changes exactly ONE
-/// layer's weights per step, so the session keeps the marshalled weight
-/// literals in a per-layer cache; [`Self::invalidate`] marks a layer
-/// dirty and only dirty layers are re-marshalled on the next
-/// [`Self::accuracy`] call. Image batches are marshalled once at
-/// construction.
-pub struct InferenceSession {
-    exe: Executable,
-    pub batch: usize,
-    pub n_prunable: usize,
-    /// pre-marshalled image literals, one per batch
-    image_batches: Vec<xla::Literal>,
-    /// labels per batch
-    label_batches: Vec<Vec<i64>>,
-    pub n_examples: usize,
-    /// per-layer (w, b) literal cache
-    wcache: RefCell<Vec<Option<(xla::Literal, xla::Literal)>>>,
+/// Which executor answers accuracy queries (the CLI's `--backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust graph interpreter — works everywhere, no FFI.
+    #[default]
+    Native,
+    /// AOT-compiled HLO through the XLA PJRT C API (`--features pjrt`).
+    Pjrt,
 }
 
-impl InferenceSession {
-    /// `limit` truncates the number of examples (reward subset size).
-    pub fn new(
-        rt: &Runtime,
-        arch: &ModelArch,
-        hlo_path: &Path,
-        data_npz: &Path,
-        split: Split,
-        limit: usize,
-    ) -> Result<InferenceSession> {
-        Self::with_batch(rt, arch, hlo_path, data_npz, split, limit, arch.batch)
+impl BackendKind {
+    /// Parse a `--backend` flag value (`native` | `pjrt`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend `{other}` (expected `native` or `pjrt`)"),
+        }
     }
 
-    /// Like [`Self::new`] but with an explicit executable batch size
-    /// (the Pallas-path artifact is exported at a smaller batch).
-    #[allow(clippy::too_many_arguments)]
-    pub fn with_batch(
-        rt: &Runtime,
+    /// Flag-style name of the backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// An executor that can score compressed weights — the reward oracle.
+///
+/// Contract shared by all backends: one call evaluates the *whole*
+/// model on every held batch and returns top-1 accuracy over the
+/// split's examples. [`InferenceBackend::invalidate`] is a cache hint —
+/// the RL loop changes exactly one layer's weights per step, so a
+/// backend that marshals or stages per-layer state may keep it between
+/// calls and refresh only invalidated layers (the PJRT literal cache
+/// does; the native interpreter recomputes and ignores the hint).
+pub trait InferenceBackend {
+    /// Top-1 accuracy of `weights` with per-layer activation precisions
+    /// `act_bits` (length = number of prunable layers, values 2..=8).
+    fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64>;
+
+    /// Mark one prunable layer's staged state dirty (its tensor changed).
+    fn invalidate(&self, layer: usize);
+
+    /// Mark every layer dirty (episode reset / unknown provenance).
+    fn invalidate_all(&self);
+
+    /// Number of examples actually scored (after the `limit` truncation).
+    fn n_examples(&self) -> usize;
+
+    /// Inference batch size of the executor.
+    fn batch(&self) -> usize;
+
+    /// Number of prunable layers (= expected `act_bits` length).
+    fn n_prunable(&self) -> usize;
+
+    /// Human-readable backend name for logs and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Batched evaluation data shared by every backend: images split into
+/// fixed-size batches (tail padded by repeating the first example —
+/// padded rows are ignored at scoring time) plus per-batch labels.
+pub struct EvalData {
+    /// executor batch size every image batch is padded to
+    pub batch: usize,
+    /// input geometry `[H, W, C]` (from the arch descriptor)
+    pub input: [usize; 3],
+    /// flattened `[batch, H, W, C]` image buffers, one per batch
+    pub image_batches: Vec<Vec<f32>>,
+    /// ground-truth labels per batch (length = real rows, ≤ batch)
+    pub label_batches: Vec<Vec<i64>>,
+    /// total examples scored
+    pub n_examples: usize,
+}
+
+impl EvalData {
+    /// Load a split from a dataset artifact (`<dataset>.data.npz`).
+    /// `limit` truncates the number of examples (reward-subset size).
+    pub fn load(
         arch: &ModelArch,
-        hlo_path: &Path,
         data_npz: &Path,
         split: Split,
         limit: usize,
         batch: usize,
-    ) -> Result<InferenceSession> {
-        let exe = rt.load_hlo(hlo_path)?;
+    ) -> Result<EvalData> {
         let npz = Npz::load(data_npz)?;
         let (xk, yk) = match split {
             Split::Val => ("X_val", "y_val"),
             Split::Test => ("X_test", "y_test"),
         };
-        let images = npz.tensor(xk)?;
-        let labels = npz.i64s(yk)?;
+        let images = npz.tensor(xk).context("dataset artifact")?;
+        let labels = npz.i64s(yk).context("dataset artifact")?;
+        Self::from_arrays(arch, &images, &labels, limit, batch)
+    }
+
+    /// Build directly from in-memory arrays (tests, synthetic probes).
+    /// `images` is `[N, H, W, C]` row-major.
+    pub fn from_arrays(
+        arch: &ModelArch,
+        images: &Tensor,
+        labels: &[i64],
+        limit: usize,
+        batch: usize,
+    ) -> Result<EvalData> {
         let [h, w, c] = arch.input;
         let per = h * w * c;
+        if images.data.len() < labels.len() * per {
+            bail!(
+                "image buffer holds {} values but {} examples of {per} need {}",
+                images.data.len(),
+                labels.len(),
+                labels.len() * per
+            );
+        }
         let total = labels.len().min(limit.max(1));
         let mut image_batches = Vec::new();
         let mut label_batches = Vec::new();
@@ -152,78 +175,129 @@ impl InferenceSession {
             while buf.len() < batch * per {
                 buf.extend_from_slice(&images.data[i * per..i * per + per]);
             }
-            image_batches.push(literal_f32(&[batch, h, w, c], &buf)?);
+            image_batches.push(buf);
             label_batches.push(labels[i..i + n].to_vec());
             i += n;
         }
-        Ok(InferenceSession {
-            exe,
+        Ok(EvalData {
             batch,
-            n_prunable: arch.prunable.len(),
+            input: [h, w, c],
             image_batches,
             label_batches,
             n_examples: total,
-            wcache: RefCell::new(vec![None; arch.prunable.len()]),
         })
     }
+}
 
-    /// Mark one layer's cached weight literal dirty (its tensor changed).
+/// Count rows of `logits` (`[batch, classes]` row-major, possibly with
+/// padded tail rows) whose argmax matches the label. Only the first
+/// `labels.len()` rows are scored.
+pub fn top1_correct(logits: &[f32], classes: usize, labels: &[i64]) -> usize {
+    let mut correct = 0usize;
+    for (r, &y) in labels.iter().enumerate() {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i as i64)
+            .unwrap_or(-1);
+        if pred == y {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// The accuracy oracle handle for one model: a boxed
+/// [`InferenceBackend`] plus the metadata every caller reads.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the RL loop changes exactly ONE
+/// layer's weights per step; [`Self::invalidate`] forwards that hint so
+/// caching backends (PJRT's per-layer literal cache) re-marshal only
+/// dirty layers on the next [`Self::accuracy`] call.
+pub struct InferenceSession {
+    backend: Box<dyn InferenceBackend>,
+    /// executor batch size
+    pub batch: usize,
+    /// number of prunable layers (= expected `act_bits` length)
+    pub n_prunable: usize,
+    /// examples scored per accuracy query
+    pub n_examples: usize,
+}
+
+impl InferenceSession {
+    /// Wrap an already-constructed backend.
+    pub fn from_backend(backend: Box<dyn InferenceBackend>) -> InferenceSession {
+        InferenceSession {
+            batch: backend.batch(),
+            n_prunable: backend.n_prunable(),
+            n_examples: backend.n_examples(),
+            backend,
+        }
+    }
+
+    /// Open a session on the chosen backend.
+    ///
+    /// `hlo` is the AOT-compiled HLO-text artifact — required by
+    /// [`BackendKind::Pjrt`], ignored by [`BackendKind::Native`].
+    /// `batch` overrides the arch's executor batch size (the Pallas-path
+    /// artifact is exported at a smaller batch); `None` uses
+    /// `arch.batch`.
+    pub fn open(
+        kind: BackendKind,
+        arch: &ModelArch,
+        hlo: Option<&Path>,
+        data_npz: &Path,
+        split: Split,
+        limit: usize,
+        batch: Option<usize>,
+    ) -> Result<InferenceSession> {
+        let batch = batch.unwrap_or(arch.batch);
+        match kind {
+            BackendKind::Native => {
+                let data = EvalData::load(arch, data_npz, split, limit, batch)?;
+                Ok(Self::from_backend(Box::new(NativeBackend::new(arch, data)?)))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                let hlo = hlo.context("pjrt backend needs an HLO artifact path")?;
+                let rt = pjrt::Runtime::cpu()?;
+                let data = EvalData::load(arch, data_npz, split, limit, batch)?;
+                Ok(Self::from_backend(Box::new(pjrt::PjrtBackend::new(
+                    rt, arch, hlo, data,
+                )?)))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => {
+                let _ = hlo;
+                bail!(
+                    "this binary was built without the `pjrt` feature; \
+                     rebuild with `cargo build --features pjrt` or use \
+                     `--backend native`"
+                )
+            }
+        }
+    }
+
+    /// Mark one layer's staged state dirty (its tensor changed).
     pub fn invalidate(&self, layer: usize) {
-        self.wcache.borrow_mut()[layer] = None;
+        self.backend.invalidate(layer);
     }
 
     /// Mark everything dirty (episode reset / unknown provenance).
     pub fn invalidate_all(&self) {
-        self.wcache.borrow_mut().iter_mut().for_each(|c| *c = None);
+        self.backend.invalidate_all();
     }
 
     /// Top-1 accuracy of the given compressed weights + activation bits.
     pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
-        if act_bits.len() != self.n_prunable {
-            bail!("act_bits len {} vs {} prunable", act_bits.len(), self.n_prunable);
-        }
-        // only dirty layers are re-marshalled (see struct-level perf note)
-        {
-            let mut cache = self.wcache.borrow_mut();
-            for i in 0..self.n_prunable {
-                if cache[i].is_none() {
-                    cache[i] = Some((
-                        literal_f32(&weights.w[i].shape, &weights.w[i].data)?,
-                        literal_f32(&weights.b[i].shape, &weights.b[i].data)?,
-                    ));
-                }
-            }
-        }
-        let cache = self.wcache.borrow();
-        let mut base: Vec<xla::Literal> = Vec::with_capacity(2 * self.n_prunable + 2);
-        for entry in cache.iter() {
-            let (w, b) = entry.as_ref().unwrap();
-            base.push(w.clone());
-            base.push(b.clone());
-        }
-        base.push(literal_f32(&[self.n_prunable], act_bits)?);
+        self.backend.accuracy(weights, act_bits)
+    }
 
-        let mut correct = 0usize;
-        for (img, labels) in self.image_batches.iter().zip(&self.label_batches) {
-            let mut inputs: Vec<xla::Literal> = base.clone();
-            inputs.push(img.clone());
-            let logits = self.exe.run(&inputs)?;
-            let vals: Vec<f32> = logits.to_vec()?;
-            let classes = vals.len() / self.batch;
-            for (r, &y) in labels.iter().enumerate() {
-                let row = &vals[r * classes..(r + 1) * classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i64)
-                    .unwrap_or(-1);
-                if pred == y {
-                    correct += 1;
-                }
-            }
-        }
-        Ok(correct as f64 / self.n_examples as f64)
+    /// Name of the executing backend (`native` / `pjrt`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 }
 
@@ -231,13 +305,41 @@ impl InferenceSession {
 mod tests {
     use super::*;
 
-    // Runtime round-trip tests that need artifacts live in
-    // rust/tests/integration.rs; here we only exercise the literal helper.
     #[test]
-    fn literal_shape_checks() {
-        assert!(literal_f32(&[2, 3], &[0.0; 5]).is_err());
-        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(l.element_count(), 6);
-        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default().name(), "native");
+    }
+
+    #[test]
+    fn top1_scores_only_labelled_rows() {
+        // 3 rows of 2 classes; only 2 labels -> padded row ignored
+        let logits = [0.1, 0.9, 0.8, 0.2, 0.5, 0.5];
+        assert_eq!(top1_correct(&logits, 2, &[1, 0]), 2);
+        assert_eq!(top1_correct(&logits, 2, &[0, 0]), 1);
+    }
+
+    #[test]
+    fn eval_data_batches_and_pads() {
+        let arch = crate::model::tests::toy_arch();
+        let per = 8 * 8 * 3;
+        let n = 5;
+        let images = Tensor::new(
+            vec![n, 8, 8, 3],
+            (0..n * per).map(|i| i as f32).collect(),
+        );
+        let labels = vec![0i64, 1, 2, 3, 0];
+        let d = EvalData::from_arrays(&arch, &images, &labels, 100, 2).unwrap();
+        assert_eq!(d.n_examples, 5);
+        assert_eq!(d.image_batches.len(), 3);
+        assert_eq!(d.label_batches[2], vec![0]); // tail batch: 1 real row
+        assert_eq!(d.image_batches[2].len(), 2 * per); // padded to batch
+        // padded row repeats the first example of the tail batch
+        assert_eq!(d.image_batches[2][per..], d.image_batches[2][..per]);
+        // limit truncation
+        let d2 = EvalData::from_arrays(&arch, &images, &labels, 3, 2).unwrap();
+        assert_eq!(d2.n_examples, 3);
     }
 }

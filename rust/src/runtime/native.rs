@@ -1,0 +1,561 @@
+//! Pure-Rust inference backend: a direct interpreter of the
+//! [`ModelArch`] graph over [`Weights`] — the default reward oracle.
+//!
+//! Semantics mirror the exported HLO graphs (`python/compile/model.py`)
+//! operator for operator: NHWC activations, HWIO conv weights with SAME
+//! padding, `[k,k,1,C]` depthwise weights with `groups = C`, `[in,out]`
+//! fc weights, k×k/VALID max-pooling, global average pooling, residual
+//! add and channel concat. Every prunable layer fake-quantizes its
+//! *input* activations to `act_bits[i]` on the per-layer Laplace grid
+//! measured at calibration (paper §4.1; grid math shared with
+//! `python/compile/kernels/ref.py`) — weights arrive already
+//! fake-quantized from the Rust side, exactly as on the PJRT path.
+//!
+//! Convolutions run as im2col + the row-skipping [`Mat`] matmul from
+//! [`crate::nn`] (post-ReLU activations are ~50% zeros, so the skip
+//! pays); depthwise convs use a direct loop (k is tiny). The
+//! interpreter recomputes the full forward per accuracy query and
+//! ignores the [`invalidate`](super::InferenceBackend::invalidate)
+//! cache hint — at mini-model scale the whole pass is cheaper than the
+//! bookkeeping, and EXPERIMENTS.md §Perf tracks the step latency that
+//! would justify revisiting that.
+//!
+//! One deliberate numeric divergence: `jnp.round` rounds half to even,
+//! `f32::round` rounds half away from zero. The difference only
+//! surfaces for activations landing exactly on a grid midpoint, which
+//! calibration-scaled real data essentially never does.
+
+use anyhow::{bail, Result};
+
+use super::{top1_correct, EvalData, InferenceBackend};
+use crate::model::{Layer, ModelArch, Op, Weights};
+use crate::nn::mat::Mat;
+
+/// Optimal clipping ratio α*/b for a Laplace(b) distribution, bits 2..8
+/// (Banner et al., NeurIPS 2019) — same table as the Python exporter.
+pub const LAPLACE_CLIP: [f32; 7] = [2.83, 3.89, 5.03, 6.20, 7.41, 8.64, 9.90];
+
+/// The `(lo, hi, step)` grid for fake-quantizing one layer's input
+/// activations: `bits` is rounded and clamped to `[2, 8]`, the clip
+/// point is `act_scale · LAPLACE_CLIP[bits-2]`, and signed tensors use
+/// the symmetric grid `[-α, α]` (post-ReLU tensors `[0, α]`).
+pub fn quant_params(bits: f32, act_scale: f32, signed: bool) -> (f32, f32, f32) {
+    let b = bits.round().clamp(2.0, 8.0);
+    let idx = (b - 2.0) as usize;
+    let alpha = act_scale * LAPLACE_CLIP[idx.min(6)];
+    let levels = b.exp2() - 1.0;
+    if signed {
+        (-alpha, alpha, 2.0 * alpha / levels)
+    } else {
+        (0.0, alpha, alpha / levels)
+    }
+}
+
+/// Asymmetric clipped linear fake-quant of a buffer onto `[lo, hi]`.
+pub fn fake_quant(data: &mut [f32], lo: f32, hi: f32, step: f32) {
+    if step <= 0.0 || !step.is_finite() {
+        return; // degenerate grid (zero calibration scale): pass through
+    }
+    for x in data.iter_mut() {
+        *x = ((x.clamp(lo, hi) - lo) / step).round() * step + lo;
+    }
+}
+
+/// Explicit SAME padding `(lo, hi)` for one spatial dim.
+fn same_pad(h: usize, k: usize, s: usize) -> (usize, usize) {
+    let out = h.div_ceil(s);
+    let pad = ((out - 1) * s + k).saturating_sub(h);
+    (pad / 2, pad - pad / 2)
+}
+
+/// One intermediate activation: shape (leading dim = batch) + data.
+struct Feat {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Feat {
+    fn nhwc(&self) -> Result<(usize, usize, usize, usize)> {
+        match self.shape[..] {
+            [b, h, w, c] => Ok((b, h, w, c)),
+            _ => bail!("expected NHWC tensor, got shape {:?}", self.shape),
+        }
+    }
+}
+
+fn relu(data: &mut [f32]) {
+    data.iter_mut().for_each(|x| *x = x.max(0.0));
+}
+
+/// im2col: NHWC input → patch matrix `[B·OH·OW, k·k·C]` whose column
+/// order `(ki, kj, ci)` matches the row-major HWIO weight flatten.
+fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
+    let (b, h, w, c) = x.nhwc()?;
+    let (ph, _) = same_pad(h, k, stride);
+    let (pw, _) = same_pad(w, k, stride);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let cols = k * k * c;
+    let mut d = vec![0.0f32; b * oh * ow * cols];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * cols;
+                for ki in 0..k {
+                    let iy = (oy * stride + ki) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for kj in 0..k {
+                        let ix = (ox * stride + kj) as isize - pw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ki * k + kj) * c;
+                        d[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    Ok((Mat::from_vec(b * oh * ow, cols, d), oh, ow))
+}
+
+/// SAME-padded strided convolution via im2col + matmul; HWIO weights.
+fn conv2d(x: &Feat, w: &crate::tensor::Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
+    let (b, _, _, c) = x.nhwc()?;
+    let [k, k2, cin, cout] = match w.shape[..] {
+        [a, b2, c2, d2] => [a, b2, c2, d2],
+        _ => bail!("conv weight must be HWIO, got {:?}", w.shape),
+    };
+    if k != k2 || cin != c {
+        bail!("conv weight {:?} does not fit input C={c}", w.shape);
+    }
+    let (patches, oh, ow) = im2col(x, k, stride)?;
+    // HWIO row-major is already the [k·k·Cin, Cout] matmul operand
+    let wmat = Mat::from_vec(k * k * cin, cout, w.data.clone());
+    let mut y = patches.matmul(&wmat);
+    y.add_row(bias);
+    Ok(Feat { shape: vec![b, oh, ow, cout], data: y.d })
+}
+
+/// Depthwise convolution: `[k,k,1,C]` weights, `groups = C`.
+fn dwconv2d(x: &Feat, w: &crate::tensor::Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
+    let (b, h, wd, c) = x.nhwc()?;
+    let [k, k2, one, cw] = match w.shape[..] {
+        [a, b2, c2, d2] => [a, b2, c2, d2],
+        _ => bail!("dwconv weight must be [k,k,1,C], got {:?}", w.shape),
+    };
+    if k != k2 || one != 1 || cw != c {
+        bail!("dwconv weight {:?} does not fit input C={c}", w.shape);
+    }
+    let (ph, _) = same_pad(h, k, stride);
+    let (pw, _) = same_pad(wd, k, stride);
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((bi * oh + oy) * ow + ox) * c;
+                for ki in 0..k {
+                    let iy = (oy * stride + ki) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..k {
+                        let ix = (ox * stride + kj) as isize - pw as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * wd + ix as usize) * c;
+                        let wrow = (ki * k + kj) * c;
+                        for ch in 0..c {
+                            out[dst + ch] += x.data[src + ch] * w.data[wrow + ch];
+                        }
+                    }
+                }
+                for ch in 0..c {
+                    out[dst + ch] += bias[ch];
+                }
+            }
+        }
+    }
+    Ok(Feat { shape: vec![b, oh, ow, c], data: out })
+}
+
+/// k×k max-pooling, stride k, VALID (matches `jax.lax.reduce_window`).
+fn maxpool(x: &Feat, k: usize) -> Result<Feat> {
+    let (b, h, w, c) = x.nhwc()?;
+    if h < k || w < k {
+        bail!("maxpool k={k} larger than input {h}x{w}");
+    }
+    let oh = (h - k) / k + 1;
+    let ow = (w - k) / k + 1;
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((bi * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let src = ((bi * h + oy * k + ky) * w + ox * k + kx) * c;
+                        for ch in 0..c {
+                            if x.data[src + ch] > out[dst + ch] {
+                                out[dst + ch] = x.data[src + ch];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Feat { shape: vec![b, oh, ow, c], data: out })
+}
+
+/// Global average pooling: `[B,H,W,C] → [B,C]`.
+fn gap(x: &Feat) -> Result<Feat> {
+    let (b, h, w, c) = x.nhwc()?;
+    let mut out = vec![0.0f32; b * c];
+    let norm = (h * w) as f32;
+    for bi in 0..b {
+        for p in 0..h * w {
+            let src = (bi * h * w + p) * c;
+            for ch in 0..c {
+                out[bi * c + ch] += x.data[src + ch];
+            }
+        }
+    }
+    out.iter_mut().for_each(|v| *v /= norm);
+    Ok(Feat { shape: vec![b, c], data: out })
+}
+
+/// Concatenate along the channel (last) axis.
+fn concat(ins: &[&Feat]) -> Result<Feat> {
+    let first = ins.first().copied().expect("concat needs inputs");
+    let lead = &first.shape[..first.shape.len() - 1];
+    let mut c_total = 0usize;
+    for f in ins {
+        if &f.shape[..f.shape.len() - 1] != lead {
+            bail!("concat inputs disagree on leading dims");
+        }
+        c_total += *f.shape.last().unwrap();
+    }
+    let outer: usize = lead.iter().product();
+    let mut out = Vec::with_capacity(outer * c_total);
+    for o in 0..outer {
+        for f in ins {
+            let c = *f.shape.last().unwrap();
+            out.extend_from_slice(&f.data[o * c..(o + 1) * c]);
+        }
+    }
+    let mut shape = lead.to_vec();
+    shape.push(c_total);
+    Ok(Feat { shape, data: out })
+}
+
+/// The pure-Rust accuracy oracle (see module docs).
+pub struct NativeBackend {
+    arch: ModelArch,
+    data: EvalData,
+}
+
+impl NativeBackend {
+    /// Build from an arch descriptor and pre-batched evaluation data.
+    pub fn new(arch: &ModelArch, data: EvalData) -> Result<NativeBackend> {
+        let n = arch.prunable.len();
+        if arch.act_scales.len() != n {
+            bail!(
+                "arch `{}` has {} act_scales for {n} prunable layers — \
+                 the native backend needs the calibration scales from the \
+                 arch descriptor",
+                arch.name,
+                arch.act_scales.len()
+            );
+        }
+        if arch.act_signed.len() != n {
+            bail!("arch `{}` act_signed length mismatch", arch.name);
+        }
+        Ok(NativeBackend { arch: arch.clone(), data })
+    }
+
+    /// Convenience: load a dataset artifact and build the backend.
+    pub fn from_npz(
+        arch: &ModelArch,
+        data_npz: &std::path::Path,
+        split: super::Split,
+        limit: usize,
+    ) -> Result<NativeBackend> {
+        let data = EvalData::load(arch, data_npz, split, limit, arch.batch)?;
+        Self::new(arch, data)
+    }
+
+    /// Run the graph on one stored image batch; returns logits
+    /// `[batch, classes]` row-major (padded tail rows included).
+    pub fn logits(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        batch_idx: usize,
+    ) -> Result<Vec<f32>> {
+        let images = &self.data.image_batches[batch_idx];
+        self.forward(weights, act_bits, images).map(|f| f.data)
+    }
+
+    fn forward(&self, weights: &Weights, act_bits: &[f32], images: &[f32]) -> Result<Feat> {
+        let [h, w, c] = self.data.input;
+        let b = self.data.batch;
+        let mut feats: Vec<(String, Feat)> = vec![(
+            "input".to_string(),
+            Feat { shape: vec![b, h, w, c], data: images.to_vec() },
+        )];
+        for layer in &self.arch.layers {
+            let out = self.apply(layer, weights, act_bits, &feats)?;
+            feats.push((layer.name.clone(), out));
+        }
+        Ok(feats.pop().expect("graph has layers").1)
+    }
+
+    fn apply(
+        &self,
+        layer: &Layer,
+        weights: &Weights,
+        act_bits: &[f32],
+        feats: &[(String, Feat)],
+    ) -> Result<Feat> {
+        let ins: Vec<usize> = layer
+            .inputs
+            .iter()
+            .map(|name| {
+                feats
+                    .iter()
+                    .position(|(n, _)| n == name)
+                    .ok_or_else(|| anyhow::anyhow!("layer input `{name}` not computed yet"))
+            })
+            .collect::<Result<_>>()?;
+        let x0 = &feats[*ins.first().ok_or_else(|| {
+            anyhow::anyhow!("layer `{}` has no inputs", layer.name)
+        })?]
+            .1;
+        let mut out = match layer.op {
+            Op::Conv | Op::DwConv | Op::Fc => {
+                let i = self.arch.pidx(&layer.name);
+                let (lo, hi, step) = quant_params(
+                    act_bits[i],
+                    self.arch.act_scales[i],
+                    self.arch.act_signed[i],
+                );
+                match layer.op {
+                    Op::Conv => {
+                        let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
+                        fake_quant(&mut xq.data, lo, hi, step);
+                        conv2d(&xq, &weights.w[i], &weights.b[i].data, layer.stride)?
+                    }
+                    Op::DwConv => {
+                        let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
+                        fake_quant(&mut xq.data, lo, hi, step);
+                        dwconv2d(&xq, &weights.w[i], &weights.b[i].data, layer.stride)?
+                    }
+                    _ => {
+                        // fc: flatten then fake-quantize, like the exporter
+                        let b = x0.shape[0];
+                        let n: usize = x0.shape[1..].iter().product();
+                        let mut flat = x0.data.clone();
+                        fake_quant(&mut flat, lo, hi, step);
+                        let wt = &weights.w[i];
+                        let (fin, fout) = match wt.shape[..] {
+                            [fin, fout] => (fin, fout),
+                            _ => bail!("fc `{}` weight must be [in,out], got {:?}",
+                                       layer.name, wt.shape),
+                        };
+                        if fin != n {
+                            bail!(
+                                "fc `{}` weight {:?} does not fit input [{b}, {n}]",
+                                layer.name,
+                                wt.shape
+                            );
+                        }
+                        let x = Mat::from_vec(b, n, flat);
+                        let wm = Mat::from_vec(fin, fout, wt.data.clone());
+                        let mut y = x.matmul(&wm);
+                        y.add_row(&weights.b[i].data);
+                        Feat { shape: vec![b, fout], data: y.d }
+                    }
+                }
+            }
+            Op::MaxPool => maxpool(x0, layer.k)?,
+            Op::Gap => gap(x0)?,
+            Op::Flatten => {
+                let b = x0.shape[0];
+                let n: usize = x0.shape[1..].iter().product();
+                Feat { shape: vec![b, n], data: x0.data.clone() }
+            }
+            Op::Add => {
+                let x1 = &feats[*ins.get(1).ok_or_else(|| {
+                    anyhow::anyhow!("add `{}` needs two inputs", layer.name)
+                })?]
+                    .1;
+                if x0.shape != x1.shape {
+                    bail!("add `{}` shape mismatch {:?} vs {:?}", layer.name, x0.shape, x1.shape);
+                }
+                let data = x0.data.iter().zip(&x1.data).map(|(a, b)| a + b).collect();
+                Feat { shape: x0.shape.clone(), data }
+            }
+            Op::Concat => {
+                let refs: Vec<&Feat> = ins.iter().map(|&i| &feats[i].1).collect();
+                concat(&refs)?
+            }
+        };
+        if layer.relu {
+            relu(&mut out.data);
+        }
+        Ok(out)
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
+        let n = self.arch.prunable.len();
+        if act_bits.len() != n {
+            bail!("act_bits len {} vs {n} prunable", act_bits.len());
+        }
+        if weights.w.len() != n {
+            bail!("weights hold {} layers vs {n} prunable", weights.w.len());
+        }
+        let mut correct = 0usize;
+        for (bi, labels) in self.data.label_batches.iter().enumerate() {
+            let logits = self.forward(weights, act_bits, &self.data.image_batches[bi])?;
+            let classes = logits.data.len() / self.data.batch;
+            correct += top1_correct(&logits.data, classes, labels);
+        }
+        Ok(correct as f64 / self.data.n_examples as f64)
+    }
+
+    // The interpreter stages no per-layer state between queries, so the
+    // cache hints are no-ops (see module docs).
+    fn invalidate(&self, _layer: usize) {}
+
+    fn invalidate_all(&self) {}
+
+    fn n_examples(&self) -> usize {
+        self.data.n_examples
+    }
+
+    fn batch(&self) -> usize {
+        self.data.batch
+    }
+
+    fn n_prunable(&self) -> usize {
+        self.arch.prunable.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pad_matches_exporter() {
+        // h=8, k=3, s=1 -> out 8, pad (1,1); h=8, k=3, s=2 -> out 4, pad (0,1)
+        assert_eq!(same_pad(8, 3, 1), (1, 1));
+        assert_eq!(same_pad(8, 3, 2), (0, 1));
+        assert_eq!(same_pad(4, 1, 1), (0, 0));
+        assert_eq!(same_pad(5, 5, 5), (0, 0));
+    }
+
+    #[test]
+    fn quant_params_hand_values() {
+        // bits=2, scale=1, unsigned: alpha=2.83, levels=3, step=alpha/3
+        let (lo, hi, step) = quant_params(2.0, 1.0, false);
+        assert_eq!(lo, 0.0);
+        assert!((hi - 2.83).abs() < 1e-6);
+        assert!((step - 2.83 / 3.0).abs() < 1e-6);
+        // signed grid is symmetric with doubled step
+        let (lo, hi, step) = quant_params(3.0, 0.5, true);
+        assert!((lo + 0.5 * 3.89).abs() < 1e-6);
+        assert!((hi - 0.5 * 3.89).abs() < 1e-6);
+        assert!((step - 2.0 * 0.5 * 3.89 / 7.0).abs() < 1e-6);
+        // bits clamp to [2, 8]
+        let (_, hi_low, _) = quant_params(0.0, 1.0, false);
+        assert!((hi_low - 2.83).abs() < 1e-6);
+        let (_, hi_high, _) = quant_params(12.0, 1.0, false);
+        assert!((hi_high - 9.90).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fake_quant_snaps_and_clips() {
+        // grid [0, 2] step 0.5: 0.6 -> 0.5, 0.76 -> 1.0, 3.0 clips to 2.0
+        let mut v = [0.6f32, 0.76, 3.0, -1.0];
+        fake_quant(&mut v, 0.0, 2.0, 0.5);
+        assert_eq!(v, [0.5, 1.0, 2.0, 0.0]);
+        // degenerate grid passes through
+        let mut v = [0.3f32];
+        fake_quant(&mut v, 0.0, 0.0, 0.0);
+        assert_eq!(v, [0.3]);
+    }
+
+    #[test]
+    fn conv_identity_1x1() {
+        // 1x1 conv with weight 2.0, bias 0.5 on a 2x2x1 input
+        let x = Feat {
+            shape: vec![1, 2, 2, 1],
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let w = crate::tensor::Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        let y = conv2d(&x, &w, &[0.5], 1).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        assert_eq!(y.data, vec![2.5, 4.5, 6.5, 8.5]);
+    }
+
+    #[test]
+    fn conv_3x3_same_padding_hand_value() {
+        // all-ones 3x3 kernel on a 2x2 all-ones input, SAME padding:
+        // every output sums its in-bounds 3x3 window -> all windows see
+        // the full 2x2 input = 4
+        let x = Feat { shape: vec![1, 2, 2, 1], data: vec![1.0; 4] };
+        let w = crate::tensor::Tensor::new(vec![3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, &[0.0], 1).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        assert_eq!(y.data, vec![4.0; 4]);
+    }
+
+    #[test]
+    fn dwconv_separates_channels() {
+        // 1x1 dwconv: channel 0 scaled by 10, channel 1 by 100
+        let x = Feat {
+            shape: vec![1, 1, 2, 2],
+            data: vec![1.0, 2.0, 3.0, 4.0], // (x=0: c0=1,c1=2) (x=1: c0=3,c1=4)
+        };
+        let w = crate::tensor::Tensor::new(vec![1, 1, 1, 2], vec![10.0, 100.0]);
+        let y = dwconv2d(&x, &w, &[0.0, 0.0], 1).unwrap();
+        assert_eq!(y.data, vec![10.0, 200.0, 30.0, 400.0]);
+    }
+
+    #[test]
+    fn maxpool_and_gap_hand_values() {
+        let x = Feat {
+            shape: vec![1, 2, 2, 1],
+            data: vec![1.0, 5.0, 3.0, 2.0],
+        };
+        let p = maxpool(&x, 2).unwrap();
+        assert_eq!(p.shape, vec![1, 1, 1, 1]);
+        assert_eq!(p.data, vec![5.0]);
+        let g = gap(&x).unwrap();
+        assert_eq!(g.shape, vec![1, 1]);
+        assert_eq!(g.data, vec![11.0 / 4.0]);
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let a = Feat { shape: vec![1, 2, 1, 1], data: vec![1.0, 2.0] };
+        let b = Feat { shape: vec![1, 2, 1, 2], data: vec![10.0, 11.0, 20.0, 21.0] };
+        let y = concat(&[&a, &b]).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 1, 3]);
+        assert_eq!(y.data, vec![1.0, 10.0, 11.0, 2.0, 20.0, 21.0]);
+    }
+}

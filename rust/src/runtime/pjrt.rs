@@ -1,0 +1,226 @@
+//! PJRT inference backend (`--features pjrt`): load AOT-compiled HLO
+//! text, execute it through the XLA PJRT C API.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`).
+//!
+//! ## Why HLO *text* is the interchange format
+//!
+//! The exporter (`python/compile/aot.py`) lowers through StableHLO and
+//! serialises the computation as HLO **text**, not a binary proto.
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids, which the
+//! `xla_extension 0.5.1` proto deserialiser rejects outright; the HLO
+//! text parser, by contrast, reassigns instruction ids while parsing,
+//! so the same artifact loads across XLA revisions. Text is also
+//! diffable and survives toolchain skew between the Python export
+//! environment and this consumer — worth the larger files.
+//!
+//! [`PjrtBackend`] owns one compiled executable per model plus the
+//! pre-marshalled image batches, and answers an accuracy query in a
+//! single PJRT call per batch — compiled once, executed at every RL
+//! step, Python never involved.
+//!
+//! Note: the default in-tree `xla` crate is a type-compatible stub
+//! (rust/vendor/README.md) — this module compiles and its literal
+//! tests run everywhere, but executing HLO needs a real PJRT binding.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{top1_correct, EvalData, InferenceBackend};
+use crate::model::{ModelArch, Weights};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Connect to the CPU PJRT plugin.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform name reported by the client (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// One compiled model graph.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute; unwraps the 1-tuple the exporter emits (return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} vs data len {}", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// The PJRT accuracy oracle for one model.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the RL loop changes exactly ONE
+/// layer's weights per step, so the backend keeps the marshalled weight
+/// literals in a per-layer cache; [`InferenceBackend::invalidate`]
+/// marks a layer dirty and only dirty layers are re-marshalled on the
+/// next accuracy call. Image batches are marshalled once at
+/// construction.
+pub struct PjrtBackend {
+    /// the owning client — MUST outlive `exe` (the executable runs on
+    /// this client; dropping the client first is a use-after-free in
+    /// bindings whose executables do not refcount it)
+    _rt: Runtime,
+    exe: Executable,
+    batch: usize,
+    n_prunable: usize,
+    /// pre-marshalled image literals, one per batch
+    image_batches: Vec<xla::Literal>,
+    /// labels per batch
+    label_batches: Vec<Vec<i64>>,
+    n_examples: usize,
+    /// per-layer (w, b) literal cache
+    wcache: RefCell<Vec<Option<(xla::Literal, xla::Literal)>>>,
+}
+
+impl PjrtBackend {
+    /// Compile `hlo_path` on `rt` (taking ownership — the client must
+    /// live as long as the executable) and marshal the evaluation
+    /// batches. One client per backend; workers in a `compare --jobs`
+    /// sweep are separate processes, so this stays one client per
+    /// process-and-model as in the original design.
+    pub fn new(
+        rt: Runtime,
+        arch: &ModelArch,
+        hlo_path: &Path,
+        data: EvalData,
+    ) -> Result<PjrtBackend> {
+        let exe = rt.load_hlo(hlo_path)?;
+        let [h, w, c] = data.input;
+        let batch = data.batch;
+        let image_batches = data
+            .image_batches
+            .iter()
+            .map(|buf| literal_f32(&[batch, h, w, c], buf))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PjrtBackend {
+            _rt: rt,
+            exe,
+            batch,
+            n_prunable: arch.prunable.len(),
+            image_batches,
+            label_batches: data.label_batches,
+            n_examples: data.n_examples,
+            wcache: RefCell::new(vec![None; arch.prunable.len()]),
+        })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
+        if act_bits.len() != self.n_prunable {
+            bail!("act_bits len {} vs {} prunable", act_bits.len(), self.n_prunable);
+        }
+        // only dirty layers are re-marshalled (see struct-level perf note)
+        {
+            let mut cache = self.wcache.borrow_mut();
+            for i in 0..self.n_prunable {
+                if cache[i].is_none() {
+                    cache[i] = Some((
+                        literal_f32(&weights.w[i].shape, &weights.w[i].data)?,
+                        literal_f32(&weights.b[i].shape, &weights.b[i].data)?,
+                    ));
+                }
+            }
+        }
+        let cache = self.wcache.borrow();
+        let mut base: Vec<xla::Literal> = Vec::with_capacity(2 * self.n_prunable + 2);
+        for entry in cache.iter() {
+            let (w, b) = entry.as_ref().unwrap();
+            base.push(w.clone());
+            base.push(b.clone());
+        }
+        base.push(literal_f32(&[self.n_prunable], act_bits)?);
+
+        let mut correct = 0usize;
+        for (img, labels) in self.image_batches.iter().zip(&self.label_batches) {
+            let mut inputs: Vec<xla::Literal> = base.clone();
+            inputs.push(img.clone());
+            let logits = self.exe.run(&inputs)?;
+            let vals: Vec<f32> = logits.to_vec()?;
+            let classes = vals.len() / self.batch;
+            correct += top1_correct(&vals, classes, labels);
+        }
+        Ok(correct as f64 / self.n_examples as f64)
+    }
+
+    fn invalidate(&self, layer: usize) {
+        self.wcache.borrow_mut()[layer] = None;
+    }
+
+    fn invalidate_all(&self) {
+        self.wcache.borrow_mut().iter_mut().for_each(|c| *c = None);
+    }
+
+    fn n_examples(&self) -> usize {
+        self.n_examples
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn n_prunable(&self) -> usize {
+        self.n_prunable
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime round-trip tests that need artifacts live in
+    // rust/tests/integration.rs; here we only exercise the literal helper
+    // (fully functional even on the in-tree stub).
+    #[test]
+    fn literal_shape_checks() {
+        assert!(literal_f32(&[2, 3], &[0.0; 5]).is_err());
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+}

@@ -10,11 +10,14 @@
 /// Dense, contiguous, row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// dimension sizes, outermost first
     pub shape: Vec<usize>,
+    /// row-major contiguous storage
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build from a shape and matching data (panics on size mismatch).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -26,24 +29,29 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![v; n] }
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
@@ -68,10 +76,12 @@ impl Tensor {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Smallest element (+inf when empty).
     pub fn min(&self) -> f32 {
         self.data.iter().copied().fold(f32::INFINITY, f32::min)
     }
 
+    /// Largest element (-inf when empty).
     pub fn max(&self) -> f32 {
         self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
     }

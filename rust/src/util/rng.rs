@@ -23,6 +23,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed via SplitMix64 (any u64 gives a well-mixed state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -39,6 +40,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -1,8 +1,11 @@
 //! Integration tests over the full artifact contract: JSON/NPZ loading,
-//! PJRT inference of the AOT-lowered graphs, the compression env, and a
-//! miniature composite-RL run. All require `make artifacts` to have run
-//! (they are skipped with a notice otherwise, so plain `cargo test`
-//! still passes in a fresh checkout).
+//! inference of the exported models (native interpreter by default;
+//! PJRT-specific round-trips live in the feature-gated module at the
+//! bottom), the compression env, and a miniature composite-RL run. All
+//! require `make artifacts` to have run (they are skipped with a notice
+//! otherwise, so plain `cargo test` still passes in a fresh checkout).
+//! Backend-independent hand-computed-fixture tests live in
+//! `tests/native_backend.rs` and always run.
 
 use std::path::PathBuf;
 
@@ -10,7 +13,6 @@ use hapq::config::RunConfig;
 use hapq::coordinator::Coordinator;
 use hapq::env::Action;
 use hapq::pruning::PruneAlg;
-use hapq::runtime::{literal_f32, Runtime};
 
 fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from("artifacts");
@@ -33,30 +35,6 @@ fn coord(reward_subset: usize) -> Option<Coordinator> {
         })
         .expect("coordinator"),
     )
-}
-
-#[test]
-fn qmatmul_kernel_hlo_loads_and_runs() {
-    let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let exe = rt.load_hlo(&dir.join("qmatmul_pallas.hlo.txt")).unwrap();
-    // x: 64x48 ones scaled, w: 48x32 identity-ish
-    let x = literal_f32(&[64, 48], &vec![0.5f32; 64 * 48]).unwrap();
-    let mut wdat = vec![0f32; 48 * 32];
-    for i in 0..32 {
-        wdat[i * 32 + i] = 1.0;
-    }
-    let w = literal_f32(&[48, 32], &wdat).unwrap();
-    // grid [0, 2] with step for 4 bits
-    let lo = literal_f32(&[], &[0.0]).unwrap();
-    let hi = literal_f32(&[], &[2.0]).unwrap();
-    let step = literal_f32(&[], &[2.0 / 15.0]).unwrap();
-    let out = exe.run(&[x, w, lo, hi, step]).unwrap();
-    let v: Vec<f32> = out.to_vec().unwrap();
-    assert_eq!(v.len(), 64 * 32);
-    // each output = quantized(0.5) once per identity column
-    let q = (0.5f32 / (2.0 / 15.0)).round() * (2.0 / 15.0);
-    assert!((v[0] - q).abs() < 1e-5, "{} vs {}", v[0], q);
 }
 
 #[test]
@@ -196,44 +174,6 @@ fn baselines_smoke_on_vgg11() {
 }
 
 #[test]
-fn pallas_variant_matches_lax_variant() {
-    let Some(c) = coord(64) else { return };
-    let entry = c.entry("vgg11").unwrap().clone();
-    let Some(pallas) = entry.pallas_hlo.clone() else {
-        eprintln!("SKIP: no pallas artifact");
-        return;
-    };
-    let (arch, weights, e) = c.load_arch("vgg11").unwrap();
-    let data = c.cfg.artifacts.join(format!("{}.data.npz", e.dataset));
-    let bits = vec![5.0f32; arch.prunable.len()];
-    let lax = hapq::runtime::InferenceSession::new(
-        &c.runtime,
-        &arch,
-        &c.cfg.artifacts.join(&e.hlo),
-        &data,
-        hapq::runtime::Split::Test,
-        64,
-    )
-    .unwrap();
-    let pal = hapq::runtime::InferenceSession::with_batch(
-        &c.runtime,
-        &arch,
-        &c.cfg.artifacts.join(&pallas),
-        &data,
-        hapq::runtime::Split::Test,
-        64,
-        entry.pallas_batch,
-    )
-    .unwrap();
-    let a1 = lax.accuracy(&weights, &bits).unwrap();
-    let a2 = pal.accuracy(&weights, &bits).unwrap();
-    assert!(
-        (a1 - a2).abs() < 1e-9,
-        "L1 pallas path ({a2}) != XLA path ({a1}) on identical examples"
-    );
-}
-
-#[test]
 fn report_json_roundtrips() {
     let Some(mut c) = coord(64) else { return };
     c.cfg.episodes = 4;
@@ -248,4 +188,92 @@ fn report_json_roundtrips() {
         v.req("per_layer").unwrap().as_arr().unwrap().len(),
         report.best.per_layer.len()
     );
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-specific round trips: compiled only with `--features pjrt`, and
+// they additionally skip unless both artifacts exist and a *real* xla
+// binding is linked (the in-tree stub errors on client construction —
+// rust/vendor/README.md).
+
+#[cfg(feature = "pjrt")]
+mod pjrt_roundtrips {
+    use super::*;
+    use hapq::runtime::{literal_f32, BackendKind, InferenceSession, Runtime, Split};
+
+    fn runtime() -> Option<Runtime> {
+        match Runtime::cpu() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("SKIP: no PJRT runtime linked ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn qmatmul_kernel_hlo_loads_and_runs() {
+        let Some(dir) = artifacts() else { return };
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load_hlo(&dir.join("qmatmul_pallas.hlo.txt")).unwrap();
+        // x: 64x48 ones scaled, w: 48x32 identity-ish
+        let x = literal_f32(&[64, 48], &vec![0.5f32; 64 * 48]).unwrap();
+        let mut wdat = vec![0f32; 48 * 32];
+        for i in 0..32 {
+            wdat[i * 32 + i] = 1.0;
+        }
+        let w = literal_f32(&[48, 32], &wdat).unwrap();
+        // grid [0, 2] with step for 4 bits
+        let lo = literal_f32(&[], &[0.0]).unwrap();
+        let hi = literal_f32(&[], &[2.0]).unwrap();
+        let step = literal_f32(&[], &[2.0 / 15.0]).unwrap();
+        let out = exe.run(&[x, w, lo, hi, step]).unwrap();
+        let v: Vec<f32> = out.to_vec().unwrap();
+        assert_eq!(v.len(), 64 * 32);
+        // each output = quantized(0.5) once per identity column
+        let q = (0.5f32 / (2.0 / 15.0)).round() * (2.0 / 15.0);
+        assert!((v[0] - q).abs() < 1e-5, "{} vs {}", v[0], q);
+    }
+
+    #[test]
+    fn pallas_variant_matches_lax_variant() {
+        let Some(c) = coord(64) else { return };
+        if runtime().is_none() {
+            return;
+        }
+        let entry = c.entry("vgg11").unwrap().clone();
+        let Some(pallas) = entry.pallas_hlo.clone() else {
+            eprintln!("SKIP: no pallas artifact");
+            return;
+        };
+        let (arch, weights, e) = c.load_arch("vgg11").unwrap();
+        let data = c.cfg.artifacts.join(format!("{}.data.npz", e.dataset));
+        let bits = vec![5.0f32; arch.prunable.len()];
+        let lax = InferenceSession::open(
+            BackendKind::Pjrt,
+            &arch,
+            Some(&c.cfg.artifacts.join(&e.hlo)),
+            &data,
+            Split::Test,
+            64,
+            None,
+        )
+        .unwrap();
+        let pal = InferenceSession::open(
+            BackendKind::Pjrt,
+            &arch,
+            Some(&c.cfg.artifacts.join(&pallas)),
+            &data,
+            Split::Test,
+            64,
+            Some(entry.pallas_batch),
+        )
+        .unwrap();
+        let a1 = lax.accuracy(&weights, &bits).unwrap();
+        let a2 = pal.accuracy(&weights, &bits).unwrap();
+        assert!(
+            (a1 - a2).abs() < 1e-9,
+            "L1 pallas path ({a2}) != XLA path ({a1}) on identical examples"
+        );
+    }
 }

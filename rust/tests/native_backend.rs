@@ -1,0 +1,251 @@
+//! NativeBackend correctness against hand-computed forward passes.
+//!
+//! Unlike tests/integration.rs these need NO artifacts: the fixture
+//! models, weights and data are built in-memory, so they run in every
+//! environment (they are the CI-proof of the default reward oracle).
+//!
+//! All expected numbers below are derived by hand from the exported
+//! graph semantics (python/compile/model.py + kernels/ref.py): SAME
+//! conv, k×k/VALID maxpool, GAP, [in,out] fc, and per-layer Laplace
+//! fake-quant of prunable-layer inputs with
+//! `alpha = act_scale · clip(bits)`, `step = alpha / (2^bits - 1)`
+//! (unsigned) or `2·alpha / (2^bits - 1)` (signed).
+
+use hapq::env::{Action, CompressionEnv};
+use hapq::hw::energy::EnergyModel;
+use hapq::hw::mac_sim::RqTable;
+use hapq::hw::Accel;
+use hapq::io::json;
+use hapq::model::{ModelArch, Weights};
+use hapq::runtime::{EvalData, InferenceBackend, InferenceSession, NativeBackend};
+use hapq::tensor::Tensor;
+
+fn close(a: f32, b: f32, tol: f32, what: &str) {
+    assert!((a - b).abs() <= tol, "{what}: {a} vs {b} (tol {tol})");
+}
+
+// ---------------------------------------------------------------------------
+// Fixture 1: conv(1x1, w=2, b=-0.4, relu) -> gap -> fc([1,-1], b=[0,0.25])
+// on 2x2x1 inputs, act_scales = 1/2.83 so the 2-bit grid is exactly
+// {0, 1/3, 2/3, 1}.
+
+const FIX1: &str = r#"{
+  "name": "fix1", "dataset": "synth-fix", "input": [2, 2, 1], "classes": 2,
+  "batch": 2,
+  "layers": [
+    {"name": "c1", "op": "conv", "inputs": ["input"], "k": 1, "stride": 1,
+     "relu": true, "in_shape": [2,2,1], "out_shape": [2,2,1], "in_ch": 1,
+     "out_ch": 1},
+    {"name": "gap", "op": "gap", "inputs": ["c1"], "in_shape": [2,2,1],
+     "out_shape": [1]},
+    {"name": "f1", "op": "fc", "inputs": ["gap"], "relu": false,
+     "in_shape": [1], "out_shape": [2], "in_ch": 1, "out_ch": 2}
+  ],
+  "prunable": ["c1", "f1"],
+  "dep_groups": [],
+  "act_scales": [0.3533568904593639, 0.3533568904593639],
+  "act_signed": [false, false],
+  "acc_int8": 1.0, "n_params": 5
+}"#;
+
+fn fix1() -> (ModelArch, Weights) {
+    let arch = ModelArch::from_json(&json::parse(FIX1).unwrap()).unwrap();
+    let weights = Weights {
+        w: vec![
+            Tensor::new(vec![1, 1, 1, 1], vec![2.0]),
+            Tensor::new(vec![1, 2], vec![1.0, -1.0]),
+        ],
+        b: vec![
+            Tensor::new(vec![1], vec![-0.4]),
+            Tensor::new(vec![2], vec![0.0, 0.25]),
+        ],
+        sal: vec![Tensor::full(vec![1, 1, 1, 1], 1.0), Tensor::full(vec![1, 2], 1.0)],
+        chsq: vec![vec![1.0], vec![1.0, 1.0]],
+    };
+    (arch, weights)
+}
+
+fn fix1_backend(labels: Vec<i64>) -> NativeBackend {
+    let (arch, _) = fix1();
+    // im0 ramps up, im1 stays in the lowest 2-bit quantization bin
+    let images = Tensor::new(
+        vec![2, 2, 2, 1],
+        vec![
+            0.2, 0.4, 0.6, 0.8, // im0
+            0.05, 0.1, 0.15, 0.1, // im1
+        ],
+    );
+    let data = EvalData::from_arrays(&arch, &images, &labels, 16, arch.batch).unwrap();
+    NativeBackend::new(&arch, data).unwrap()
+}
+
+#[test]
+fn native_matches_hand_computed_forward_2bit() {
+    // 2-bit grid {0, 1/3, 2/3, 1} (alpha = 0.35336 * 2.83 = 1.0):
+    //   im0 quantizes to [1/3, 1/3, 2/3, 2/3]
+    //   -> conv y = 2*q - 0.4 = [4/15.., ..], relu keeps all
+    //   -> gap = (0.2667+0.2667+0.9333+0.9333)/4 = 0.6
+    //   -> f1 input quant: 0.6 -> 1.8 steps -> 2 steps = 2/3
+    //   -> logits = [2/3, -2/3 + 0.25]
+    //   im1 quantizes to all-zero -> conv = -0.4 -> relu 0 -> logits [0, 0.25]
+    let (_, weights) = fix1();
+    let backend = fix1_backend(vec![0, 1]);
+    let logits = backend.logits(&weights, &[2.0, 2.0], 0).unwrap();
+    close(logits[0], 2.0 / 3.0, 1e-4, "im0 logit 0");
+    close(logits[1], -2.0 / 3.0 + 0.25, 1e-4, "im0 logit 1");
+    close(logits[2], 0.0, 1e-6, "im1 logit 0");
+    close(logits[3], 0.25, 1e-6, "im1 logit 1");
+    // im0 -> class 0, im1 -> class 1
+    let acc = backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    assert_eq!(acc, 1.0);
+}
+
+#[test]
+fn native_accuracy_counts_misses() {
+    let (_, weights) = fix1();
+    // swap the labels: both rows now wrong vs the policy above? no —
+    // im0 predicts 0, im1 predicts 1; labels [1, 1] score 0.5
+    let backend = fix1_backend(vec![1, 1]);
+    let acc = backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    assert_eq!(acc, 0.5);
+    let backend = fix1_backend(vec![1, 0]);
+    let acc = backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    assert_eq!(acc, 0.0);
+}
+
+#[test]
+fn native_8bit_keeps_the_argmax() {
+    // at 8 bits the grid error is < step = alpha/255 ≈ 0.0137 — far
+    // below the fixture's logit margins, so predictions are unchanged
+    let (_, weights) = fix1();
+    let backend = fix1_backend(vec![0, 1]);
+    assert_eq!(backend.accuracy(&weights, &[8.0, 8.0]).unwrap(), 1.0);
+    // mixed precision per layer as the RL agent would set it
+    assert_eq!(backend.accuracy(&weights, &[2.0, 8.0]).unwrap(), 1.0);
+}
+
+#[test]
+fn native_backend_validates_inputs() {
+    let (_, weights) = fix1();
+    let backend = fix1_backend(vec![0, 1]);
+    assert!(backend.accuracy(&weights, &[8.0]).is_err()); // wrong len
+    assert_eq!(backend.n_prunable(), 2);
+    assert_eq!(backend.n_examples(), 2);
+    assert_eq!(backend.batch(), 2);
+    assert_eq!(backend.name(), "native");
+    // the cache hints are accepted (no-ops for the interpreter)
+    backend.invalidate(0);
+    backend.invalidate_all();
+}
+
+// ---------------------------------------------------------------------------
+// Fixture 2: dwconv -> maxpool -> flatten -> fc(identity) on 2x2x2,
+// signed 8-bit input grid (step 19.8/255), exercising the remaining ops.
+
+const FIX2: &str = r#"{
+  "name": "fix2", "dataset": "synth-fix", "input": [2, 2, 2], "classes": 2,
+  "batch": 1,
+  "layers": [
+    {"name": "d1", "op": "dwconv", "inputs": ["input"], "k": 1, "stride": 1,
+     "relu": false, "in_shape": [2,2,2], "out_shape": [2,2,2], "in_ch": 2,
+     "out_ch": 2},
+    {"name": "p1", "op": "maxpool", "inputs": ["d1"], "k": 2,
+     "in_shape": [2,2,2], "out_shape": [1,1,2]},
+    {"name": "flat", "op": "flatten", "inputs": ["p1"], "in_shape": [1,1,2],
+     "out_shape": [2]},
+    {"name": "f1", "op": "fc", "inputs": ["flat"], "relu": false,
+     "in_shape": [2], "out_shape": [2], "in_ch": 2, "out_ch": 2}
+  ],
+  "prunable": ["d1", "f1"],
+  "dep_groups": [],
+  "act_scales": [1.0, 1.0],
+  "act_signed": [true, false],
+  "acc_int8": 1.0, "n_params": 10
+}"#;
+
+#[test]
+fn native_dwconv_maxpool_flatten_hand_values() {
+    let arch = ModelArch::from_json(&json::parse(FIX2).unwrap()).unwrap();
+    let weights = Weights {
+        w: vec![
+            // dwconv [1,1,1,2]: channel 0 x1, channel 1 x2
+            Tensor::new(vec![1, 1, 1, 2], vec![1.0, 2.0]),
+            // fc identity
+            Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]),
+        ],
+        b: vec![
+            Tensor::new(vec![2], vec![0.0, 0.0]),
+            Tensor::new(vec![2], vec![0.0, 0.0]),
+        ],
+        sal: vec![Tensor::full(vec![1, 1, 1, 2], 1.0), Tensor::full(vec![2, 2], 1.0)],
+        chsq: vec![vec![1.0, 1.0], vec![1.0, 1.0]],
+    };
+    // positions p0..p3 with channels (c0, c1)
+    let images = Tensor::new(
+        vec![1, 2, 2, 2],
+        vec![0.5, -0.3, 1.0, 0.7, 0.25, 0.9, -0.5, 0.2],
+    );
+    let data = EvalData::from_arrays(&arch, &images, &[1], 16, arch.batch).unwrap();
+    let backend = NativeBackend::new(&arch, data).unwrap();
+    // signed 8-bit grid: step = 2*9.9/255 = 0.0776471; inputs snap to
+    //   c0: [0.4658824, 1.0094118, 0.2329412, -0.4658824]
+    //   c1: [-0.3105882, 0.6988235, 0.9317647, 0.2329412]
+    // dwconv: c0 x1, c1 x2; maxpool picks (1.0094118, 1.8635294);
+    // f1's unsigned 8-bit grid (step 0.0388235) holds both exactly.
+    let logits = backend.logits(&weights, &[8.0, 8.0], 0).unwrap();
+    close(logits[0], 1.0094118, 1e-4, "pooled c0");
+    close(logits[1], 1.8635294, 1e-4, "pooled c1 (x2)");
+    assert_eq!(backend.accuracy(&weights, &[8.0, 8.0]).unwrap(), 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// The whole Fig-3 loop on the native backend — prune + quantize +
+// energy model + inference + LUT reward, no artifacts involved.
+
+#[test]
+fn env_episode_runs_on_native_backend() {
+    let (arch, weights) = fix1();
+    let images = Tensor::new(
+        vec![4, 2, 2, 1],
+        vec![
+            0.2, 0.4, 0.6, 0.8, //
+            0.05, 0.1, 0.15, 0.1, //
+            0.7, 0.7, 0.2, 0.3, //
+            0.9, 0.8, 0.7, 0.6,
+        ],
+    );
+    let labels = vec![0i64, 1, 0, 0];
+    let data = EvalData::from_arrays(&arch, &images, &labels, 16, arch.batch).unwrap();
+    let session =
+        InferenceSession::from_backend(Box::new(NativeBackend::new(&arch, data).unwrap()));
+    assert_eq!(session.backend_name(), "native");
+    assert_eq!(session.n_examples, 4);
+    let energy = EnergyModel::new(
+        arch.layer_dims().unwrap(),
+        Accel::default(),
+        RqTable::compute(400, 3),
+    );
+    let mut env = CompressionEnv::new(arch, weights, energy, session, 7).unwrap();
+    assert!(env.baseline_acc > 0.0);
+    let n = env.n_layers();
+    assert_eq!(n, 2);
+    let mut state = env.reset();
+    assert_eq!(state.len(), hapq::env::STATE_DIM);
+    for t in 0..n {
+        let step = env
+            .step(Action { ratio: 0.3, bits: 0.8, alg: t % 7 })
+            .unwrap();
+        assert!(step.reward.is_finite());
+        assert!((0.0..=1.0).contains(&step.accuracy));
+        assert_eq!(step.done, t == n - 1);
+        state = step.state;
+    }
+    let _ = state;
+    assert_eq!(env.n_evals, n as u64);
+    // replaying a full config through the same oracle also works
+    let sol = env
+        .evaluate_config(&vec![Action { ratio: 0.0, bits: 1.0, alg: 0 }; n])
+        .unwrap();
+    assert!(sol.reward.is_finite());
+    assert!(sol.energy_gain.abs() < 0.2); // 8-bit no-prune ≈ baseline
+}

@@ -1,0 +1,195 @@
+//! Type-compatible stub of the `xla` PJRT binding.
+//!
+//! The real crate (an FFI wrapper over the XLA PJRT C API /
+//! `xla_extension`) cannot be vendored: upstream distributes it without
+//! a `Cargo.toml` and it drags in a multi-GB native toolchain. This
+//! stub declares the exact API subset `hapq`'s `pjrt` feature consumes
+//! so that `cargo build/test/doc --features pjrt` works everywhere:
+//!
+//! * [`Literal`] is fully functional (host-side f32 buffers) — the
+//!   literal-marshalling layer and its unit tests run for real;
+//! * [`PjRtClient::cpu`] returns an error explaining that no PJRT
+//!   runtime is linked, so anything that would actually execute HLO
+//!   fails fast with an actionable message instead of at link time.
+//!
+//! To run the PJRT path for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at a checkout of the real binding (its API is a
+//! superset of this file). Every signature here mirrors the real crate.
+
+use std::fmt;
+
+/// Error type mirroring the real binding's `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias matching the real binding.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_runtime<T>() -> Result<T> {
+    Err(Error(
+        "this build links the in-tree xla stub, which cannot execute HLO; \
+         point rust/Cargo.toml's `xla` path dependency at a real PJRT \
+         binding (see rust/vendor/README.md) or use --backend native"
+            .to_string(),
+    ))
+}
+
+/// Element dtype of a [`Literal`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float — the only dtype the artifact contract uses.
+    F32,
+}
+
+/// Trait for element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    /// Decode one element from little-endian bytes.
+    fn from_le(bytes: &[u8]) -> Self;
+    /// Size of one element in bytes.
+    const SIZE: usize;
+}
+
+impl NativeType for f32 {
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    const SIZE: usize = 4;
+}
+
+/// A host-side tensor value (shape + raw little-endian bytes).
+///
+/// Fully functional in the stub: construction, cloning, readback and
+/// the 1-tuple unwrap all behave like the real binding.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from a dtype, shape and raw bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let ElementType::F32 = ty;
+        let n: usize = shape.iter().product();
+        if n * 4 != data.len() {
+            return Err(Error(format!(
+                "shape {shape:?} needs {} bytes, got {}",
+                n * 4,
+                data.len()
+            )));
+        }
+        Ok(Literal { shape: shape.to_vec(), bytes: data.to_vec() })
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Read the buffer back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.bytes.chunks_exact(T::SIZE).map(T::from_le).collect())
+    }
+
+    /// Unwrap a 1-tuple result (the exporter emits `return_tuple=True`).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO *text* file. Stub: always errors (no XLA parser).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        no_runtime()
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host [`Literal`]. Stub: always errors.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_runtime()
+    }
+}
+
+/// A compiled executable. Stub: can never be constructed successfully.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on the device; outer vec is per-device, inner per-output.
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_runtime()
+    }
+}
+
+/// The PJRT client. Stub: [`PjRtClient::cpu`] explains how to link a
+/// real runtime.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Connect to the CPU PJRT plugin. Stub: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        no_runtime()
+    }
+
+    /// Platform name of the connected device.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client. Stub: always errors.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_runtime()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &data).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[7], &data).is_err());
+    }
+
+    #[test]
+    fn client_errors_actionably() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("--backend native"), "{err}");
+    }
+}
