@@ -83,7 +83,7 @@ fn pallas_crosscheck(coord: &Coordinator, model: &str) -> Result<()> {
     let n = arch.prunable.len();
     let bits = vec![6.0f32; n];
     let lax = InferenceSession::open(
-        BackendKind::Pjrt, &arch, Some(&hlo), &data, Split::Test, 128, None,
+        BackendKind::Pjrt, &arch, Some(&hlo), &data, Split::Test, 128, None, 1,
     )?;
     let pal = InferenceSession::open(
         BackendKind::Pjrt,
@@ -93,6 +93,7 @@ fn pallas_crosscheck(coord: &Coordinator, model: &str) -> Result<()> {
         Split::Test,
         128,
         Some(entry.pallas_batch),
+        1,
     )?;
     let acc_lax = lax.accuracy(&weights, &bits)?;
     let acc_pal = pal.accuracy(&weights, &bits)?;

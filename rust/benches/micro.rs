@@ -10,8 +10,11 @@ use hapq::env::Action;
 use hapq::hw::dataflow::{map_layer, LayerDims};
 use hapq::hw::mac_sim::RqTable;
 use hapq::hw::Accel;
+use hapq::io::json;
+use hapq::model::{ModelArch, Weights};
 use hapq::pruning::{prune, PruneAlg, PruneCtx};
 use hapq::quant::quantize_weights;
+use hapq::runtime::{EvalData, InferenceBackend, NativeBackend};
 use hapq::tensor::Tensor;
 use hapq::util::rng::Rng;
 
@@ -87,6 +90,9 @@ fn main() {
         rb.update();
     });
 
+    // --- exec engine: incremental + threaded oracle (artifact-free) ---
+    engine_rows();
+
     // --- full env step & episode (needs artifacts) ---
     if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
         let mut env = coord.build_env("vgg11").unwrap();
@@ -109,4 +115,93 @@ fn main() {
     } else {
         println!("(artifacts missing — skipping env-level timings)");
     }
+}
+
+/// Synthetic 5-node conv net (16x16x3, 64 examples) timing the
+/// `runtime/exec` engine: full recompute vs incremental resume vs a
+/// multi-thread pool — the §Perf evidence that ships with CI, no
+/// artifacts needed. Results are bit-identical across all three rows.
+fn engine_rows() {
+    const ARCH: &str = r#"{
+      "name": "bench5", "dataset": "synth-bench", "input": [16, 16, 3],
+      "classes": 10, "batch": 32,
+      "layers": [
+        {"name": "c1", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+         "relu": true, "in_shape": [16,16,3], "out_shape": [16,16,16],
+         "in_ch": 3, "out_ch": 16},
+        {"name": "c2", "op": "conv", "inputs": ["c1"], "k": 3, "stride": 1,
+         "relu": true, "in_shape": [16,16,16], "out_shape": [16,16,16],
+         "in_ch": 16, "out_ch": 16},
+        {"name": "c3", "op": "conv", "inputs": ["c2"], "k": 3, "stride": 2,
+         "relu": true, "in_shape": [16,16,16], "out_shape": [8,8,16],
+         "in_ch": 16, "out_ch": 16},
+        {"name": "gap", "op": "gap", "inputs": ["c3"], "in_shape": [8,8,16],
+         "out_shape": [16]},
+        {"name": "f1", "op": "fc", "inputs": ["gap"], "relu": false,
+         "in_shape": [16], "out_shape": [10], "in_ch": 16, "out_ch": 10}
+      ],
+      "prunable": ["c1", "c2", "c3", "f1"],
+      "dep_groups": [],
+      "act_scales": [0.5, 0.5, 0.5, 0.5],
+      "act_signed": [true, false, false, false],
+      "acc_int8": 0.0, "n_params": 0
+    }"#;
+    let arch = ModelArch::from_json(&json::parse(ARCH).unwrap()).unwrap();
+    let mut rng = Rng::new(17);
+    let mut rand_t = |shape: Vec<usize>| {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| (rng.normal() * 0.3) as f32).collect())
+    };
+    let weights = Weights {
+        w: vec![
+            rand_t(vec![3, 3, 3, 16]),
+            rand_t(vec![3, 3, 16, 16]),
+            rand_t(vec![3, 3, 16, 16]),
+            rand_t(vec![16, 10]),
+        ],
+        b: vec![
+            rand_t(vec![16]),
+            rand_t(vec![16]),
+            rand_t(vec![16]),
+            rand_t(vec![10]),
+        ],
+        sal: vec![
+            Tensor::full(vec![3, 3, 3, 16], 1.0),
+            Tensor::full(vec![3, 3, 16, 16], 1.0),
+            Tensor::full(vec![3, 3, 16, 16], 1.0),
+            Tensor::full(vec![16, 10], 1.0),
+        ],
+        chsq: vec![vec![1.0; 16], vec![1.0; 16], vec![1.0; 16], vec![1.0; 10]],
+    };
+    let n_ex = 64;
+    let images = rand_t(vec![n_ex, 16, 16, 3]);
+    let labels: Vec<i64> = (0..n_ex).map(|i| (i % 10) as i64).collect();
+    let mk_backend = |threads: usize| {
+        let data = EvalData::from_arrays(&arch, &images, &labels, n_ex, arch.batch).unwrap();
+        NativeBackend::with_threads(&arch, data, threads).unwrap()
+    };
+    let bits = [6.0f32, 6.0, 6.0, 6.0];
+
+    let b1 = mk_backend(1);
+    time("oracle full recompute (5-node, 64 ex)", 10, || {
+        b1.invalidate_all();
+        std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
+    });
+    time("oracle incremental, last layer dirty", 10, || {
+        b1.invalidate(3);
+        std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
+    });
+    time("oracle incremental, mid layer dirty", 10, || {
+        b1.invalidate(1);
+        std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
+    });
+    let b4 = mk_backend(4);
+    time("oracle full recompute, 4 threads", 10, || {
+        b4.invalidate_all();
+        std::hint::black_box(b4.accuracy(&weights, &bits).unwrap());
+    });
+    time("oracle incremental + 4 threads, mid dirty", 10, || {
+        b4.invalidate(1);
+        std::hint::black_box(b4.accuracy(&weights, &bits).unwrap());
+    });
 }

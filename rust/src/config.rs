@@ -29,6 +29,8 @@ pub struct RunConfig {
     pub mac_samples: usize,
     /// which inference backend answers accuracy queries (`--backend`)
     pub backend: BackendKind,
+    /// oracle worker threads (`--threads`; default `HAPQ_THREADS` or 1)
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -43,6 +45,7 @@ impl Default for RunConfig {
             seed: 42,
             mac_samples: 4000,
             backend: BackendKind::Native,
+            threads: crate::runtime::exec::default_threads(),
         }
     }
 }
@@ -114,6 +117,7 @@ impl Cli {
             seed: self.u64_flag("seed", d.seed)?,
             mac_samples: self.usize_flag("mac-samples", d.mac_samples)?,
             backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
+            threads: self.usize_flag("threads", d.threads)?.max(1),
         })
     }
 }
@@ -158,5 +162,17 @@ mod tests {
         // default is native
         let c = Cli::parse(&args("compress")).unwrap();
         assert_eq!(c.run_config().unwrap().backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn threads_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --threads 3")).unwrap();
+        assert_eq!(c.run_config().unwrap().threads, 3);
+        // zero is clamped to one worker
+        let c = Cli::parse(&args("compress --threads 0")).unwrap();
+        assert_eq!(c.run_config().unwrap().threads, 1);
+        // default comes from HAPQ_THREADS (or 1) — always at least one
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert!(c.run_config().unwrap().threads >= 1);
     }
 }

@@ -79,6 +79,10 @@ pub struct RunReport {
     pub evals: u64,
     /// wall-clock seconds of the whole run
     pub wall_secs: f64,
+    /// oracle worker threads that served the reward queries
+    pub threads: usize,
+    /// activation-cache hit rate of the reward oracle over the run (0..1)
+    pub cache_hit_rate: f64,
     /// episode-reward curve (ours only)
     pub reward_curve: Vec<f64>,
 }
@@ -117,6 +121,8 @@ impl RunReport {
             ("episodes", num(self.episodes as f64)),
             ("evals", num(self.evals as f64)),
             ("wall_secs", num(self.wall_secs)),
+            ("threads", num(self.threads as f64)),
+            ("cache_hit_rate", num(self.cache_hit_rate)),
             ("per_layer", arr(layers)),
             (
                 "reward_curve",
@@ -189,6 +195,7 @@ impl Coordinator {
             split,
             limit,
             None,
+            self.cfg.threads,
         )
     }
 
@@ -312,6 +319,7 @@ impl Coordinator {
 
         let test = self.test_session(model)?;
         let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
+        let stats = env.session_stats();
         let e = self.entry(model)?;
         Ok(RunReport {
             model: model.to_string(),
@@ -323,6 +331,8 @@ impl Coordinator {
             episodes,
             evals: env.n_evals,
             wall_secs: t0.elapsed().as_secs_f64(),
+            threads: stats.threads,
+            cache_hit_rate: stats.cache_hit_rate(),
             reward_curve: curve,
         })
     }
@@ -361,6 +371,7 @@ impl Coordinator {
         };
         let test = self.test_session(model)?;
         let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
+        let stats = env.session_stats();
         let e = self.entry(model)?;
         Ok(RunReport {
             model: model.to_string(),
@@ -372,6 +383,8 @@ impl Coordinator {
             episodes,
             evals: env.n_evals,
             wall_secs: t0.elapsed().as_secs_f64(),
+            threads: stats.threads,
+            cache_hit_rate: stats.cache_hit_rate(),
             reward_curve: vec![],
         })
     }
@@ -447,5 +460,38 @@ mod tests {
     fn rss_readable() {
         assert!(rss_kib() > 0);
         assert!(max_rss_kib() >= rss_kib() / 2);
+    }
+
+    #[test]
+    fn report_json_records_threads_and_cache_hit_rate() {
+        // measurement conventions (EXPERIMENTS.md): every run JSON must
+        // carry the oracle's thread count and cache hit rate so
+        // Table 3/4-style wall-clock comparisons stay honest
+        let r = RunReport {
+            model: "m".into(),
+            dataset: "d".into(),
+            method: "ours".into(),
+            best: Solution {
+                per_layer: vec![],
+                actions: vec![],
+                accuracy: 0.5,
+                acc_loss: 0.1,
+                energy_gain: 0.2,
+                latency_gain: 0.15,
+                reward: 1.0,
+            },
+            test_acc_dense: 0.9,
+            test_acc: 0.8,
+            episodes: 1,
+            evals: 2,
+            wall_secs: 0.1,
+            threads: 4,
+            cache_hit_rate: 0.75,
+            reward_curve: vec![],
+        };
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(v.req("threads").unwrap().as_f64().unwrap(), 4.0);
+        let hit = v.req("cache_hit_rate").unwrap().as_f64().unwrap();
+        assert!((hit - 0.75).abs() < 1e-9);
     }
 }

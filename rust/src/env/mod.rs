@@ -33,6 +33,24 @@ pub const MAX_RATIO: f64 = 0.9;
 /// (eq. 1/2) with the 2-d previous action appended.
 pub const STATE_DIM: usize = 14;
 
+/// Cumulative wall-clock of each [`CompressionEnv::step`] phase, the
+/// substrate of `hapq perf`'s per-phase breakdown (EXPERIMENTS.md
+/// §Perf). Timing costs two `Instant::now` calls per phase — noise
+/// next to even the cheapest phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimers {
+    /// §4.1 resolution + pruning, seconds
+    pub prune_s: f64,
+    /// post-prune weight quantization, seconds
+    pub quant_s: f64,
+    /// energy/latency model queries, seconds
+    pub energy_s: f64,
+    /// validation inference (the accuracy oracle), seconds
+    pub infer_s: f64,
+    /// steps accumulated into the totals above
+    pub steps: u64,
+}
+
 /// Hardware metric driving the reward (§4.2.3: "any other hardware
 /// metric (e.g., latency) is seamlessly supported").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,6 +156,8 @@ pub struct CompressionEnv {
     pub baseline_acc: f64,
     /// which hardware gain feeds the reward (default: energy, as the paper)
     pub metric: Metric,
+    /// per-phase step wall-clock (`hapq perf` breakdown)
+    pub timers: PhaseTimers,
     group_of: Vec<usize>,
 
     // episode state
@@ -200,6 +220,7 @@ impl CompressionEnv {
             lut: RewardLut::paper(),
             baseline_acc,
             metric: Metric::Energy,
+            timers: PhaseTimers::default(),
             group_of,
             work,
             cfgs: vec![Compression::dense(); n],
@@ -295,6 +316,7 @@ impl CompressionEnv {
         let sparsity_target = action.sparsity();
         let bits = action.precision();
 
+        let ph0 = std::time::Instant::now();
         let (alg, forced_mask, mut overridden) = self.resolve(t, want_alg);
         let result = if let Some((ratio, chans)) = forced_mask {
             let _ = ratio;
@@ -316,7 +338,9 @@ impl CompressionEnv {
             r
         };
         // §4.1: quantization second, on the pruned weights
+        let ph1 = std::time::Instant::now();
         quantize_weights(&mut self.work.w[t], bits);
+        let ph2 = std::time::Instant::now();
         self.session.invalidate(t);
         self.act_bits[t] = bits as f32;
         let sparsity = result.sparsity;
@@ -336,7 +360,14 @@ impl CompressionEnv {
             Metric::Latency => latency_gain,
             Metric::Edp => 1.0 - (1.0 - energy_gain) * (1.0 - latency_gain),
         };
+        let ph3 = std::time::Instant::now();
         let accuracy = self.session.accuracy(&self.work, &self.act_bits)?;
+        let ph4 = std::time::Instant::now();
+        self.timers.prune_s += (ph1 - ph0).as_secs_f64();
+        self.timers.quant_s += (ph2 - ph1).as_secs_f64();
+        self.timers.energy_s += (ph3 - ph2).as_secs_f64();
+        self.timers.infer_s += (ph4 - ph3).as_secs_f64();
+        self.timers.steps += 1;
         self.n_evals += 1;
         let acc_loss = (self.baseline_acc - accuracy).max(0.0);
         let reward = self.lut.reward(acc_loss, hw_gain);
@@ -379,6 +410,12 @@ impl CompressionEnv {
     /// The untouched dense weights (analytical baselines read these).
     pub fn dense_weights(&self) -> &Weights {
         &self.dense
+    }
+
+    /// Execution statistics of the accuracy oracle serving this env
+    /// (threads, activation-cache hit rate) — recorded in run JSON.
+    pub fn session_stats(&self) -> crate::runtime::RuntimeStats {
+        self.session.stats()
     }
 
     /// Evaluate an arbitrary full configuration in one shot (used by the

@@ -22,6 +22,9 @@
 //! accuracy-oracle executor: `native` (default) interprets the model
 //! graph in pure Rust; `pjrt` runs the AOT-compiled HLO through the
 //! XLA PJRT C API and needs a binary built with `--features pjrt`.
+//! `--threads N` (default: `HAPQ_THREADS` or 1) sizes the native
+//! engine's evaluation worker pool — results are bit-identical at any
+//! thread count.
 
 use std::time::Instant;
 
@@ -48,7 +51,7 @@ fn print_help() {
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
          fig5, fig8, perf\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
-         --reward-subset N --model NAME --backend native|pjrt"
+         --reward-subset N --model NAME --backend native|pjrt --threads N"
     );
 }
 
@@ -299,7 +302,7 @@ hotspots holding 50% of energy: {hs:?}");
             let model = cli.str_flag("model", "vgg11");
             let mut env = coord.build_env(&model)?;
             let n = env.n_layers();
-            // reward-oracle latency
+            // reward-oracle latency, phase-accounted (EXPERIMENTS.md §Perf)
             let t0 = Instant::now();
             let iters = 10;
             for i in 0..iters {
@@ -313,13 +316,30 @@ hotspots holding 50% of energy: {hs:?}");
                 env.evaluate_config(&actions)?;
             }
             let per_ep = t0.elapsed().as_secs_f64() / iters as f64;
+            let t = env.timers;
+            let steps = t.steps.max(1) as f64;
+            let stats = env.session_stats();
             println!(
-                "{model}: episode {:.1} ms ({} layers, {:.1} ms/step incl. {} inference), rss {} MiB",
+                "{model}: episode {:.1} ms ({} layers, {:.2} ms/step), backend {}, threads {}, rss {} MiB",
                 per_ep * 1e3,
                 n,
                 per_ep * 1e3 / n as f64,
                 coord.cfg.backend.name(),
+                stats.threads,
                 hapq::coordinator::rss_kib() / 1024
+            );
+            println!(
+                "  per-step phases: prune {:.3} ms | quant {:.3} ms | energy {:.3} ms | inference {:.3} ms",
+                t.prune_s * 1e3 / steps,
+                t.quant_s * 1e3 / steps,
+                t.energy_s * 1e3 / steps,
+                t.infer_s * 1e3 / steps
+            );
+            println!(
+                "  oracle cache: hit-rate {:.1}% ({} layers computed, {} reused)",
+                stats.cache_hit_rate() * 100.0,
+                stats.layers_computed,
+                stats.layers_reused
             );
             Ok(())
         }

@@ -1,0 +1,100 @@
+//! Per-shard activation checkpoint cache: records every graph node's
+//! post-op feature map along the exported topological order and resumes
+//! the forward pass from the first dirty layer on the next query.
+//!
+//! Correctness across branches: a slot is recomputed iff its layer was
+//! invalidated, it was never computed, or **any** of its input slots
+//! was recomputed this query. Because the graph is walked in
+//! topological order, dirtiness propagates through residual adds and
+//! channel concats exactly as data does — a dirty layer dirties
+//! everything downstream, and nothing else.
+
+use anyhow::Result;
+
+use crate::runtime::native::{eval_layer, quant_params, Feat, LayerParams};
+use crate::runtime::top1_correct;
+
+use super::pool::Job;
+use super::{Plan, Shard};
+
+/// What one shard evaluation returns to the pool.
+pub(crate) struct ShardOutcome {
+    /// rows whose argmax matched the label
+    pub correct: usize,
+    /// graph layers recomputed this query
+    pub computed: u64,
+    /// graph layers served from the checkpoint cache
+    pub reused: u64,
+    /// final-layer activations, `[rows, classes]` row-major — empty
+    /// unless the job asked for them (`Job::want_logits`)
+    pub logits: Vec<f32>,
+}
+
+/// The checkpoint cache: one feature-map slot per graph node
+/// (slot 0 = the shard's images, slot `li + 1` = layer `li`'s output).
+pub(crate) struct ActCache {
+    feats: Vec<Option<Feat>>,
+}
+
+impl ActCache {
+    /// Build the cache for one shard, moving the shard's image buffer
+    /// into the immutable slot 0 — the images never change, so the
+    /// engine side keeps a single copy per shard (the backend's
+    /// reference-forward path retains its own, see `NativeBackend`).
+    pub fn primed(plan: &Plan, shard: &mut Shard) -> ActCache {
+        let [h, w, c] = plan.input;
+        let images = std::mem::take(&mut shard.images);
+        let mut feats: Vec<Option<Feat>> = (0..plan.n_slots()).map(|_| None).collect();
+        feats[0] = Some(Feat { shape: vec![shard.rows, h, w, c], data: images });
+        ActCache { feats }
+    }
+
+    /// Evaluate the graph over one shard, resuming from the first
+    /// layer marked in `job.dirty_layers`.
+    pub fn eval(&mut self, plan: &Plan, shard: &Shard, job: &Job) -> Result<ShardOutcome> {
+        let n_slots = plan.n_slots();
+        let mut dirty = vec![false; n_slots];
+        let mut computed = 0u64;
+        let mut reused = 0u64;
+        for (li, layer) in plan.arch.layers.iter().enumerate() {
+            let slot = li + 1;
+            let needs = job.dirty_layers[li]
+                || self.feats[slot].is_none()
+                || plan.input_slots[li].iter().any(|&s| dirty[s]);
+            dirty[slot] = needs;
+            if !needs {
+                reused += 1;
+                continue;
+            }
+            let out = {
+                let ins: Vec<&Feat> = plan.input_slots[li]
+                    .iter()
+                    .map(|&s| {
+                        self.feats[s]
+                            .as_ref()
+                            .expect("topological order guarantees inputs are computed")
+                    })
+                    .collect();
+                let params = plan.prunable_of_layer[li].map(|i| LayerParams {
+                    w: &job.w[i],
+                    bias: &job.b[i].data,
+                    grid: quant_params(
+                        job.bits[i],
+                        plan.arch.act_scales[i],
+                        plan.arch.act_signed[i],
+                    ),
+                });
+                eval_layer(layer, params, &ins)?
+            };
+            self.feats[slot] = Some(out);
+            computed += 1;
+        }
+        let last = self.feats[n_slots - 1]
+            .as_ref()
+            .expect("final slot is computed or cached");
+        let classes = last.data.len() / shard.rows;
+        let correct = top1_correct(&last.data, classes, &shard.labels);
+        let logits = if job.want_logits { last.data.clone() } else { Vec::new() };
+        Ok(ShardOutcome { correct, computed, reused, logits })
+    }
+}

@@ -1,0 +1,404 @@
+//! Incremental, multi-threaded evaluation engine for the accuracy
+//! oracle — the machinery behind [`NativeBackend`](super::NativeBackend).
+//!
+//! The RL loop (Fig 3) mutates exactly ONE layer's weights per step and
+//! then asks for top-1 accuracy over the whole reward subset. The old
+//! interpreter recomputed the full forward pass, single-threaded, on
+//! every query; this engine exploits the two structural facts of that
+//! workload instead:
+//!
+//! 1. **Incremental re-inference** (`actcache`): every shard of the
+//!    evaluation data keeps an *activation checkpoint cache* — the
+//!    post-op feature map of every graph node, recorded along the
+//!    exported topological order. `invalidate(layer)` hints mark
+//!    layers dirty; the next query resumes the forward pass from the
+//!    first dirty layer, and dirtiness propagates through every
+//!    consumer, so branches (residual adds, channel concats) recompute
+//!    exactly when one of their inputs did.
+//! 2. **Data parallelism** (`pool`): evaluation examples are
+//!    independent, so the engine shards them across a long-lived,
+//!    std-only worker pool (no new dependencies — the crate's vendoring
+//!    policy). Each worker owns its shards' caches; one query is a
+//!    broadcast of the staged weights + dirty set, and the reduction
+//!    sums per-shard `top1_correct` counts. Every operator in the
+//!    interpreter treats examples independently, so the result is
+//!    **bit-identical at any thread count** (asserted by the property
+//!    tests in `tests/exec_engine.rs`).
+//!
+//! Weight staging mirrors the PJRT literal cache: the engine keeps an
+//! `Arc` snapshot per prunable layer and re-clones only layers that
+//! were invalidated (or whose activation precision changed — the
+//! engine diffs `act_bits` itself, so a forgotten hint on a pure
+//! precision change cannot produce stale results).
+
+pub(crate) mod actcache;
+pub(crate) mod pool;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{ModelArch, Weights};
+use crate::runtime::{EvalData, RuntimeStats};
+use crate::tensor::Tensor;
+
+use pool::{Job, Pool};
+
+/// Worker-thread default for new sessions: the `HAPQ_THREADS`
+/// environment variable when set to a positive integer, else 1. The
+/// engine is bit-identical at any thread count; EXPERIMENTS.md §Perf
+/// discusses when more threads pay.
+pub fn default_threads() -> usize {
+    std::env::var("HAPQ_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Immutable per-model execution plan shared by every worker: the graph
+/// in topological order plus the index maps the hot loop needs.
+pub(crate) struct Plan {
+    /// the architecture descriptor (layers, prunable order, act grids)
+    pub arch: ModelArch,
+    /// input geometry `[H, W, C]`
+    pub input: [usize; 3],
+    /// graph-layer index → feat-slot indices of its inputs (slot 0 = images)
+    pub input_slots: Vec<Vec<usize>>,
+    /// graph-layer index → prunable index (None for weightless ops)
+    pub prunable_of_layer: Vec<Option<usize>>,
+    /// prunable index → graph-layer index
+    pub layer_of_prunable: Vec<usize>,
+}
+
+impl Plan {
+    /// Number of feature-map slots: one per graph layer plus the input.
+    pub fn n_slots(&self) -> usize {
+        self.arch.layers.len() + 1
+    }
+
+    /// Resolve the graph topology once, up front. Errors on inputs that
+    /// are not defined before their consumers (the exporter guarantees
+    /// topological order) and on prunable ops missing from the
+    /// prunable list.
+    pub fn build(arch: &ModelArch, input: [usize; 3]) -> Result<Plan> {
+        let mut slot_of: HashMap<&str, usize> = HashMap::new();
+        slot_of.insert("input", 0);
+        let mut input_slots = Vec::with_capacity(arch.layers.len());
+        let mut prunable_of_layer = Vec::with_capacity(arch.layers.len());
+        for (li, layer) in arch.layers.iter().enumerate() {
+            let slots = layer
+                .inputs
+                .iter()
+                .map(|n| {
+                    slot_of.get(n.as_str()).copied().ok_or_else(|| {
+                        anyhow!(
+                            "layer `{}` input `{n}` is not defined before it \
+                             (graph must be topologically ordered)",
+                            layer.name
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            input_slots.push(slots);
+            prunable_of_layer.push(if layer.op.prunable() {
+                Some(arch.prunable_idx.get(&layer.name).copied().ok_or_else(|| {
+                    anyhow!("prunable-op layer `{}` missing from the prunable list", layer.name)
+                })?)
+            } else {
+                None
+            });
+            slot_of.insert(layer.name.as_str(), li + 1);
+        }
+        let layer_of_prunable = arch
+            .prunable
+            .iter()
+            .map(|n| {
+                arch.layers
+                    .iter()
+                    .position(|l| &l.name == n)
+                    .ok_or_else(|| anyhow!("prunable layer `{n}` not in the graph"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Plan {
+            arch: arch.clone(),
+            input,
+            input_slots,
+            prunable_of_layer,
+            layer_of_prunable,
+        })
+    }
+}
+
+/// One worker-owned slice of the evaluation data: a contiguous run of
+/// real (non-padded) examples with their labels.
+pub(crate) struct Shard {
+    /// number of examples in this shard
+    pub rows: usize,
+    /// flattened `[rows, H, W, C]` images; the worker moves this buffer
+    /// into its activation cache's slot 0 at startup (single resident
+    /// copy per shard)
+    pub images: Vec<f32>,
+    /// ground-truth labels, length `rows`
+    pub labels: Vec<i64>,
+}
+
+/// Split the batched evaluation data into at least `threads` shards
+/// (where the row counts allow), preserving example order. Padded tail
+/// rows are dropped — the engine never computes them.
+fn build_shards(data: &EvalData, threads: usize) -> Vec<Shard> {
+    let [h, w, c] = data.input;
+    let per = h * w * c;
+    let n_units = data.label_batches.len().max(1);
+    let chunks_per_unit = threads.div_ceil(n_units).max(1);
+    let mut shards = Vec::new();
+    for (bi, labels) in data.label_batches.iter().enumerate() {
+        let rows = labels.len();
+        if rows == 0 {
+            continue;
+        }
+        let images = &data.image_batches[bi];
+        let k = chunks_per_unit.min(rows);
+        let base = rows / k;
+        let extra = rows % k;
+        let mut start = 0usize;
+        for ci in 0..k {
+            let len = base + usize::from(ci < extra);
+            shards.push(Shard {
+                rows: len,
+                images: images[start * per..(start + len) * per].to_vec(),
+                labels: labels[start..start + len].to_vec(),
+            });
+            start += len;
+        }
+    }
+    shards
+}
+
+/// Mutable engine state behind the `&self` backend API: the staged
+/// weight snapshot, the pending dirty hints, and the cache statistics.
+struct EngineState {
+    staged_w: Vec<Arc<Tensor>>,
+    staged_b: Vec<Arc<Tensor>>,
+    last_bits: Vec<f32>,
+    marked: Vec<bool>,
+    all_dirty: bool,
+    computed: u64,
+    reused: u64,
+}
+
+/// What one engine evaluation produces.
+struct EvalOut {
+    correct: usize,
+    logits: Vec<f32>,
+}
+
+/// The evaluation engine: an execution plan, a worker pool holding
+/// per-shard activation caches, and the staged-weights state.
+pub struct Engine {
+    plan: Arc<Plan>,
+    pool: Pool,
+    state: Mutex<EngineState>,
+    threads: usize,
+    n_examples: usize,
+    n_prunable: usize,
+}
+
+impl Engine {
+    /// Build the engine: resolve the plan, shard the data, spawn the
+    /// worker pool (`threads` is clamped to ≥ 1).
+    pub fn new(arch: &ModelArch, data: &EvalData, threads: usize) -> Result<Engine> {
+        let threads = threads.max(1);
+        let n = arch.prunable.len();
+        // the engine consumes the calibration vectors, so it owns the
+        // one authoritative length check
+        if arch.act_scales.len() != n {
+            bail!(
+                "arch `{}` has {} act_scales for {n} prunable layers — \
+                 the native backend needs the calibration scales from the \
+                 arch descriptor",
+                arch.name,
+                arch.act_scales.len()
+            );
+        }
+        if arch.act_signed.len() != n {
+            bail!("arch `{}` act_signed length mismatch", arch.name);
+        }
+        let plan = Arc::new(Plan::build(arch, data.input)?);
+        let shards = build_shards(data, threads);
+        let mut sets: Vec<Vec<(usize, Shard)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (gi, shard) in shards.into_iter().enumerate() {
+            sets[gi % threads].push((gi, shard));
+        }
+        let pool = Pool::spawn(plan.clone(), sets);
+        Ok(Engine {
+            plan,
+            pool,
+            state: Mutex::new(EngineState {
+                staged_w: Vec::new(),
+                staged_b: Vec::new(),
+                last_bits: Vec::new(),
+                marked: vec![false; n],
+                all_dirty: true,
+                computed: 0,
+                reused: 0,
+            }),
+            threads,
+            n_examples: data.n_examples,
+            n_prunable: n,
+        })
+    }
+
+    /// Top-1 accuracy of `weights` + `act_bits` over every shard.
+    /// The hot path: no logits are copied out of the workers.
+    pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
+        let out = self.eval(weights, act_bits, false)?;
+        Ok(out.correct as f64 / self.n_examples as f64)
+    }
+
+    /// Final-layer logits for every real example, concatenated in
+    /// example order (tests compare this bitwise across thread counts
+    /// and against the from-scratch reference forward).
+    pub fn logits(&self, weights: &Weights, act_bits: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.eval(weights, act_bits, true)?.logits)
+    }
+
+    /// Mark one prunable layer's staged weights dirty.
+    pub fn invalidate(&self, layer: usize) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if layer < st.marked.len() {
+            st.marked[layer] = true;
+        }
+    }
+
+    /// Mark everything dirty (episode reset / unknown provenance).
+    pub fn invalidate_all(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.all_dirty = true;
+    }
+
+    /// Worker count and cumulative cache statistics.
+    pub fn stats(&self) -> RuntimeStats {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        RuntimeStats {
+            threads: self.threads,
+            layers_computed: st.computed,
+            layers_reused: st.reused,
+        }
+    }
+
+    /// Worker threads serving this engine.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn eval(&self, weights: &Weights, act_bits: &[f32], want_logits: bool) -> Result<EvalOut> {
+        let n = self.n_prunable;
+        if act_bits.len() != n {
+            bail!("act_bits len {} vs {n} prunable", act_bits.len());
+        }
+        if weights.w.len() != n {
+            bail!("weights hold {} layers vs {n} prunable", weights.w.len());
+        }
+        if weights.b.len() != n {
+            bail!("weights hold {} biases vs {n} prunable", weights.b.len());
+        }
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let fresh = st.all_dirty || st.staged_w.len() != n;
+        let dirty_p: Vec<bool> = if fresh {
+            vec![true; n]
+        } else {
+            (0..n).map(|i| st.marked[i] || st.last_bits[i] != act_bits[i]).collect()
+        };
+        // restage: re-clone only dirty layers (first call stages all)
+        if st.staged_w.len() != n {
+            st.staged_w = weights.w.iter().map(|t| Arc::new(t.clone())).collect();
+            st.staged_b = weights.b.iter().map(|t| Arc::new(t.clone())).collect();
+        } else {
+            for (i, dirty) in dirty_p.iter().enumerate() {
+                if *dirty {
+                    st.staged_w[i] = Arc::new(weights.w[i].clone());
+                    st.staged_b[i] = Arc::new(weights.b[i].clone());
+                }
+            }
+        }
+        st.last_bits = act_bits.to_vec();
+        st.marked.iter_mut().for_each(|m| *m = false);
+        st.all_dirty = false;
+
+        let mut dirty_layers = vec![false; self.plan.arch.layers.len()];
+        for (i, dirty) in dirty_p.iter().enumerate() {
+            if *dirty {
+                dirty_layers[self.plan.layer_of_prunable[i]] = true;
+            }
+        }
+        let job = Arc::new(Job {
+            w: st.staged_w.clone(),
+            b: st.staged_b.clone(),
+            bits: st.last_bits.clone(),
+            dirty_layers,
+            want_logits,
+        });
+        match self.pool.run(job) {
+            Ok(agg) => {
+                st.computed += agg.computed;
+                st.reused += agg.reused;
+                Ok(EvalOut { correct: agg.correct, logits: agg.logits })
+            }
+            Err(e) => {
+                // a failed query leaves worker caches in unknown states;
+                // force a full recompute on the next one
+                st.all_dirty = true;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_resolves_toy_graph_topology() {
+        let arch = crate::model::tests::toy_arch();
+        let plan = Plan::build(&arch, [8, 8, 3]).unwrap();
+        // toy graph: input -> c1 -> d1 -> gap -> f1
+        assert_eq!(plan.n_slots(), 5);
+        assert_eq!(plan.input_slots[0], vec![0]); // c1 <- input
+        assert_eq!(plan.input_slots[3], vec![3]); // f1 <- gap
+        assert_eq!(plan.layer_of_prunable, vec![0, 1, 3]);
+        assert_eq!(plan.prunable_of_layer, vec![Some(0), Some(1), None, Some(2)]);
+    }
+
+    #[test]
+    fn shards_cover_examples_in_order_and_split_for_threads() {
+        let arch = crate::model::tests::toy_arch();
+        let per = 8 * 8 * 3;
+        let n = 5;
+        let images = crate::tensor::Tensor::new(
+            vec![n, 8, 8, 3],
+            (0..n * per).map(|i| i as f32).collect(),
+        );
+        let labels = vec![0i64, 1, 2, 3, 4];
+        let data = EvalData::from_arrays(&arch, &images, &labels, 100, 2).unwrap();
+        // 3 batches of real rows [2, 2, 1]; 2 threads keep them whole
+        let s2 = build_shards(&data, 2);
+        assert_eq!(s2.iter().map(|s| s.rows).collect::<Vec<_>>(), vec![2, 2, 1]);
+        // 4 threads split each 2-row batch into single-row shards
+        let s4 = build_shards(&data, 4);
+        assert_eq!(s4.iter().map(|s| s.rows).collect::<Vec<_>>(), vec![1, 1, 1, 1, 1]);
+        // example order and content survive any sharding
+        let flat: Vec<i64> = s4.iter().flat_map(|s| s.labels.clone()).collect();
+        assert_eq!(flat, labels);
+        assert_eq!(s4[1].images, images.data[per..2 * per]);
+        // padded tail rows are dropped, never computed
+        assert_eq!(s2.iter().map(|s| s.rows).sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn default_threads_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Std-only long-lived worker pool: one thread per shard set, each
+//! owning its shards' activation caches for the lifetime of the
+//! engine. A query is a broadcast of one [`Job`] (staged weights +
+//! dirty layers) over per-worker channels; the reduction sums the
+//! per-shard `top1_correct` counts and cache statistics. No external
+//! dependencies — `std::sync::mpsc` + `std::thread`, matching the
+//! crate's vendoring policy.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+use super::actcache::ActCache;
+use super::{Plan, Shard};
+
+/// One broadcast evaluation request: the engine's staged per-layer
+/// weight snapshot plus the dirty set for this query.
+pub(crate) struct Job {
+    /// staged weight tensors, prunable order
+    pub w: Vec<Arc<Tensor>>,
+    /// staged bias tensors, prunable order
+    pub b: Vec<Arc<Tensor>>,
+    /// activation precisions, prunable order
+    pub bits: Vec<f32>,
+    /// per graph layer: invalidated since the last query
+    pub dirty_layers: Vec<bool>,
+    /// collect final-layer logits? accuracy queries (the RL hot path)
+    /// leave this false and skip the per-example copy entirely
+    pub want_logits: bool,
+}
+
+/// One worker's fold over its shards.
+#[derive(Default)]
+pub(crate) struct Partial {
+    /// correctly classified rows
+    pub correct: usize,
+    /// graph layers recomputed
+    pub computed: u64,
+    /// graph layers served from cache
+    pub reused: u64,
+    /// `(shard index, final-layer logits)` per owned shard
+    pub shards: Vec<(usize, Vec<f32>)>,
+}
+
+struct Reply {
+    result: Result<Partial>,
+}
+
+/// The reduction of every worker's [`Partial`] for one query.
+pub(crate) struct Aggregate {
+    /// correctly classified rows over all shards
+    pub correct: usize,
+    /// graph layers recomputed over all shards
+    pub computed: u64,
+    /// graph layers served from cache over all shards
+    pub reused: u64,
+    /// final-layer logits concatenated in example order
+    pub logits: Vec<f32>,
+}
+
+/// The pool: job senders + the shared reply channel + join handles.
+pub(crate) struct Pool {
+    txs: Vec<Sender<Arc<Job>>>,
+    rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn one worker per shard set. Workers build their caches once
+    /// and then serve queries until the pool is dropped.
+    pub fn spawn(plan: Arc<Plan>, sets: Vec<Vec<(usize, Shard)>>) -> Pool {
+        let (rtx, rx) = channel();
+        let mut txs = Vec::with_capacity(sets.len());
+        let mut handles = Vec::with_capacity(sets.len());
+        for set in sets {
+            let (tx, jrx) = channel::<Arc<Job>>();
+            let plan = plan.clone();
+            let rtx = rtx.clone();
+            handles.push(std::thread::spawn(move || worker_loop(plan, set, jrx, rtx)));
+            txs.push(tx);
+        }
+        Pool { txs, rx, handles }
+    }
+
+    /// Broadcast one job to every worker and fold the partial results.
+    /// Exactly one reply per worker is consumed, so queries cannot
+    /// interleave (the engine additionally serializes callers).
+    pub fn run(&self, job: Arc<Job>) -> Result<Aggregate> {
+        // drop any stale replies a previously failed dispatch left behind
+        while self.rx.try_recv().is_ok() {}
+        for tx in &self.txs {
+            tx.send(job.clone())
+                .map_err(|_| anyhow!("evaluation worker channel closed"))?;
+        }
+        let mut correct = 0usize;
+        let mut computed = 0u64;
+        let mut reused = 0u64;
+        let mut parts: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..self.txs.len() {
+            match self.rx.recv() {
+                Ok(reply) => match reply.result {
+                    Ok(p) => {
+                        correct += p.correct;
+                        computed += p.computed;
+                        reused += p.reused;
+                        parts.extend(p.shards);
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                },
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("evaluation worker terminated unexpectedly"));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        parts.sort_by_key(|(gi, _)| *gi);
+        let logits = parts.into_iter().flat_map(|(_, l)| l).collect();
+        Ok(Aggregate { correct, computed, reused, logits })
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // closing the job channels ends every worker's recv loop
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fold one job over a worker's shards, updating the caches in place.
+fn eval_set(
+    plan: &Plan,
+    set: &[(usize, Shard)],
+    caches: &mut [ActCache],
+    job: &Job,
+) -> Result<Partial> {
+    let mut p = Partial::default();
+    for ((gi, shard), cache) in set.iter().zip(caches.iter_mut()) {
+        let out = cache.eval(plan, shard, job)?;
+        p.correct += out.correct;
+        p.computed += out.computed;
+        p.reused += out.reused;
+        if job.want_logits {
+            p.shards.push((*gi, out.logits));
+        }
+    }
+    Ok(p)
+}
+
+fn worker_loop(
+    plan: Arc<Plan>,
+    mut set: Vec<(usize, Shard)>,
+    jobs: Receiver<Arc<Job>>,
+    replies: Sender<Reply>,
+) {
+    let mut caches: Vec<ActCache> =
+        set.iter_mut().map(|(_, s)| ActCache::primed(&plan, s)).collect();
+    while let Ok(job) = jobs.recv() {
+        // a panic must not starve the engine's reply count — convert it
+        // into an error reply instead
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eval_set(&plan, &set, &mut caches, &job)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("evaluation worker panicked")));
+        if replies.send(Reply { result }).is_err() {
+            return; // engine dropped — shut down
+        }
+    }
+}

@@ -9,7 +9,9 @@
 //! * [`native::NativeBackend`] (default, pure Rust, zero FFI) — a
 //!   direct interpreter of the [`ModelArch`] graph over [`Weights`],
 //!   with the same fake-quant activation semantics the exported HLO
-//!   graphs encode (`python/compile/kernels/ref.py`);
+//!   graphs encode (`python/compile/kernels/ref.py`), driven by the
+//!   incremental, multi-threaded [`exec::Engine`] (activation
+//!   checkpoint cache + std-only worker pool, `--threads N`);
 //! * `pjrt::PjrtBackend` (`--features pjrt`) — the AOT-compiled HLO
 //!   executed through the XLA PJRT C API, kept behind a feature gate
 //!   because the `xla` binding cannot be vendored.
@@ -20,6 +22,7 @@
 //! [`InferenceSession::open`], keyed by [`BackendKind`] (the CLI's
 //! `--backend` flag).
 
+pub mod exec;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -74,6 +77,37 @@ impl BackendKind {
     }
 }
 
+/// Execution statistics a backend may expose for perf reporting and
+/// the run-JSON measurement conventions (EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeStats {
+    /// worker threads answering accuracy queries
+    pub threads: usize,
+    /// graph-layer activations recomputed across all queries so far
+    pub layers_computed: u64,
+    /// graph-layer activations served from the checkpoint cache
+    pub layers_reused: u64,
+}
+
+impl Default for RuntimeStats {
+    fn default() -> Self {
+        RuntimeStats { threads: 1, layers_computed: 0, layers_reused: 0 }
+    }
+}
+
+impl RuntimeStats {
+    /// Fraction of layer evaluations served from the activation cache
+    /// (0 when no query has run yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.layers_computed + self.layers_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.layers_reused as f64 / total as f64
+        }
+    }
+}
+
 /// An executor that can score compressed weights — the reward oracle.
 ///
 /// Contract shared by all backends: one call evaluates the *whole*
@@ -82,7 +116,8 @@ impl BackendKind {
 /// the RL loop changes exactly one layer's weights per step, so a
 /// backend that marshals or stages per-layer state may keep it between
 /// calls and refresh only invalidated layers (the PJRT literal cache
-/// does; the native interpreter recomputes and ignores the hint).
+/// does; the native engine additionally resumes the forward pass from
+/// the first dirty layer and re-stages only dirty weight tensors).
 pub trait InferenceBackend {
     /// Top-1 accuracy of `weights` with per-layer activation precisions
     /// `act_bits` (length = number of prunable layers, values 2..=8).
@@ -105,6 +140,12 @@ pub trait InferenceBackend {
 
     /// Human-readable backend name for logs and reports.
     fn name(&self) -> &'static str;
+
+    /// Execution statistics (threads, activation-cache hit rate).
+    /// Backends without an incremental engine keep the default.
+    fn stats(&self) -> RuntimeStats {
+        RuntimeStats::default()
+    }
 }
 
 /// Batched evaluation data shared by every backend: images split into
@@ -214,8 +255,9 @@ pub fn top1_correct(logits: &[f32], classes: usize, labels: &[i64]) -> usize {
 ///
 /// Perf note (EXPERIMENTS.md §Perf): the RL loop changes exactly ONE
 /// layer's weights per step; [`Self::invalidate`] forwards that hint so
-/// caching backends (PJRT's per-layer literal cache) re-marshal only
-/// dirty layers on the next [`Self::accuracy`] call.
+/// caching backends refresh only dirty state on the next
+/// [`Self::accuracy`] call — the native engine resumes the forward
+/// pass from the first dirty layer, PJRT re-marshals dirty literals.
 pub struct InferenceSession {
     backend: Box<dyn InferenceBackend>,
     /// executor batch size
@@ -243,7 +285,9 @@ impl InferenceSession {
     /// [`BackendKind::Pjrt`], ignored by [`BackendKind::Native`].
     /// `batch` overrides the arch's executor batch size (the Pallas-path
     /// artifact is exported at a smaller batch); `None` uses
-    /// `arch.batch`.
+    /// `arch.batch`. `threads` sizes the native engine's worker pool
+    /// (`--threads`; clamped to ≥ 1, ignored by PJRT).
+    #[allow(clippy::too_many_arguments)]
     pub fn open(
         kind: BackendKind,
         arch: &ModelArch,
@@ -252,12 +296,15 @@ impl InferenceSession {
         split: Split,
         limit: usize,
         batch: Option<usize>,
+        threads: usize,
     ) -> Result<InferenceSession> {
         let batch = batch.unwrap_or(arch.batch);
         match kind {
             BackendKind::Native => {
                 let data = EvalData::load(arch, data_npz, split, limit, batch)?;
-                Ok(Self::from_backend(Box::new(NativeBackend::new(arch, data)?)))
+                Ok(Self::from_backend(Box::new(NativeBackend::with_threads(
+                    arch, data, threads,
+                )?)))
             }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
@@ -293,6 +340,12 @@ impl InferenceSession {
     /// Top-1 accuracy of the given compressed weights + activation bits.
     pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
         self.backend.accuracy(weights, act_bits)
+    }
+
+    /// Execution statistics of the backend (threads, cache hit rate) —
+    /// recorded in every run JSON and printed by `hapq perf`.
+    pub fn stats(&self) -> RuntimeStats {
+        self.backend.stats()
     }
 
     /// Name of the executing backend (`native` / `pjrt`).

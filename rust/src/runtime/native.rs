@@ -13,12 +13,15 @@
 //!
 //! Convolutions run as im2col + the row-skipping [`Mat`] matmul from
 //! [`crate::nn`] (post-ReLU activations are ~50% zeros, so the skip
-//! pays); depthwise convs use a direct loop (k is tiny). The
-//! interpreter recomputes the full forward per accuracy query and
-//! ignores the [`invalidate`](super::InferenceBackend::invalidate)
-//! cache hint — at mini-model scale the whole pass is cheaper than the
-//! bookkeeping, and EXPERIMENTS.md §Perf tracks the step latency that
-//! would justify revisiting that.
+//! pays); depthwise convs use a direct loop (k is tiny). Accuracy
+//! queries are answered by the incremental, multi-threaded
+//! [`Engine`](super::exec::Engine) (`runtime/exec`): per-shard
+//! activation checkpoint caches resume the forward pass from the first
+//! layer dirtied by an [`invalidate`](super::InferenceBackend::invalidate)
+//! hint, and shards evaluate in parallel across a std-only worker pool
+//! — bit-identical at any thread count. [`NativeBackend::logits`] keeps
+//! a stateless from-scratch forward as the reference path the engine is
+//! tested against (EXPERIMENTS.md §Perf).
 //!
 //! One deliberate numeric divergence: `jnp.round` rounds half to even,
 //! `f32::round` rounds half away from zero. The difference only
@@ -27,9 +30,11 @@
 
 use anyhow::{bail, Result};
 
-use super::{top1_correct, EvalData, InferenceBackend};
+use super::exec::{default_threads, Engine};
+use super::{EvalData, InferenceBackend, RuntimeStats};
 use crate::model::{Layer, ModelArch, Op, Weights};
 use crate::nn::mat::Mat;
+use crate::tensor::Tensor;
 
 /// Optimal clipping ratio α*/b for a Laplace(b) distribution, bits 2..8
 /// (Banner et al., NeurIPS 2019) — same table as the Python exporter.
@@ -69,9 +74,11 @@ fn same_pad(h: usize, k: usize, s: usize) -> (usize, usize) {
 }
 
 /// One intermediate activation: shape (leading dim = batch) + data.
-struct Feat {
-    shape: Vec<usize>,
-    data: Vec<f32>,
+pub(crate) struct Feat {
+    /// dimension sizes, batch first
+    pub shape: Vec<usize>,
+    /// row-major contiguous storage
+    pub data: Vec<f32>,
 }
 
 impl Feat {
@@ -123,7 +130,7 @@ fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
 }
 
 /// SAME-padded strided convolution via im2col + matmul; HWIO weights.
-fn conv2d(x: &Feat, w: &crate::tensor::Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
+fn conv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
     let (b, _, _, c) = x.nhwc()?;
     let [k, k2, cin, cout] = match w.shape[..] {
         [a, b2, c2, d2] => [a, b2, c2, d2],
@@ -141,7 +148,7 @@ fn conv2d(x: &Feat, w: &crate::tensor::Tensor, bias: &[f32], stride: usize) -> R
 }
 
 /// Depthwise convolution: `[k,k,1,C]` weights, `groups = C`.
-fn dwconv2d(x: &Feat, w: &crate::tensor::Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
+fn dwconv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
     let (b, h, wd, c) = x.nhwc()?;
     let [k, k2, one, cw] = match w.shape[..] {
         [a, b2, c2, d2] => [a, b2, c2, d2],
@@ -255,29 +262,148 @@ fn concat(ins: &[&Feat]) -> Result<Feat> {
     Ok(Feat { shape, data: out })
 }
 
-/// The pure-Rust accuracy oracle (see module docs).
+/// Per-layer parameters for evaluating one prunable op: the (possibly
+/// staged) weight/bias tensors and the input-activation fake-quant grid.
+pub(crate) struct LayerParams<'a> {
+    /// weight tensor (HWIO / `[k,k,1,C]` / `[in,out]`)
+    pub w: &'a Tensor,
+    /// bias vector
+    pub bias: &'a [f32],
+    /// `(lo, hi, step)` grid from [`quant_params`]
+    pub grid: (f32, f32, f32),
+}
+
+/// Evaluate one graph layer given its resolved input feature maps.
+/// `params` must be `Some` exactly for prunable ops (conv/dwconv/fc).
+/// Every operator treats batch rows independently, which is what makes
+/// the exec engine's sharding bit-identical at any thread count.
+pub(crate) fn eval_layer(
+    layer: &Layer,
+    params: Option<LayerParams<'_>>,
+    ins: &[&Feat],
+) -> Result<Feat> {
+    let x0 = *ins
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("layer `{}` has no inputs", layer.name))?;
+    let mut out = match layer.op {
+        Op::Conv | Op::DwConv | Op::Fc => {
+            let p = params.ok_or_else(|| {
+                anyhow::anyhow!("prunable layer `{}` evaluated without parameters", layer.name)
+            })?;
+            let (lo, hi, step) = p.grid;
+            match layer.op {
+                Op::Conv => {
+                    let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
+                    fake_quant(&mut xq.data, lo, hi, step);
+                    conv2d(&xq, p.w, p.bias, layer.stride)?
+                }
+                Op::DwConv => {
+                    let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
+                    fake_quant(&mut xq.data, lo, hi, step);
+                    dwconv2d(&xq, p.w, p.bias, layer.stride)?
+                }
+                _ => {
+                    // fc: flatten then fake-quantize, like the exporter
+                    let b = x0.shape[0];
+                    let n: usize = x0.shape[1..].iter().product();
+                    let mut flat = x0.data.clone();
+                    fake_quant(&mut flat, lo, hi, step);
+                    let (fin, fout) = match p.w.shape[..] {
+                        [fin, fout] => (fin, fout),
+                        _ => bail!(
+                            "fc `{}` weight must be [in,out], got {:?}",
+                            layer.name,
+                            p.w.shape
+                        ),
+                    };
+                    if fin != n {
+                        bail!(
+                            "fc `{}` weight {:?} does not fit input [{b}, {n}]",
+                            layer.name,
+                            p.w.shape
+                        );
+                    }
+                    let x = Mat::from_vec(b, n, flat);
+                    let wm = Mat::from_vec(fin, fout, p.w.data.clone());
+                    let mut y = x.matmul(&wm);
+                    y.add_row(p.bias);
+                    Feat { shape: vec![b, fout], data: y.d }
+                }
+            }
+        }
+        Op::MaxPool => maxpool(x0, layer.k)?,
+        Op::Gap => gap(x0)?,
+        Op::Flatten => {
+            let b = x0.shape[0];
+            let n: usize = x0.shape[1..].iter().product();
+            Feat { shape: vec![b, n], data: x0.data.clone() }
+        }
+        Op::Add => {
+            let x1 = *ins.get(1).ok_or_else(|| {
+                anyhow::anyhow!("add `{}` needs two inputs", layer.name)
+            })?;
+            if x0.shape != x1.shape {
+                bail!("add `{}` shape mismatch {:?} vs {:?}", layer.name, x0.shape, x1.shape);
+            }
+            let data = x0.data.iter().zip(&x1.data).map(|(a, b)| a + b).collect();
+            Feat { shape: x0.shape.clone(), data }
+        }
+        Op::Concat => concat(ins)?,
+    };
+    if layer.relu {
+        relu(&mut out.data);
+    }
+    Ok(out)
+}
+
+/// Resolve a layer's named inputs against the feats computed so far.
+fn resolve_inputs<'a>(layer: &Layer, feats: &'a [(String, Feat)]) -> Result<Vec<&'a Feat>> {
+    layer
+        .inputs
+        .iter()
+        .map(|name| {
+            feats
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, f)| f)
+                .ok_or_else(|| anyhow::anyhow!("layer input `{name}` not computed yet"))
+        })
+        .collect()
+}
+
+/// The pure-Rust accuracy oracle (see module docs): a from-scratch
+/// reference forward plus the incremental, multi-threaded
+/// [`Engine`] that answers every accuracy query.
+///
+/// Memory note: the engine's shards own one copy of the evaluation
+/// images (moved into the workers' caches); `data` keeps a second one
+/// so the [`Self::logits`] reference path stays available — a
+/// deliberate trade at current subset sizes, and the first thing to
+/// Arc-share if image RSS ever matters.
 pub struct NativeBackend {
     arch: ModelArch,
     data: EvalData,
+    engine: Engine,
 }
 
 impl NativeBackend {
-    /// Build from an arch descriptor and pre-batched evaluation data.
+    /// Build from an arch descriptor and pre-batched evaluation data,
+    /// with [`default_threads`] workers (the `HAPQ_THREADS` env var,
+    /// else 1).
     pub fn new(arch: &ModelArch, data: EvalData) -> Result<NativeBackend> {
-        let n = arch.prunable.len();
-        if arch.act_scales.len() != n {
-            bail!(
-                "arch `{}` has {} act_scales for {n} prunable layers — \
-                 the native backend needs the calibration scales from the \
-                 arch descriptor",
-                arch.name,
-                arch.act_scales.len()
-            );
-        }
-        if arch.act_signed.len() != n {
-            bail!("arch `{}` act_signed length mismatch", arch.name);
-        }
-        Ok(NativeBackend { arch: arch.clone(), data })
+        Self::with_threads(arch, data, default_threads())
+    }
+
+    /// Build with an explicit worker count (the `--threads` flag).
+    /// Results are bit-identical at any thread count. The engine
+    /// validates the arch's calibration vectors.
+    pub fn with_threads(
+        arch: &ModelArch,
+        data: EvalData,
+        threads: usize,
+    ) -> Result<NativeBackend> {
+        let engine = Engine::new(arch, &data, threads)?;
+        Ok(NativeBackend { arch: arch.clone(), data, engine })
     }
 
     /// Convenience: load a dataset artifact and build the backend.
@@ -293,6 +419,9 @@ impl NativeBackend {
 
     /// Run the graph on one stored image batch; returns logits
     /// `[batch, classes]` row-major (padded tail rows included).
+    ///
+    /// This is the stateless from-scratch reference path — the
+    /// incremental engine is tested bit-identical against it.
     pub fn logits(
         &self,
         weights: &Weights,
@@ -303,6 +432,12 @@ impl NativeBackend {
         self.forward(weights, act_bits, images).map(|f| f.data)
     }
 
+    /// Final-layer logits for every real example via the incremental
+    /// engine, concatenated in example order (no padded rows).
+    pub fn engine_logits(&self, weights: &Weights, act_bits: &[f32]) -> Result<Vec<f32>> {
+        self.engine.logits(weights, act_bits)
+    }
+
     fn forward(&self, weights: &Weights, act_bits: &[f32], images: &[f32]) -> Result<Feat> {
         let [h, w, c] = self.data.input;
         let b = self.data.batch;
@@ -311,132 +446,46 @@ impl NativeBackend {
             Feat { shape: vec![b, h, w, c], data: images.to_vec() },
         )];
         for layer in &self.arch.layers {
-            let out = self.apply(layer, weights, act_bits, &feats)?;
+            let out = {
+                let ins = resolve_inputs(layer, &feats)?;
+                let params = self.layer_params(layer, weights, act_bits);
+                eval_layer(layer, params, &ins)?
+            };
             feats.push((layer.name.clone(), out));
         }
         Ok(feats.pop().expect("graph has layers").1)
     }
 
-    fn apply(
+    fn layer_params<'a>(
         &self,
         layer: &Layer,
-        weights: &Weights,
+        weights: &'a Weights,
         act_bits: &[f32],
-        feats: &[(String, Feat)],
-    ) -> Result<Feat> {
-        let ins: Vec<usize> = layer
-            .inputs
-            .iter()
-            .map(|name| {
-                feats
-                    .iter()
-                    .position(|(n, _)| n == name)
-                    .ok_or_else(|| anyhow::anyhow!("layer input `{name}` not computed yet"))
-            })
-            .collect::<Result<_>>()?;
-        let x0 = &feats[*ins.first().ok_or_else(|| {
-            anyhow::anyhow!("layer `{}` has no inputs", layer.name)
-        })?]
-            .1;
-        let mut out = match layer.op {
-            Op::Conv | Op::DwConv | Op::Fc => {
-                let i = self.arch.pidx(&layer.name);
-                let (lo, hi, step) = quant_params(
-                    act_bits[i],
-                    self.arch.act_scales[i],
-                    self.arch.act_signed[i],
-                );
-                match layer.op {
-                    Op::Conv => {
-                        let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
-                        fake_quant(&mut xq.data, lo, hi, step);
-                        conv2d(&xq, &weights.w[i], &weights.b[i].data, layer.stride)?
-                    }
-                    Op::DwConv => {
-                        let mut xq = Feat { shape: x0.shape.clone(), data: x0.data.clone() };
-                        fake_quant(&mut xq.data, lo, hi, step);
-                        dwconv2d(&xq, &weights.w[i], &weights.b[i].data, layer.stride)?
-                    }
-                    _ => {
-                        // fc: flatten then fake-quantize, like the exporter
-                        let b = x0.shape[0];
-                        let n: usize = x0.shape[1..].iter().product();
-                        let mut flat = x0.data.clone();
-                        fake_quant(&mut flat, lo, hi, step);
-                        let wt = &weights.w[i];
-                        let (fin, fout) = match wt.shape[..] {
-                            [fin, fout] => (fin, fout),
-                            _ => bail!("fc `{}` weight must be [in,out], got {:?}",
-                                       layer.name, wt.shape),
-                        };
-                        if fin != n {
-                            bail!(
-                                "fc `{}` weight {:?} does not fit input [{b}, {n}]",
-                                layer.name,
-                                wt.shape
-                            );
-                        }
-                        let x = Mat::from_vec(b, n, flat);
-                        let wm = Mat::from_vec(fin, fout, wt.data.clone());
-                        let mut y = x.matmul(&wm);
-                        y.add_row(&weights.b[i].data);
-                        Feat { shape: vec![b, fout], data: y.d }
-                    }
-                }
-            }
-            Op::MaxPool => maxpool(x0, layer.k)?,
-            Op::Gap => gap(x0)?,
-            Op::Flatten => {
-                let b = x0.shape[0];
-                let n: usize = x0.shape[1..].iter().product();
-                Feat { shape: vec![b, n], data: x0.data.clone() }
-            }
-            Op::Add => {
-                let x1 = &feats[*ins.get(1).ok_or_else(|| {
-                    anyhow::anyhow!("add `{}` needs two inputs", layer.name)
-                })?]
-                    .1;
-                if x0.shape != x1.shape {
-                    bail!("add `{}` shape mismatch {:?} vs {:?}", layer.name, x0.shape, x1.shape);
-                }
-                let data = x0.data.iter().zip(&x1.data).map(|(a, b)| a + b).collect();
-                Feat { shape: x0.shape.clone(), data }
-            }
-            Op::Concat => {
-                let refs: Vec<&Feat> = ins.iter().map(|&i| &feats[i].1).collect();
-                concat(&refs)?
-            }
-        };
-        if layer.relu {
-            relu(&mut out.data);
+    ) -> Option<LayerParams<'a>> {
+        if !layer.op.prunable() {
+            return None;
         }
-        Ok(out)
+        let i = self.arch.pidx(&layer.name);
+        Some(LayerParams {
+            w: &weights.w[i],
+            bias: &weights.b[i].data,
+            grid: quant_params(act_bits[i], self.arch.act_scales[i], self.arch.act_signed[i]),
+        })
     }
 }
 
 impl InferenceBackend for NativeBackend {
     fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
-        let n = self.arch.prunable.len();
-        if act_bits.len() != n {
-            bail!("act_bits len {} vs {n} prunable", act_bits.len());
-        }
-        if weights.w.len() != n {
-            bail!("weights hold {} layers vs {n} prunable", weights.w.len());
-        }
-        let mut correct = 0usize;
-        for (bi, labels) in self.data.label_batches.iter().enumerate() {
-            let logits = self.forward(weights, act_bits, &self.data.image_batches[bi])?;
-            let classes = logits.data.len() / self.data.batch;
-            correct += top1_correct(&logits.data, classes, labels);
-        }
-        Ok(correct as f64 / self.data.n_examples as f64)
+        self.engine.accuracy(weights, act_bits)
     }
 
-    // The interpreter stages no per-layer state between queries, so the
-    // cache hints are no-ops (see module docs).
-    fn invalidate(&self, _layer: usize) {}
+    fn invalidate(&self, layer: usize) {
+        self.engine.invalidate(layer);
+    }
 
-    fn invalidate_all(&self) {}
+    fn invalidate_all(&self) {
+        self.engine.invalidate_all();
+    }
 
     fn n_examples(&self) -> usize {
         self.data.n_examples
@@ -452,6 +501,10 @@ impl InferenceBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.engine.stats()
     }
 }
 
@@ -506,7 +559,7 @@ mod tests {
             shape: vec![1, 2, 2, 1],
             data: vec![1.0, 2.0, 3.0, 4.0],
         };
-        let w = crate::tensor::Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
         let y = conv2d(&x, &w, &[0.5], 1).unwrap();
         assert_eq!(y.shape, vec![1, 2, 2, 1]);
         assert_eq!(y.data, vec![2.5, 4.5, 6.5, 8.5]);
@@ -518,7 +571,7 @@ mod tests {
         // every output sums its in-bounds 3x3 window -> all windows see
         // the full 2x2 input = 4
         let x = Feat { shape: vec![1, 2, 2, 1], data: vec![1.0; 4] };
-        let w = crate::tensor::Tensor::new(vec![3, 3, 1, 1], vec![1.0; 9]);
+        let w = Tensor::new(vec![3, 3, 1, 1], vec![1.0; 9]);
         let y = conv2d(&x, &w, &[0.0], 1).unwrap();
         assert_eq!(y.shape, vec![1, 2, 2, 1]);
         assert_eq!(y.data, vec![4.0; 4]);
@@ -531,7 +584,7 @@ mod tests {
             shape: vec![1, 1, 2, 2],
             data: vec![1.0, 2.0, 3.0, 4.0], // (x=0: c0=1,c1=2) (x=1: c0=3,c1=4)
         };
-        let w = crate::tensor::Tensor::new(vec![1, 1, 1, 2], vec![10.0, 100.0]);
+        let w = Tensor::new(vec![1, 1, 1, 2], vec![10.0, 100.0]);
         let y = dwconv2d(&x, &w, &[0.0, 0.0], 1).unwrap();
         assert_eq!(y.data, vec![10.0, 200.0, 30.0, 400.0]);
     }
@@ -557,5 +610,27 @@ mod tests {
         let y = concat(&[&a, &b]).unwrap();
         assert_eq!(y.shape, vec![1, 2, 1, 3]);
         assert_eq!(y.data, vec![1.0, 10.0, 11.0, 2.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn eval_layer_requires_params_for_prunable_ops() {
+        let layer = Layer {
+            name: "c".into(),
+            op: Op::Conv,
+            inputs: vec!["input".into()],
+            k: 1,
+            stride: 1,
+            relu: false,
+            in_shape: vec![2, 2, 1],
+            out_shape: vec![2, 2, 1],
+            in_ch: 1,
+            out_ch: 1,
+        };
+        let x = Feat { shape: vec![1, 2, 2, 1], data: vec![1.0; 4] };
+        assert!(eval_layer(&layer, None, &[&x]).is_err());
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        let p = LayerParams { w: &w, bias: &[0.0], grid: (0.0, 0.0, 0.0) };
+        let y = eval_layer(&layer, Some(p), &[&x]).unwrap();
+        assert_eq!(y.data, vec![2.0; 4]); // degenerate grid passes through
     }
 }

@@ -1,0 +1,294 @@
+//! Property tests for the incremental, multi-threaded evaluation
+//! engine (`runtime/exec`), seeded through `util`'s xoshiro proptest
+//! harness: on random mini-graphs **with branches** (residual add,
+//! optional channel concat, optional depthwise branch) the engine must
+//! be (a) bit-identical across thread counts and (b) bit-identical to
+//! a from-scratch forward after arbitrary invalidate sequences —
+//! single-layer weight mutations, unhinted activation-precision
+//! changes, and full episode-reset style `invalidate_all`s.
+
+use std::collections::HashMap;
+
+use hapq::model::{Layer, ModelArch, Op, Weights};
+use hapq::runtime::{EvalData, InferenceBackend, NativeBackend};
+use hapq::tensor::Tensor;
+use hapq::util::proptest::forall;
+use hapq::util::rng::Rng;
+
+/// One randomly generated branched mini-model + evaluation data.
+struct Fixture {
+    seed: u64,
+    arch: ModelArch,
+    weights: Weights,
+    act_bits: Vec<f32>,
+    images: Tensor,
+    labels: Vec<i64>,
+}
+
+impl std::fmt::Debug for Fixture {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Fixture {{ seed: {:#x}, layers: {:?}, batch: {}, examples: {}, act_bits: {:?} }}",
+            self.seed,
+            self.arch.layers.iter().map(|l| (&l.name, l.op)).collect::<Vec<_>>(),
+            self.arch.batch,
+            self.labels.len(),
+            self.act_bits,
+        )
+    }
+}
+
+fn conv_layer(
+    name: &str,
+    inputs: Vec<String>,
+    k: usize,
+    relu: bool,
+    in_ch: usize,
+    out_ch: usize,
+) -> Layer {
+    Layer {
+        name: name.to_string(),
+        op: Op::Conv,
+        inputs,
+        k,
+        stride: 1,
+        relu,
+        in_shape: vec![6, 6, in_ch],
+        out_shape: vec![6, 6, out_ch],
+        in_ch,
+        out_ch,
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.normal() * scale) as f32).collect())
+}
+
+fn gen_fixture(rng: &mut Rng) -> Fixture {
+    let seed = rng.next_u64();
+    let cin = 1 + rng.below(3); // input channels 1..=3
+    let classes = 2 + rng.below(3); // 2..=4
+    let c1 = 2 + rng.below(3); // trunk channels 2..=4
+    let k1 = [1usize, 3][rng.below(2)];
+    let dw_branch = rng.below(2) == 0; // branch b2: depthwise or 1x1 conv
+    let with_concat = rng.below(2) == 0;
+    let n_ex = 3 + rng.below(4); // 3..=6 examples
+    let batch = 2 + rng.below(3); // 2..=4 -> often multiple batches
+
+    // graph: input -> a -> {b1, b2} -> add [-> concat(add, a)] -> gap -> f
+    let mut layers = vec![
+        conv_layer("a", vec!["input".into()], k1, true, cin, c1),
+        conv_layer("b1", vec!["a".into()], 3, rng.below(2) == 0, c1, c1),
+    ];
+    if dw_branch {
+        layers.push(Layer {
+            name: "b2".into(),
+            op: Op::DwConv,
+            inputs: vec!["a".into()],
+            k: 3,
+            stride: 1,
+            relu: rng.below(2) == 0,
+            in_shape: vec![6, 6, c1],
+            out_shape: vec![6, 6, c1],
+            in_ch: c1,
+            out_ch: c1,
+        });
+    } else {
+        layers.push(conv_layer("b2", vec!["a".into()], 1, rng.below(2) == 0, c1, c1));
+    }
+    layers.push(Layer {
+        name: "add".into(),
+        op: Op::Add,
+        inputs: vec!["b1".into(), "b2".into()],
+        k: 1,
+        stride: 1,
+        relu: true,
+        in_shape: vec![6, 6, c1],
+        out_shape: vec![6, 6, c1],
+        in_ch: c1,
+        out_ch: c1,
+    });
+    let mut fc_in = c1;
+    let mut gap_src = "add".to_string();
+    if with_concat {
+        layers.push(Layer {
+            name: "cat".into(),
+            op: Op::Concat,
+            inputs: vec!["add".into(), "a".into()],
+            k: 1,
+            stride: 1,
+            relu: false,
+            in_shape: vec![6, 6, c1],
+            out_shape: vec![6, 6, 2 * c1],
+            in_ch: c1,
+            out_ch: 2 * c1,
+        });
+        fc_in = 2 * c1;
+        gap_src = "cat".to_string();
+    }
+    layers.push(Layer {
+        name: "gap".into(),
+        op: Op::Gap,
+        inputs: vec![gap_src],
+        k: 1,
+        stride: 1,
+        relu: false,
+        in_shape: vec![6, 6, fc_in],
+        out_shape: vec![fc_in],
+        in_ch: fc_in,
+        out_ch: fc_in,
+    });
+    layers.push(Layer {
+        name: "f".into(),
+        op: Op::Fc,
+        inputs: vec!["gap".into()],
+        k: 1,
+        stride: 1,
+        relu: false,
+        in_shape: vec![fc_in],
+        out_shape: vec![classes],
+        in_ch: fc_in,
+        out_ch: classes,
+    });
+
+    let prunable: Vec<String> = vec!["a".into(), "b1".into(), "b2".into(), "f".into()];
+    let prunable_idx: HashMap<String, usize> =
+        prunable.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+    let n_p = prunable.len();
+    let arch = ModelArch {
+        name: "propgraph".into(),
+        dataset: "synth-prop".into(),
+        input: [6, 6, cin],
+        classes,
+        batch,
+        layers,
+        prunable,
+        prunable_idx,
+        dep_groups: vec![],
+        act_scales: (0..n_p).map(|_| rng.range(0.3, 1.0) as f32).collect(),
+        act_signed: vec![true, false, false, false],
+        acc_int8: 0.0,
+        n_params: 0,
+    };
+
+    let w_shapes: Vec<Vec<usize>> = vec![
+        vec![k1, k1, cin, c1],
+        vec![3, 3, c1, c1],
+        if dw_branch { vec![3, 3, 1, c1] } else { vec![1, 1, c1, c1] },
+        vec![fc_in, classes],
+    ];
+    let out_chs = [c1, c1, c1, classes];
+    let mut w = Vec::new();
+    let mut b = Vec::new();
+    let mut sal = Vec::new();
+    let mut chsq = Vec::new();
+    for (shape, &oc) in w_shapes.into_iter().zip(&out_chs) {
+        w.push(rand_tensor(rng, shape.clone(), 0.5));
+        b.push(rand_tensor(rng, vec![oc], 0.2));
+        sal.push(Tensor::full(shape, 1.0));
+        chsq.push(vec![1.0f32; oc]);
+    }
+    let weights = Weights { w, b, sal, chsq };
+
+    let act_bits: Vec<f32> = (0..n_p).map(|_| (2 + rng.below(7)) as f32).collect();
+    let images = rand_tensor(rng, vec![n_ex, 6, 6, cin], 0.8);
+    let labels: Vec<i64> = (0..n_ex).map(|_| rng.below(classes) as i64).collect();
+    Fixture { seed, arch, weights, act_bits, images, labels }
+}
+
+fn backend(fx: &Fixture, threads: usize) -> NativeBackend {
+    let data =
+        EvalData::from_arrays(&fx.arch, &fx.images, &fx.labels, 1000, fx.arch.batch).unwrap();
+    NativeBackend::with_threads(&fx.arch, data, threads).unwrap()
+}
+
+#[test]
+fn threaded_accuracy_is_bit_identical_to_single_thread() {
+    forall("threads {1,4} produce bitwise-equal logits", gen_fixture, |fx| {
+        let b1 = backend(fx, 1);
+        let b4 = backend(fx, 4);
+        let l1 = b1.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let l4 = b4.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let a1 = b1.accuracy(&fx.weights, &fx.act_bits).unwrap();
+        let a4 = b4.accuracy(&fx.weights, &fx.act_bits).unwrap();
+        l1 == l4 && a1 == a4
+    });
+}
+
+#[test]
+fn incremental_matches_from_scratch_after_arbitrary_invalidate_sequences() {
+    forall("incremental == from-scratch across branches", gen_fixture, |fx| {
+        let n = fx.arch.prunable.len();
+        // vary the incremental engine's thread count too (1..=3)
+        let inc = backend(fx, 1 + (fx.seed % 3) as usize);
+        let mut weights = fx.weights.clone();
+        let mut bits = fx.act_bits.clone();
+        let mut rng = Rng::new(fx.seed);
+        if inc.engine_logits(&weights, &bits).unwrap()
+            != backend(fx, 1).engine_logits(&weights, &bits).unwrap()
+        {
+            return false;
+        }
+        for _round in 0..4 {
+            match rng.below(3) {
+                0 => {
+                    // mutate ONE layer's weights (the RL-step pattern)
+                    let i = rng.below(n);
+                    for v in weights.w[i].data.iter_mut() {
+                        *v = *v * 1.5 + 0.01;
+                    }
+                    inc.invalidate(i);
+                }
+                1 => {
+                    // change one layer's precision WITHOUT a hint — the
+                    // engine must notice via its act-bits diff
+                    let i = rng.below(n);
+                    bits[i] = (2 + rng.below(7)) as f32;
+                }
+                _ => {
+                    // episode reset: everything changes at once
+                    for wt in weights.w.iter_mut() {
+                        for v in wt.data.iter_mut() {
+                            *v *= 0.8;
+                        }
+                    }
+                    inc.invalidate_all();
+                }
+            }
+            let scratch = backend(fx, 1);
+            if inc.engine_logits(&weights, &bits).unwrap()
+                != scratch.engine_logits(&weights, &bits).unwrap()
+            {
+                return false;
+            }
+            if inc.accuracy(&weights, &bits).unwrap()
+                != scratch.accuracy(&weights, &bits).unwrap()
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn engine_logits_match_the_reference_forward_on_branched_graphs() {
+    // the engine against the stateless from-scratch interpreter path
+    // (NativeBackend::logits), batch by batch, bitwise
+    forall("engine == reference interpreter", gen_fixture, |fx| {
+        let b = backend(fx, 2);
+        let engine = b.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let classes = fx.arch.classes;
+        let batch = fx.arch.batch;
+        let mut reference = Vec::new();
+        let n_batches = fx.labels.len().div_ceil(batch);
+        for bi in 0..n_batches {
+            let rows = (fx.labels.len() - bi * batch).min(batch);
+            let full = b.logits(&fx.weights, &fx.act_bits, bi).unwrap();
+            reference.extend_from_slice(&full[..rows * classes]); // drop padded rows
+        }
+        engine == reference
+    });
+}

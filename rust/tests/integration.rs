@@ -188,6 +188,14 @@ fn report_json_roundtrips() {
         v.req("per_layer").unwrap().as_arr().unwrap().len(),
         report.best.per_layer.len()
     );
+    // measurement conventions: oracle threads + cache hit rate are part
+    // of every run JSON (EXPERIMENTS.md)
+    assert!(v.req("threads").unwrap().as_f64().unwrap() >= 1.0);
+    let hit = v.req("cache_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&hit), "cache_hit_rate {hit} out of range");
+    // the RL walk dirties one layer per step, so the engine must have
+    // reused a substantial share of checkpointed activations
+    assert!(hit > 0.0, "incremental engine never reused a layer");
 }
 
 // ---------------------------------------------------------------------------
@@ -257,6 +265,7 @@ mod pjrt_roundtrips {
             Split::Test,
             64,
             None,
+            1,
         )
         .unwrap();
         let pal = InferenceSession::open(
@@ -267,6 +276,7 @@ mod pjrt_roundtrips {
             Split::Test,
             64,
             Some(entry.pallas_batch),
+            1,
         )
         .unwrap();
         let a1 = lax.accuracy(&weights, &bits).unwrap();

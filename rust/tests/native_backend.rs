@@ -65,7 +65,7 @@ fn fix1() -> (ModelArch, Weights) {
     (arch, weights)
 }
 
-fn fix1_backend(labels: Vec<i64>) -> NativeBackend {
+fn fix1_data(labels: Vec<i64>) -> (hapq::model::ModelArch, EvalData) {
     let (arch, _) = fix1();
     // im0 ramps up, im1 stays in the lowest 2-bit quantization bin
     let images = Tensor::new(
@@ -76,7 +76,18 @@ fn fix1_backend(labels: Vec<i64>) -> NativeBackend {
         ],
     );
     let data = EvalData::from_arrays(&arch, &images, &labels, 16, arch.batch).unwrap();
+    (arch, data)
+}
+
+fn fix1_backend(labels: Vec<i64>) -> NativeBackend {
+    let (arch, data) = fix1_data(labels);
     NativeBackend::new(&arch, data).unwrap()
+}
+
+/// Same fixture with an explicit engine worker count.
+fn fix1_backend_threads(labels: Vec<i64>, threads: usize) -> NativeBackend {
+    let (arch, data) = fix1_data(labels);
+    NativeBackend::with_threads(&arch, data, threads).unwrap()
 }
 
 #[test]
@@ -133,9 +144,89 @@ fn native_backend_validates_inputs() {
     assert_eq!(backend.n_examples(), 2);
     assert_eq!(backend.batch(), 2);
     assert_eq!(backend.name(), "native");
-    // the cache hints are accepted (no-ops for the interpreter)
+    // the cache hints mark engine state dirty (and tolerate bad indices)
     backend.invalidate(0);
+    backend.invalidate(99);
     backend.invalidate_all();
+    assert_eq!(backend.accuracy(&weights, &[2.0, 2.0]).unwrap(), 1.0);
+}
+
+#[test]
+fn engine_resumes_after_invalidate_matching_fresh_backend() {
+    // mutate one layer mid-session (as the RL env does), hint the
+    // engine, and require the incremental answer to match a backend
+    // built from scratch on the mutated weights — bitwise.
+    let (_, mut weights) = fix1();
+    let backend = fix1_backend(vec![0, 1]);
+    let bits = [2.0f32, 2.0];
+    let a0 = backend.accuracy(&weights, &bits).unwrap();
+    assert_eq!(a0, 1.0);
+    // flip the classifier weights: predictions for im0 flip to class 1
+    weights.w[1].data = vec![-1.0, 1.0];
+    backend.invalidate(1);
+    let a1 = backend.accuracy(&weights, &bits).unwrap();
+    let fresh = fix1_backend(vec![0, 1]);
+    assert_eq!(a1, fresh.accuracy(&weights, &bits).unwrap());
+    assert_eq!(a1, 0.5); // im0 now wrong, im1 still right
+    // engine logits equal the reference from-scratch forward bitwise
+    let engine = backend.engine_logits(&weights, &bits).unwrap();
+    let reference = backend.logits(&weights, &bits, 0).unwrap();
+    assert_eq!(engine, reference);
+}
+
+#[test]
+fn engine_detects_act_bits_changes_without_a_hint() {
+    // precision changes are detected by the engine's own act-bits diff,
+    // so a missing invalidate() cannot produce stale results
+    let (_, weights) = fix1();
+    let backend = fix1_backend(vec![0, 1]);
+    let a2 = backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    let a8 = backend.accuracy(&weights, &[8.0, 8.0]).unwrap();
+    let fresh = fix1_backend(vec![0, 1]);
+    assert_eq!(a8, fresh.accuracy(&weights, &[8.0, 8.0]).unwrap());
+    let e2 = backend.engine_logits(&weights, &[2.0, 2.0]).unwrap();
+    let f2 = fresh.engine_logits(&weights, &[2.0, 2.0]).unwrap();
+    assert_eq!(e2, f2);
+    let _ = a2;
+}
+
+#[test]
+fn engine_reuses_clean_layers_and_reports_stats() {
+    let (_, weights) = fix1();
+    let backend = fix1_backend_threads(vec![0, 1], 1);
+    // fix1 graph has 3 nodes: c1 -> gap -> f1
+    backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    let s = backend.stats();
+    assert_eq!((s.layers_computed, s.layers_reused), (3, 0));
+    assert_eq!(s.threads, 1);
+    // invalidating only the classifier resumes the pass at f1
+    backend.invalidate(1);
+    backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    let s = backend.stats();
+    assert_eq!((s.layers_computed, s.layers_reused), (4, 2));
+    // an unchanged query serves everything from the checkpoint cache
+    backend.accuracy(&weights, &[2.0, 2.0]).unwrap();
+    let s = backend.stats();
+    assert_eq!((s.layers_computed, s.layers_reused), (4, 5));
+    assert!((s.cache_hit_rate() - 5.0 / 9.0).abs() < 1e-12);
+}
+
+#[test]
+fn threaded_engine_is_bit_identical_to_single_thread() {
+    let (_, weights) = fix1();
+    let b1 = fix1_backend_threads(vec![0, 1], 1);
+    let b4 = fix1_backend_threads(vec![0, 1], 4);
+    for bits in [[2.0f32, 2.0], [2.0, 8.0], [8.0, 8.0]] {
+        assert_eq!(
+            b1.accuracy(&weights, &bits).unwrap(),
+            b4.accuracy(&weights, &bits).unwrap()
+        );
+        assert_eq!(
+            b1.engine_logits(&weights, &bits).unwrap(),
+            b4.engine_logits(&weights, &bits).unwrap()
+        );
+    }
+    assert_eq!(b4.stats().threads, 4);
 }
 
 // ---------------------------------------------------------------------------
