@@ -1,14 +1,17 @@
 //! AMC baseline [15]: DDPG learns a per-layer *channel-pruning ratio*
 //! only. Fixed L1-ranked structured pruning, fixed 8-bit quantization
 //! (the paper quantizes AMC's float output to 8 bits for fairness,
-//! §5.2). Uses the same DDPG core as our framework with a 1-d action.
+//! §5.2). Uses the same DDPG core as our framework with a 1-d action,
+//! run as an [`AmcStrategy`] under the unified
+//! [`crate::search::SearchDriver`] loop.
 
 use anyhow::Result;
 
-use crate::env::{Action, CompressionEnv, Solution};
+use crate::env::{Action, CompressionEnv, Solution, StepResult};
 use crate::pruning::PruneAlg;
 use crate::rl::ddpg::{Ddpg, DdpgConfig};
 use crate::rl::replay::Transition;
+use crate::search::{SearchDriver, SearchStrategy};
 use crate::util::rng::Rng;
 
 /// AMC budget knobs.
@@ -27,51 +30,97 @@ impl Default for AmcConfig {
     }
 }
 
+/// AMC as a [`SearchStrategy`]: 1-d DDPG over the pruning ratio, bits
+/// pinned to 8, algorithm pinned to L1-ranked structured pruning.
+pub struct AmcStrategy {
+    agent: Ddpg,
+    rng: Rng,
+    episodes: usize,
+    warmup: usize,
+    ep: usize,
+    pending: Vec<f32>,
+}
+
+impl AmcStrategy {
+    /// Build the strategy exactly as the historical loop seeded it.
+    pub fn new(cfg: &AmcConfig) -> AmcStrategy {
+        AmcStrategy {
+            agent: Ddpg::new(
+                DdpgConfig { action_dim: 1, ..DdpgConfig::default() },
+                cfg.seed ^ 0xA3C,
+            ),
+            rng: Rng::new(cfg.seed ^ 0x11),
+            episodes: cfg.episodes,
+            warmup: cfg.warmup,
+            ep: 0,
+            pending: Vec::new(),
+        }
+    }
+}
+
+impl SearchStrategy for AmcStrategy {
+    fn method(&self) -> &str {
+        "amc"
+    }
+
+    fn episodes(&self) -> usize {
+        self.episodes
+    }
+
+    fn begin_episode(&mut self, ep: usize) {
+        self.ep = ep;
+    }
+
+    fn propose(&mut self, _t: usize, state: &[f32]) -> Action {
+        let a = if self.ep < self.warmup {
+            vec![self.rng.uniform() as f32]
+        } else {
+            self.agent.act(state, true)
+        };
+        let action = Action {
+            ratio: a[0] as f64,
+            bits: 1.0, // -> 8 bits
+            alg: PruneAlg::L1Ranked.index(),
+        };
+        self.pending = a;
+        action
+    }
+
+    fn observe(&mut self, s: &[f32], action: &Action, step: &StepResult) {
+        self.agent.observe(Transition {
+            s: s.to_vec(),
+            a: self.pending.clone(),
+            alg: action.alg,
+            r: step.reward as f32,
+            s2: step.state.clone(),
+            done: step.done,
+        });
+        self.agent.update();
+    }
+
+    fn end_episode(&mut self, ep: usize, _total: f64, _sol: &Solution) {
+        if ep >= self.warmup {
+            self.agent.decay_noise();
+        }
+    }
+
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.agent.save_state(w);
+        self.rng.save_state(w);
+        w.f32s(&self.pending);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> Result<()> {
+        self.agent.load_state(r)?;
+        self.rng.load_state(r)?;
+        self.pending = r.f32s()?;
+        Ok(())
+    }
+}
+
 /// Run AMC against the shared environment; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &AmcConfig) -> Result<Solution> {
-    let mut agent = Ddpg::new(
-        DdpgConfig { action_dim: 1, ..DdpgConfig::default() },
-        cfg.seed ^ 0xA3C,
-    );
-    let mut rng = Rng::new(cfg.seed ^ 0x11);
-    let mut best: Option<Solution> = None;
-    for ep in 0..cfg.episodes {
-        let mut s = env.reset();
-        #[allow(unused_assignments)]
-        let mut last = None;
-        loop {
-            let a = if ep < cfg.warmup {
-                vec![rng.uniform() as f32]
-            } else {
-                agent.act(&s, true)
-            };
-            let action = Action {
-                ratio: a[0] as f64,
-                bits: 1.0, // -> 8 bits
-                alg: PruneAlg::L1Ranked.index(),
-            };
-            let step = env.step(action)?;
-            agent.observe(Transition {
-                s: s.clone(),
-                a: a.clone(),
-                alg: action.alg,
-                r: step.reward as f32,
-                s2: step.state.clone(),
-                done: step.done,
-            });
-            agent.update();
-            s = step.state.clone();
-            let done = step.done;
-            last = Some(step);
-            if done {
-                break;
-            }
-        }
-        if ep >= cfg.warmup {
-            agent.decay_noise();
-        }
-        let sol = env.solution(last.as_ref().unwrap());
-        best = super::better(best, sol);
-    }
-    Ok(best.unwrap())
+    let mut strategy = AmcStrategy::new(cfg);
+    let outcome = SearchDriver::plain().run(env, &mut strategy)?;
+    outcome.best.ok_or_else(|| anyhow::anyhow!("amc ran zero episodes"))
 }

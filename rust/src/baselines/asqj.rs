@@ -13,11 +13,17 @@
 //!     current per-layer precision;
 //!   * dual: layers whose (loss, energy) trade-off improved the reward
 //!     raise their compression multiplier, others back off.
+//!
+//! One outer ADMM iteration = one driver episode ([`AsqjStrategy`]
+//! under the unified [`crate::search::SearchDriver`] loop): the episode
+//! evaluates the current projection, `end_episode` runs the dual
+//! update.
 
 use anyhow::Result;
 
 use crate::env::{Action, CompressionEnv, Solution};
 use crate::pruning::PruneAlg;
+use crate::search::{SearchDriver, SearchStrategy};
 
 /// ASQJ budget knobs.
 pub struct AsqjConfig {
@@ -48,35 +54,98 @@ fn config_actions(sparsity: &[f64], bits: &[f64]) -> Vec<Action> {
         .collect()
 }
 
-/// Run ASQJ against the shared environment; returns its best solution.
-pub fn run(env: &mut CompressionEnv, cfg: &AsqjConfig) -> Result<Solution> {
-    let n = env.n_layers();
-    // start conservative: 30% sparsity, 8 bits everywhere
-    let mut sparsity = vec![0.3f64; n];
-    let mut bits = vec![1.0f64; n];
-    let mut dual = vec![0.0f64; n];
-    let mut best: Option<Solution> = None;
-    let mut prev_reward = f64::NEG_INFINITY;
+/// ASQJ as a [`SearchStrategy`]: one ADMM iteration per episode.
+pub struct AsqjStrategy {
+    iters: usize,
+    rho: f64,
+    sparsity: Vec<f64>,
+    bits: Vec<f64>,
+    dual: Vec<f64>,
+    prev_reward: f64,
+    current: Vec<Action>,
+}
 
-    for it in 0..cfg.iters {
-        let sol = env.evaluate_config(&config_actions(&sparsity, &bits))?;
-        let improved = sol.reward > prev_reward;
-        prev_reward = sol.reward;
+impl AsqjStrategy {
+    /// Build the strategy for an env with `n_layers` prunable layers,
+    /// starting from the historical conservative initialisation (30%
+    /// sparsity, 8 bits everywhere).
+    pub fn new(cfg: &AsqjConfig, n_layers: usize) -> AsqjStrategy {
+        AsqjStrategy {
+            iters: cfg.iters,
+            rho: cfg.rho,
+            sparsity: vec![0.3f64; n_layers],
+            bits: vec![1.0f64; n_layers],
+            dual: vec![0.0f64; n_layers],
+            prev_reward: f64::NEG_INFINITY,
+            current: Vec::new(),
+        }
+    }
+}
+
+impl SearchStrategy for AsqjStrategy {
+    fn method(&self) -> &str {
+        "asqj"
+    }
+
+    fn episodes(&self) -> usize {
+        self.iters
+    }
+
+    fn begin_episode(&mut self, _ep: usize) {
+        self.current = config_actions(&self.sparsity, &self.bits);
+    }
+
+    fn propose(&mut self, t: usize, _state: &[f32]) -> Action {
+        self.current[t]
+    }
+
+    fn end_episode(&mut self, ep: usize, _total: f64, sol: &Solution) {
+        let improved = sol.reward > self.prev_reward;
+        self.prev_reward = sol.reward;
 
         // dual update: push compression harder while the reward tolerates
         // it, relax the most aggressive layers when it does not.
-        for l in 0..n {
+        for l in 0..self.dual.len() {
             if improved && sol.acc_loss < 0.05 {
-                dual[l] += cfg.rho * (1.0 - sol.acc_loss * 10.0);
+                self.dual[l] += self.rho * (1.0 - sol.acc_loss * 10.0);
             } else {
-                dual[l] -= cfg.rho * (0.5 + sparsity[l]);
+                self.dual[l] -= self.rho * (0.5 + self.sparsity[l]);
             }
-            dual[l] = dual[l].clamp(-2.0, 2.0);
-            sparsity[l] = (0.3 + 0.25 * dual[l]).clamp(0.0, 0.85);
-            bits[l] = (1.0 - 0.3 * dual[l].max(0.0) - 0.02 * (it % 5) as f64)
+            self.dual[l] = self.dual[l].clamp(-2.0, 2.0);
+            self.sparsity[l] = (0.3 + 0.25 * self.dual[l]).clamp(0.0, 0.85);
+            self.bits[l] = (1.0 - 0.3 * self.dual[l].max(0.0) - 0.02 * (ep % 5) as f64)
                 .clamp(0.0, 1.0);
         }
-        best = super::better(best, sol);
     }
-    Ok(best.unwrap())
+
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        w.f64s(&self.sparsity);
+        w.f64s(&self.bits);
+        w.f64s(&self.dual);
+        w.f64(self.prev_reward);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> Result<()> {
+        let sparsity = r.f64s()?;
+        let bits = r.f64s()?;
+        let dual = r.f64s()?;
+        anyhow::ensure!(
+            sparsity.len() == self.sparsity.len()
+                && bits.len() == self.bits.len()
+                && dual.len() == self.dual.len(),
+            "asqj checkpoint layer count mismatch"
+        );
+        self.sparsity = sparsity;
+        self.bits = bits;
+        self.dual = dual;
+        self.prev_reward = r.f64()?;
+        Ok(())
+    }
+}
+
+/// Run ASQJ against the shared environment; returns its best solution.
+pub fn run(env: &mut CompressionEnv, cfg: &AsqjConfig) -> Result<Solution> {
+    let mut strategy = AsqjStrategy::new(cfg, env.n_layers());
+    let outcome = SearchDriver::plain().run(env, &mut strategy)?;
+    outcome.best.ok_or_else(|| anyhow::anyhow!("asqj ran zero iterations"))
 }

@@ -8,6 +8,14 @@
 //! (no retraining exists anywhere in this reproduction), so their
 //! accuracy losses are upper bounds; the paper's qualitative ordering
 //! is what we reproduce.
+//!
+//! Every baseline is a [`crate::search::SearchStrategy`] (`AmcStrategy`,
+//! `HaqStrategy`, `AsqjStrategy`, `OpqStrategy`, `Nsga2Strategy`) run by
+//! the unified [`crate::search::SearchDriver`] — the same loop that runs
+//! the composite agent — so step/eval budgets, best-solution selection
+//! ([`better`]), wall-clock accounting and `--resume` checkpointing are
+//! identical across all six methods. The per-module `run` functions are
+//! thin driver wrappers kept for the examples and benches.
 
 pub mod amc;
 pub mod asqj;
@@ -15,20 +23,7 @@ pub mod haq;
 pub mod nsga2;
 pub mod opq;
 
-use crate::env::{CompressionEnv, Solution};
-
-/// Common result record for Fig 7-style reporting.
-#[derive(Clone, Debug)]
-pub struct BaselineRun {
-    /// baseline name
-    pub method: &'static str,
-    /// best solution found
-    pub best: Solution,
-    /// reward-oracle invocations consumed (Table 3 accounting)
-    pub evals: u64,
-    /// wall-clock seconds spent
-    pub wall_secs: f64,
-}
+use crate::env::Solution;
 
 /// Pick the better of two candidate solutions under the paper's
 /// selection rule: highest reward (the LUT already encodes the
@@ -39,21 +34,4 @@ pub fn better(a: Option<Solution>, b: Solution) -> Option<Solution> {
         Some(a) if b.reward > a.reward => Some(b),
         keep => keep,
     }
-}
-
-/// Helper: run a closure and record wall time + eval delta.
-pub fn timed<F: FnOnce(&mut CompressionEnv) -> anyhow::Result<Solution>>(
-    method: &'static str,
-    env: &mut CompressionEnv,
-    f: F,
-) -> anyhow::Result<BaselineRun> {
-    let evals0 = env.n_evals;
-    let t0 = std::time::Instant::now();
-    let best = f(env)?;
-    Ok(BaselineRun {
-        method,
-        best,
-        evals: env.n_evals - evals0,
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
 }

@@ -8,10 +8,18 @@
 //! evaluated with the exact same oracle as the RL agent, and the eval
 //! budget is matched to the RL episode count (55 generations × 20
 //! population ≡ 1100 episodes).
+//!
+//! Under the unified [`crate::search::SearchDriver`] loop
+//! ([`Nsga2Strategy`]) one genome evaluation = one driver episode: the
+//! strategy queues the initial population, then after each fully
+//! evaluated batch runs survivor selection and breeds the next
+//! offspring batch — the same RNG draw order as the historical
+//! generational loop, so fixed-seed results are bit-identical.
 
 use anyhow::Result;
 
 use crate::env::{Action, CompressionEnv, Solution};
+use crate::search::{SearchDriver, SearchStrategy};
 use crate::util::rng::Rng;
 
 /// NSGA-II budget & operator knobs.
@@ -42,7 +50,6 @@ struct Individual {
     /// objectives to MINIMISE: [-reward] (single-objective per §5.3.2,
     /// footnote 2: NSGA-II minimises, so the inverse reward is used)
     obj: Vec<f64>,
-    sol: Option<Solution>,
 }
 
 fn decode(genes: &[f64]) -> Vec<Action> {
@@ -55,13 +62,6 @@ fn decode(genes: &[f64]) -> Vec<Action> {
             alg: (g[2] * 6.999) as usize,
         })
         .collect()
-}
-
-fn evaluate(env: &mut CompressionEnv, ind: &mut Individual) -> Result<()> {
-    let sol = env.evaluate_config(&decode(&ind.genes))?;
-    ind.obj = vec![-sol.reward];
-    ind.sol = Some(sol);
-    Ok(())
 }
 
 /// a dominates b (all ≤, one <).
@@ -170,50 +170,87 @@ fn poly_mutate(g: &mut [f64], eta: f64, p: f64, rng: &mut Rng) {
     }
 }
 
-/// Evolve the population; returns the best individual's solution.
-pub fn run(env: &mut CompressionEnv, cfg: &Nsga2Config) -> Result<Solution> {
-    let n_genes = 3 * env.n_layers();
-    let mut rng = Rng::new(cfg.seed ^ 0x6A);
-    let mut pop: Vec<Individual> = (0..cfg.pop)
-        .map(|_| Individual {
-            genes: (0..n_genes).map(|_| rng.uniform()).collect(),
-            obj: vec![],
-            sol: None,
-        })
-        .collect();
-    for ind in pop.iter_mut() {
-        evaluate(env, ind)?;
-    }
-    let mut best: Option<Solution> = None;
-    for ind in &pop {
-        best = super::better(best, ind.sol.clone().unwrap());
+/// Which batch of genomes the strategy is currently evaluating.
+const STAGE_INIT: u8 = 0;
+const STAGE_OFFSPRING: u8 = 1;
+
+/// NSGA-II as a [`SearchStrategy`] — see the module docs for the
+/// episode mapping.
+pub struct Nsga2Strategy {
+    pop_size: usize,
+    generations: usize,
+    eta_c: f64,
+    eta_m: f64,
+    p_mut: f64,
+    rng: Rng,
+    /// survivors of the last completed selection (the breeding pool)
+    parents: Vec<Individual>,
+    /// genomes being evaluated this batch (init pop or one offspring set)
+    queue: Vec<Individual>,
+    queue_idx: usize,
+    stage: u8,
+    gen: usize,
+    current: Vec<Action>,
+}
+
+impl Nsga2Strategy {
+    /// Build the strategy for an env with `n_layers` prunable layers;
+    /// seeds the RNG and draws the initial population exactly as the
+    /// historical loop did.
+    pub fn new(cfg: &Nsga2Config, n_layers: usize) -> Nsga2Strategy {
+        let n_genes = 3 * n_layers;
+        let mut rng = Rng::new(cfg.seed ^ 0x6A);
+        let queue: Vec<Individual> = (0..cfg.pop)
+            .map(|_| Individual {
+                genes: (0..n_genes).map(|_| rng.uniform()).collect(),
+                obj: vec![],
+            })
+            .collect();
+        Nsga2Strategy {
+            pop_size: cfg.pop,
+            generations: cfg.generations,
+            eta_c: cfg.eta_c,
+            eta_m: cfg.eta_m,
+            p_mut: cfg.p_mut,
+            rng,
+            parents: Vec::new(),
+            queue,
+            queue_idx: 0,
+            stage: STAGE_INIT,
+            gen: 0,
+            current: Vec::new(),
+        }
     }
 
-    for _gen in 0..cfg.generations {
-        // tournament selection + SBX + mutation -> offspring
-        let mut offspring = Vec::with_capacity(cfg.pop);
-        while offspring.len() < cfg.pop {
+    /// Tournament selection + SBX + mutation, breeding `pop_size`
+    /// offspring from `parents` — identical RNG draw order to the
+    /// historical loop.
+    fn make_offspring(&mut self) -> Vec<Individual> {
+        let mut offspring = Vec::with_capacity(self.pop_size);
+        while offspring.len() < self.pop_size {
             let pick = |rng: &mut Rng, pop: &[Individual]| {
                 let i = rng.below(pop.len());
                 let j = rng.below(pop.len());
                 if pop[i].obj[0] <= pop[j].obj[0] { i } else { j }
             };
-            let (i, j) = (pick(&mut rng, &pop), pick(&mut rng, &pop));
-            let (mut c1, mut c2) = sbx(&pop[i].genes, &pop[j].genes, cfg.eta_c, &mut rng);
-            poly_mutate(&mut c1, cfg.eta_m, cfg.p_mut, &mut rng);
-            poly_mutate(&mut c2, cfg.eta_m, cfg.p_mut, &mut rng);
-            offspring.push(Individual { genes: c1, obj: vec![], sol: None });
-            if offspring.len() < cfg.pop {
-                offspring.push(Individual { genes: c2, obj: vec![], sol: None });
+            let (i, j) = (pick(&mut self.rng, &self.parents), pick(&mut self.rng, &self.parents));
+            let (mut c1, mut c2) =
+                sbx(&self.parents[i].genes, &self.parents[j].genes, self.eta_c, &mut self.rng);
+            poly_mutate(&mut c1, self.eta_m, self.p_mut, &mut self.rng);
+            poly_mutate(&mut c2, self.eta_m, self.p_mut, &mut self.rng);
+            offspring.push(Individual { genes: c1, obj: vec![] });
+            if offspring.len() < self.pop_size {
+                offspring.push(Individual { genes: c2, obj: vec![] });
             }
         }
-        for ind in offspring.iter_mut() {
-            evaluate(env, ind)?;
-            best = super::better(best, ind.sol.clone().unwrap());
-        }
-        // elitist survivor selection: fronts + crowding
-        let mut combined = pop;
-        combined.append(&mut offspring);
+        offspring
+    }
+
+    /// Elitist survivor selection over parents ∪ offspring: fronts +
+    /// crowding, truncated to `pop_size`.
+    fn select_survivors(&mut self) {
+        let mut combined = std::mem::take(&mut self.parents);
+        combined.append(&mut self.queue);
         let objs: Vec<Vec<f64>> = combined.iter().map(|i| i.obj.clone()).collect();
         let fronts = nondominated_sort(&objs);
         let mut order: Vec<usize> = (0..combined.len()).collect();
@@ -236,12 +273,97 @@ pub fn run(env: &mut CompressionEnv, cfg: &Nsga2Config) -> Result<Solution> {
                 .cmp(&fronts[b])
                 .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
         });
-        pop = order[..cfg.pop]
+        self.parents = order[..self.pop_size]
             .iter()
             .map(|&i| combined[i].clone())
             .collect();
     }
-    Ok(best.unwrap())
+
+    fn save_individuals(xs: &[Individual], w: &mut crate::io::bin::BinWriter) {
+        w.usize(xs.len());
+        for ind in xs {
+            w.f64s(&ind.genes);
+            w.f64s(&ind.obj);
+        }
+    }
+
+    fn load_individuals(r: &mut crate::io::bin::BinReader) -> Result<Vec<Individual>> {
+        let n = r.usize()?;
+        let mut xs = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let genes = r.f64s()?;
+            let obj = r.f64s()?;
+            xs.push(Individual { genes, obj });
+        }
+        Ok(xs)
+    }
+}
+
+impl SearchStrategy for Nsga2Strategy {
+    fn method(&self) -> &str {
+        "nsga2"
+    }
+
+    fn episodes(&self) -> usize {
+        self.pop_size + self.generations * self.pop_size
+    }
+
+    fn begin_episode(&mut self, _ep: usize) {
+        self.current = decode(&self.queue[self.queue_idx].genes);
+    }
+
+    fn propose(&mut self, t: usize, _state: &[f32]) -> Action {
+        self.current[t]
+    }
+
+    fn end_episode(&mut self, _ep: usize, _total: f64, sol: &Solution) {
+        self.queue[self.queue_idx].obj = vec![-sol.reward];
+        self.queue_idx += 1;
+        if self.queue_idx < self.queue.len() {
+            return;
+        }
+        // batch fully evaluated: advance the generational state machine
+        if self.stage == STAGE_INIT {
+            self.parents = std::mem::take(&mut self.queue);
+            self.stage = STAGE_OFFSPRING;
+            if self.generations > 0 {
+                self.queue = self.make_offspring();
+            }
+        } else {
+            self.select_survivors(); // consumes queue into parents
+            self.gen += 1;
+            if self.gen < self.generations {
+                self.queue = self.make_offspring();
+            }
+        }
+        self.queue_idx = 0;
+    }
+
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.rng.save_state(w);
+        Self::save_individuals(&self.parents, w);
+        Self::save_individuals(&self.queue, w);
+        w.usize(self.queue_idx);
+        w.u8(self.stage);
+        w.usize(self.gen);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> Result<()> {
+        self.rng.load_state(r)?;
+        self.parents = Self::load_individuals(r)?;
+        self.queue = Self::load_individuals(r)?;
+        self.queue_idx = r.usize()?;
+        self.stage = r.u8()?;
+        self.gen = r.usize()?;
+        Ok(())
+    }
+}
+
+/// Evolve the population; returns the best individual's solution.
+pub fn run(env: &mut CompressionEnv, cfg: &Nsga2Config) -> Result<Solution> {
+    let mut strategy = Nsga2Strategy::new(cfg, env.n_layers());
+    let outcome = SearchDriver::plain().run(env, &mut strategy)?;
+    outcome.best.ok_or_else(|| anyhow::anyhow!("nsga2 evaluated zero genomes"))
 }
 
 #[cfg(test)]
@@ -299,5 +421,73 @@ mod tests {
         let acts = decode(&genes);
         assert_eq!(acts[0].alg, 6);
         assert_eq!(acts[1].alg, 0);
+    }
+
+    #[test]
+    fn strategy_episode_budget_and_batching() {
+        let cfg = Nsga2Config { pop: 4, generations: 2, seed: 9, ..Default::default() };
+        let mut s = Nsga2Strategy::new(&cfg, 3);
+        assert_eq!(s.episodes(), 4 + 2 * 4);
+        // drive the state machine with synthetic solutions: queue sizes
+        // must stay at `pop` through init + both offspring batches
+        let fake = Solution {
+            per_layer: vec![],
+            actions: vec![],
+            accuracy: 0.5,
+            acc_loss: 0.1,
+            energy_gain: 0.2,
+            latency_gain: 0.2,
+            reward: 1.0,
+        };
+        for ep in 0..s.episodes() {
+            s.begin_episode(ep);
+            assert_eq!(s.current.len(), 3);
+            let a = s.propose(0, &[]);
+            assert!(a.alg < 7);
+            let mut sol = fake.clone();
+            sol.reward = 1.0 + ep as f64 * 0.01;
+            s.end_episode(ep, 0.0, &sol);
+        }
+        assert_eq!(s.gen, 2);
+        assert_eq!(s.parents.len(), 4);
+    }
+
+    #[test]
+    fn strategy_state_roundtrip_breeds_identically() {
+        let cfg = Nsga2Config { pop: 4, generations: 3, seed: 5, ..Default::default() };
+        let mut a = Nsga2Strategy::new(&cfg, 2);
+        let fake = |r: f64| Solution {
+            per_layer: vec![],
+            actions: vec![],
+            accuracy: 0.5,
+            acc_loss: 0.1,
+            energy_gain: 0.2,
+            latency_gain: 0.2,
+            reward: r,
+        };
+        // run through init + half an offspring batch, then snapshot
+        for ep in 0..6 {
+            a.begin_episode(ep);
+            a.end_episode(ep, 0.0, &fake(ep as f64 * 0.3));
+        }
+        let mut w = crate::io::bin::BinWriter::new();
+        a.save_state(&mut w);
+        let mut b = Nsga2Strategy::new(&cfg, 2);
+        let mut r = crate::io::bin::BinReader::new(&w.buf);
+        b.load_state(&mut r).unwrap();
+        // both must propose identical genomes for the rest of the run
+        for ep in 6..a.episodes() {
+            a.begin_episode(ep);
+            b.begin_episode(ep);
+            for t in 0..2 {
+                let (x, y) = (a.propose(t, &[]), b.propose(t, &[]));
+                assert_eq!(x.ratio.to_bits(), y.ratio.to_bits());
+                assert_eq!(x.bits.to_bits(), y.bits.to_bits());
+                assert_eq!(x.alg, y.alg);
+            }
+            let s = fake(ep as f64 * 0.21);
+            a.end_episode(ep, 0.0, &s);
+            b.end_episode(ep, 0.0, &s);
+        }
     }
 }

@@ -15,12 +15,15 @@
 //! that step does not exist here (DESIGN.md §1) which matches how the
 //! paper frames OPQ's reliance on fine-tuning on harder datasets.
 //! A small sweep over (global budget, bit budget) picks the best
-//! reward, mirroring the paper's operating-point selection.
+//! reward, mirroring the paper's operating-point selection — one
+//! operating point per driver episode ([`OpqStrategy`] under the
+//! unified [`crate::search::SearchDriver`] loop).
 
 use anyhow::Result;
 
 use crate::env::{Action, CompressionEnv, Solution, MAX_BITS, MIN_BITS};
 use crate::pruning::PruneAlg;
+use crate::search::{SearchDriver, SearchStrategy};
 
 /// OPQ operating-point sweep.
 pub struct OpqConfig {
@@ -89,26 +92,71 @@ fn bit_allocation(env: &CompressionEnv, avg_bits: f64) -> Vec<f64> {
         .collect()
 }
 
+/// OPQ as a [`SearchStrategy`]: the whole (budget × bit-budget) sweep
+/// is derived analytically from the dense weights at construction, one
+/// operating point per episode. Stateless between episodes, so its
+/// checkpoint payload is empty.
+pub struct OpqStrategy {
+    configs: Vec<Vec<Action>>,
+    ep: usize,
+}
+
+impl OpqStrategy {
+    /// Precompute the sweep in the historical order (budgets outer,
+    /// bit-budgets inner) from the env's dense weights.
+    pub fn new(env: &CompressionEnv, cfg: &OpqConfig) -> OpqStrategy {
+        let mut configs = Vec::with_capacity(cfg.budgets.len() * cfg.bit_budgets.len());
+        for &budget in &cfg.budgets {
+            let sp = sparsity_allocation(env, budget);
+            for &bb in &cfg.bit_budgets {
+                let bits = bit_allocation(env, bb);
+                let actions: Vec<Action> = sp
+                    .iter()
+                    .zip(&bits)
+                    .map(|(&s, &b)| Action {
+                        ratio: (s / crate::env::MAX_RATIO).clamp(0.0, 1.0),
+                        bits: ((b - MIN_BITS as f64) / (MAX_BITS - MIN_BITS) as f64)
+                            .clamp(0.0, 1.0),
+                        alg: PruneAlg::Level.index(),
+                    })
+                    .collect();
+                configs.push(actions);
+            }
+        }
+        OpqStrategy { configs, ep: 0 }
+    }
+}
+
+impl SearchStrategy for OpqStrategy {
+    fn method(&self) -> &str {
+        "opq"
+    }
+
+    fn episodes(&self) -> usize {
+        self.configs.len()
+    }
+
+    fn begin_episode(&mut self, ep: usize) {
+        self.ep = ep;
+    }
+
+    fn propose(&mut self, t: usize, _state: &[f32]) -> Action {
+        self.configs[self.ep][t]
+    }
+
+    fn save_state(&self, _w: &mut crate::io::bin::BinWriter) {
+        // the sweep is a pure function of the dense weights — nothing to
+        // persist; a resumed strategy recomputes identical configs
+    }
+
+    fn load_state(&mut self, _r: &mut crate::io::bin::BinReader) -> Result<()> {
+        Ok(())
+    }
+}
+
 /// Run OPQ's analytical allocation sweep; returns its best solution.
 pub fn run(env: &mut CompressionEnv, cfg: &OpqConfig) -> Result<Solution> {
-    let mut best: Option<Solution> = None;
-    for &budget in &cfg.budgets {
-        let sp = sparsity_allocation(env, budget);
-        for &bb in &cfg.bit_budgets {
-            let bits = bit_allocation(env, bb);
-            let actions: Vec<Action> = sp
-                .iter()
-                .zip(&bits)
-                .map(|(&s, &b)| Action {
-                    ratio: (s / crate::env::MAX_RATIO).clamp(0.0, 1.0),
-                    bits: ((b - MIN_BITS as f64) / (MAX_BITS - MIN_BITS) as f64)
-                        .clamp(0.0, 1.0),
-                    alg: PruneAlg::Level.index(),
-                })
-                .collect();
-            let sol = env.evaluate_config(&actions)?;
-            best = super::better(best, sol);
-        }
-    }
-    Ok(best.unwrap())
+    let mut strategy = OpqStrategy::new(env, cfg);
+    let outcome = SearchDriver::plain().run(env, &mut strategy)?;
+    outcome.best.ok_or_else(|| anyhow::anyhow!("opq swept zero operating points"))
 }

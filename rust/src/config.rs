@@ -31,6 +31,17 @@ pub struct RunConfig {
     pub backend: BackendKind,
     /// oracle worker threads (`--threads`; default `HAPQ_THREADS` or 1)
     pub threads: usize,
+    /// independent seeds to search and merge best-of (`--seeds`)
+    pub seeds: usize,
+    /// search-checkpoint file (`--checkpoint [PATH]`); an empty path
+    /// means "derive `<out>/<model>__<method>.ckpt`" (bare flag)
+    pub checkpoint: Option<PathBuf>,
+    /// episodes between periodic checkpoints (`--checkpoint-every`)
+    pub checkpoint_every: usize,
+    /// restore from the checkpoint before searching (`--resume`)
+    pub resume: bool,
+    /// suspend after N episodes this session (`--stop-after`)
+    pub stop_after: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -46,6 +57,11 @@ impl Default for RunConfig {
             mac_samples: 4000,
             backend: BackendKind::Native,
             threads: crate::runtime::exec::default_threads(),
+            seeds: 1,
+            checkpoint: None,
+            checkpoint_every: 25,
+            resume: false,
+            stop_after: None,
         }
     }
 }
@@ -104,10 +120,31 @@ impl Cli {
         Ok(self.usize_flag(name, default as usize)? as u64)
     }
 
+    /// Optional integer flag (`None` when absent).
+    pub fn opt_usize_flag(&self, name: &str) -> Result<Option<usize>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{name} expects an integer, got `{v}`"),
+            },
+        }
+    }
+
+    /// True when `--flag` was given (with or without a value).
+    pub fn bool_flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
     /// Build the shared RunConfig from flags.
     pub fn run_config(&self) -> Result<RunConfig> {
         let d = RunConfig::default();
-        Ok(RunConfig {
+        // `--checkpoint` without a value stores "true": keep an empty
+        // path so the coordinator derives `<out>/<model>__<method>.ckpt`
+        let checkpoint = self.flags.get("checkpoint").map(|v| {
+            if v == "true" { PathBuf::new() } else { PathBuf::from(v) }
+        });
+        let cfg = RunConfig {
             artifacts: PathBuf::from(self.str_flag("artifacts", "artifacts")),
             out: PathBuf::from(self.str_flag("out", "results")),
             episodes: self.usize_flag("episodes", d.episodes)?,
@@ -118,7 +155,20 @@ impl Cli {
             mac_samples: self.usize_flag("mac-samples", d.mac_samples)?,
             backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
             threads: self.usize_flag("threads", d.threads)?.max(1),
-        })
+            seeds: self.usize_flag("seeds", d.seeds)?.max(1),
+            checkpoint,
+            checkpoint_every: self.usize_flag("checkpoint-every", d.checkpoint_every)?,
+            resume: self.bool_flag("resume"),
+            stop_after: self.opt_usize_flag("stop-after")?,
+        };
+        if cfg.seeds > 1 && (cfg.resume || cfg.stop_after.is_some() || cfg.checkpoint.is_some()) {
+            bail!(
+                "--seeds fans out worker processes, which do not inherit \
+                 --checkpoint/--resume/--stop-after; run (and resume) individual \
+                 seeds with explicit --seed/--out instead"
+            );
+        }
+        Ok(cfg)
     }
 }
 
@@ -162,6 +212,39 @@ mod tests {
         // default is native
         let c = Cli::parse(&args("compress")).unwrap();
         assert_eq!(c.run_config().unwrap().backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn search_flags_thread_into_config() {
+        let c = Cli::parse(&args("compress --seeds 4 --checkpoint-every 5")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.seeds, 4);
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert!(cfg.checkpoint.is_none());
+        assert!(!cfg.resume);
+        assert_eq!(cfg.stop_after, None);
+        // bare --checkpoint derives the default path (empty sentinel)
+        let c = Cli::parse(&args("compress --checkpoint")).unwrap();
+        assert_eq!(c.run_config().unwrap().checkpoint, Some(PathBuf::new()));
+        let c = Cli::parse(&args("compress --checkpoint run.ckpt --resume --stop-after 2"))
+            .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.checkpoint, Some(PathBuf::from("run.ckpt")));
+        assert!(cfg.resume);
+        assert_eq!(cfg.stop_after, Some(2));
+        // --seeds 0 clamps to 1; bad integers are rejected
+        let c = Cli::parse(&args("compress --seeds 0")).unwrap();
+        assert_eq!(c.run_config().unwrap().seeds, 1);
+        let c = Cli::parse(&args("compress --stop-after soon")).unwrap();
+        assert!(c.run_config().is_err());
+        // multi-seed fan-out excludes the single-run checkpoint flags
+        // (workers would silently drop them otherwise)
+        let c = Cli::parse(&args("compress --seeds 2 --resume")).unwrap();
+        assert!(c.run_config().is_err());
+        let c = Cli::parse(&args("compress --seeds 2 --checkpoint")).unwrap();
+        assert!(c.run_config().is_err());
+        let c = Cli::parse(&args("compress --seeds 2 --stop-after 3")).unwrap();
+        assert!(c.run_config().is_err());
     }
 
     #[test]

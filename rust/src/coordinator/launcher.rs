@@ -9,12 +9,19 @@
 //! and `--threads` are forwarded to every worker. Finished children are
 //! reaped under an adaptive poll ([`ReapBackoff`]): 1 ms after a reap,
 //! doubling to a 16 ms ceiling while everyone keeps running.
+//!
+//! **Multi-seed search** (`--seeds N`, HAQ-style sweeps) reuses the
+//! same pool: [`run_multi_seed`] fans one worker per (model, method,
+//! seed) — each writing under `out/seed<K>/` — and
+//! [`merge_seed_reports`] folds the per-seed reports into one best-of
+//! JSON (winner's full report + `seeds`/`seed_rewards` provenance)
+//! under the plain `out/<model>__<method>.json` name.
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::io::json;
 
@@ -25,9 +32,21 @@ pub struct Job {
     pub model: String,
     /// method to run (`ours` or a baseline name)
     pub method: String,
+    /// seed override for multi-seed sweeps (`None`: inherit the
+    /// leader's seed and write to the shared output directory)
+    pub seed: Option<u64>,
 }
 
 impl Job {
+    /// The output directory this job writes to (per-seed jobs get an
+    /// isolated `seed<K>/` subdirectory so sweeps cannot collide).
+    fn out_dir(&self, out: &Path) -> PathBuf {
+        match self.seed {
+            Some(s) => out.join(format!("seed{s}")),
+            None => out.to_path_buf(),
+        }
+    }
+
     /// CLI args for the child (`compress` for ours, `baseline` otherwise).
     fn args(&self, cfg: &crate::config::RunConfig) -> Vec<String> {
         let mut v = if self.method == "ours" {
@@ -45,7 +64,7 @@ impl Job {
             "--artifacts".into(),
             cfg.artifacts.display().to_string(),
             "--out".into(),
-            cfg.out.display().to_string(),
+            self.out_dir(&cfg.out).display().to_string(),
             "--episodes".into(),
             cfg.episodes.to_string(),
             "--warmup".into(),
@@ -53,7 +72,7 @@ impl Job {
             "--reward-subset".into(),
             cfg.reward_subset.to_string(),
             "--seed".into(),
-            cfg.seed.to_string(),
+            self.seed.unwrap_or(cfg.seed).to_string(),
             "--backend".into(),
             cfg.backend.name().to_string(),
             "--threads".into(),
@@ -64,7 +83,8 @@ impl Job {
 
     /// Where the child process writes its result JSON.
     pub fn report_path(&self, out: &Path) -> PathBuf {
-        out.join(format!("{}__{}.json", self.model, self.method))
+        self.out_dir(out)
+            .join(format!("{}__{}.json", self.model, self.method))
     }
 }
 
@@ -180,6 +200,145 @@ pub fn run_grid_with(
     Ok(done)
 }
 
+/// Overwrite-or-append one field of a report object.
+fn set_field(v: &mut json::Value, key: &str, val: json::Value) -> Result<()> {
+    if let json::Value::Obj(kv) = v {
+        if let Some(slot) = kv.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = val;
+        } else {
+            kv.push((key.to_string(), val));
+        }
+        Ok(())
+    } else {
+        bail!("report JSON is not an object")
+    }
+}
+
+/// Fold per-seed run reports into one best-of report: the winner (the
+/// paper's selection rule — highest reward, first entry wins ties, so
+/// pass reports in ascending-seed order for a deterministic
+/// lowest-seed tie-break) is kept verbatim, annotated with `seed` (the
+/// winning seed), `seeds` (reports merged) and `seed_rewards`
+/// (per-seed rewards, input order). [`run_multi_seed`] additionally
+/// overwrites `seeds` with the requested sweep width and records
+/// `failed_seeds`, so partial sweeps stay auditable from the merged
+/// JSON alone.
+pub fn merge_seed_reports(per_seed: &[(u64, json::Value)]) -> Result<json::Value> {
+    if per_seed.is_empty() {
+        bail!("no per-seed reports to merge");
+    }
+    let mut best_i = 0usize;
+    let mut best_r = f64::NEG_INFINITY;
+    let mut rewards = Vec::with_capacity(per_seed.len());
+    for (i, (_, v)) in per_seed.iter().enumerate() {
+        let r = v.req("reward")?.as_f64()?;
+        rewards.push(r);
+        if r > best_r {
+            best_r = r;
+            best_i = i;
+        }
+    }
+    let (seed, best) = &per_seed[best_i];
+    let mut merged = best.clone();
+    set_field(&mut merged, "seed", json::num(*seed as f64))?;
+    set_field(&mut merged, "seeds", json::num(per_seed.len() as f64))?;
+    set_field(
+        &mut merged,
+        "seed_rewards",
+        json::arr(rewards.iter().map(|&r| json::num(r)).collect()),
+    )?;
+    Ok(merged)
+}
+
+/// Per-(model, method) outcome of a multi-seed sweep: the merged
+/// best-of report, or an error when every seed failed.
+pub type SeedSweepResults = Vec<((String, String), Result<json::Value>)>;
+
+/// Multi-seed search over a set of (model, method) pairs: fans one
+/// worker per (pair × seed) across the pool (`cfg.seeds` consecutive
+/// seeds starting at `cfg.seed`, at most `jobs` children alive), then
+/// merges each pair's per-seed reports into one best-of JSON written to
+/// `out/<model>__<method>.json`. A pair fails only when *every* seed
+/// failed; partial sweeps merge what succeeded.
+pub fn run_multi_seed(
+    cfg: &crate::config::RunConfig,
+    pairs: &[(String, String)],
+    jobs: usize,
+) -> Result<SeedSweepResults> {
+    let exe = std::env::current_exe().context("locating hapq binary")?;
+    run_multi_seed_with(cfg, pairs, jobs, &exe)
+}
+
+/// Like [`run_multi_seed`] but with an explicit worker executable (the
+/// launcher tests substitute a stub binary).
+pub fn run_multi_seed_with(
+    cfg: &crate::config::RunConfig,
+    pairs: &[(String, String)],
+    jobs: usize,
+    exe: &Path,
+) -> Result<SeedSweepResults> {
+    let mut grid = Vec::with_capacity(pairs.len() * cfg.seeds);
+    for (model, method) in pairs {
+        for i in 0..cfg.seeds {
+            grid.push(Job {
+                model: model.clone(),
+                method: method.clone(),
+                seed: Some(cfg.seed + i as u64),
+            });
+        }
+    }
+    let done = run_grid_with(cfg, grid, jobs, exe)?;
+    let mut merged_all = Vec::with_capacity(pairs.len());
+    for (model, method) in pairs {
+        let mut per_seed: Vec<(u64, json::Value)> = Vec::new();
+        let mut failed: Vec<u64> = Vec::new();
+        let mut errors: Vec<String> = Vec::new();
+        for (job, res) in &done {
+            if &job.model == model && &job.method == method {
+                let seed = job.seed.unwrap_or(cfg.seed);
+                match res {
+                    Ok(v) => per_seed.push((seed, v.clone())),
+                    Err(e) => {
+                        failed.push(seed);
+                        errors.push(format!("seed {seed}: {e}"));
+                    }
+                }
+            }
+        }
+        // `done` is in worker-completion order — restore seed order so
+        // seed_rewards is positional and equal-reward ties break to the
+        // lowest seed, deterministically
+        per_seed.sort_by_key(|(seed, _)| *seed);
+        failed.sort_unstable();
+        let merged = if per_seed.is_empty() {
+            Err(anyhow!(
+                "all {} seeds failed for {model}/{method}: {}",
+                cfg.seeds,
+                errors.join("; ")
+            ))
+        } else {
+            merge_seed_reports(&per_seed).and_then(|mut m| {
+                // record the *requested* sweep width and any failed
+                // seeds, so a partial sweep is auditable from the JSON
+                set_field(&mut m, "seeds", json::num(cfg.seeds as f64))?;
+                if !failed.is_empty() {
+                    set_field(
+                        &mut m,
+                        "failed_seeds",
+                        json::arr(failed.iter().map(|&s| json::num(s as f64)).collect()),
+                    )?;
+                }
+                let path = cfg.out.join(format!("{model}__{method}.json"));
+                std::fs::write(&path, m.to_string())
+                    .with_context(|| format!("writing merged report {path:?}"))?;
+                Ok(m)
+            })
+        };
+        merged_all.push(((model.clone(), method.clone()), merged));
+    }
+    Ok(merged_all)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,7 +346,7 @@ mod tests {
     #[test]
     fn job_args_shape() {
         let cfg = crate::config::RunConfig::default();
-        let ours = Job { model: "vgg11".into(), method: "ours".into() };
+        let ours = Job { model: "vgg11".into(), method: "ours".into(), seed: None };
         let a = ours.args(&cfg);
         assert_eq!(a[0], "compress");
         assert!(a.contains(&"--episodes".to_string()));
@@ -196,19 +355,61 @@ mod tests {
         assert!(a.contains(&"native".to_string()));
         assert!(a.contains(&"--threads".to_string()));
         assert!(a.contains(&cfg.threads.to_string()));
-        let base = Job { model: "vgg11".into(), method: "amc".into() };
+        let base = Job { model: "vgg11".into(), method: "amc".into(), seed: None };
         let b = base.args(&cfg);
         assert_eq!(b[0], "baseline");
         assert!(b.contains(&"amc".to_string()));
     }
 
     #[test]
+    fn seeded_jobs_get_isolated_seed_and_out_dir() {
+        let cfg = crate::config::RunConfig::default();
+        let j = Job { model: "vgg11".into(), method: "haq".into(), seed: Some(43) };
+        let a = j.args(&cfg);
+        // the seed override replaces the leader's seed…
+        let si = a.iter().position(|x| x == "--seed").unwrap();
+        assert_eq!(a[si + 1], "43");
+        // …and the report lands in a per-seed subdirectory
+        let oi = a.iter().position(|x| x == "--out").unwrap();
+        assert_eq!(a[oi + 1], cfg.out.join("seed43").display().to_string());
+        assert_eq!(
+            j.report_path(Path::new("out")),
+            PathBuf::from("out/seed43/vgg11__haq.json")
+        );
+    }
+
+    #[test]
     fn report_path_convention_matches_save_report() {
-        let j = Job { model: "m".into(), method: "ours".into() };
+        let j = Job { model: "m".into(), method: "ours".into(), seed: None };
         assert_eq!(
             j.report_path(Path::new("out")),
             PathBuf::from("out/m__ours.json")
         );
+    }
+
+    #[test]
+    fn merge_picks_highest_reward_and_annotates_provenance() {
+        let report = |seed: u64, reward: f64| {
+            (
+                seed,
+                json::parse(&format!(
+                    r#"{{"model":"m","method":"haq","seed":{seed},"reward":{reward},"energy_gain":0.4}}"#
+                ))
+                .unwrap(),
+            )
+        };
+        let merged =
+            merge_seed_reports(&[report(42, 1.5), report(43, 2.25), report(44, 2.25)]).unwrap();
+        // strict > keeps the first of equal-reward seeds (the paper's
+        // better() rule), and the winner's fields survive verbatim
+        assert_eq!(merged.req("seed").unwrap().as_f64().unwrap(), 43.0);
+        assert_eq!(merged.req("reward").unwrap().as_f64().unwrap(), 2.25);
+        assert_eq!(merged.req("seeds").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(
+            merged.req("seed_rewards").unwrap().f64_vec().unwrap(),
+            vec![1.5, 2.25, 2.25]
+        );
+        assert!(merge_seed_reports(&[]).is_err());
     }
 
     #[test]
@@ -230,6 +431,22 @@ mod tests {
     }
 
     #[test]
+    fn multi_seed_sweep_surfaces_all_seed_failures() {
+        // the stub worker produces no report JSON, so every seed fails
+        // and the pair must come back as one aggregated error (not a
+        // crash, and no merged file)
+        let out =
+            std::env::temp_dir().join(format!("hapq-launcher-seeds-{}", std::process::id()));
+        let cfg = crate::config::RunConfig { out: out.clone(), seeds: 2, ..Default::default() };
+        let pairs = vec![("m0".to_string(), "haq".to_string())];
+        let done = run_multi_seed_with(&cfg, &pairs, 2, Path::new("true")).unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].1.is_err());
+        assert!(!out.join("m0__haq.json").exists());
+        let _ = std::fs::remove_dir_all(out);
+    }
+
+    #[test]
     fn reap_loop_completes_a_grid_with_bounded_overhead() {
         // `true` exits instantly and ignores the job arguments. The
         // deterministic proof that reap dead time is bounded lives in
@@ -241,7 +458,7 @@ mod tests {
         let out = std::env::temp_dir().join(format!("hapq-launcher-reap-{}", std::process::id()));
         let cfg = crate::config::RunConfig { out: out.clone(), ..Default::default() };
         let grid: Vec<Job> = (0..4)
-            .map(|i| Job { model: format!("m{i}"), method: "ours".into() })
+            .map(|i| Job { model: format!("m{i}"), method: "ours".into(), seed: None })
             .collect();
         let t0 = std::time::Instant::now();
         let done = run_grid_with(&cfg, grid, 2, Path::new("true")).unwrap();

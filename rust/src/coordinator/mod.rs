@@ -1,11 +1,14 @@
 //! The coordinator — HAPQ's L3 driver.
 //!
 //! Owns the artifact manifest, the shared R_Q table, the backend
-//! selection, and the training loops: it builds a [`CompressionEnv`]
-//! per model, runs the composite agent (or a baseline) against it,
-//! extracts the final greedy policy, re-scores it on the held-out test
-//! split and emits result JSON + metrics. Everything the CLI, the
-//! examples and the benches do goes through this module.
+//! selection, and the search glue: it builds a [`CompressionEnv`] per
+//! model, wires the method (composite agent or a baseline) into a
+//! [`crate::search::SearchStrategy`], runs it through the unified
+//! [`SearchDriver`] (budgets, best tracking, `--resume` checkpointing,
+//! `--stop-after` suspension), re-scores the winner on the held-out
+//! test split and emits result JSON + metrics. Everything the CLI, the
+//! examples and the benches do goes through this module; multi-seed
+//! fan-out (`--seeds N`) lives in [`launcher`].
 //!
 //! Accuracy queries go through [`InferenceSession::open`], so the same
 //! driver serves the pure-Rust [`crate::runtime::NativeBackend`]
@@ -26,8 +29,9 @@ use crate::hw::mac_sim::RqTable;
 use crate::hw::Accel;
 use crate::io::json::{self, arr, num, obj, s, Value};
 use crate::model::{ModelArch, Weights};
-use crate::rl::composite::{CompositeAgent, CompositeConfig};
+use crate::rl::composite::{CompositeAgent, CompositeConfig, CompositeStrategy};
 use crate::runtime::{InferenceSession, Split};
+use crate::search::{DriverConfig, SearchDriver, SearchOutcome, SearchStrategy};
 
 /// One manifest entry.
 #[derive(Clone, Debug)]
@@ -67,6 +71,8 @@ pub struct RunReport {
     pub dataset: String,
     /// method that produced the solution (`ours`, `amc`, …)
     pub method: String,
+    /// RNG seed of the run (multi-seed merges report the winner's)
+    pub seed: u64,
     /// the best solution found (per-layer policy + metrics)
     pub best: Solution,
     /// dense 8-bit baseline accuracy on the test split
@@ -112,6 +118,7 @@ impl RunReport {
             ("model", s(&self.model)),
             ("dataset", s(&self.dataset)),
             ("method", s(&self.method)),
+            ("seed", num(self.seed as f64)),
             ("energy_gain", num(self.best.energy_gain)),
             ("val_acc_loss", num(self.best.acc_loss)),
             ("test_acc_dense", num(self.test_acc_dense)),
@@ -230,20 +237,115 @@ impl Coordinator {
         Ok((dense_acc, acc))
     }
 
+    /// The search checkpoint this run reads/writes: an explicit
+    /// `--checkpoint PATH` wins; a bare `--checkpoint`, `--resume` or
+    /// `--stop-after` derives `<out>/<model>__<method>.ckpt`.
+    pub fn effective_checkpoint(&self, model: &str, method: &str) -> Option<PathBuf> {
+        let derived = || self.cfg.out.join(format!("{model}__{method}.ckpt"));
+        match &self.cfg.checkpoint {
+            Some(p) if p.as_os_str().is_empty() => Some(derived()),
+            Some(p) => Some(p.clone()),
+            None if self.cfg.resume || self.cfg.stop_after.is_some() => Some(derived()),
+            None => None,
+        }
+    }
+
+    /// Build the unified search driver for one (model, method) run.
+    fn driver(&self, model: &str, method: &str, progress: bool) -> SearchDriver {
+        SearchDriver::new(DriverConfig {
+            model: model.to_string(),
+            seed: self.cfg.seed,
+            progress,
+            checkpoint: self.effective_checkpoint(model, method),
+            checkpoint_every: self.cfg.checkpoint_every,
+            resume: self.cfg.resume,
+            stop_after: self.cfg.stop_after,
+        })
+    }
+
+    /// Score a completed search on the test split and assemble the
+    /// report — identical accounting for all six methods: `evals` is
+    /// the env's total oracle-invocation count (search episodes, greedy
+    /// rollout, and the test-scoring replay, as the historical loops
+    /// counted it) and `wall_secs` spans search + scoring across all
+    /// resumed sessions.
+    fn finish_report(
+        &self,
+        model: &str,
+        method: &str,
+        env: &mut CompressionEnv,
+        outcome: SearchOutcome,
+    ) -> Result<RunReport> {
+        let best = outcome
+            .best
+            .ok_or_else(|| anyhow!("search `{method}` on {model} produced no solution"))?;
+        let t_score = Instant::now();
+        let test = self.test_session(model)?;
+        let (dense_acc, test_acc) = self.score_on_test(env, &test, &best)?;
+        let stats = env.session_stats();
+        let e = self.entry(model)?;
+        Ok(RunReport {
+            model: model.to_string(),
+            dataset: e.dataset.clone(),
+            method: method.to_string(),
+            seed: self.cfg.seed,
+            best,
+            test_acc_dense: dense_acc,
+            test_acc,
+            episodes: self.cfg.episodes,
+            evals: env.n_evals,
+            wall_secs: outcome.wall_secs + t_score.elapsed().as_secs_f64(),
+            threads: stats.threads,
+            cache_hit_rate: stats.cache_hit_rate(),
+            reward_curve: outcome.curve,
+        })
+    }
+
+    fn suspended_run(driver: &SearchDriver, outcome: &SearchOutcome) -> SearchRun {
+        SearchRun::Suspended {
+            episode: outcome.episodes_run,
+            checkpoint: driver
+                .cfg
+                .checkpoint
+                .clone()
+                .expect("suspension requires a checkpoint path"),
+        }
+    }
+
     /// Run OUR composite-agent compression on one model (Fig 7a).
     pub fn compress(&self, model: &str, progress: bool) -> Result<RunReport> {
         self.compress_with(model, progress, Variant::Full)
     }
 
-    /// Ablation-aware compression driver (DESIGN.md ablations: the
-    /// composite agent's pieces, and the §4.2.3 alternative metric).
+    /// Ablation-aware compression (DESIGN.md ablations: the composite
+    /// agent's pieces, and the §4.2.3 alternative metric). Errors if
+    /// the run suspends (`--stop-after`); CLI paths that support
+    /// suspension use [`Self::compress_search`].
     pub fn compress_with(
         &self,
         model: &str,
         progress: bool,
         variant: Variant,
     ) -> Result<RunReport> {
-        let t0 = Instant::now();
+        match self.compress_search(model, progress, variant)? {
+            SearchRun::Complete(report) => Ok(*report),
+            SearchRun::Suspended { episode, checkpoint } => Err(anyhow!(
+                "run suspended at episode {episode}; resume with --resume \
+                 --checkpoint {}",
+                checkpoint.display()
+            )),
+        }
+    }
+
+    /// Composite-agent compression through the unified
+    /// [`SearchDriver`]: supports `--resume` / `--stop-after` and
+    /// periodic checkpointing.
+    pub fn compress_search(
+        &self,
+        model: &str,
+        progress: bool,
+        variant: Variant,
+    ) -> Result<SearchRun> {
         let mut env = self.build_env(model)?;
         if let Variant::WithMetric(m) = variant {
             env.metric = m;
@@ -255,138 +357,98 @@ impl Coordinator {
         };
         agent_cfg.monitor_window = (episodes / 6).clamp(6, 40);
         agent_cfg.max_frozen_episodes = episodes / 2;
-        let mut agent = CompositeAgent::new(agent_cfg, self.cfg.seed);
-        let mut best: Option<Solution> = None;
-        let mut curve = Vec::with_capacity(episodes);
-
-        for ep in 0..episodes {
-            let mut state = env.reset();
-            let mut total = 0.0;
-            #[allow(unused_assignments)]
-            let mut last = None;
-            loop {
-                let action = agent.act(&state);
-                let step = env.step(action)?;
-                agent.observe_and_update(&state, &action, step.reward, &step.state, step.done);
-                total += step.reward;
-                state = step.state.clone();
-                let done = step.done;
-                last = Some(step);
-                if done {
-                    break;
-                }
-            }
-            agent.end_episode(total, episodes);
-            curve.push(total);
-            let sol = env.solution(last.as_ref().unwrap());
-            if progress && (ep % 10 == 0 || ep + 1 == episodes) {
-                eprintln!(
-                    "[{model}] ep {ep:4}  reward {total:7.2}  loss {:.3}  gain {:.3}  rainbow={}",
-                    sol.acc_loss, sol.energy_gain, agent.rainbow_unlocked
-                );
-            }
-            best = crate::baselines::better(best, sol);
+        let agent = CompositeAgent::new(agent_cfg, self.cfg.seed);
+        let method = variant.method_name();
+        let mut strategy = CompositeStrategy::new(agent, episodes).with_method(method);
+        if let Variant::SingleAlg(alg) = variant {
+            strategy = strategy.with_greedy_alg(alg);
+        }
+        let driver = self.driver(model, method, progress);
+        let outcome = driver.run(&mut env, &mut strategy)?;
+        if outcome.suspended {
+            return Ok(Self::suspended_run(&driver, &outcome));
         }
 
-        // final greedy rollout with the learned policy
-        let mut state = env.reset();
-        #[allow(unused_assignments)]
-        let mut last = None;
-        loop {
-            let mut action = agent.act_greedy(&state);
-            if let Variant::SingleAlg(alg) = variant {
-                action.alg = alg.index();
-            }
-            let step = env.step(action)?;
-            state = step.state.clone();
-            let done = step.done;
-            last = Some(step);
-            if done {
-                break;
-            }
-        }
-        let greedy = env.solution(last.as_ref().unwrap());
-        best = crate::baselines::better(best, greedy);
-        let best = best.unwrap();
-
-        // optional agent checkpoint (resume-on-device story, §4)
+        // optional agent policy checkpoint (resume-on-device story, §4)
         if let Ok(ckpt) = std::env::var("HAPQ_CHECKPOINT") {
-            crate::rl::checkpoint::save(&agent, std::path::Path::new(&ckpt))?;
+            crate::rl::checkpoint::save(&strategy.agent, std::path::Path::new(&ckpt))?;
             if progress {
                 eprintln!("[{model}] agent checkpoint -> {ckpt}");
             }
         }
 
-        let test = self.test_session(model)?;
-        let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
-        let stats = env.session_stats();
-        let e = self.entry(model)?;
-        Ok(RunReport {
-            model: model.to_string(),
-            dataset: e.dataset.clone(),
-            method: variant.method_name().to_string(),
-            best,
-            test_acc_dense: dense_acc,
-            test_acc,
-            episodes,
-            evals: env.n_evals,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            threads: stats.threads,
-            cache_hit_rate: stats.cache_hit_rate(),
-            reward_curve: curve,
-        })
+        Ok(SearchRun::Complete(Box::new(
+            self.finish_report(model, method, &mut env, outcome)?,
+        )))
     }
 
-    /// Run one of the comparison baselines on one model (Fig 7b–e, 9).
-    pub fn run_baseline(&self, model: &str, method: &str) -> Result<RunReport> {
+    /// Build the [`SearchStrategy`] for one baseline with the budget
+    /// mapping the comparison has always used (`--episodes` scales
+    /// every method's oracle budget comparably).
+    pub fn baseline_strategy(
+        &self,
+        method: &str,
+        env: &CompressionEnv,
+    ) -> Result<Box<dyn SearchStrategy>> {
         use crate::baselines as b;
-        let t0 = Instant::now();
-        let mut env = self.build_env(model)?;
         let episodes = self.cfg.episodes;
         let seed = self.cfg.seed;
-        let best = match method {
-            "amc" => b::amc::run(
-                &mut env,
-                &b::amc::AmcConfig { episodes, warmup: self.cfg.warmup, seed },
-            )?,
-            "haq" => b::haq::run(
-                &mut env,
-                &b::haq::HaqConfig { episodes, warmup: self.cfg.warmup, seed },
-            )?,
-            "asqj" => b::asqj::run(
-                &mut env,
+        Ok(match method {
+            "amc" => Box::new(b::amc::AmcStrategy::new(&b::amc::AmcConfig {
+                episodes,
+                warmup: self.cfg.warmup,
+                seed,
+            })),
+            "haq" => Box::new(b::haq::HaqStrategy::new(&b::haq::HaqConfig {
+                episodes,
+                warmup: self.cfg.warmup,
+                seed,
+            })),
+            "asqj" => Box::new(b::asqj::AsqjStrategy::new(
                 &b::asqj::AsqjConfig { iters: (episodes / 4).max(10), ..Default::default() },
-            )?,
-            "opq" => b::opq::run(&mut env, &b::opq::OpqConfig::default())?,
-            "nsga2" => b::nsga2::run(
-                &mut env,
+                env.n_layers(),
+            )),
+            "opq" => Box::new(b::opq::OpqStrategy::new(env, &b::opq::OpqConfig::default())),
+            "nsga2" => Box::new(b::nsga2::Nsga2Strategy::new(
                 &b::nsga2::Nsga2Config {
                     pop: 20,
                     generations: (episodes / 20).max(2),
                     seed,
                     ..Default::default()
                 },
-            )?,
+                env.n_layers(),
+            )),
             other => anyhow::bail!("unknown baseline `{other}`"),
-        };
-        let test = self.test_session(model)?;
-        let (dense_acc, test_acc) = self.score_on_test(&mut env, &test, &best)?;
-        let stats = env.session_stats();
-        let e = self.entry(model)?;
-        Ok(RunReport {
-            model: model.to_string(),
-            dataset: e.dataset.clone(),
-            method: method.to_string(),
-            best,
-            test_acc_dense: dense_acc,
-            test_acc,
-            episodes,
-            evals: env.n_evals,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            threads: stats.threads,
-            cache_hit_rate: stats.cache_hit_rate(),
-            reward_curve: vec![],
         })
+    }
+
+    /// Run one of the comparison baselines on one model (Fig 7b–e, 9).
+    /// Errors if the run suspends; CLI paths that support suspension
+    /// use [`Self::baseline_search`].
+    pub fn run_baseline(&self, model: &str, method: &str) -> Result<RunReport> {
+        match self.baseline_search(model, method)? {
+            SearchRun::Complete(report) => Ok(*report),
+            SearchRun::Suspended { episode, checkpoint } => Err(anyhow!(
+                "run suspended at episode {episode}; resume with --resume \
+                 --checkpoint {}",
+                checkpoint.display()
+            )),
+        }
+    }
+
+    /// Baseline compression through the unified [`SearchDriver`]:
+    /// supports `--resume` / `--stop-after` and periodic checkpointing.
+    pub fn baseline_search(&self, model: &str, method: &str) -> Result<SearchRun> {
+        let mut env = self.build_env(model)?;
+        let mut strategy = self.baseline_strategy(method, &env)?;
+        let driver = self.driver(model, method, false);
+        let outcome = driver.run(&mut env, strategy.as_mut())?;
+        if outcome.suspended {
+            return Ok(Self::suspended_run(&driver, &outcome));
+        }
+        Ok(SearchRun::Complete(Box::new(
+            self.finish_report(model, method, &mut env, outcome)?,
+        )))
     }
 
     /// Persist a report under `out/`.
@@ -399,6 +461,23 @@ impl Coordinator {
         std::fs::write(&path, report.to_json().to_string())?;
         Ok(path)
     }
+}
+
+/// Outcome of a checkpointable search: either a finished report, or a
+/// cooperative suspension (`--stop-after`) whose state lives in the
+/// checkpoint file until a `--resume` run picks it up.
+#[derive(Debug)]
+pub enum SearchRun {
+    /// the run finished; the report is ready to persist (boxed: a
+    /// report is an order of magnitude bigger than the suspension arm)
+    Complete(Box<RunReport>),
+    /// the run suspended after `episode` episodes
+    Suspended {
+        /// episodes completed so far (across sessions)
+        episode: usize,
+        /// where the resumable state was written
+        checkpoint: PathBuf,
+    },
 }
 
 /// Ablation / extension variants of the main compression loop.
@@ -471,6 +550,7 @@ mod tests {
             model: "m".into(),
             dataset: "d".into(),
             method: "ours".into(),
+            seed: 42,
             best: Solution {
                 per_layer: vec![],
                 actions: vec![],
@@ -493,5 +573,10 @@ mod tests {
         assert_eq!(v.req("threads").unwrap().as_f64().unwrap(), 4.0);
         let hit = v.req("cache_hit_rate").unwrap().as_f64().unwrap();
         assert!((hit - 0.75).abs() < 1e-9);
+        // uniform accounting: every run JSON (ours AND baselines)
+        // carries seed, evals and wall_secs
+        assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(v.req("evals").unwrap().as_f64().unwrap(), 2.0);
+        assert!(v.req("wall_secs").unwrap().as_f64().unwrap() > 0.0);
     }
 }

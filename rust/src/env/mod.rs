@@ -418,6 +418,19 @@ impl CompressionEnv {
         self.session.stats()
     }
 
+    /// Serialise the env's RNG stream (Bernoulli pruning draws) — part
+    /// of a [`crate::search::checkpoint::SearchCheckpoint`]: a resumed
+    /// run must continue the exact pruning-randomness stream or its
+    /// episodes diverge from the uninterrupted run.
+    pub fn save_rng(&self, w: &mut crate::io::bin::BinWriter) {
+        self.rng.save_state(w);
+    }
+
+    /// Restore an RNG stream written by [`Self::save_rng`].
+    pub fn restore_rng(&mut self, r: &mut crate::io::bin::BinReader) -> Result<()> {
+        self.rng.load_state(r)
+    }
+
     /// Evaluate an arbitrary full configuration in one shot (used by the
     /// NSGA-II / OPQ / ASQJ baselines — same oracle as the RL path).
     pub fn evaluate_config(&mut self, actions: &[Action]) -> Result<Solution> {

@@ -1,0 +1,236 @@
+//! Exact binary state serialization — the substrate of the
+//! method-agnostic [`crate::search::checkpoint::SearchCheckpoint`].
+//!
+//! The NPZ policy checkpoint ([`crate::rl::checkpoint`]) is f32-only
+//! and deliberately lossy (it persists *policies*, not mid-run search
+//! state). Resumable search needs more: every `f64` (rewards, duals,
+//! replay priorities, RNG spare), every `u64` (xoshiro lanes, step
+//! counters) and every Adam moment must round-trip **bit-exactly**, or
+//! a resumed run diverges from the uninterrupted one. This module is a
+//! tiny little-endian writer/reader pair over `Vec<u8>` with no
+//! external deps: floats travel as their IEEE-754 bit patterns, so
+//! save → load is the identity on every value.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian byte writer.
+#[derive(Debug, Default)]
+pub struct BinWriter {
+    /// the accumulated bytes
+    pub buf: Vec<u8>,
+}
+
+impl BinWriter {
+    /// Empty writer.
+    pub fn new() -> BinWriter {
+        BinWriter { buf: Vec::new() }
+    }
+
+    /// Write one byte.
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    /// Write a `u32` (little-endian).
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Write a `u64` (little-endian).
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Write a `usize` as `u64`.
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    /// Write an `f32` as its exact bit pattern.
+    pub fn f32(&mut self, x: f32) {
+        self.u32(x.to_bits());
+    }
+
+    /// Write an `f64` as its exact bit pattern.
+    pub fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    /// Write a bool as one byte.
+    pub fn bool(&mut self, x: bool) {
+        self.u8(x as u8);
+    }
+
+    /// Write a length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Write a length-prefixed `f32` slice (bit patterns).
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    /// Write a length-prefixed `f64` slice (bit patterns).
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+}
+
+/// Cursor-based reader over bytes produced by [`BinWriter`]. Every
+/// accessor checks bounds and fails with a clear error instead of
+/// panicking, so truncated/corrupt checkpoints surface as `Err`.
+#[derive(Debug)]
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> BinReader<'a> {
+        BinReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "checkpoint truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Read a `usize` (stored as `u64`).
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// Read an `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a bool.
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        let b = self.take(n)?;
+        Ok(String::from_utf8(b.to_vec())?)
+    }
+
+    /// Read a length-prefixed `f32` slice.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n.min(self.remaining() / 4 + 1));
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    /// Read a length-prefixed `f64` slice.
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize()?;
+        let mut v = Vec::with_capacity(n.min(self.remaining() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut w = BinWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(f32::from_bits(0x7F80_0001)); // a signalling NaN pattern
+        w.f64(-0.1);
+        w.f64(f64::NEG_INFINITY);
+        w.bool(true);
+        w.str("hapq ✓");
+        w.f32s(&[1.5, -0.0, f32::MIN_POSITIVE]);
+        w.f64s(&[std::f64::consts::PI]);
+
+        let mut r = BinReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), 0x7F80_0001);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        assert!(r.f64().unwrap().is_infinite());
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "hapq ✓");
+        let xs = r.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64s().unwrap(), vec![std::f64::consts::PI]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut w = BinWriter::new();
+        w.u64(42);
+        let mut r = BinReader::new(&w.buf[..5]);
+        assert!(r.u64().is_err());
+        // bogus length prefix on a string must not over-read
+        let mut w2 = BinWriter::new();
+        w2.usize(1 << 40);
+        let mut r2 = BinReader::new(&w2.buf);
+        assert!(r2.str().is_err());
+        // same for slice readers (capacity hint must not allocate 2^40)
+        let mut r3 = BinReader::new(&w2.buf);
+        assert!(r3.f64s().is_err());
+    }
+}

@@ -1,5 +1,7 @@
-//! IO substrates: minimal JSON (serde is not vendored) and NPZ/NPY
-//! readers for the artifact contract (DESIGN.md §5).
+//! IO substrates: minimal JSON (serde is not vendored), NPZ/NPY
+//! readers for the artifact contract (DESIGN.md §5), and the exact
+//! binary writer/reader behind resumable search checkpoints.
 
+pub mod bin;
 pub mod json;
 pub mod npz;

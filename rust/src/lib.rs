@@ -8,6 +8,9 @@
 //! quantization, the Eyeriss-style energy model (gate-level MAC
 //! switching simulator + dataflow mapper), the LUT-based hardware-aware
 //! reward, all five comparison baselines and the coordinator/CLI.
+//! Every method — ours and the baselines — runs through one unified
+//! [`search::SearchDriver`] loop (checkpointable, resumable,
+//! multi-seed; see [`search`]).
 //!
 //! The accuracy term of the reward is answered by a pluggable
 //! [`runtime::InferenceBackend`]:
@@ -36,5 +39,6 @@ pub mod pruning;
 pub mod quant;
 pub mod rl;
 pub mod runtime;
+pub mod search;
 pub mod tensor;
 pub mod util;

@@ -18,6 +18,19 @@
 //!
 //! `compare --jobs N` fans out over N worker processes.
 //!
+//! Search runs (`compress`, `baseline`, `compare`) additionally accept:
+//!
+//! * `--seeds N` — search N consecutive seeds (one worker process per
+//!   seed, fanned across the `--jobs` pool) and merge the reports into
+//!   one best-of JSON;
+//! * `--checkpoint [PATH]` + `--checkpoint-every K` — periodic
+//!   resumable search checkpoints (default path
+//!   `<out>/<model>__<method>.ckpt`);
+//! * `--resume` — restore from the checkpoint and continue;
+//! * `--stop-after N` — suspend (checkpoint + exit 0) after N episodes
+//!   this session; a later `--resume` run reproduces the uninterrupted
+//!   run's report exactly.
+//!
 //! Every command accepts `--backend {native,pjrt}` selecting the
 //! accuracy-oracle executor: `native` (default) interprets the model
 //! graph in pure Rust; `pjrt` runs the AOT-compiled HLO through the
@@ -49,10 +62,42 @@ fn print_help() {
         "hapq — Hardware-Aware DNN Compression via Diverse Pruning and \
          Mixed-Precision Quantization\n\
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
-         fig5, fig8, perf\n\
+         fig5, fig8, ablate, report, perf\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
-         --reward-subset N --model NAME --backend native|pjrt --threads N"
+         --reward-subset N --model NAME --backend native|pjrt --threads N\n\
+         search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
+         --checkpoint [PATH] --checkpoint-every K --resume --stop-after N\n\
+         compare flags: --models a,b|all --methods ours,amc,... --jobs N"
     );
+}
+
+/// Run a multi-seed sweep over (model, method) pairs and print the
+/// merged best-of summary table (one worker process per pair × seed).
+fn print_multi_seed(
+    coord: &Coordinator,
+    pairs: &[(String, String)],
+    jobs: usize,
+) -> Result<()> {
+    let results = hapq::coordinator::launcher::run_multi_seed(&coord.cfg, pairs, jobs)?;
+    println!(
+        "{:<12} {:<8} {:>5} {:>9} {:>11} {:>13}",
+        "model", "method", "seeds", "best-seed", "energy-gain", "test-acc-loss"
+    );
+    for ((model, method), res) in results {
+        match res {
+            Ok(v) => println!(
+                "{:<12} {:<8} {:>5} {:>9} {:>10.1}% {:>12.2}%",
+                model,
+                method,
+                v.req("seeds")?.as_f64()?,
+                v.req("seed")?.as_f64()?,
+                v.req("energy_gain")?.as_f64()? * 100.0,
+                v.req("test_acc_loss")?.as_f64()? * 100.0
+            ),
+            Err(e) => println!("{model:<12} {method:<8} FAILED: {e}"),
+        }
+    }
+    Ok(())
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -75,38 +120,68 @@ fn run(args: &[String]) -> Result<()> {
         "compress" => {
             let model = cli.str_flag("model", "vgg11");
             let coord = Coordinator::new(cfg)?;
-            let report = coord.compress(&model, true)?;
-            let path = coord.save_report(&report)?;
-            println!(
-                "{}: energy gain {:.1}% | test acc {:.3} (dense {:.3}, loss {:.2}%) | {} evals | {:.1}s -> {}",
-                model,
-                report.best.energy_gain * 100.0,
-                report.test_acc,
-                report.test_acc_dense,
-                report.test_acc_loss() * 100.0,
-                report.evals,
-                report.wall_secs,
-                path.display()
-            );
-            Ok(())
+            if coord.cfg.seeds > 1 {
+                let jobs = cli.usize_flag("jobs", coord.cfg.seeds)?;
+                let pairs = vec![(model, "ours".to_string())];
+                return print_multi_seed(&coord, &pairs, jobs);
+            }
+            match coord.compress_search(&model, true, hapq::coordinator::Variant::Full)? {
+                hapq::coordinator::SearchRun::Suspended { episode, checkpoint } => {
+                    println!(
+                        "{model}: suspended after {episode} episodes -> {} (continue with --resume)",
+                        checkpoint.display()
+                    );
+                    Ok(())
+                }
+                hapq::coordinator::SearchRun::Complete(report) => {
+                    let path = coord.save_report(&report)?;
+                    println!(
+                        "{}: energy gain {:.1}% | test acc {:.3} (dense {:.3}, loss {:.2}%) | {} evals | {:.1}s -> {}",
+                        model,
+                        report.best.energy_gain * 100.0,
+                        report.test_acc,
+                        report.test_acc_dense,
+                        report.test_acc_loss() * 100.0,
+                        report.evals,
+                        report.wall_secs,
+                        path.display()
+                    );
+                    Ok(())
+                }
+            }
         }
         "baseline" => {
             let model = cli.str_flag("model", "vgg11");
             let method = cli.str_flag("method", "amc");
             let coord = Coordinator::new(cfg)?;
-            let report = coord.run_baseline(&model, &method)?;
-            let path = coord.save_report(&report)?;
-            println!(
-                "{} [{}]: energy gain {:.1}% | test loss {:.2}% | {} evals | {:.1}s -> {}",
-                model,
-                method,
-                report.best.energy_gain * 100.0,
-                report.test_acc_loss() * 100.0,
-                report.evals,
-                report.wall_secs,
-                path.display()
-            );
-            Ok(())
+            if coord.cfg.seeds > 1 {
+                let jobs = cli.usize_flag("jobs", coord.cfg.seeds)?;
+                let pairs = vec![(model, method)];
+                return print_multi_seed(&coord, &pairs, jobs);
+            }
+            match coord.baseline_search(&model, &method)? {
+                hapq::coordinator::SearchRun::Suspended { episode, checkpoint } => {
+                    println!(
+                        "{model} [{method}]: suspended after {episode} episodes -> {} (continue with --resume)",
+                        checkpoint.display()
+                    );
+                    Ok(())
+                }
+                hapq::coordinator::SearchRun::Complete(report) => {
+                    let path = coord.save_report(&report)?;
+                    println!(
+                        "{} [{}]: energy gain {:.1}% | test loss {:.2}% | {} evals | {:.1}s -> {}",
+                        model,
+                        method,
+                        report.best.energy_gain * 100.0,
+                        report.test_acc_loss() * 100.0,
+                        report.evals,
+                        report.wall_secs,
+                        path.display()
+                    );
+                    Ok(())
+                }
+            }
         }
         "compare" => {
             let coord = Coordinator::new(cfg)?;
@@ -120,6 +195,16 @@ fn run(args: &[String]) -> Result<()> {
                 .map(str::to_string)
                 .collect();
             let jobs = cli.usize_flag("jobs", 1)?;
+            if coord.cfg.seeds > 1 {
+                // multi-seed grid: every (model, method) pair sweeps
+                // --seeds consecutive seeds across the worker pool and
+                // reports the merged best-of
+                let pairs: Vec<(String, String)> = models
+                    .iter()
+                    .flat_map(|m| methods.iter().map(move |me| (m.clone(), me.clone())))
+                    .collect();
+                return print_multi_seed(&coord, &pairs, jobs.max(1));
+            }
             if jobs > 1 {
                 // multi-process fan-out (coordinator::launcher)
                 let grid: Vec<hapq::coordinator::launcher::Job> = models
@@ -128,6 +213,7 @@ fn run(args: &[String]) -> Result<()> {
                         methods.iter().map(move |me| hapq::coordinator::launcher::Job {
                             model: m.clone(),
                             method: me.clone(),
+                            seed: None,
                         })
                     })
                     .collect();

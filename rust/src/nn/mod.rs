@@ -73,6 +73,23 @@ impl AdamState {
         AdamState { m: vec![0.0; n], v: vec![0.0; n] }
     }
 
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        w.f32s(&self.m);
+        w.f32s(&self.v);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        let m = r.f32s()?;
+        let v = r.f32s()?;
+        anyhow::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "adam state size mismatch"
+        );
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     fn step(&mut self, p: &mut [f32], g: &[f32], lr: f32, t: f32) {
         const B1: f32 = 0.9;
         const B2: f32 = 0.999;
@@ -189,6 +206,44 @@ impl Dense {
         let b = get(&format!("{prefix}.b"))?;
         anyhow::ensure!(b.data.len() == self.b.len(), "{prefix}.b len");
         self.b = b.data;
+        Ok(())
+    }
+
+    /// Serialise the *full* optimisation state (weights, bias, Adam
+    /// moments) for bit-exact search resume. The NPZ policy export
+    /// ([`Self::export`]) persists only weights; a resumed training run
+    /// additionally needs the optimiser moments or the next Adam step
+    /// diverges. Accumulated gradients are not stored: every consumer
+    /// calls `zero_grad` before `backward`, so they are dead between
+    /// updates.
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        w.usize(self.w.r);
+        w.usize(self.w.c);
+        w.f32s(&self.w.d);
+        w.f32s(&self.b);
+        self.aw.save_state(w);
+        self.ab.save_state(w);
+    }
+
+    /// Restore a state written by [`Self::save_state`] (shape-checked
+    /// against this layer's dimensions).
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        let rows = r.usize()?;
+        let cols = r.usize()?;
+        anyhow::ensure!(
+            rows == self.w.r && cols == self.w.c,
+            "dense checkpoint shape [{rows},{cols}] != [{},{}]",
+            self.w.r,
+            self.w.c
+        );
+        let wd = r.f32s()?;
+        anyhow::ensure!(wd.len() == self.w.d.len(), "dense weight length mismatch");
+        self.w.d = wd;
+        let b = r.f32s()?;
+        anyhow::ensure!(b.len() == self.b.len(), "dense bias length mismatch");
+        self.b = b;
+        self.aw.load_state(r)?;
+        self.ab.load_state(r)?;
         Ok(())
     }
 }
@@ -369,6 +424,67 @@ impl NoisyDense {
         self.sig_b = get(&format!("{prefix}.sig_b"))?.data;
         Ok(())
     }
+
+    /// Serialise the full state (μ/σ parameters, the *current* factorized
+    /// noise draw, all four Adam moment pairs, and the eval-mode flag)
+    /// for bit-exact search resume.
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        w.usize(self.mu_w.r);
+        w.usize(self.mu_w.c);
+        w.f32s(&self.mu_w.d);
+        w.f32s(&self.sig_w.d);
+        w.f32s(&self.mu_b);
+        w.f32s(&self.sig_b);
+        w.f32s(&self.eps_in);
+        w.f32s(&self.eps_out);
+        self.a_mu_w.save_state(w);
+        self.a_sig_w.save_state(w);
+        self.a_mu_b.save_state(w);
+        self.a_sig_b.save_state(w);
+        w.bool(self.noisy);
+    }
+
+    /// Restore a state written by [`Self::save_state`].
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        let rows = r.usize()?;
+        let cols = r.usize()?;
+        anyhow::ensure!(
+            rows == self.mu_w.r && cols == self.mu_w.c,
+            "noisy-dense checkpoint shape [{rows},{cols}] != [{},{}]",
+            self.mu_w.r,
+            self.mu_w.c
+        );
+        let mu_w = r.f32s()?;
+        let sig_w = r.f32s()?;
+        anyhow::ensure!(
+            mu_w.len() == self.mu_w.d.len() && sig_w.len() == self.sig_w.d.len(),
+            "noisy-dense weight length mismatch"
+        );
+        self.mu_w.d = mu_w;
+        self.sig_w.d = sig_w;
+        let mu_b = r.f32s()?;
+        let sig_b = r.f32s()?;
+        anyhow::ensure!(
+            mu_b.len() == self.mu_b.len() && sig_b.len() == self.sig_b.len(),
+            "noisy-dense bias length mismatch"
+        );
+        self.mu_b = mu_b;
+        self.sig_b = sig_b;
+        let eps_in = r.f32s()?;
+        let eps_out = r.f32s()?;
+        anyhow::ensure!(
+            eps_in.len() == self.eps_in.len() && eps_out.len() == self.eps_out.len(),
+            "noisy-dense noise length mismatch"
+        );
+        self.eps_in = eps_in;
+        self.eps_out = eps_out;
+        self.a_mu_w.load_state(r)?;
+        self.a_sig_w.load_state(r)?;
+        self.a_mu_b.load_state(r)?;
+        self.a_sig_b.load_state(r)?;
+        self.noisy = r.bool()?;
+        Ok(())
+    }
 }
 
 /// Sequential MLP with per-layer activations and a forward cache.
@@ -479,6 +595,24 @@ impl Mlp {
     ) -> anyhow::Result<()> {
         for (i, l) in self.layers.iter_mut().enumerate() {
             l.import(&format!("{prefix}.{i}"), get)?;
+        }
+        Ok(())
+    }
+
+    /// Serialise every layer's full state (weights + Adam moments).
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        w.usize(self.layers.len());
+        for l in &self.layers {
+            l.save_state(w);
+        }
+    }
+
+    /// Restore a state written by [`Self::save_state`].
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        let n = r.usize()?;
+        anyhow::ensure!(n == self.layers.len(), "mlp checkpoint layer count mismatch");
+        for l in self.layers.iter_mut() {
+            l.load_state(r)?;
         }
         Ok(())
     }

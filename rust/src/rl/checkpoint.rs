@@ -1,12 +1,20 @@
-//! Composite-agent checkpointing: the full agent state (DDPG actor/
-//! critic + targets, Rainbow online/target nets, exploration schedule,
-//! unlock state) serialises to a single NPZ file via [`crate::io::npz`].
+//! Composite-agent *policy* checkpointing: the agent's networks (DDPG
+//! actor/critic + targets, Rainbow online/target nets, exploration
+//! schedule, unlock state) serialise to a single NPZ file via
+//! [`crate::io::npz`].
 //!
-//! Enables the paper's on-device-optimization story (§4): a compression
-//! run can be suspended and resumed on the embedded target without
-//! redoing the warm-up. Replay buffers are not persisted (stale
-//! experiences are harmful after any environment change; fresh ones are
-//! one episode away).
+//! Enables the paper's on-device-optimization story (§4): a trained
+//! policy can move to the embedded target without redoing the warm-up.
+//! Replay buffers and optimiser moments are deliberately not persisted
+//! — NPZ is f32-only and a policy transplanted onto a *different*
+//! environment should not inherit stale experiences.
+//!
+//! This is distinct from the method-agnostic **search** checkpoint
+//! ([`crate::search::checkpoint`]), which snapshots the *complete*
+//! mid-run search state (any strategy, replay, Adam moments, RNG
+//! streams, driver progress) bit-exactly so `--resume` reproduces an
+//! uninterrupted run. Use that for suspending/resuming searches; use
+//! this for exporting a learned policy.
 
 use std::path::Path;
 

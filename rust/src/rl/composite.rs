@@ -10,8 +10,9 @@
 //! unlocked and takes over using the already-mature DDPG features.
 //! Rainbow's loss never back-propagates into the DDPG actor.
 
-use crate::env::Action;
+use crate::env::{Action, Solution, StepResult};
 use crate::pruning::PruneAlg;
+use crate::search::SearchStrategy;
 use crate::util::rng::Rng;
 
 use super::ddpg::{Ddpg, DdpgConfig};
@@ -157,6 +158,31 @@ impl CompositeAgent {
         }
     }
 
+    /// Serialise the complete composite state (both sub-agents in full,
+    /// the reward monitor history, unlock flag, episode counter, RNG)
+    /// for bit-exact search resume — the method-specific payload of a
+    /// [`crate::search::checkpoint::SearchCheckpoint`].
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.ddpg.save_state(w);
+        self.rainbow.save_state(w);
+        w.usize(self.episode);
+        w.bool(self.rainbow_unlocked);
+        w.f64s(&self.reward_history);
+        self.rng.save_state(w);
+    }
+
+    /// Restore a state written by [`Self::save_state`] into a
+    /// same-config agent.
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        self.ddpg.load_state(r)?;
+        self.rainbow.load_state(r)?;
+        self.episode = r.usize()?;
+        self.rainbow_unlocked = r.bool()?;
+        self.reward_history = r.f64s()?;
+        self.rng.load_state(r)?;
+        Ok(())
+    }
+
     /// Reward monitor (§4.2.2): unlock once the moving average shows
     /// consistent improvement (or after a hard cap, so a flat reward
     /// landscape cannot freeze Rainbow forever).
@@ -177,6 +203,96 @@ impl CompositeAgent {
         if improved || self.episode >= self.cfg.max_frozen_episodes {
             self.rainbow_unlocked = true;
         }
+    }
+}
+
+/// The composite agent as a [`SearchStrategy`] — `ours` (and its
+/// ablation variants) under the unified [`crate::search::SearchDriver`]
+/// loop. Wraps a [`CompositeAgent`] and ends the run with the paper's
+/// greedy policy-extraction rollout.
+pub struct CompositeStrategy {
+    /// the underlying composite agent (exposed so the coordinator can
+    /// export the NPZ policy checkpoint after the run)
+    pub agent: CompositeAgent,
+    method: String,
+    greedy_alg_override: Option<PruneAlg>,
+    total_episodes: usize,
+}
+
+impl CompositeStrategy {
+    /// Wrap an agent for a run of `episodes` episodes (method `ours`).
+    pub fn new(agent: CompositeAgent, episodes: usize) -> CompositeStrategy {
+        CompositeStrategy {
+            agent,
+            method: "ours".to_string(),
+            greedy_alg_override: None,
+            total_episodes: episodes,
+        }
+    }
+
+    /// Override the method string recorded in reports/checkpoints
+    /// (ablation variants: `ours-latency`, `ours-norainbow`, …).
+    pub fn with_method(mut self, method: &str) -> CompositeStrategy {
+        self.method = method.to_string();
+        self
+    }
+
+    /// Force a single pruning algorithm in the greedy rollout (the
+    /// `SingleAlg` ablation, paper §3.1 motivation).
+    pub fn with_greedy_alg(mut self, alg: PruneAlg) -> CompositeStrategy {
+        self.greedy_alg_override = Some(alg);
+        self
+    }
+}
+
+impl SearchStrategy for CompositeStrategy {
+    fn method(&self) -> &str {
+        &self.method
+    }
+
+    fn episodes(&self) -> usize {
+        self.total_episodes
+    }
+
+    fn propose(&mut self, _t: usize, state: &[f32]) -> Action {
+        self.agent.act(state)
+    }
+
+    fn observe(&mut self, s: &[f32], action: &Action, step: &StepResult) {
+        self.agent
+            .observe_and_update(s, action, step.reward, &step.state, step.done);
+    }
+
+    fn end_episode(&mut self, _ep: usize, total: f64, _sol: &Solution) {
+        self.agent.end_episode(total, self.total_episodes);
+    }
+
+    fn wants_greedy_rollout(&self) -> bool {
+        true
+    }
+
+    fn propose_greedy(&mut self, state: &[f32]) -> Action {
+        let mut action = self.agent.act_greedy(state);
+        if let Some(alg) = self.greedy_alg_override {
+            action.alg = alg.index();
+        }
+        action
+    }
+
+    fn progress_note(&self) -> String {
+        format!("rainbow={}", self.agent.rainbow_unlocked)
+    }
+
+    fn records_curve(&self) -> bool {
+        true
+    }
+
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.agent.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        self.agent.load_state(r)
     }
 }
 

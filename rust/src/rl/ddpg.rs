@@ -179,6 +179,35 @@ impl Ddpg {
         Ok(())
     }
 
+    /// Serialise the complete agent (all four nets with Adam moments,
+    /// replay buffer, exploration schedule, RNG) for bit-exact search
+    /// resume. Contrast with [`Self::export`], the lossy f32 NPZ policy
+    /// export that deliberately drops replay and optimiser state.
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.actor.save_state(w);
+        self.critic.save_state(w);
+        self.target_actor.save_state(w);
+        self.target_critic.save_state(w);
+        self.replay.save_state(w);
+        w.f64(self.noise);
+        w.u64(self.t);
+        self.rng.save_state(w);
+    }
+
+    /// Restore a state written by [`Self::save_state`] into a
+    /// same-config agent.
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        self.actor.load_state(r)?;
+        self.critic.load_state(r)?;
+        self.target_actor.load_state(r)?;
+        self.target_critic.load_state(r)?;
+        self.replay.load_state(r)?;
+        self.noise = r.f64()?;
+        self.t = r.u64()?;
+        self.rng.load_state(r)?;
+        Ok(())
+    }
+
     /// One gradient update from replay; returns the critic TD loss.
     pub fn update(&mut self) -> Option<f32> {
         let b = self.cfg.batch;

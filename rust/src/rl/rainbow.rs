@@ -164,6 +164,19 @@ impl Net {
         self.adv.import(&format!("{prefix}.adv"), get)?;
         Ok(())
     }
+
+    fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.trunk.save_state(w);
+        self.value.save_state(w);
+        self.adv.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        self.trunk.load_state(r)?;
+        self.value.load_state(r)?;
+        self.adv.load_state(r)?;
+        Ok(())
+    }
 }
 
 /// The Rainbow distributional agent.
@@ -409,6 +422,42 @@ impl Rainbow {
     /// Disable noise (greedy evaluation mode).
     pub fn set_eval(&mut self, eval: bool) {
         self.online.set_noisy(!eval);
+    }
+
+    /// Serialise the complete agent (online + target nets with Adam
+    /// moments and current noise draws, replay, the pending n-step
+    /// window, step counter, RNG) for bit-exact search resume.
+    pub fn save_state(&self, w: &mut crate::io::bin::BinWriter) {
+        self.online.save_state(w);
+        self.target.save_state(w);
+        self.replay.save_state(w);
+        w.usize(self.pending.len());
+        for (f, a, r) in &self.pending {
+            w.f32s(f);
+            w.usize(*a);
+            w.f32(*r);
+        }
+        w.u64(self.t);
+        self.rng.save_state(w);
+    }
+
+    /// Restore a state written by [`Self::save_state`] into a
+    /// same-config agent.
+    pub fn load_state(&mut self, r: &mut crate::io::bin::BinReader) -> anyhow::Result<()> {
+        self.online.load_state(r)?;
+        self.target.load_state(r)?;
+        self.replay.load_state(r)?;
+        let n = r.usize()?;
+        self.pending.clear();
+        for _ in 0..n {
+            let f = r.f32s()?;
+            let a = r.usize()?;
+            let rew = r.f32()?;
+            self.pending.push((f, a, rew));
+        }
+        self.t = r.u64()?;
+        self.rng.load_state(r)?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,334 @@
+//! Method-agnostic search checkpointing — the resumable half of the
+//! [`crate::search::SearchDriver`].
+//!
+//! This generalises the NPZ *policy* checkpoint of
+//! [`crate::rl::checkpoint`] (which persists only the composite agent's
+//! networks, for the paper's on-device story) into a full **search
+//! state** snapshot that works for every [`SearchStrategy`]: driver
+//! progress (episode cursor, eval count, wall-clock, phase timers,
+//! best-so-far, reward curve), the environment's RNG stream, and an
+//! opaque strategy payload serialised through
+//! [`SearchStrategy::save_state`]. Everything travels as exact bit
+//! patterns ([`crate::io::bin`]), so `run → suspend → resume` produces
+//! the same best solution, reward curve and eval count as an
+//! uninterrupted run — the property `rust/tests/search_driver.rs` pins.
+//!
+//! Files are written atomically (`<path>.tmp` + rename), so a kill mid
+//! write leaves the previous checkpoint intact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::{Action, Applied, CompressionEnv, PhaseTimers, Solution};
+use crate::io::bin::{BinReader, BinWriter};
+use crate::pruning::PruneAlg;
+
+use super::SearchStrategy;
+
+/// File magic ("HAPQSRCH").
+pub const MAGIC: &[u8; 8] = b"HAPQSRCH";
+/// Format version.
+pub const VERSION: u32 = 1;
+
+/// Identity of a search run — written into every checkpoint and
+/// validated on resume, so a checkpoint can never silently continue a
+/// *different* search (other model, method, seed or budget).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointHeader {
+    /// method string (`ours`, `amc`, …)
+    pub method: String,
+    /// model the search runs on
+    pub model: String,
+    /// RNG seed of the run
+    pub seed: u64,
+    /// total episode budget of the run
+    pub episodes: usize,
+    /// prunable-layer count (episode length)
+    pub n_layers: usize,
+}
+
+/// Resumable driver progress — everything the [`super::SearchDriver`]
+/// tracks *outside* the strategy.
+#[derive(Clone, Debug, Default)]
+pub struct SearchProgress {
+    /// next episode to run (= episodes already completed)
+    pub episode: usize,
+    /// reward-oracle invocations consumed so far
+    pub evals: u64,
+    /// wall-clock seconds consumed by previous sessions
+    pub elapsed_secs: f64,
+    /// accumulated per-phase step timers (`hapq perf` accounting)
+    pub timers: PhaseTimers,
+    /// episode-reward curve recorded so far (curve-recording strategies)
+    pub curve: Vec<f64>,
+    /// best solution found so far
+    pub best: Option<Solution>,
+}
+
+fn write_action(w: &mut BinWriter, a: &Action) {
+    w.f64(a.ratio);
+    w.f64(a.bits);
+    w.usize(a.alg);
+}
+
+fn read_action(r: &mut BinReader) -> Result<Action> {
+    Ok(Action { ratio: r.f64()?, bits: r.f64()?, alg: r.usize()? })
+}
+
+fn write_applied(w: &mut BinWriter, a: &Applied) {
+    w.usize(a.alg.index());
+    w.f64(a.sparsity);
+    w.u32(a.bits);
+    w.bool(a.overridden);
+}
+
+fn read_applied(r: &mut BinReader) -> Result<Applied> {
+    Ok(Applied {
+        alg: PruneAlg::from_index(r.usize()?),
+        sparsity: r.f64()?,
+        bits: r.u32()?,
+        overridden: r.bool()?,
+    })
+}
+
+/// Serialise one [`Solution`] (all `f64` metrics as exact bit patterns).
+pub fn write_solution(w: &mut BinWriter, s: &Solution) {
+    w.usize(s.per_layer.len());
+    for a in &s.per_layer {
+        write_applied(w, a);
+    }
+    w.usize(s.actions.len());
+    for a in &s.actions {
+        write_action(w, a);
+    }
+    w.f64(s.accuracy);
+    w.f64(s.acc_loss);
+    w.f64(s.energy_gain);
+    w.f64(s.latency_gain);
+    w.f64(s.reward);
+}
+
+/// Deserialise a [`Solution`] written by [`write_solution`].
+pub fn read_solution(r: &mut BinReader) -> Result<Solution> {
+    let n = r.usize()?;
+    let mut per_layer = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        per_layer.push(read_applied(r)?);
+    }
+    let n = r.usize()?;
+    let mut actions = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        actions.push(read_action(r)?);
+    }
+    Ok(Solution {
+        per_layer,
+        actions,
+        accuracy: r.f64()?,
+        acc_loss: r.f64()?,
+        energy_gain: r.f64()?,
+        latency_gain: r.f64()?,
+        reward: r.f64()?,
+    })
+}
+
+fn write_header(w: &mut BinWriter, h: &CheckpointHeader) {
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(VERSION);
+    w.str(&h.method);
+    w.str(&h.model);
+    w.u64(h.seed);
+    w.usize(h.episodes);
+    w.usize(h.n_layers);
+}
+
+fn read_and_check_header(r: &mut BinReader, expect: &CheckpointHeader) -> Result<()> {
+    let mut magic = [0u8; 8];
+    for b in magic.iter_mut() {
+        *b = r.u8()?;
+    }
+    if &magic != MAGIC {
+        bail!("not a HAPQ search checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("search checkpoint version {version} unsupported (expected {VERSION})");
+    }
+    let got = CheckpointHeader {
+        method: r.str()?,
+        model: r.str()?,
+        seed: r.u64()?,
+        episodes: r.usize()?,
+        n_layers: r.usize()?,
+    };
+    if &got != expect {
+        bail!(
+            "checkpoint belongs to a different run: saved {got:?}, this run is {expect:?} \
+             — pass the matching --model/--method/--seed/--episodes or delete the file"
+        );
+    }
+    Ok(())
+}
+
+/// The method-agnostic search checkpoint: a [`CheckpointHeader`]
+/// identifying the run plus everything needed to continue it
+/// ([`SearchProgress`], env RNG, strategy payload). The file format is
+/// documented in the module docs; [`SearchCheckpoint::save`] and
+/// [`SearchCheckpoint::load`] are the only entry points the
+/// [`super::SearchDriver`] uses.
+pub struct SearchCheckpoint;
+
+impl SearchCheckpoint {
+    /// Atomically write a full search checkpoint: header, driver
+    /// progress, env RNG stream, and the strategy's opaque state
+    /// payload.
+    pub fn save(
+        path: &Path,
+        header: &CheckpointHeader,
+        progress: &SearchProgress,
+        env: &CompressionEnv,
+        strategy: &dyn SearchStrategy,
+    ) -> Result<()> {
+        save(path, header, progress, env, strategy)
+    }
+
+    /// Load a checkpoint written by [`Self::save`]: validates the
+    /// header against `expect`, restores the env RNG and the strategy
+    /// state in place, and returns the driver progress to continue
+    /// from.
+    pub fn load(
+        path: &Path,
+        expect: &CheckpointHeader,
+        env: &mut CompressionEnv,
+        strategy: &mut dyn SearchStrategy,
+    ) -> Result<SearchProgress> {
+        load(path, expect, env, strategy)
+    }
+}
+
+fn save(
+    path: &Path,
+    header: &CheckpointHeader,
+    progress: &SearchProgress,
+    env: &CompressionEnv,
+    strategy: &dyn SearchStrategy,
+) -> Result<()> {
+    let mut w = BinWriter::new();
+    write_header(&mut w, header);
+    w.usize(progress.episode);
+    w.u64(progress.evals);
+    w.f64(progress.elapsed_secs);
+    w.f64(progress.timers.prune_s);
+    w.f64(progress.timers.quant_s);
+    w.f64(progress.timers.energy_s);
+    w.f64(progress.timers.infer_s);
+    w.u64(progress.timers.steps);
+    w.f64s(&progress.curve);
+    match &progress.best {
+        Some(sol) => {
+            w.bool(true);
+            write_solution(&mut w, sol);
+        }
+        None => w.bool(false),
+    }
+    env.save_rng(&mut w);
+    strategy.save_state(&mut w);
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("checkpoint path has no file name")?;
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    std::fs::write(&tmp, &w.buf).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+fn load(
+    path: &Path,
+    expect: &CheckpointHeader,
+    env: &mut CompressionEnv,
+    strategy: &mut dyn SearchStrategy,
+) -> Result<SearchProgress> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    let mut r = BinReader::new(&bytes);
+    read_and_check_header(&mut r, expect)?;
+    let episode = r.usize()?;
+    let evals = r.u64()?;
+    let elapsed_secs = r.f64()?;
+    let timers = PhaseTimers {
+        prune_s: r.f64()?,
+        quant_s: r.f64()?,
+        energy_s: r.f64()?,
+        infer_s: r.f64()?,
+        steps: r.u64()?,
+    };
+    let curve = r.f64s()?;
+    let best = if r.bool()? { Some(read_solution(&mut r)?) } else { None };
+    env.restore_rng(&mut r)?;
+    strategy
+        .load_state(&mut r)
+        .context("restoring strategy state from checkpoint")?;
+    Ok(SearchProgress { episode, evals, elapsed_secs, timers, curve, best })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solution_roundtrip_is_bit_exact() {
+        let sol = Solution {
+            per_layer: vec![Applied {
+                alg: PruneAlg::Bernoulli,
+                sparsity: 0.1 + 0.2, // a value with no short decimal form
+                bits: 5,
+                overridden: true,
+            }],
+            actions: vec![Action { ratio: 1.0 / 3.0, bits: 0.7, alg: 6 }],
+            accuracy: 0.815,
+            acc_loss: 0.0851234567890123,
+            energy_gain: -0.25,
+            latency_gain: f64::EPSILON,
+            reward: 7.25e-3,
+        };
+        let mut w = BinWriter::new();
+        write_solution(&mut w, &sol);
+        let mut r = BinReader::new(&w.buf);
+        let back = read_solution(&mut r).unwrap();
+        assert_eq!(back.per_layer.len(), 1);
+        assert_eq!(back.per_layer[0].alg, PruneAlg::Bernoulli);
+        assert_eq!(back.per_layer[0].sparsity.to_bits(), sol.per_layer[0].sparsity.to_bits());
+        assert_eq!(back.actions[0].ratio.to_bits(), sol.actions[0].ratio.to_bits());
+        assert_eq!(back.actions[0].alg, 6);
+        assert_eq!(back.reward.to_bits(), sol.reward.to_bits());
+        assert_eq!(back.latency_gain.to_bits(), sol.latency_gain.to_bits());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn header_mismatch_is_rejected() {
+        let h = CheckpointHeader {
+            method: "amc".into(),
+            model: "vgg11".into(),
+            seed: 42,
+            episodes: 100,
+            n_layers: 9,
+        };
+        let mut w = BinWriter::new();
+        write_header(&mut w, &h);
+        let mut ok = BinReader::new(&w.buf);
+        assert!(read_and_check_header(&mut ok, &h).is_ok());
+        let other = CheckpointHeader { seed: 43, ..h.clone() };
+        let mut bad = BinReader::new(&w.buf);
+        assert!(read_and_check_header(&mut bad, &other).is_err());
+        let mut not_magic = BinReader::new(b"NOTMAGIC rest");
+        assert!(read_and_check_header(&mut not_magic, &h).is_err());
+    }
+}

@@ -1,0 +1,372 @@
+//! The unified search subsystem: one loop for *every* method.
+//!
+//! The paper evaluates its composite RL agent against five baselines
+//! (AMC, HAQ, ASQJ, OPQ, NSGA-II) under identical budgets — yet the
+//! seed code hand-rolled six episode loops with six divergent flavours
+//! of eval accounting and best-solution tracking. This module is the
+//! seam that collapses them:
+//!
+//! * [`SearchStrategy`] — the method interface over
+//!   [`CompressionEnv`]: `propose` an [`Action`] for the current layer,
+//!   `observe` the step result, get the finished episode's [`Solution`]
+//!   in `end_episode`. Implemented by the composite agent
+//!   ([`crate::rl::composite::CompositeStrategy`]) and all five
+//!   baselines (`crate::baselines::*`).
+//! * [`SearchDriver`] — the single owner of the episode loop: budget
+//!   enforcement, best-solution selection via
+//!   [`crate::baselines::better`], reward-curve recording, progress
+//!   lines, wall-clock + [`crate::env::PhaseTimers`] aggregation across
+//!   sessions, periodic [`checkpoint`]ing with atomic writes,
+//!   `--resume` restore, and cooperative suspension (`--stop-after`).
+//!
+//! The driver replays the byte-exact control flow of the pre-refactor
+//! loops — same env calls, same RNG draw order — so fixed-seed results
+//! are bit-identical to the historical behaviour
+//! (`rust/tests/search_driver.rs` pins this against golden reference
+//! loops). Multi-seed fan-out (`--seeds N`) sits one level up, in
+//! [`crate::coordinator::launcher`], which runs one driver per seed in
+//! the worker pool and merges the reports.
+
+pub mod checkpoint;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::env::{Action, CompressionEnv, Solution, StepResult};
+use crate::io::bin::{BinReader, BinWriter};
+
+use checkpoint::{CheckpointHeader, SearchProgress};
+
+/// A search method driven by the [`SearchDriver`]: proposes actions,
+/// observes transitions, and updates itself between episodes.
+///
+/// Contract (what makes driver runs bit-identical to the historical
+/// hand-rolled loops): the driver calls, per episode,
+/// `begin_episode(ep)` → `env.reset()` → for each layer `t`:
+/// `propose(t, state)` → `env.step` → `observe` → then
+/// `end_episode(ep, total, solution)`. Strategies must confine their
+/// RNG use to these hooks in the order the original loops drew samples.
+pub trait SearchStrategy {
+    /// Method name recorded in reports and checkpoints (`ours`, `amc`…).
+    fn method(&self) -> &str;
+
+    /// Total episode budget this strategy wants from the driver.
+    fn episodes(&self) -> usize;
+
+    /// Hook before `env.reset()` of episode `ep` (config-per-episode
+    /// strategies materialise their candidate here).
+    fn begin_episode(&mut self, _ep: usize) {}
+
+    /// The action for layer `t` given the current state embedding.
+    fn propose(&mut self, t: usize, state: &[f32]) -> Action;
+
+    /// Observe one env transition (`s` is the pre-step state, `action`
+    /// what [`Self::propose`] returned). RL strategies store and learn
+    /// here; analytic strategies ignore it.
+    fn observe(&mut self, _s: &[f32], _action: &Action, _step: &StepResult) {}
+
+    /// Episode `ep` finished with summed reward `total` and `sol` as
+    /// the episode's final configuration.
+    fn end_episode(&mut self, _ep: usize, _total: f64, _sol: &Solution) {}
+
+    /// Does the method end with a greedy policy-extraction rollout
+    /// (composite agent only)?
+    fn wants_greedy_rollout(&self) -> bool {
+        false
+    }
+
+    /// Greedy (no-exploration) action for the final rollout. Only
+    /// called when [`Self::wants_greedy_rollout`] is true.
+    fn propose_greedy(&mut self, state: &[f32]) -> Action {
+        let _ = state;
+        unreachable!("strategy has no greedy rollout")
+    }
+
+    /// Extra text appended to the driver's progress line (e.g. the
+    /// composite agent's `rainbow=` unlock flag).
+    fn progress_note(&self) -> String {
+        String::new()
+    }
+
+    /// Should the driver record the per-episode reward curve? (The
+    /// paper plots it for `ours` only.)
+    fn records_curve(&self) -> bool {
+        false
+    }
+
+    /// Serialise the complete mutable strategy state (bit-exact) into a
+    /// [`checkpoint::SearchProgress`]-carrying checkpoint.
+    fn save_state(&self, w: &mut BinWriter);
+
+    /// Restore state written by [`Self::save_state`] into a
+    /// same-config strategy.
+    fn load_state(&mut self, r: &mut BinReader) -> Result<()>;
+}
+
+/// Driver knobs (all threaded from `RunConfig`/CLI by the coordinator).
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// model label for progress lines + checkpoint validation
+    pub model: String,
+    /// run seed, recorded in checkpoints for validation
+    pub seed: u64,
+    /// print per-episode progress lines (every 10 episodes + last)
+    pub progress: bool,
+    /// periodic-checkpoint file; `None` disables checkpointing
+    pub checkpoint: Option<PathBuf>,
+    /// episodes between periodic checkpoints (0 = only on suspension)
+    pub checkpoint_every: usize,
+    /// restore from `checkpoint` if the file exists before running
+    pub resume: bool,
+    /// suspend (checkpoint + return) after this many episodes have run
+    /// in *this session* — cooperative preemption for `--stop-after`
+    pub stop_after: Option<usize>,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            model: String::new(),
+            seed: 0,
+            progress: false,
+            checkpoint: None,
+            checkpoint_every: 25,
+            resume: false,
+            stop_after: None,
+        }
+    }
+}
+
+/// What a driver run produced.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// best solution over all episodes (+ greedy rollout when the
+    /// strategy has one); `None` only if zero episodes ran
+    pub best: Option<Solution>,
+    /// per-episode reward curve (strategies with `records_curve`)
+    pub curve: Vec<f64>,
+    /// episodes completed in total (across resumed sessions)
+    pub episodes_run: usize,
+    /// reward-oracle invocations consumed in total
+    pub evals: u64,
+    /// wall-clock seconds in total (previous sessions + this one)
+    pub wall_secs: f64,
+    /// true when the run was suspended by `stop_after` (state is in the
+    /// checkpoint; re-run with `resume` to continue)
+    pub suspended: bool,
+}
+
+/// The unified search loop — see the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct SearchDriver {
+    /// driver configuration
+    pub cfg: DriverConfig,
+}
+
+impl SearchDriver {
+    /// Driver with explicit configuration.
+    pub fn new(cfg: DriverConfig) -> SearchDriver {
+        SearchDriver { cfg }
+    }
+
+    /// Bare driver: no progress, no checkpointing — the configuration
+    /// the in-process `baselines::*::run` wrappers use.
+    pub fn plain() -> SearchDriver {
+        SearchDriver::default()
+    }
+
+    fn header(&self, strategy: &dyn SearchStrategy, env: &CompressionEnv) -> CheckpointHeader {
+        CheckpointHeader {
+            method: strategy.method().to_string(),
+            model: self.cfg.model.clone(),
+            seed: self.cfg.seed,
+            episodes: strategy.episodes(),
+            n_layers: env.n_layers(),
+        }
+    }
+
+    /// Run the strategy to completion (or suspension) against `env`.
+    pub fn run(
+        &self,
+        env: &mut CompressionEnv,
+        strategy: &mut dyn SearchStrategy,
+    ) -> Result<SearchOutcome> {
+        let episodes = strategy.episodes();
+        let t0 = Instant::now();
+        let header = self.header(strategy, env);
+        let mut start_ep = 0usize;
+        let mut elapsed_offset = 0.0f64;
+        let mut best: Option<Solution> = None;
+        let mut curve: Vec<f64> = Vec::new();
+
+        if let Some(path) = &self.cfg.checkpoint {
+            // never clobber state this run does not own: a pre-existing
+            // file is either a suspended run (the user wants --resume)
+            // or another run's checkpoint (which resume would reject) —
+            // both deserve an explicit decision, not a silent overwrite
+            if path.exists() && !self.cfg.resume {
+                bail!(
+                    "checkpoint {} already exists; pass --resume to continue it, \
+                     or delete the file to start this search from scratch",
+                    path.display()
+                );
+            }
+        }
+        if self.cfg.resume {
+            let Some(path) = &self.cfg.checkpoint else {
+                bail!("resume requested but no checkpoint path configured");
+            };
+            if path.exists() {
+                let p = checkpoint::SearchCheckpoint::load(path, &header, env, strategy)?;
+                start_ep = p.episode;
+                elapsed_offset = p.elapsed_secs;
+                env.n_evals = p.evals;
+                env.timers = p.timers;
+                best = p.best;
+                curve = p.curve;
+                if self.cfg.progress {
+                    eprintln!(
+                        "[{}] resumed {} at episode {start_ep}/{episodes} from {}",
+                        self.cfg.model,
+                        header.method,
+                        path.display()
+                    );
+                }
+            }
+        }
+
+        let mut this_session = 0usize;
+        for ep in start_ep..episodes {
+            if let Some(stop) = self.cfg.stop_after {
+                if this_session >= stop {
+                    let Some(path) = &self.cfg.checkpoint else {
+                        bail!("stop-after requested but no checkpoint path configured");
+                    };
+                    let progress = SearchProgress {
+                        episode: ep,
+                        evals: env.n_evals,
+                        elapsed_secs: elapsed_offset + t0.elapsed().as_secs_f64(),
+                        timers: env.timers,
+                        curve: curve.clone(),
+                        best: best.clone(),
+                    };
+                    checkpoint::SearchCheckpoint::save(path, &header, &progress, env, strategy)?;
+                    if self.cfg.progress {
+                        eprintln!(
+                            "[{}] suspended {} at episode {ep}/{episodes} -> {}",
+                            self.cfg.model,
+                            header.method,
+                            path.display()
+                        );
+                    }
+                    return Ok(SearchOutcome {
+                        best,
+                        curve,
+                        episodes_run: ep,
+                        evals: env.n_evals,
+                        wall_secs: progress.elapsed_secs,
+                        suspended: true,
+                    });
+                }
+            }
+
+            // --- one episode: the exact pre-refactor loop shape ---
+            strategy.begin_episode(ep);
+            let mut state = env.reset();
+            let mut total = 0.0f64;
+            let mut t = 0usize;
+            #[allow(unused_assignments)]
+            let mut last = None;
+            loop {
+                let action = strategy.propose(t, &state);
+                let step = env.step(action)?;
+                strategy.observe(&state, &action, &step);
+                total += step.reward;
+                state = step.state.clone();
+                t += 1;
+                let done = step.done;
+                last = Some(step);
+                if done {
+                    break;
+                }
+            }
+            let sol = env.solution(last.as_ref().unwrap());
+            strategy.end_episode(ep, total, &sol);
+            if strategy.records_curve() {
+                curve.push(total);
+            }
+            if self.cfg.progress && (ep % 10 == 0 || ep + 1 == episodes) {
+                let note = strategy.progress_note();
+                let model = &self.cfg.model;
+                if note.is_empty() {
+                    eprintln!(
+                        "[{model}] ep {ep:4}  reward {total:7.2}  loss {:.3}  gain {:.3}",
+                        sol.acc_loss, sol.energy_gain
+                    );
+                } else {
+                    eprintln!(
+                        "[{model}] ep {ep:4}  reward {total:7.2}  loss {:.3}  gain {:.3}  {note}",
+                        sol.acc_loss, sol.energy_gain
+                    );
+                }
+            }
+            best = crate::baselines::better(best, sol);
+            this_session += 1;
+
+            if let Some(path) = &self.cfg.checkpoint {
+                if self.cfg.checkpoint_every > 0
+                    && (ep + 1) % self.cfg.checkpoint_every == 0
+                    && ep + 1 < episodes
+                {
+                    let progress = SearchProgress {
+                        episode: ep + 1,
+                        evals: env.n_evals,
+                        elapsed_secs: elapsed_offset + t0.elapsed().as_secs_f64(),
+                        timers: env.timers,
+                        curve: curve.clone(),
+                        best: best.clone(),
+                    };
+                    checkpoint::SearchCheckpoint::save(path, &header, &progress, env, strategy)?;
+                }
+            }
+        }
+
+        // final greedy policy-extraction rollout (composite agent only)
+        if strategy.wants_greedy_rollout() {
+            let mut state = env.reset();
+            #[allow(unused_assignments)]
+            let mut last = None;
+            loop {
+                let action = strategy.propose_greedy(&state);
+                let step = env.step(action)?;
+                state = step.state.clone();
+                let done = step.done;
+                last = Some(step);
+                if done {
+                    break;
+                }
+            }
+            let greedy = env.solution(last.as_ref().unwrap());
+            best = crate::baselines::better(best, greedy);
+        }
+
+        // completed: a stale checkpoint would re-run the tail on the next
+        // --resume, so tidy it away
+        if let Some(path) = &self.cfg.checkpoint {
+            if path.exists() {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+
+        Ok(SearchOutcome {
+            best,
+            curve,
+            episodes_run: episodes,
+            evals: env.n_evals,
+            wall_secs: elapsed_offset + t0.elapsed().as_secs_f64(),
+            suspended: false,
+        })
+    }
+}

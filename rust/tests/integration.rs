@@ -170,6 +170,12 @@ fn baselines_smoke_on_vgg11() {
         let r = c.run_baseline("vgg11", method).unwrap();
         assert!(r.best.reward.is_finite(), "{method}");
         assert!(r.evals > 0, "{method}");
+        // uniform accounting (EXPERIMENTS.md): every method's JSON
+        // carries evals + wall_secs through the shared SearchDriver
+        let v = hapq::io::json::parse(&r.to_json().to_string()).unwrap();
+        assert!(v.req("evals").unwrap().as_f64().unwrap() > 0.0, "{method}");
+        assert!(v.req("wall_secs").unwrap().as_f64().unwrap() > 0.0, "{method}");
+        assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), c.cfg.seed as f64, "{method}");
     }
 }
 
@@ -196,6 +202,11 @@ fn report_json_roundtrips() {
     // the RL walk dirties one layer per step, so the engine must have
     // reused a substantial share of checkpointed activations
     assert!(hit > 0.0, "incremental engine never reused a layer");
+    // uniform budget accounting: compress reports carry the same
+    // evals/wall_secs/seed fields the baselines do
+    assert!(v.req("evals").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.req("wall_secs").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), c.cfg.seed as f64);
 }
 
 // ---------------------------------------------------------------------------
