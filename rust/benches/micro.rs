@@ -12,9 +12,11 @@ use hapq::hw::mac_sim::RqTable;
 use hapq::hw::Accel;
 use hapq::io::json;
 use hapq::model::{ModelArch, Weights};
+use hapq::nn::mat::{CodeMat, Mat, PackedMat};
 use hapq::pruning::{prune, PruneAlg, PruneCtx};
-use hapq::quant::quantize_weights;
-use hapq::runtime::{EvalData, InferenceBackend, NativeBackend};
+use hapq::quant::{quantize_weights, QuantGrid};
+use hapq::runtime::native::quant_params;
+use hapq::runtime::{EvalData, InferenceBackend, KernelKind, NativeBackend};
 use hapq::tensor::Tensor;
 use hapq::util::rng::Rng;
 
@@ -93,6 +95,9 @@ fn main() {
     // --- exec engine: incremental + threaded oracle (artifact-free) ---
     engine_rows();
 
+    // --- int vs f32 kernel: GEMM + oracle end-to-end (artifact-free) ---
+    kernel_rows();
+
     // --- full env step & episode (needs artifacts) ---
     if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
         let mut env = coord.build_env("vgg11").unwrap();
@@ -117,11 +122,9 @@ fn main() {
     }
 }
 
-/// Synthetic 5-node conv net (16x16x3, 64 examples) timing the
-/// `runtime/exec` engine: full recompute vs incremental resume vs a
-/// multi-thread pool — the §Perf evidence that ships with CI, no
-/// artifacts needed. Results are bit-identical across all three rows.
-fn engine_rows() {
+/// The shared synthetic 5-node conv net (16x16x3, 64 examples) behind
+/// the engine and kernel rows.
+fn bench5_setup() -> (ModelArch, Weights, Tensor, Vec<i64>) {
     const ARCH: &str = r#"{
       "name": "bench5", "dataset": "synth-bench", "input": [16, 16, 3],
       "classes": 10, "batch": 32,
@@ -176,8 +179,18 @@ fn engine_rows() {
     let n_ex = 64;
     let images = rand_t(vec![n_ex, 16, 16, 3]);
     let labels: Vec<i64> = (0..n_ex).map(|i| (i % 10) as i64).collect();
+    (arch, weights, images, labels)
+}
+
+/// Timing the `runtime/exec` engine on [`bench5_setup`]: full recompute
+/// vs incremental resume vs a multi-thread pool — the §Perf evidence
+/// that ships with CI, no artifacts needed. Results are bit-identical
+/// across all three rows.
+fn engine_rows() {
+    let (arch, weights, images, labels) = bench5_setup();
     let mk_backend = |threads: usize| {
-        let data = EvalData::from_arrays(&arch, &images, &labels, n_ex, arch.batch).unwrap();
+        let data =
+            EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
         NativeBackend::with_threads(&arch, data, threads).unwrap()
     };
     let bits = [6.0f32, 6.0, 6.0, 6.0];
@@ -203,5 +216,86 @@ fn engine_rows() {
     time("oracle incremental + 4 threads, mid dirty", 10, || {
         b4.invalidate(1);
         std::hint::black_box(b4.accuracy(&weights, &bits).unwrap());
+    });
+}
+
+/// Int vs f32 kernel (EXPERIMENTS.md §Perf): a raw GEMM row and the
+/// oracle end-to-end on [`bench5_setup`] with *compressed* weights
+/// (50% pruned + 4-bit quantized — the tensors the reward oracle
+/// actually scores). Logits are bit-identical across the kernel rows
+/// (rust/tests/kernel_conformance.rs); only wall-clock may differ.
+fn kernel_rows() {
+    // --- raw GEMM: f32 matmul vs packed code matmul, 1024x288 · 288x64,
+    //     4-bit activations, 50% of weight rows pruned ---
+    let (lo, hi, step) = quant_params(4.0, 0.5, false);
+    let grid = QuantGrid::new(lo, hi, step);
+    let lut = grid.lut().unwrap();
+    let mut rng = Rng::new(23);
+    let (rows, kdim, ndim) = (1024usize, 288usize, 64usize);
+    let codes = CodeMat {
+        r: rows,
+        c: kdim,
+        // ~50% exact zeros, like post-ReLU activations
+        d: (0..rows * kdim)
+            .map(|_| if rng.uniform() < 0.5 { 0 } else { 1 + rng.below(grid.levels()) as i16 })
+            .collect(),
+    };
+    let acts = Mat::from_vec(
+        rows,
+        kdim,
+        codes.d.iter().map(|&c| lut[(c + 1) as usize]).collect(),
+    );
+    let wdense: Vec<f32> = (0..kdim * ndim)
+        .map(|i| if (i / ndim) % 2 == 0 { 0.0 } else { rng.normal() as f32 * 0.1 })
+        .collect();
+    let wmat = Mat::from_vec(kdim, ndim, wdense.clone());
+    let packed = PackedMat::pack(kdim, ndim, &wdense);
+    let t_f32 = time("gemm f32 1024x288x64 (50% pruned w)", 20, || {
+        std::hint::black_box(acts.matmul(&wmat));
+    });
+    let t_int = time("gemm int 1024x288x64 (packed+codes)", 20, || {
+        std::hint::black_box(packed.code_matmul(&codes, &lut));
+    });
+    println!("{:<38} {:>9.2}x", "  -> int GEMM speedup", t_f32 / t_int.max(1e-12));
+
+    // --- oracle end-to-end: same engine, both kernels ---
+    let (arch, mut weights, images, labels) = bench5_setup();
+    for wt in weights.w.iter_mut() {
+        let sal = Tensor::full(wt.shape.clone(), 1.0);
+        let chsq = vec![1.0f32; wt.out_channels(false)];
+        let mut prng = Rng::new(31);
+        let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+        prune(wt, PruneAlg::Level, 0.5, &mut ctx);
+        quantize_weights(wt, 4);
+    }
+    let mk = |kernel: KernelKind| {
+        let data =
+            EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
+        NativeBackend::with_options(&arch, data, 1, kernel).unwrap()
+    };
+    let bits = [4.0f32, 4.0, 4.0, 4.0];
+    let bf = mk(KernelKind::F32);
+    let bi = mk(KernelKind::Int);
+    assert_eq!(
+        bf.engine_logits(&weights, &bits).unwrap(),
+        bi.engine_logits(&weights, &bits).unwrap(),
+        "kernel parity violated in the bench setup"
+    );
+    let tf = time("oracle e2e full recompute, f32 kernel", 10, || {
+        bf.invalidate_all();
+        std::hint::black_box(bf.accuracy(&weights, &bits).unwrap());
+    });
+    let ti = time("oracle e2e full recompute, int kernel", 10, || {
+        bi.invalidate_all();
+        std::hint::black_box(bi.accuracy(&weights, &bits).unwrap());
+    });
+    println!("{:<38} {:>9.2}x", "  -> int oracle speedup", tf / ti.max(1e-12));
+    time("oracle e2e mid dirty, f32 kernel", 10, || {
+        bf.invalidate(1);
+        std::hint::black_box(bf.accuracy(&weights, &bits).unwrap());
+    });
+    time("oracle e2e mid dirty, int kernel", 10, || {
+        bi.invalidate(1);
+        std::hint::black_box(bi.accuracy(&weights, &bits).unwrap());
     });
 }

@@ -6,7 +6,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, KernelKind};
 
 /// Options shared by every HAPQ run.
 #[derive(Clone, Debug)]
@@ -29,6 +29,10 @@ pub struct RunConfig {
     pub mac_samples: usize,
     /// which inference backend answers accuracy queries (`--backend`)
     pub backend: BackendKind,
+    /// which native compute kernel evaluates prunable layers
+    /// (`--kernel`; default `HAPQ_KERNEL` or the int fast path —
+    /// bit-identical to `f32`, so purely a performance knob)
+    pub kernel: KernelKind,
     /// oracle worker threads (`--threads`; default `HAPQ_THREADS` or 1)
     pub threads: usize,
     /// independent seeds to search and merge best-of (`--seeds`)
@@ -56,6 +60,7 @@ impl Default for RunConfig {
             seed: 42,
             mac_samples: 4000,
             backend: BackendKind::Native,
+            kernel: crate::runtime::default_kernel(),
             threads: crate::runtime::exec::default_threads(),
             seeds: 1,
             checkpoint: None,
@@ -154,6 +159,7 @@ impl Cli {
             seed: self.u64_flag("seed", d.seed)?,
             mac_samples: self.usize_flag("mac-samples", d.mac_samples)?,
             backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
+            kernel: KernelKind::parse(&self.str_flag("kernel", d.kernel.name()))?,
             threads: self.usize_flag("threads", d.threads)?.max(1),
             seeds: self.usize_flag("seeds", d.seeds)?.max(1),
             checkpoint,
@@ -245,6 +251,19 @@ mod tests {
         assert!(c.run_config().is_err());
         let c = Cli::parse(&args("compress --seeds 2 --stop-after 3")).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn kernel_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --kernel f32")).unwrap();
+        assert_eq!(c.run_config().unwrap().kernel, KernelKind::F32);
+        let c = Cli::parse(&args("compress --kernel int")).unwrap();
+        assert_eq!(c.run_config().unwrap().kernel, KernelKind::Int);
+        let c = Cli::parse(&args("compress --kernel i8")).unwrap();
+        assert!(c.run_config().is_err());
+        // default is the process default (HAPQ_KERNEL or int)
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().kernel, crate::runtime::default_kernel());
     }
 
     #[test]

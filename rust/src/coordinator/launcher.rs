@@ -5,8 +5,8 @@
 //! summary. Process isolation (rather than threads) keeps one inference
 //! backend per worker (one PJRT client each on `--backend pjrt`),
 //! mirrors how the paper's per-model optimizations are independent, and
-//! sidesteps FFI thread-safety questions. The configured `--backend`
-//! and `--threads` are forwarded to every worker. Finished children are
+//! sidesteps FFI thread-safety questions. The configured `--backend`,
+//! `--kernel` and `--threads` are forwarded to every worker. Finished children are
 //! reaped under an adaptive poll ([`ReapBackoff`]): 1 ms after a reap,
 //! doubling to a 16 ms ceiling while everyone keeps running.
 //!
@@ -75,6 +75,8 @@ impl Job {
             self.seed.unwrap_or(cfg.seed).to_string(),
             "--backend".into(),
             cfg.backend.name().to_string(),
+            "--kernel".into(),
+            cfg.kernel.name().to_string(),
             "--threads".into(),
             cfg.threads.to_string(),
         ]);
@@ -350,9 +352,11 @@ mod tests {
         let a = ours.args(&cfg);
         assert_eq!(a[0], "compress");
         assert!(a.contains(&"--episodes".to_string()));
-        // workers inherit the leader's backend and thread choices
+        // workers inherit the leader's backend, kernel and thread choices
         assert!(a.contains(&"--backend".to_string()));
         assert!(a.contains(&"native".to_string()));
+        assert!(a.contains(&"--kernel".to_string()));
+        assert!(a.contains(&cfg.kernel.name().to_string()));
         assert!(a.contains(&"--threads".to_string()));
         assert!(a.contains(&cfg.threads.to_string()));
         let base = Job { model: "vgg11".into(), method: "amc".into(), seed: None };

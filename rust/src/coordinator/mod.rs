@@ -87,8 +87,16 @@ pub struct RunReport {
     pub wall_secs: f64,
     /// oracle worker threads that served the reward queries
     pub threads: usize,
+    /// native compute kernel that evaluated prunable layers (`--kernel`)
+    pub kernel: crate::runtime::KernelKind,
     /// activation-cache hit rate of the reward oracle over the run (0..1)
     pub cache_hit_rate: f64,
+    /// cumulative seconds the oracle spent (re)packing int-kernel
+    /// weight planes
+    pub pack_secs: f64,
+    /// cumulative CPU-seconds the oracle spent in prunable-layer (GEMM)
+    /// evaluation, summed over workers
+    pub gemm_secs: f64,
     /// episode-reward curve (ours only)
     pub reward_curve: Vec<f64>,
 }
@@ -129,7 +137,10 @@ impl RunReport {
             ("evals", num(self.evals as f64)),
             ("wall_secs", num(self.wall_secs)),
             ("threads", num(self.threads as f64)),
+            ("kernel", s(self.kernel.name())),
             ("cache_hit_rate", num(self.cache_hit_rate)),
+            ("pack_secs", num(self.pack_secs)),
+            ("gemm_secs", num(self.gemm_secs)),
             ("per_layer", arr(layers)),
             (
                 "reward_curve",
@@ -194,7 +205,7 @@ impl Coordinator {
         split: Split,
         limit: usize,
     ) -> Result<InferenceSession> {
-        InferenceSession::open(
+        InferenceSession::open_with(
             self.cfg.backend,
             arch,
             Some(&self.cfg.artifacts.join(&e.hlo)),
@@ -203,6 +214,7 @@ impl Coordinator {
             limit,
             None,
             self.cfg.threads,
+            self.cfg.kernel,
         )
     }
 
@@ -296,7 +308,10 @@ impl Coordinator {
             evals: env.n_evals,
             wall_secs: outcome.wall_secs + t_score.elapsed().as_secs_f64(),
             threads: stats.threads,
+            kernel: stats.kernel,
             cache_hit_rate: stats.cache_hit_rate(),
+            pack_secs: stats.pack_secs,
+            gemm_secs: stats.gemm_secs,
             reward_curve: outcome.curve,
         })
     }
@@ -566,13 +581,21 @@ mod tests {
             evals: 2,
             wall_secs: 0.1,
             threads: 4,
+            kernel: crate::runtime::KernelKind::Int,
             cache_hit_rate: 0.75,
+            pack_secs: 0.01,
+            gemm_secs: 0.05,
             reward_curve: vec![],
         };
         let v = json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(v.req("threads").unwrap().as_f64().unwrap(), 4.0);
         let hit = v.req("cache_hit_rate").unwrap().as_f64().unwrap();
         assert!((hit - 0.75).abs() < 1e-9);
+        // the kernel and its pack/GEMM phase timings ride along so
+        // wall-clock comparisons can control for the compute path
+        assert_eq!(v.req("kernel").unwrap().as_str().unwrap(), "int");
+        assert!(v.req("pack_secs").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.req("gemm_secs").unwrap().as_f64().unwrap() > 0.0);
         // uniform accounting: every run JSON (ours AND baselines)
         // carries seed, evals and wall_secs
         assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), 42.0);

@@ -37,7 +37,11 @@
 //! XLA PJRT C API and needs a binary built with `--features pjrt`.
 //! `--threads N` (default: `HAPQ_THREADS` or 1) sizes the native
 //! engine's evaluation worker pool — results are bit-identical at any
-//! thread count.
+//! thread count. `--kernel {f32,int}` (default: `HAPQ_KERNEL` or
+//! `int`) picks the native compute kernel: `int` is the quantized
+//! fast path, `f32` the reference — logits are bit-identical either
+//! way (`rust/tests/kernel_conformance.rs`), so the flag is purely a
+//! performance knob.
 
 use std::time::Instant;
 
@@ -64,7 +68,8 @@ fn print_help() {
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
          fig5, fig8, ablate, report, perf\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
-         --reward-subset N --model NAME --backend native|pjrt --threads N\n\
+         --reward-subset N --model NAME --backend native|pjrt \
+         --kernel f32|int --threads N\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
          --checkpoint [PATH] --checkpoint-every K --resume --stop-after N\n\
          compare flags: --models a,b|all --methods ours,amc,... --jobs N"
@@ -406,11 +411,12 @@ hotspots holding 50% of energy: {hs:?}");
             let steps = t.steps.max(1) as f64;
             let stats = env.session_stats();
             println!(
-                "{model}: episode {:.1} ms ({} layers, {:.2} ms/step), backend {}, threads {}, rss {} MiB",
+                "{model}: episode {:.1} ms ({} layers, {:.2} ms/step), backend {}, kernel {}, threads {}, rss {} MiB",
                 per_ep * 1e3,
                 n,
                 per_ep * 1e3 / n as f64,
                 coord.cfg.backend.name(),
+                stats.kernel.name(),
                 stats.threads,
                 hapq::coordinator::rss_kib() / 1024
             );
@@ -426,6 +432,11 @@ hotspots holding 50% of energy: {hs:?}");
                 stats.cache_hit_rate() * 100.0,
                 stats.layers_computed,
                 stats.layers_reused
+            );
+            println!(
+                "  oracle kernel phases: pack {:.1} ms | prunable-layer eval {:.1} ms (cumulative)",
+                stats.pack_secs * 1e3,
+                stats.gemm_secs * 1e3
             );
             Ok(())
         }

@@ -1,8 +1,40 @@
-//! Flat row-major matrix with the three GEMM variants backprop needs.
+//! Flat row-major matrix with the three GEMM variants backprop needs,
+//! plus the integer fast-path GEMM of the accuracy oracle
+//! ([`CodeMat`] · [`PackedMat`]).
 //!
 //! Sizes here are tiny (≤ 64×300·300), so the win is cache order + auto
-//! vectorisation: all three products are written as row-major SAXPY
-//! loops over contiguous slices.
+//! vectorisation: all products are written as row-major SAXPY loops
+//! over contiguous slices.
+//!
+//! ## Why the int kernel is bit-identical to `fake_quant` + [`Mat::matmul`]
+//!
+//! [`PackedMat::code_matmul`] reproduces the f32 reference GEMM bit for
+//! bit by construction, not by tolerance:
+//!
+//! * activation codes dequantize through a LUT whose entries are the
+//!   **exact** f32 values `fake_quant` produces (see
+//!   [`crate::quant::grid::QuantGrid::value`]), and the structural-zero
+//!   sentinel maps to the same `0.0` the SAME-padding inserts;
+//! * each output accumulator consumes its nonzero products in the same
+//!   ascending-`k` order as [`Mat::matmul`], which skips `a == 0.0`
+//!   exactly as the reference does;
+//! * dropping all-zero weight **rows** is IEEE-exact for finite
+//!   activations: every skipped product is `a · (+0.0) = ±0.0`, and
+//!   `x + (±0.0) == x` for every accumulator value reachable here
+//!   (accumulators start at `+0.0` and `+0.0 + (-0.0) = +0.0` under
+//!   round-to-nearest) — a non-finite `a` cannot reach this GEMM, as
+//!   it has no grid code (see `runtime/native.rs` on the NaN caveat);
+//! * dropping all-zero weight **columns** is IEEE-exact for the same
+//!   reason: the reference leaves those accumulators at `+0.0`, which
+//!   is what [`Mat::zeros`] initialises and the scatter never touches.
+//!
+//! An i32 accumulator would be *faster* still but cannot match the
+//! reference: f32 addition rounds after every product, so any exact
+//! integer accumulation diverges from the reference bits. The int
+//! kernel's wins come from the i16 patch matrix (half the memory
+//! traffic of f32), the fused quantize-while-packing pass, pack-once
+//! weights (the f32 path re-clones the weight tensor every query), and
+//! the pruning-mask row/column skipping.
 
 /// Row-major matrix [r, c].
 #[derive(Clone, Debug, PartialEq)]
@@ -160,6 +192,139 @@ impl Mat {
     }
 }
 
+/// Row-major matrix of activation grid codes — the integer kernel's
+/// left GEMM operand. Entries are codes `0..=levels` (≤ 255) of one
+/// layer's input-activation [`crate::quant::QuantGrid`]; the sentinel
+/// `-1` marks a structural zero (a SAME-padding position), which
+/// dequantizes to the exact `0.0` the f32 im2col inserts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodeMat {
+    /// rows (im2col patches / batch rows)
+    pub r: usize,
+    /// columns (`k·k·C_in` patch width / fc fan-in)
+    pub c: usize,
+    /// row-major code storage, length `r * c`
+    pub d: Vec<i16>,
+}
+
+impl CodeMat {
+    /// Matrix filled with one code (`-1` primes an all-padding patch
+    /// buffer that im2col then overwrites in-bounds).
+    pub fn filled(r: usize, c: usize, code: i16) -> CodeMat {
+        CodeMat { r, c, d: vec![code; r * c] }
+    }
+}
+
+/// Pack-time weight plane for the integer kernel: the dense `[k, n]`
+/// GEMM operand with all-zero rows and all-zero columns dropped, built
+/// once per (layer, weights) and reused across every query until the
+/// layer is invalidated. The f32 path re-materialises this matrix from
+/// the weight tensor on every evaluation; packing hoists that work out
+/// of the hot loop and turns pruning sparsity into skipped arithmetic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMat {
+    /// rows of the dense operand (`k·k·C_in` / fc fan-in)
+    pub k: usize,
+    /// columns of the dense operand (output channels)
+    pub n: usize,
+    /// ascending indices of rows with at least one nonzero weight
+    pub live_rows: Vec<u32>,
+    /// ascending indices of columns with at least one nonzero weight;
+    /// `None` when every column is live (the common dense case)
+    pub live_cols: Option<Vec<u32>>,
+    /// packed row-major storage, `[live_rows.len(), live col count]`
+    pub d: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Pack a dense row-major `[k, n]` weight buffer, dropping rows and
+    /// columns that are entirely zero (pruned). Panics on size
+    /// mismatch, like [`Mat::from_vec`].
+    pub fn pack(k: usize, n: usize, data: &[f32]) -> PackedMat {
+        assert_eq!(k * n, data.len(), "pack {k}x{n} vs {} values", data.len());
+        let mut col_live = vec![false; n];
+        let mut live_rows: Vec<u32> = Vec::new();
+        for (kk, row) in data.chunks_exact(n.max(1)).enumerate() {
+            let mut any = false;
+            for (live, &v) in col_live.iter_mut().zip(row) {
+                if v != 0.0 {
+                    *live = true;
+                    any = true;
+                }
+            }
+            if any {
+                live_rows.push(kk as u32);
+            }
+        }
+        let live_cols: Option<Vec<u32>> = if col_live.iter().all(|&b| b) {
+            None
+        } else {
+            Some(
+                col_live
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b)
+                    .map(|(c, _)| c as u32)
+                    .collect(),
+            )
+        };
+        let lc = live_cols.as_ref().map_or(n, Vec::len);
+        let mut d = Vec::with_capacity(live_rows.len() * lc);
+        for &kk in &live_rows {
+            let row = &data[kk as usize * n..kk as usize * n + n];
+            match &live_cols {
+                None => d.extend_from_slice(row),
+                Some(cols) => d.extend(cols.iter().map(|&c| row[c as usize])),
+            }
+        }
+        PackedMat { k, n, live_rows, live_cols, d }
+    }
+
+    /// Number of live (non-pruned) output columns.
+    pub fn live_col_count(&self) -> usize {
+        self.live_cols.as_ref().map_or(self.n, Vec::len)
+    }
+
+    /// `codes[r, k] · self[k, n] → [r, n]`, dequantizing activation
+    /// codes through `lut` (indexed `code + 1`; entry 0 is the
+    /// structural zero). Bit-identical to `fake_quant` + [`Mat::matmul`]
+    /// on the dense operand — see the module docs for the argument.
+    pub fn code_matmul(&self, codes: &CodeMat, lut: &[f32]) -> Mat {
+        assert_eq!(
+            codes.c, self.k,
+            "code_matmul {}x{} · {}x{}",
+            codes.r, codes.c, self.k, self.n
+        );
+        let lc = self.live_col_count();
+        let mut out = Mat::zeros(codes.r, self.n);
+        let mut scratch = vec![0.0f32; lc];
+        for i in 0..codes.r {
+            let crow = &codes.d[i * codes.c..(i + 1) * codes.c];
+            scratch.fill(0.0);
+            for (ri, &kk) in self.live_rows.iter().enumerate() {
+                let a = lut[(crow[kk as usize] + 1) as usize];
+                if a == 0.0 {
+                    continue; // same zero-activation skip as Mat::matmul
+                }
+                let brow = &self.d[ri * lc..(ri + 1) * lc];
+                for (o, &bv) in scratch.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+            let orow = &mut out.d[i * self.n..(i + 1) * self.n];
+            match &self.live_cols {
+                None => orow.copy_from_slice(&scratch),
+                Some(cols) => {
+                    for (&c, &v) in cols.iter().zip(&scratch) {
+                        orow[c as usize] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +368,56 @@ mod tests {
         assert_eq!(m.d, vec![1., 2., 3., 1., 2., 3.]);
         let s = Mat::stack_rows(&[vec![1., 2.], vec![3., 4.]]);
         assert_eq!((s.r, s.c), (2, 2));
+    }
+
+    #[test]
+    fn pack_drops_zero_rows_and_columns() {
+        // [3, 3] with row 1 and column 2 entirely zero
+        let w = vec![
+            1.0, 2.0, 0.0, //
+            0.0, 0.0, 0.0, //
+            3.0, 0.0, 0.0,
+        ];
+        let p = PackedMat::pack(3, 3, &w);
+        assert_eq!(p.live_rows, vec![0, 2]);
+        assert_eq!(p.live_cols, Some(vec![0, 1]));
+        assert_eq!(p.live_col_count(), 2);
+        assert_eq!(p.d, vec![1.0, 2.0, 3.0, 0.0]);
+        // fully dense operand keeps everything (live_cols = None)
+        let dense = PackedMat::pack(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(dense.live_rows, vec![0, 1]);
+        assert_eq!(dense.live_cols, None);
+        assert_eq!(dense.d, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn code_matmul_matches_dense_f32_matmul_bitwise() {
+        // grid {0, 0.5, 1.0, 1.5}: lut[0] = padding zero, lut[n+1] = n*0.5
+        let lut = [0.0f32, 0.0, 0.5, 1.0, 1.5];
+        // codes row 0: [2, 0, -1] -> values [1.0, 0.0, 0.0]
+        // codes row 1: [3, 1, 2]  -> values [1.5, 0.5, 1.0]
+        let codes = CodeMat { r: 2, c: 3, d: vec![2, 0, -1, 3, 1, 2] };
+        let w = vec![
+            1.0, -2.0, 0.0, //
+            0.0, 0.0, 0.0, // dead row
+            4.0, 0.5, 0.0, // column 2 dead overall
+        ];
+        let packed = PackedMat::pack(3, 3, &w);
+        let got = packed.code_matmul(&codes, &lut);
+        // the f32 reference: dequantized values through the dense matmul
+        let a = Mat::from_vec(2, 3, vec![1.0, 0.0, 0.0, 1.5, 0.5, 1.0]);
+        let b = Mat::from_vec(3, 3, w);
+        assert_eq!(got, a.matmul(&b));
+    }
+
+    #[test]
+    fn code_matmul_all_pruned_leaves_exact_zeros() {
+        let lut = [0.0f32, 0.0, 1.0];
+        let codes = CodeMat::filled(2, 2, 1);
+        let packed = PackedMat::pack(2, 3, &[0.0; 6]);
+        assert!(packed.live_rows.is_empty());
+        assert_eq!(packed.live_cols, Some(vec![]));
+        let y = packed.code_matmul(&codes, &lut);
+        assert_eq!(y.d, vec![0.0; 6]);
     }
 }

@@ -1,0 +1,156 @@
+//! The one uniform quantization grid — shared by activation fake-quant
+//! (`runtime::fake_quant`), per-channel weight quantization
+//! (`quant::quantize_weights`) and the integer fast-path kernel
+//! (`runtime/native` + `nn/mat`).
+//!
+//! Historically the activation and weight paths computed the snapping
+//! math independently; any drift between them would silently break the
+//! "weights arrive already fake-quantized" contract the backends rely
+//! on. [`QuantGrid`] owns that math now, and a cross-module agreement
+//! test (`quant/mod.rs`) pins the two callers to it.
+//!
+//! The integer kernel additionally leans on an exactness property of
+//! this type: [`QuantGrid::snap`] reconstructs its result as
+//! `r * step + lo` where `r` is an exact small-integer-valued f32, and
+//! [`QuantGrid::value`] performs the *same* two f32 operations on the
+//! integer code — so `value(code(x)) == snap(x)` **bitwise**, which is
+//! what lets the int path store activations as i16 codes and still
+//! produce logits bit-identical to the f32 reference forward.
+
+/// A uniform linear quantization grid over `[lo, hi]` with spacing
+/// `step`: the representable points are `lo + n·step` for integer
+/// codes `n` in `0..=levels`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantGrid {
+    /// lower clip point (grid point of code 0)
+    pub lo: f32,
+    /// upper clip point
+    pub hi: f32,
+    /// spacing between adjacent grid points
+    pub step: f32,
+}
+
+impl QuantGrid {
+    /// Wrap the `(lo, hi, step)` triple the callers already pass around.
+    pub fn new(lo: f32, hi: f32, step: f32) -> QuantGrid {
+        QuantGrid { lo, hi, step }
+    }
+
+    /// A grid that cannot snap anything: zero/negative/non-finite step
+    /// (zero calibration scale, an all-equal weight channel). Callers
+    /// pass values through unchanged on degenerate grids.
+    pub fn degenerate(&self) -> bool {
+        self.step <= 0.0 || !self.step.is_finite()
+    }
+
+    /// Number of steps between `lo` and `hi` (0 on degenerate grids).
+    /// For the activation grids of `quant_params` and the per-channel
+    /// weight grids this is `2^bits - 1 ≤ 255`.
+    pub fn levels(&self) -> usize {
+        if self.degenerate() {
+            return 0;
+        }
+        let l = ((self.hi - self.lo) / self.step).round();
+        if l.is_finite() && l >= 0.0 {
+            l as usize
+        } else {
+            0
+        }
+    }
+
+    /// Clipped linear snap of `x` onto the grid — the exact expression
+    /// both `runtime::fake_quant` and `quant::quantize_weights` have
+    /// always computed, now in one place.
+    #[inline]
+    pub fn snap(&self, x: f32) -> f32 {
+        ((x.clamp(self.lo, self.hi) - self.lo) / self.step).round() * self.step + self.lo
+    }
+
+    /// Integer code of `x` on the grid: the same rounded quantity
+    /// [`Self::snap`] multiplies back, kept as an integer. Saturates at
+    /// the i16 range (real grids stay ≤ 255). `±inf` clamps to the
+    /// grid boundary exactly as [`Self::snap`] does; `NaN` has no
+    /// integer code (the cast saturates it to 0) — see the int-kernel
+    /// caveat in `runtime/native.rs` module docs.
+    #[inline]
+    pub fn code(&self, x: f32) -> i16 {
+        ((x.clamp(self.lo, self.hi) - self.lo) / self.step).round() as i16
+    }
+
+    /// The f32 value of grid code `n` — **bit-identical** to what
+    /// [`Self::snap`] produces for any `x` with `code(x) == n`, because
+    /// `n as f32` is exact for `|n| ≤ 2^24` and the two arithmetic ops
+    /// match `snap`'s reconstruction exactly.
+    #[inline]
+    pub fn value(&self, code: i16) -> f32 {
+        (code as f32) * self.step + self.lo
+    }
+
+    /// Dequantization table for the integer kernel, indexed by
+    /// `code + 1`: entry 0 is the exact `0.0` used for structural zeros
+    /// (SAME-padding positions), entry `n + 1` is [`Self::value`]`(n)`.
+    /// `None` when the grid is degenerate or too fine to tabulate
+    /// (callers fall back to the f32 path).
+    pub fn lut(&self) -> Option<Vec<f32>> {
+        let levels = self.levels();
+        if self.degenerate() || levels == 0 || levels > 255 {
+            return None;
+        }
+        let mut t = Vec::with_capacity(levels + 2);
+        t.push(0.0);
+        for n in 0..=levels {
+            t.push(self.value(n as i16));
+        }
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snap_matches_hand_values() {
+        // grid [0, 2] step 0.5 — the historical fake_quant fixture
+        let g = QuantGrid::new(0.0, 2.0, 0.5);
+        assert_eq!(g.snap(0.6), 0.5);
+        assert_eq!(g.snap(0.76), 1.0);
+        assert_eq!(g.snap(3.0), 2.0); // clips high
+        assert_eq!(g.snap(-1.0), 0.0); // clips low
+        assert_eq!(g.levels(), 4);
+    }
+
+    #[test]
+    fn degenerate_grids_are_flagged() {
+        assert!(QuantGrid::new(0.0, 0.0, 0.0).degenerate());
+        assert!(QuantGrid::new(0.0, 1.0, -0.5).degenerate());
+        assert!(QuantGrid::new(0.0, 1.0, f32::NAN).degenerate());
+        assert!(QuantGrid::new(0.0, 1.0, f32::INFINITY).degenerate());
+        assert!(!QuantGrid::new(-1.0, 1.0, 0.25).degenerate());
+        assert_eq!(QuantGrid::new(0.0, 0.0, 0.0).levels(), 0);
+        assert_eq!(QuantGrid::new(0.0, 0.0, 0.0).lut(), None);
+    }
+
+    #[test]
+    fn value_of_code_reproduces_snap_bitwise() {
+        // the property the int kernel's bit-exactness rests on
+        let g = QuantGrid::new(-1.3, 1.3, 2.6 / 7.0);
+        for &x in &[-2.0f32, -1.3, -0.61, -0.2, 0.0, 0.17, 0.9, 1.3, 5.0] {
+            let snapped = g.snap(x);
+            assert_eq!(g.value(g.code(x)), snapped, "x={x}");
+            // snapped values are fixed points of the code/value pair
+            assert_eq!(g.value(g.code(snapped)), snapped, "x={x}");
+        }
+    }
+
+    #[test]
+    fn lut_is_sentinel_plus_all_levels() {
+        let g = QuantGrid::new(0.0, 1.0, 1.0 / 3.0);
+        let lut = g.lut().unwrap();
+        assert_eq!(lut.len(), 2 + g.levels());
+        assert_eq!(lut[0], 0.0);
+        for n in 0..=g.levels() {
+            assert_eq!(lut[n + 1], g.value(n as i16));
+        }
+    }
+}

@@ -11,6 +11,15 @@
 //! [`crate::runtime::native`] on the default path — parameterised per
 //! layer by the `act_bits` input; see python/compile/kernels/ref.py
 //! for the shared grid math.
+//!
+//! Both paths snap through ONE implementation: [`grid::QuantGrid`].
+//! `runtime::fake_quant` (activations) and [`quantize_weights`] used to
+//! duplicate the clipped-linear-snap expression; the agreement test at
+//! the bottom of this file pins them to the shared helper.
+
+pub mod grid;
+
+pub use grid::QuantGrid;
 
 use crate::tensor::Tensor;
 
@@ -32,8 +41,11 @@ pub fn quantize_weights(w: &mut Tensor, bits: u32) -> f64 {
         if !mn.is_finite() || !mx.is_finite() || mx <= mn {
             continue; // degenerate channel (single value / all pruned)
         }
+        // the survivors' (min, max) bound x, so the grid clamp inside
+        // `snap` is an exact no-op and this stays bit-identical to the
+        // historical unclamped expression
         let step = (mx - mn) / levels;
-        let q = ((x - mn) / step).round() * step + mn;
+        let q = QuantGrid::new(mn, mx, step).snap(x);
         // never quantize a surviving weight to exactly 0 — that would
         // silently change the sparsity the energy model was told about
         let q = if q == 0.0 { step.copysign(x).max(f32::MIN_POSITIVE) } else { q };
@@ -117,6 +129,39 @@ mod tests {
         let e = quant_error(&w, 8);
         let scale: f64 = w.data.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / 8.0;
         assert!(e < 1e-4 * scale, "e={e}");
+    }
+
+    #[test]
+    fn weight_and_activation_quantizers_agree_on_the_shared_grid() {
+        // cross-module agreement: quantize_weights (per-channel weight
+        // grid) and runtime::fake_quant (activation grid) must snap
+        // identically when handed the same (lo, hi, step) — both now
+        // route through quant::grid::QuantGrid, and this test keeps
+        // them from drifting apart again.
+        use crate::runtime::native::fake_quant;
+        use crate::util::proptest::{forall, gen_weights};
+        forall(
+            "quantize_weights == fake_quant on the channel grid",
+            |r| (gen_weights(r, 48), 2 + r.below(7) as u32),
+            |(data, bits)| {
+                // single output channel -> one grid over all weights
+                let mut w = Tensor::new(vec![data.len(), 1], data.clone());
+                quantize_weights(&mut w, *bits);
+                let (mn, mx) = Tensor::new(vec![data.len(), 1], data.clone())
+                    .channel_minmax(false)[0];
+                if !mn.is_finite() || !mx.is_finite() || mx <= mn {
+                    return true; // degenerate channel: both paths pass through
+                }
+                let step = (mx - mn) / ((1u32 << bits.clamp(2, 8)) - 1) as f32;
+                let mut fq = data.clone();
+                fake_quant(&mut fq, mn, mx, step);
+                data.iter().zip(&w.data).zip(&fq).all(|((&x0, &qw), &qa)| {
+                    // skip pruned zeros (weight path preserves them) and
+                    // snaps the never-zero rule rewrote
+                    x0 == 0.0 || qa == 0.0 || qw == qa
+                })
+            },
+        );
     }
 
     #[test]

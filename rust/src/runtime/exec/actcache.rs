@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::native::{eval_layer, quant_params, Feat, LayerParams};
+use crate::runtime::native::{eval_layer, eval_layer_int, quant_params, Feat, LayerParams};
 use crate::runtime::top1_correct;
 
 use super::pool::Job;
@@ -25,6 +25,8 @@ pub(crate) struct ShardOutcome {
     pub computed: u64,
     /// graph layers served from the checkpoint cache
     pub reused: u64,
+    /// seconds spent evaluating prunable (GEMM) layers this query
+    pub gemm_s: f64,
     /// final-layer activations, `[rows, classes]` row-major — empty
     /// unless the job asked for them (`Job::want_logits`)
     pub logits: Vec<f32>,
@@ -50,12 +52,15 @@ impl ActCache {
     }
 
     /// Evaluate the graph over one shard, resuming from the first
-    /// layer marked in `job.dirty_layers`.
+    /// layer marked in `job.dirty_layers`. Prunable layers run on the
+    /// int kernel whenever the job carries a pack for them
+    /// (`Job::packs`); a missing pack is the per-layer f32 fallback.
     pub fn eval(&mut self, plan: &Plan, shard: &Shard, job: &Job) -> Result<ShardOutcome> {
         let n_slots = plan.n_slots();
         let mut dirty = vec![false; n_slots];
         let mut computed = 0u64;
         let mut reused = 0u64;
+        let mut gemm_s = 0.0f64;
         for (li, layer) in plan.arch.layers.iter().enumerate() {
             let slot = li + 1;
             let needs = job.dirty_layers[li]
@@ -75,16 +80,33 @@ impl ActCache {
                             .expect("topological order guarantees inputs are computed")
                     })
                     .collect();
-                let params = plan.prunable_of_layer[li].map(|i| LayerParams {
-                    w: &job.w[i],
-                    bias: &job.b[i].data,
-                    grid: quant_params(
-                        job.bits[i],
-                        plan.arch.act_scales[i],
-                        plan.arch.act_signed[i],
-                    ),
-                });
-                eval_layer(layer, params, &ins)?
+                match plan.prunable_of_layer[li] {
+                    Some(i) => {
+                        let t0 = std::time::Instant::now();
+                        let pack = job.packs.get(i).and_then(|p| p.as_ref());
+                        let y = match pack {
+                            Some(pack) => {
+                                eval_layer_int(layer, pack, &job.w[i], &job.b[i].data, &ins)?
+                            }
+                            None => eval_layer(
+                                layer,
+                                Some(LayerParams {
+                                    w: &job.w[i],
+                                    bias: &job.b[i].data,
+                                    grid: quant_params(
+                                        job.bits[i],
+                                        plan.arch.act_scales[i],
+                                        plan.arch.act_signed[i],
+                                    ),
+                                }),
+                                &ins,
+                            )?,
+                        };
+                        gemm_s += t0.elapsed().as_secs_f64();
+                        y
+                    }
+                    None => eval_layer(layer, None, &ins)?,
+                }
             };
             self.feats[slot] = Some(out);
             computed += 1;
@@ -95,6 +117,6 @@ impl ActCache {
         let classes = last.data.len() / shard.rows;
         let correct = top1_correct(&last.data, classes, &shard.labels);
         let logits = if job.want_logits { last.data.clone() } else { Vec::new() };
-        Ok(ShardOutcome { correct, computed, reused, logits })
+        Ok(ShardOutcome { correct, computed, reused, gemm_s, logits })
     }
 }

@@ -30,17 +30,29 @@
 //! were invalidated (or whose activation precision changed — the
 //! engine diffs `act_bits` itself, so a forgotten hint on a pure
 //! precision change cannot produce stale results).
+//!
+//! On the int kernel (`--kernel int`, the default) staging additionally
+//! builds one `PackedLayer` (`runtime/native.rs`) per prunable layer —
+//! the packed weight plane + activation dequant LUT — and, like the
+//! weight snapshots, re-packs **only** layers the dirty set touched, so
+//! an incremental dirty-layer resume re-packs exactly the invalidated
+//! layers and nothing else. Pack wall-clock accumulates into
+//! [`RuntimeStats::pack_secs`]; the workers report their
+//! prunable-layer (GEMM) evaluation time into
+//! [`RuntimeStats::gemm_secs`].
 
 pub(crate) mod actcache;
 pub(crate) mod pool;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::model::{ModelArch, Weights};
-use crate::runtime::{EvalData, RuntimeStats};
+use crate::runtime::native::{pack_layer, quant_params, PackedLayer};
+use crate::runtime::{EvalData, KernelKind, RuntimeStats};
 use crate::tensor::Tensor;
 
 use pool::{Job, Pool};
@@ -177,15 +189,20 @@ fn build_shards(data: &EvalData, threads: usize) -> Vec<Shard> {
 }
 
 /// Mutable engine state behind the `&self` backend API: the staged
-/// weight snapshot, the pending dirty hints, and the cache statistics.
+/// weight snapshot (plus, on the int kernel, the per-layer packs), the
+/// pending dirty hints, and the cache statistics.
 struct EngineState {
     staged_w: Vec<Arc<Tensor>>,
     staged_b: Vec<Arc<Tensor>>,
+    /// int-kernel packs, prunable order (`None` = f32 fallback layer)
+    staged_pack: Vec<Option<Arc<PackedLayer>>>,
     last_bits: Vec<f32>,
     marked: Vec<bool>,
     all_dirty: bool,
     computed: u64,
     reused: u64,
+    pack_s: f64,
+    gemm_s: f64,
 }
 
 /// What one engine evaluation produces.
@@ -201,14 +218,22 @@ pub struct Engine {
     pool: Pool,
     state: Mutex<EngineState>,
     threads: usize,
+    kernel: KernelKind,
     n_examples: usize,
     n_prunable: usize,
 }
 
 impl Engine {
     /// Build the engine: resolve the plan, shard the data, spawn the
-    /// worker pool (`threads` is clamped to ≥ 1).
-    pub fn new(arch: &ModelArch, data: &EvalData, threads: usize) -> Result<Engine> {
+    /// worker pool (`threads` is clamped to ≥ 1). `kernel` selects the
+    /// prunable-layer compute path (`--kernel`); both kernels are
+    /// bit-identical, so this is purely a performance knob.
+    pub fn new(
+        arch: &ModelArch,
+        data: &EvalData,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> Result<Engine> {
         let threads = threads.max(1);
         let n = arch.prunable.len();
         // the engine consumes the calibration vectors, so it owns the
@@ -238,13 +263,17 @@ impl Engine {
             state: Mutex::new(EngineState {
                 staged_w: Vec::new(),
                 staged_b: Vec::new(),
+                staged_pack: Vec::new(),
                 last_bits: Vec::new(),
                 marked: vec![false; n],
                 all_dirty: true,
                 computed: 0,
                 reused: 0,
+                pack_s: 0.0,
+                gemm_s: 0.0,
             }),
             threads,
+            kernel,
             n_examples: data.n_examples,
             n_prunable: n,
         })
@@ -278,13 +307,17 @@ impl Engine {
         st.all_dirty = true;
     }
 
-    /// Worker count and cumulative cache statistics.
+    /// Worker count, kernel, phase timings and cumulative cache
+    /// statistics.
     pub fn stats(&self) -> RuntimeStats {
         let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         RuntimeStats {
             threads: self.threads,
+            kernel: self.kernel,
             layers_computed: st.computed,
             layers_reused: st.reused,
+            pack_secs: st.pack_s,
+            gemm_secs: st.gemm_s,
         }
     }
 
@@ -327,6 +360,29 @@ impl Engine {
         st.marked.iter_mut().for_each(|m| *m = false);
         st.all_dirty = false;
 
+        // int kernel: (re)pack exactly the dirty layers — an
+        // incremental resume never re-packs clean ones
+        if self.kernel == KernelKind::Int {
+            let t0 = Instant::now();
+            if st.staged_pack.len() != n {
+                st.staged_pack = vec![None; n];
+            }
+            for (i, dirty) in dirty_p.iter().enumerate() {
+                if *dirty {
+                    let li = self.plan.layer_of_prunable[i];
+                    let layer = &self.plan.arch.layers[li];
+                    let grid = quant_params(
+                        act_bits[i],
+                        self.plan.arch.act_scales[i],
+                        self.plan.arch.act_signed[i],
+                    );
+                    let pack = pack_layer(layer, &st.staged_w[i], grid).map(Arc::new);
+                    st.staged_pack[i] = pack;
+                }
+            }
+            st.pack_s += t0.elapsed().as_secs_f64();
+        }
+
         let mut dirty_layers = vec![false; self.plan.arch.layers.len()];
         for (i, dirty) in dirty_p.iter().enumerate() {
             if *dirty {
@@ -336,6 +392,7 @@ impl Engine {
         let job = Arc::new(Job {
             w: st.staged_w.clone(),
             b: st.staged_b.clone(),
+            packs: st.staged_pack.clone(),
             bits: st.last_bits.clone(),
             dirty_layers,
             want_logits,
@@ -344,6 +401,7 @@ impl Engine {
             Ok(agg) => {
                 st.computed += agg.computed;
                 st.reused += agg.reused;
+                st.gemm_s += agg.gemm_s;
                 Ok(EvalOut { correct: agg.correct, logits: agg.logits })
             }
             Err(e) => {

@@ -12,18 +12,24 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
+use crate::runtime::native::PackedLayer;
 use crate::tensor::Tensor;
 
 use super::actcache::ActCache;
 use super::{Plan, Shard};
 
 /// One broadcast evaluation request: the engine's staged per-layer
-/// weight snapshot plus the dirty set for this query.
+/// weight snapshot (and, on the int kernel, the per-layer packs) plus
+/// the dirty set for this query.
 pub(crate) struct Job {
     /// staged weight tensors, prunable order
     pub w: Vec<Arc<Tensor>>,
     /// staged bias tensors, prunable order
     pub b: Vec<Arc<Tensor>>,
+    /// int-kernel packed layers, prunable order — empty on the f32
+    /// kernel; a `None` entry is a per-layer f32 fallback (degenerate
+    /// grid)
+    pub packs: Vec<Option<Arc<PackedLayer>>>,
     /// activation precisions, prunable order
     pub bits: Vec<f32>,
     /// per graph layer: invalidated since the last query
@@ -42,6 +48,8 @@ pub(crate) struct Partial {
     pub computed: u64,
     /// graph layers served from cache
     pub reused: u64,
+    /// seconds spent in prunable-layer (GEMM) evaluation
+    pub gemm_s: f64,
     /// `(shard index, final-layer logits)` per owned shard
     pub shards: Vec<(usize, Vec<f32>)>,
 }
@@ -58,6 +66,8 @@ pub(crate) struct Aggregate {
     pub computed: u64,
     /// graph layers served from cache over all shards
     pub reused: u64,
+    /// CPU-seconds in prunable-layer (GEMM) evaluation over all workers
+    pub gemm_s: f64,
     /// final-layer logits concatenated in example order
     pub logits: Vec<f32>,
 }
@@ -99,6 +109,7 @@ impl Pool {
         let mut correct = 0usize;
         let mut computed = 0u64;
         let mut reused = 0u64;
+        let mut gemm_s = 0.0f64;
         let mut parts: Vec<(usize, Vec<f32>)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..self.txs.len() {
@@ -108,6 +119,7 @@ impl Pool {
                         correct += p.correct;
                         computed += p.computed;
                         reused += p.reused;
+                        gemm_s += p.gemm_s;
                         parts.extend(p.shards);
                     }
                     Err(e) => {
@@ -129,7 +141,7 @@ impl Pool {
         }
         parts.sort_by_key(|(gi, _)| *gi);
         let logits = parts.into_iter().flat_map(|(_, l)| l).collect();
-        Ok(Aggregate { correct, computed, reused, logits })
+        Ok(Aggregate { correct, computed, reused, gemm_s, logits })
     }
 }
 
@@ -156,6 +168,7 @@ fn eval_set(
         p.correct += out.correct;
         p.computed += out.computed;
         p.reused += out.reused;
+        p.gemm_s += out.gemm_s;
         if job.want_logits {
             p.shards.push((*gi, out.logits));
         }

@@ -77,21 +77,84 @@ impl BackendKind {
     }
 }
 
+/// Which compute kernel the native engine evaluates prunable layers
+/// with (the CLI's `--kernel`). Both produce **bit-identical** logits —
+/// enforced by `rust/tests/kernel_conformance.rs` — so this is purely a
+/// performance knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The reference path: fake-quantize a copy of the input
+    /// activations, then f32 im2col + GEMM over the raw weight tensor.
+    F32,
+    /// The integer fast path (default): i16 activation-code planes
+    /// extracted while packing patches, per-layer dequant LUT, and
+    /// pack-once weight planes with pruned rows/columns dropped
+    /// (`nn::mat::PackedMat`), re-packed only for invalidated layers.
+    #[default]
+    Int,
+}
+
+impl KernelKind {
+    /// Parse a `--kernel` flag value (`f32` | `int`).
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        match s {
+            "f32" => Ok(KernelKind::F32),
+            "int" => Ok(KernelKind::Int),
+            other => bail!("unknown kernel `{other}` (expected `f32` or `int`)"),
+        }
+    }
+
+    /// Flag-style name of the kernel.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::F32 => "f32",
+            KernelKind::Int => "int",
+        }
+    }
+}
+
+/// Kernel default for new sessions: the `HAPQ_KERNEL` environment
+/// variable when set to a valid kernel name, else [`KernelKind::Int`].
+/// The CI kernel-parity matrix drives the whole suite through both
+/// values of this knob.
+pub fn default_kernel() -> KernelKind {
+    std::env::var("HAPQ_KERNEL")
+        .ok()
+        .and_then(|v| KernelKind::parse(&v).ok())
+        .unwrap_or_default()
+}
+
 /// Execution statistics a backend may expose for perf reporting and
 /// the run-JSON measurement conventions (EXPERIMENTS.md).
 #[derive(Clone, Copy, Debug)]
 pub struct RuntimeStats {
     /// worker threads answering accuracy queries
     pub threads: usize,
+    /// compute kernel evaluating prunable layers (`--kernel`; backends
+    /// without the native engine report the reference [`KernelKind::F32`])
+    pub kernel: KernelKind,
     /// graph-layer activations recomputed across all queries so far
     pub layers_computed: u64,
     /// graph-layer activations served from the checkpoint cache
     pub layers_reused: u64,
+    /// cumulative seconds spent (re)packing weight planes for the int
+    /// kernel — engine-side, once per dirty layer per query
+    pub pack_secs: f64,
+    /// cumulative CPU-seconds inside prunable-layer (GEMM) evaluation,
+    /// summed across workers — compare at equal `threads` only
+    pub gemm_secs: f64,
 }
 
 impl Default for RuntimeStats {
     fn default() -> Self {
-        RuntimeStats { threads: 1, layers_computed: 0, layers_reused: 0 }
+        RuntimeStats {
+            threads: 1,
+            kernel: KernelKind::F32,
+            layers_computed: 0,
+            layers_reused: 0,
+            pack_secs: 0.0,
+            gemm_secs: 0.0,
+        }
     }
 }
 
@@ -279,7 +342,8 @@ impl InferenceSession {
         }
     }
 
-    /// Open a session on the chosen backend.
+    /// Open a session on the chosen backend with the process-default
+    /// kernel ([`default_kernel`]).
     ///
     /// `hlo` is the AOT-compiled HLO-text artifact — required by
     /// [`BackendKind::Pjrt`], ignored by [`BackendKind::Native`].
@@ -298,12 +362,29 @@ impl InferenceSession {
         batch: Option<usize>,
         threads: usize,
     ) -> Result<InferenceSession> {
+        Self::open_with(kind, arch, hlo, data_npz, split, limit, batch, threads, default_kernel())
+    }
+
+    /// [`Self::open`] with an explicit compute kernel (the CLI's
+    /// `--kernel`; ignored by PJRT, whose executor is the AOT graph).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_with(
+        kind: BackendKind,
+        arch: &ModelArch,
+        hlo: Option<&Path>,
+        data_npz: &Path,
+        split: Split,
+        limit: usize,
+        batch: Option<usize>,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> Result<InferenceSession> {
         let batch = batch.unwrap_or(arch.batch);
         match kind {
             BackendKind::Native => {
                 let data = EvalData::load(arch, data_npz, split, limit, batch)?;
-                Ok(Self::from_backend(Box::new(NativeBackend::with_threads(
-                    arch, data, threads,
+                Ok(Self::from_backend(Box::new(NativeBackend::with_options(
+                    arch, data, threads, kernel,
                 )?)))
             }
             #[cfg(feature = "pjrt")]
@@ -364,6 +445,19 @@ mod tests {
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
         assert!(BackendKind::parse("tpu").is_err());
         assert_eq!(BackendKind::default().name(), "native");
+    }
+
+    #[test]
+    fn kernel_kind_parses() {
+        assert_eq!(KernelKind::parse("f32").unwrap(), KernelKind::F32);
+        assert_eq!(KernelKind::parse("int").unwrap(), KernelKind::Int);
+        assert!(KernelKind::parse("i8").is_err());
+        // the fast path is the default; HAPQ_KERNEL can override it
+        assert_eq!(KernelKind::default(), KernelKind::Int);
+        assert_eq!(KernelKind::default().name(), "int");
+        // backends without the native engine report the f32 reference
+        assert_eq!(RuntimeStats::default().kernel, KernelKind::F32);
+        assert_eq!(RuntimeStats::default().pack_secs, 0.0);
     }
 
     #[test]

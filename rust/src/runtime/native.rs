@@ -23,6 +23,43 @@
 //! a stateless from-scratch forward as the reference path the engine is
 //! tested against (EXPERIMENTS.md §Perf).
 //!
+//! ## The kernel seam (`--kernel {f32,int}`)
+//!
+//! Prunable layers evaluate through one of two kernels
+//! ([`KernelKind`](super::KernelKind)), selected per engine and
+//! recorded in [`RuntimeStats`]:
+//!
+//! * **f32** — the reference: clone the input feature map, `fake_quant`
+//!   it in place, then f32 im2col + GEMM over the raw weight tensor
+//!   (re-materialised every query).
+//! * **int** (default) — the quantized fast path: `pack_layer` builds a
+//!   per-layer `PackedLayer` once at stage time (weight plane with
+//!   pruned rows/columns dropped + the activation grid's dequant LUT),
+//!   re-packed only when that layer is invalidated; evaluation then
+//!   extracts i16 activation *codes* while building the patch matrix
+//!   (quantization fused into im2col, half the memory traffic) and runs
+//!   the packed code-GEMM ([`crate::nn::mat::PackedMat::code_matmul`]).
+//!   Requantization at the next layer boundary is the next layer's own
+//!   code extraction — the grid math is shared
+//!   ([`crate::quant::QuantGrid`]), so the logits are **bit-identical**
+//!   to the f32 reference at every bit-width
+//!   (`rust/tests/kernel_conformance.rs`). Layers whose grid is
+//!   degenerate (zero calibration scale) fall back to the f32 kernel.
+//!
+//! A true i32 accumulator is deliberately *not* used: f32 addition
+//! rounds after every product, so exact integer accumulation would
+//! diverge from the reference bits — the speedup here comes from
+//! packing, fused quantization, i16 code planes and pruning-mask
+//! row/column skipping instead (see `nn/mat.rs` for the proof sketch).
+//!
+//! Bit-identity is guaranteed for **finite** activations (`±inf`
+//! clamps to the grid boundary identically on both kernels). A `NaN`
+//! activation — reachable only from a numerically diverged forward,
+//! e.g. `inf + -inf` in a residual add — has no integer code: the int
+//! path clamps it to the grid's low end while the f32 reference
+//! propagates the `NaN` into the logits. Such a candidate is garbage
+//! under either kernel, but the bits may differ there.
+//!
 //! One deliberate numeric divergence: `jnp.round` rounds half to even,
 //! `f32::round` rounds half away from zero. The difference only
 //! surfaces for activations landing exactly on a grid midpoint, which
@@ -31,9 +68,10 @@
 use anyhow::{bail, Result};
 
 use super::exec::{default_threads, Engine};
-use super::{EvalData, InferenceBackend, RuntimeStats};
+use super::{default_kernel, EvalData, InferenceBackend, KernelKind, RuntimeStats};
 use crate::model::{Layer, ModelArch, Op, Weights};
-use crate::nn::mat::Mat;
+use crate::nn::mat::{CodeMat, Mat, PackedMat};
+use crate::quant::QuantGrid;
 use crate::tensor::Tensor;
 
 /// Optimal clipping ratio α*/b for a Laplace(b) distribution, bits 2..8
@@ -56,13 +94,16 @@ pub fn quant_params(bits: f32, act_scale: f32, signed: bool) -> (f32, f32, f32) 
     }
 }
 
-/// Asymmetric clipped linear fake-quant of a buffer onto `[lo, hi]`.
+/// Asymmetric clipped linear fake-quant of a buffer onto `[lo, hi]` —
+/// the snap itself lives in the shared [`QuantGrid`] (`quant/grid.rs`),
+/// the same math the weight quantizer and the int kernel use.
 pub fn fake_quant(data: &mut [f32], lo: f32, hi: f32, step: f32) {
-    if step <= 0.0 || !step.is_finite() {
+    let grid = QuantGrid::new(lo, hi, step);
+    if grid.degenerate() {
         return; // degenerate grid (zero calibration scale): pass through
     }
     for x in data.iter_mut() {
-        *x = ((x.clamp(lo, hi) - lo) / step).round() * step + lo;
+        *x = grid.snap(*x);
     }
 }
 
@@ -94,16 +135,25 @@ fn relu(data: &mut [f32]) {
     data.iter_mut().for_each(|x| *x = x.max(0.0));
 }
 
-/// im2col: NHWC input → patch matrix `[B·OH·OW, k·k·C]` whose column
-/// order `(ki, kj, ci)` matches the row-major HWIO weight flatten.
-fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
-    let (b, h, w, c) = x.nhwc()?;
+/// SAME-padded patch gather shared by BOTH kernels: collects
+/// `[B·OH·OW, k·k·C]` patches from an NHWC plane, filling padding
+/// positions with `pad`. Column order `(ki, kj, ci)` matches the
+/// row-major HWIO weight flatten. Keeping the f32 and int paths on
+/// this single copy of the stride/padding geometry is what makes their
+/// bit-parity contract maintainable — fix indexing here, both move.
+fn gather_patches<T: Copy>(
+    data: &[T],
+    (b, h, w, c): (usize, usize, usize, usize),
+    k: usize,
+    stride: usize,
+    pad: T,
+) -> (Vec<T>, usize, usize) {
     let (ph, _) = same_pad(h, k, stride);
     let (pw, _) = same_pad(w, k, stride);
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
     let cols = k * k * c;
-    let mut d = vec![0.0f32; b * oh * ow * cols];
+    let mut d = vec![pad; b * oh * ow * cols];
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -111,7 +161,7 @@ fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
                 for ki in 0..k {
                     let iy = (oy * stride + ki) as isize - ph as isize;
                     if iy < 0 || iy >= h as isize {
-                        continue; // zero padding
+                        continue; // padding: fill value stays
                     }
                     for kj in 0..k {
                         let ix = (ox * stride + kj) as isize - pw as isize;
@@ -120,13 +170,20 @@ fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
                         }
                         let src = ((bi * h + iy as usize) * w + ix as usize) * c;
                         let dst = row + (ki * k + kj) * c;
-                        d[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                        d[dst..dst + c].copy_from_slice(&data[src..src + c]);
                     }
                 }
             }
         }
     }
-    Ok((Mat::from_vec(b * oh * ow, cols, d), oh, ow))
+    (d, oh, ow)
+}
+
+/// im2col: NHWC input → patch matrix `[B·OH·OW, k·k·C]` (zero padding).
+fn im2col(x: &Feat, k: usize, stride: usize) -> Result<(Mat, usize, usize)> {
+    let (b, h, w, c) = x.nhwc()?;
+    let (d, oh, ow) = gather_patches(&x.data, (b, h, w, c), k, stride, 0.0f32);
+    Ok((Mat::from_vec(b * oh * ow, k * k * c, d), oh, ow))
 }
 
 /// SAME-padded strided convolution via im2col + matmul; HWIO weights.
@@ -147,9 +204,42 @@ fn conv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
     Ok(Feat { shape: vec![b, oh, ow, cout], data: y.d })
 }
 
-/// Depthwise convolution: `[k,k,1,C]` weights, `groups = C`.
+/// Depthwise convolution: `[k,k,1,C]` weights, `groups = C` — the
+/// shared [`dwconv2d_any`] geometry reading the plane directly.
 fn dwconv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
-    let (b, h, wd, c) = x.nhwc()?;
+    let dims = x.nhwc()?;
+    dwconv2d_any(|i| x.data[i], dims, w, bias, stride)
+}
+
+/// Fused im2col + input quantization for the int kernel: codes the
+/// feature map **once** (one `grid.code` per element — overlapping
+/// patches then copy i16 codes, not re-quantize), then gathers
+/// SAME-padded patches through the same [`gather_patches`] geometry as
+/// the f32 path. Padding positions keep the `-1` sentinel, which
+/// dequantizes to the exact `0.0` the f32 im2col inserts.
+fn im2col_codes(
+    x: &Feat,
+    k: usize,
+    stride: usize,
+    grid: &QuantGrid,
+) -> Result<(CodeMat, usize, usize)> {
+    let (b, h, w, c) = x.nhwc()?;
+    let codes: Vec<i16> = x.data.iter().map(|&v| grid.code(v)).collect();
+    let (d, oh, ow) = gather_patches(&codes, (b, h, w, c), k, stride, -1i16);
+    Ok((CodeMat { r: b * oh * ow, c: k * k * c, d }, oh, ow))
+}
+
+/// The one copy of the depthwise-conv geometry, parameterised over the
+/// input load: the f32 kernel reads a fake-quantized plane directly,
+/// the int kernel dequantizes i16 codes through the grid LUT. Same
+/// loops → same f32 accumulation order → bit-identical outputs.
+fn dwconv2d_any<F: Fn(usize) -> f32>(
+    load: F,
+    (b, h, wd, c): (usize, usize, usize, usize),
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+) -> Result<Feat> {
     let [k, k2, one, cw] = match w.shape[..] {
         [a, b2, c2, d2] => [a, b2, c2, d2],
         _ => bail!("dwconv weight must be [k,k,1,C], got {:?}", w.shape),
@@ -179,7 +269,7 @@ fn dwconv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
                         let src = ((bi * h + iy as usize) * wd + ix as usize) * c;
                         let wrow = (ki * k + kj) * c;
                         for ch in 0..c {
-                            out[dst + ch] += x.data[src + ch] * w.data[wrow + ch];
+                            out[dst + ch] += load(src + ch) * w.data[wrow + ch];
                         }
                     }
                 }
@@ -190,6 +280,128 @@ fn dwconv2d(x: &Feat, w: &Tensor, bias: &[f32], stride: usize) -> Result<Feat> {
         }
     }
     Ok(Feat { shape: vec![b, oh, ow, c], data: out })
+}
+
+/// Depthwise convolution on activation codes: [`dwconv2d_any`] with the
+/// input dequantized through the grid LUT instead of read from a
+/// fake-quantized copy — bit-identical output, half the staging memory.
+fn dwconv2d_codes(
+    x: &Feat,
+    grid: &QuantGrid,
+    lut: &[f32],
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+) -> Result<Feat> {
+    let dims = x.nhwc()?;
+    let codes: Vec<i16> = x.data.iter().map(|&v| grid.code(v)).collect();
+    dwconv2d_any(|i| lut[(codes[i] + 1) as usize], dims, w, bias, stride)
+}
+
+/// Pack-time state of one prunable layer on the int kernel: the
+/// input-activation grid, its dequant LUT, and — for the GEMM ops —
+/// the packed weight plane. Built by [`pack_layer`] once per (layer,
+/// staged weights, bits) and shared with every worker via `Arc`; the
+/// engine re-packs only layers its dirty set touched.
+pub(crate) struct PackedLayer {
+    /// the input-activation quantization grid this pack encodes for
+    pub grid: QuantGrid,
+    /// dequant LUT (`lut[0]` = structural zero, `lut[n+1]` = code `n`)
+    pub lut: Vec<f32>,
+    /// packed GEMM operand — conv (`[k·k·C_in, C_out]` from HWIO) and
+    /// fc (`[in, out]`); `None` for depthwise convs (direct loop)
+    pub gemm: Option<PackedMat>,
+}
+
+/// Build the int-kernel pack for one prunable layer, or `None` when the
+/// layer must fall back to the f32 kernel: degenerate grid (zero
+/// calibration scale — `fake_quant` passes values through, so there are
+/// no codes to extract) or a weight shape the packer does not recognise
+/// (the f32 path owns the error reporting for those).
+pub(crate) fn pack_layer(
+    layer: &Layer,
+    w: &Tensor,
+    grid: (f32, f32, f32),
+) -> Option<PackedLayer> {
+    let (lo, hi, step) = grid;
+    let g = QuantGrid::new(lo, hi, step);
+    let lut = g.lut()?;
+    let gemm = match layer.op {
+        Op::Conv => match w.shape[..] {
+            [k, k2, cin, cout] if k == k2 => Some(PackedMat::pack(k * k2 * cin, cout, &w.data)),
+            _ => return None,
+        },
+        Op::Fc => match w.shape[..] {
+            [fin, fout] => Some(PackedMat::pack(fin, fout, &w.data)),
+            _ => return None,
+        },
+        Op::DwConv => None,
+        _ => return None, // weightless op: nothing to pack
+    };
+    Some(PackedLayer { grid: g, lut, gemm })
+}
+
+/// Evaluate one prunable layer on the int kernel. Callers guarantee
+/// `pack` was built by [`pack_layer`] for this layer's op and the
+/// current `(weights, bits)`; output is bit-identical to
+/// [`eval_layer`] with the same parameters (kernel-conformance suite).
+pub(crate) fn eval_layer_int(
+    layer: &Layer,
+    pack: &PackedLayer,
+    w: &Tensor,
+    bias: &[f32],
+    ins: &[&Feat],
+) -> Result<Feat> {
+    let x0 = *ins
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("layer `{}` has no inputs", layer.name))?;
+    let mut out = match layer.op {
+        Op::Conv => {
+            let (b, _, _, c) = x0.nhwc()?;
+            let [k, k2, cin, cout] = match w.shape[..] {
+                [a, b2, c2, d2] => [a, b2, c2, d2],
+                _ => bail!("conv weight must be HWIO, got {:?}", w.shape),
+            };
+            if k != k2 || cin != c {
+                bail!("conv weight {:?} does not fit input C={c}", w.shape);
+            }
+            let pm = pack.gemm.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("conv `{}` is missing its packed weight plane", layer.name)
+            })?;
+            let (codes, oh, ow) = im2col_codes(x0, k, layer.stride, &pack.grid)?;
+            let mut y = pm.code_matmul(&codes, &pack.lut);
+            y.add_row(bias);
+            Feat { shape: vec![b, oh, ow, cout], data: y.d }
+        }
+        Op::DwConv => dwconv2d_codes(x0, &pack.grid, &pack.lut, w, bias, layer.stride)?,
+        Op::Fc => {
+            let b = x0.shape[0];
+            let n: usize = x0.shape[1..].iter().product();
+            let (fin, fout) = match w.shape[..] {
+                [fin, fout] => (fin, fout),
+                _ => bail!("fc `{}` weight must be [in,out], got {:?}", layer.name, w.shape),
+            };
+            if fin != n {
+                bail!("fc `{}` weight {:?} does not fit input [{b}, {n}]", layer.name, w.shape);
+            }
+            let pm = pack.gemm.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("fc `{}` is missing its packed weight plane", layer.name)
+            })?;
+            let codes = CodeMat {
+                r: b,
+                c: n,
+                d: x0.data.iter().map(|&v| pack.grid.code(v)).collect(),
+            };
+            let mut y = pm.code_matmul(&codes, &pack.lut);
+            y.add_row(bias);
+            Feat { shape: vec![b, fout], data: y.d }
+        }
+        _ => bail!("int kernel asked to evaluate weightless layer `{}`", layer.name),
+    };
+    if layer.relu {
+        relu(&mut out.data);
+    }
+    Ok(out)
 }
 
 /// k×k max-pooling, stride k, VALID (matches `jax.lax.reduce_window`).
@@ -389,20 +601,34 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Build from an arch descriptor and pre-batched evaluation data,
     /// with [`default_threads`] workers (the `HAPQ_THREADS` env var,
-    /// else 1).
+    /// else 1) and the [`default_kernel`] (the `HAPQ_KERNEL` env var,
+    /// else the int fast path).
     pub fn new(arch: &ModelArch, data: EvalData) -> Result<NativeBackend> {
         Self::with_threads(arch, data, default_threads())
     }
 
-    /// Build with an explicit worker count (the `--threads` flag).
-    /// Results are bit-identical at any thread count. The engine
-    /// validates the arch's calibration vectors.
+    /// Build with an explicit worker count (the `--threads` flag) and
+    /// the [`default_kernel`]. Results are bit-identical at any thread
+    /// count. The engine validates the arch's calibration vectors.
     pub fn with_threads(
         arch: &ModelArch,
         data: EvalData,
         threads: usize,
     ) -> Result<NativeBackend> {
-        let engine = Engine::new(arch, &data, threads)?;
+        Self::with_options(arch, data, threads, default_kernel())
+    }
+
+    /// Build with an explicit worker count *and* compute kernel (the
+    /// `--kernel` flag). Both kernels produce bit-identical logits
+    /// (`rust/tests/kernel_conformance.rs`); `f32` is the oracle
+    /// reference, `int` the fast path.
+    pub fn with_options(
+        arch: &ModelArch,
+        data: EvalData,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> Result<NativeBackend> {
+        let engine = Engine::new(arch, &data, threads, kernel)?;
         Ok(NativeBackend { arch: arch.clone(), data, engine })
     }
 
@@ -632,5 +858,134 @@ mod tests {
         let p = LayerParams { w: &w, bias: &[0.0], grid: (0.0, 0.0, 0.0) };
         let y = eval_layer(&layer, Some(p), &[&x]).unwrap();
         assert_eq!(y.data, vec![2.0; 4]); // degenerate grid passes through
+    }
+
+    fn conv_layer(name: &str, k: usize, relu: bool, in_ch: usize, out_ch: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            op: Op::Conv,
+            inputs: vec!["input".into()],
+            k,
+            stride: 1,
+            relu,
+            in_shape: vec![4, 4, in_ch],
+            out_shape: vec![4, 4, out_ch],
+            in_ch,
+            out_ch,
+        }
+    }
+
+    #[test]
+    fn pack_layer_falls_back_on_degenerate_grids() {
+        let layer = conv_layer("c", 1, false, 1, 1);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![2.0]);
+        // zero calibration scale -> degenerate grid -> f32 fallback
+        assert!(pack_layer(&layer, &w, (0.0, 0.0, 0.0)).is_none());
+        // malformed weight shape -> f32 path owns the error
+        let bad = Tensor::new(vec![2, 2], vec![1.0; 4]);
+        assert!(pack_layer(&layer, &bad, (0.0, 1.0, 0.25)).is_none());
+        // a healthy grid packs
+        let p = pack_layer(&layer, &w, (0.0, 1.0, 0.25)).unwrap();
+        assert_eq!(p.lut.len(), 2 + 4);
+        assert!(p.gemm.is_some());
+    }
+
+    #[test]
+    fn int_conv_matches_f32_reference_bitwise() {
+        // 3x3 SAME conv with pruning-style zeros in the weights, a
+        // signed input grid, and ReLU — the int path must reproduce the
+        // f32 reference exactly, padding and zero-skips included
+        let layer = conv_layer("c", 3, true, 2, 3);
+        let mut wdata = vec![0.0f32; 3 * 3 * 2 * 3];
+        for (i, v) in wdata.iter_mut().enumerate() {
+            // scatter zeros (pruned weights) and kill output channel 1
+            if i % 3 == 1 || i % 5 == 0 {
+                continue;
+            }
+            *v = ((i as f32) * 0.37).sin();
+        }
+        let w = Tensor::new(vec![3, 3, 2, 3], wdata);
+        let bias = [0.1f32, -0.2, 0.05];
+        let grid = quant_params(3.0, 0.8, true);
+        let x = Feat {
+            shape: vec![2, 4, 4, 2],
+            data: (0..2 * 4 * 4 * 2).map(|i| ((i as f32) * 0.61).cos()).collect(),
+        };
+        let p32 = LayerParams { w: &w, bias: &bias, grid };
+        let want = eval_layer(&layer, Some(p32), &[&x]).unwrap();
+        let pack = pack_layer(&layer, &w, grid).unwrap();
+        let got = eval_layer_int(&layer, &pack, &w, &bias, &[&x]).unwrap();
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn int_dwconv_and_fc_match_f32_reference_bitwise() {
+        // depthwise: direct code loop, unsigned grid
+        let dw_layer = Layer {
+            name: "d".into(),
+            op: Op::DwConv,
+            inputs: vec!["input".into()],
+            k: 3,
+            stride: 1,
+            relu: false,
+            in_shape: vec![4, 4, 2],
+            out_shape: vec![4, 4, 2],
+            in_ch: 2,
+            out_ch: 2,
+        };
+        let wd = Tensor::new(
+            vec![3, 3, 1, 2],
+            (0..18).map(|i| ((i as f32) * 0.29).sin()).collect(),
+        );
+        let bias = [0.3f32, -0.1];
+        let grid = quant_params(4.0, 0.5, false);
+        let x = Feat {
+            shape: vec![1, 4, 4, 2],
+            data: (0..32).map(|i| ((i as f32) * 0.47).sin()).collect(),
+        };
+        let want = eval_layer(
+            &dw_layer,
+            Some(LayerParams { w: &wd, bias: &bias, grid }),
+            &[&x],
+        )
+        .unwrap();
+        let pack = pack_layer(&dw_layer, &wd, grid).unwrap();
+        assert!(pack.gemm.is_none()); // dwconv runs the direct loop
+        let got = eval_layer_int(&dw_layer, &pack, &wd, &bias, &[&x]).unwrap();
+        assert_eq!(got.data, want.data);
+
+        // fc on a flattened input, 2-bit grid
+        let fc_layer = Layer {
+            name: "f".into(),
+            op: Op::Fc,
+            inputs: vec!["x".into()],
+            k: 1,
+            stride: 1,
+            relu: false,
+            in_shape: vec![6],
+            out_shape: vec![3],
+            in_ch: 6,
+            out_ch: 3,
+        };
+        let wf = Tensor::new(
+            vec![6, 3],
+            (0..18).map(|i| if i % 4 == 0 { 0.0 } else { ((i as f32) * 0.53).cos() }).collect(),
+        );
+        let bf = [0.0f32, 0.5, -0.5];
+        let gridf = quant_params(2.0, 1.0, false);
+        let xf = Feat {
+            shape: vec![2, 6],
+            data: (0..12).map(|i| ((i as f32) * 0.31).sin().abs()).collect(),
+        };
+        let want = eval_layer(
+            &fc_layer,
+            Some(LayerParams { w: &wf, bias: &bf, grid: gridf }),
+            &[&xf],
+        )
+        .unwrap();
+        let packf = pack_layer(&fc_layer, &wf, gridf).unwrap();
+        let got = eval_layer_int(&fc_layer, &packf, &wf, &bf, &[&xf]).unwrap();
+        assert_eq!(got.data, want.data);
     }
 }

@@ -207,6 +207,11 @@ fn report_json_roundtrips() {
     assert!(v.req("evals").unwrap().as_f64().unwrap() > 0.0);
     assert!(v.req("wall_secs").unwrap().as_f64().unwrap() > 0.0);
     assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), c.cfg.seed as f64);
+    // the kernel + its phase timings ride along (EXPERIMENTS.md) so
+    // wall-clock comparisons can control for the compute path
+    assert_eq!(v.req("kernel").unwrap().as_str().unwrap(), c.cfg.kernel.name());
+    assert!(v.req("pack_secs").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(v.req("gemm_secs").unwrap().as_f64().unwrap() > 0.0);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,416 @@
+//! Kernel-conformance suite: the integer fast path (`--kernel int`)
+//! must produce logits **bit-identical** to the f32 reference forward
+//! at every bit-width, prune ratio, thread count, and after arbitrary
+//! `invalidate()` sequences on the incremental engine.
+//!
+//! Fixtures are random branched mini-graphs (residual add, optional
+//! channel concat, optional depthwise branch) whose weights go through
+//! the real compression pipeline — `pruning::prune` (fine + coarse
+//! algorithms, so the packed planes see scattered zeros AND dead
+//! channels) followed by `quant::quantize_weights` — exactly the
+//! tensors the reward oracle scores during search. Activation
+//! precisions sweep the paper's range {2, 3, 4, 6, 8}.
+//!
+//! Equality is asserted with `==` on the logits vectors: the int
+//! kernel is bit-exact by construction (see `nn/mat.rs`), not within a
+//! tolerance.
+
+use std::collections::HashMap;
+
+use hapq::model::{Layer, ModelArch, Op, Weights};
+use hapq::pruning::{prune, PruneAlg, PruneCtx};
+use hapq::quant::quantize_weights;
+use hapq::runtime::{EvalData, InferenceBackend, KernelKind, NativeBackend};
+use hapq::tensor::Tensor;
+use hapq::util::proptest::forall;
+use hapq::util::rng::Rng;
+
+/// Activation precisions the conformance sweep draws from (paper §4.1).
+const BITS: [f32; 5] = [2.0, 3.0, 4.0, 6.0, 8.0];
+
+/// One randomly generated, pruned + weight-quantized mini-model.
+struct Fixture {
+    seed: u64,
+    arch: ModelArch,
+    weights: Weights,
+    act_bits: Vec<f32>,
+    images: Tensor,
+    labels: Vec<i64>,
+}
+
+impl std::fmt::Debug for Fixture {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Fixture {{ seed: {:#x}, layers: {:?}, act_bits: {:?}, sparsity: {:.2} }}",
+            self.seed,
+            self.arch.layers.iter().map(|l| (&l.name, l.op)).collect::<Vec<_>>(),
+            self.act_bits,
+            self.weights.sparsity(),
+        )
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_layer(
+    name: &str,
+    inputs: Vec<String>,
+    k: usize,
+    stride: usize,
+    relu: bool,
+    in_hw: usize,
+    in_ch: usize,
+    out_ch: usize,
+) -> Layer {
+    Layer {
+        name: name.to_string(),
+        op: Op::Conv,
+        inputs,
+        k,
+        stride,
+        relu,
+        in_shape: vec![in_hw, in_hw, in_ch],
+        out_shape: vec![in_hw.div_ceil(stride), in_hw.div_ceil(stride), out_ch],
+        in_ch,
+        out_ch,
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.normal() * scale) as f32).collect())
+}
+
+/// Push the fixture's weights through the real compression pipeline:
+/// prune (fine or coarse) then per-channel weight quantization.
+fn compress_weights(rng: &mut Rng, weights: &mut Weights) {
+    let algs = [PruneAlg::Level, PruneAlg::L1Ranked];
+    let ratios = [0.0, 0.4, 0.85];
+    for wt in weights.w.iter_mut() {
+        let alg = algs[rng.below(algs.len())];
+        let ratio = ratios[rng.below(ratios.len())];
+        let sal = Tensor::full(wt.shape.clone(), 1.0);
+        let chsq = vec![1.0f32; wt.out_channels(false)];
+        let mut prng = Rng::new(rng.next_u64());
+        let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+        prune(wt, alg, ratio, &mut ctx);
+        quantize_weights(wt, 2 + rng.below(7) as u32);
+    }
+}
+
+fn gen_fixture(rng: &mut Rng) -> Fixture {
+    let seed = rng.next_u64();
+    let cin = 1 + rng.below(3);
+    let classes = 2 + rng.below(3);
+    let c1 = 2 + rng.below(3);
+    let k1 = [1usize, 3][rng.below(2)];
+    let dw_branch = rng.below(2) == 0;
+    let with_concat = rng.below(2) == 0;
+    // strided SAME padding is the geometry most likely to diverge
+    // between kernels (asymmetric pads, div_ceil output dims), so the
+    // trunk conv randomly downsamples; the branch pair also strides
+    // when no concat pins its spatial dims to layer `a`'s
+    let a_stride = 1 + rng.below(2);
+    let b_stride = if with_concat { 1 } else { 1 + rng.below(2) };
+    let a_hw = 6usize.div_ceil(a_stride);
+    let b_hw = a_hw.div_ceil(b_stride);
+    let n_ex = 3 + rng.below(4);
+    let batch = 2 + rng.below(3);
+
+    // graph: input -> a -> {b1, b2} -> add [-> concat(add, a)] -> gap -> f
+    let mut layers = vec![
+        conv_layer("a", vec!["input".into()], k1, a_stride, true, 6, cin, c1),
+        conv_layer("b1", vec!["a".into()], 3, b_stride, rng.below(2) == 0, a_hw, c1, c1),
+    ];
+    if dw_branch {
+        layers.push(Layer {
+            name: "b2".into(),
+            op: Op::DwConv,
+            inputs: vec!["a".into()],
+            k: 3,
+            stride: b_stride,
+            relu: rng.below(2) == 0,
+            in_shape: vec![a_hw, a_hw, c1],
+            out_shape: vec![b_hw, b_hw, c1],
+            in_ch: c1,
+            out_ch: c1,
+        });
+    } else {
+        layers.push(conv_layer(
+            "b2",
+            vec!["a".into()],
+            1,
+            b_stride,
+            rng.below(2) == 0,
+            a_hw,
+            c1,
+            c1,
+        ));
+    }
+    layers.push(Layer {
+        name: "add".into(),
+        op: Op::Add,
+        inputs: vec!["b1".into(), "b2".into()],
+        k: 1,
+        stride: 1,
+        relu: true,
+        in_shape: vec![b_hw, b_hw, c1],
+        out_shape: vec![b_hw, b_hw, c1],
+        in_ch: c1,
+        out_ch: c1,
+    });
+    let mut fc_in = c1;
+    let mut gap_src = "add".to_string();
+    if with_concat {
+        // b_stride == 1 here, so `add` and `a` share spatial dims
+        layers.push(Layer {
+            name: "cat".into(),
+            op: Op::Concat,
+            inputs: vec!["add".into(), "a".into()],
+            k: 1,
+            stride: 1,
+            relu: false,
+            in_shape: vec![b_hw, b_hw, c1],
+            out_shape: vec![b_hw, b_hw, 2 * c1],
+            in_ch: c1,
+            out_ch: 2 * c1,
+        });
+        fc_in = 2 * c1;
+        gap_src = "cat".to_string();
+    }
+    layers.push(Layer {
+        name: "gap".into(),
+        op: Op::Gap,
+        inputs: vec![gap_src],
+        k: 1,
+        stride: 1,
+        relu: false,
+        in_shape: vec![b_hw, b_hw, fc_in],
+        out_shape: vec![fc_in],
+        in_ch: fc_in,
+        out_ch: fc_in,
+    });
+    layers.push(Layer {
+        name: "f".into(),
+        op: Op::Fc,
+        inputs: vec!["gap".into()],
+        k: 1,
+        stride: 1,
+        relu: false,
+        in_shape: vec![fc_in],
+        out_shape: vec![classes],
+        in_ch: fc_in,
+        out_ch: classes,
+    });
+
+    let prunable: Vec<String> = vec!["a".into(), "b1".into(), "b2".into(), "f".into()];
+    let prunable_idx: HashMap<String, usize> =
+        prunable.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+    let n_p = prunable.len();
+    let arch = ModelArch {
+        name: "confgraph".into(),
+        dataset: "synth-conf".into(),
+        input: [6, 6, cin],
+        classes,
+        batch,
+        layers,
+        prunable,
+        prunable_idx,
+        dep_groups: vec![],
+        act_scales: (0..n_p).map(|_| rng.range(0.3, 1.0) as f32).collect(),
+        act_signed: vec![true, false, false, false],
+        acc_int8: 0.0,
+        n_params: 0,
+    };
+
+    let w_shapes: Vec<Vec<usize>> = vec![
+        vec![k1, k1, cin, c1],
+        vec![3, 3, c1, c1],
+        if dw_branch { vec![3, 3, 1, c1] } else { vec![1, 1, c1, c1] },
+        vec![fc_in, classes],
+    ];
+    let out_chs = [c1, c1, c1, classes];
+    let mut w = Vec::new();
+    let mut b = Vec::new();
+    let mut sal = Vec::new();
+    let mut chsq = Vec::new();
+    for (shape, &oc) in w_shapes.into_iter().zip(&out_chs) {
+        w.push(rand_tensor(rng, shape.clone(), 0.5));
+        b.push(rand_tensor(rng, vec![oc], 0.2));
+        sal.push(Tensor::full(shape, 1.0));
+        chsq.push(vec![1.0f32; oc]);
+    }
+    let mut weights = Weights { w, b, sal, chsq };
+    compress_weights(rng, &mut weights);
+
+    let act_bits: Vec<f32> = (0..n_p).map(|_| BITS[rng.below(BITS.len())]).collect();
+    let images = rand_tensor(rng, vec![n_ex, 6, 6, cin], 0.8);
+    let labels: Vec<i64> = (0..n_ex).map(|_| rng.below(classes) as i64).collect();
+    Fixture { seed, arch, weights, act_bits, images, labels }
+}
+
+fn backend(fx: &Fixture, threads: usize, kernel: KernelKind) -> NativeBackend {
+    let data =
+        EvalData::from_arrays(&fx.arch, &fx.images, &fx.labels, 1000, fx.arch.batch).unwrap();
+    NativeBackend::with_options(&fx.arch, data, threads, kernel).unwrap()
+}
+
+/// The stateless f32 reference forward, batch by batch, padded rows
+/// dropped — the ground truth every kernel/engine combination must hit.
+fn reference_logits(b: &NativeBackend, fx: &Fixture) -> Vec<f32> {
+    let classes = fx.arch.classes;
+    let batch = fx.arch.batch;
+    let mut out = Vec::new();
+    let n_batches = fx.labels.len().div_ceil(batch);
+    for bi in 0..n_batches {
+        let rows = (fx.labels.len() - bi * batch).min(batch);
+        let full = b.logits(&fx.weights, &fx.act_bits, bi).unwrap();
+        out.extend_from_slice(&full[..rows * classes]);
+    }
+    out
+}
+
+#[test]
+fn int_logits_bit_identical_to_f32_reference_across_bits_and_threads() {
+    forall("int == f32 == reference, threads {1,4}", gen_fixture, |fx| {
+        let bi1 = backend(fx, 1, KernelKind::Int);
+        let bi4 = backend(fx, 4, KernelKind::Int);
+        let bf = backend(fx, 1, KernelKind::F32);
+        let reference = reference_logits(&bf, fx);
+        let li1 = bi1.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let li4 = bi4.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let lf = bf.engine_logits(&fx.weights, &fx.act_bits).unwrap();
+        let ai = bi1.accuracy(&fx.weights, &fx.act_bits).unwrap();
+        let af = bf.accuracy(&fx.weights, &fx.act_bits).unwrap();
+        li1 == reference && li4 == reference && lf == reference && ai == af
+    });
+}
+
+#[test]
+fn int_kernel_sweeps_every_bit_width_uniformly() {
+    // pin each paper bit-width explicitly (the sampled fixtures above
+    // mix them per layer): uniform act_bits at 2/3/4/6/8 bits each
+    // reproduce the reference bitwise
+    forall("uniform bits {2,3,4,6,8}", gen_fixture, |fx| {
+        let bi = backend(fx, 2, KernelKind::Int);
+        let bf = backend(fx, 1, KernelKind::F32);
+        BITS.iter().all(|&bits| {
+            let uniform = vec![bits; fx.arch.prunable.len()];
+            let fx_b = Fixture {
+                seed: fx.seed,
+                arch: fx.arch.clone(),
+                weights: fx.weights.clone(),
+                act_bits: uniform.clone(),
+                images: fx.images.clone(),
+                labels: fx.labels.clone(),
+            };
+            let reference = reference_logits(&bf, &fx_b);
+            bi.engine_logits(&fx.weights, &uniform).unwrap() == reference
+        })
+    });
+}
+
+#[test]
+fn int_kernel_matches_f32_after_arbitrary_invalidate_sequences() {
+    forall("int incremental == f32 scratch across invalidates", gen_fixture, |fx| {
+        let n = fx.arch.prunable.len();
+        let inc = backend(fx, 1 + (fx.seed % 3) as usize, KernelKind::Int);
+        let mut weights = fx.weights.clone();
+        let mut bits = fx.act_bits.clone();
+        let mut rng = Rng::new(fx.seed);
+        for _round in 0..4 {
+            match rng.below(3) {
+                0 => {
+                    // re-compress ONE layer (the RL-step pattern):
+                    // fresh pruning mask + weight grid
+                    let i = rng.below(n);
+                    for v in weights.w[i].data.iter_mut() {
+                        *v = *v * 1.5 + 0.01;
+                    }
+                    let sal = Tensor::full(weights.w[i].shape.clone(), 1.0);
+                    let chsq = vec![1.0f32; weights.w[i].out_channels(false)];
+                    let mut prng = Rng::new(rng.next_u64());
+                    let mut ctx =
+                        PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+                    prune(&mut weights.w[i], PruneAlg::Level, 0.5, &mut ctx);
+                    quantize_weights(&mut weights.w[i], 2 + rng.below(7) as u32);
+                    inc.invalidate(i);
+                }
+                1 => {
+                    // change one layer's precision WITHOUT a hint — the
+                    // engine's act-bits diff must re-pack that layer
+                    let i = rng.below(n);
+                    bits[i] = BITS[rng.below(BITS.len())];
+                }
+                _ => {
+                    // episode reset: everything changes at once
+                    for wt in weights.w.iter_mut() {
+                        for v in wt.data.iter_mut() {
+                            *v *= 0.8;
+                        }
+                    }
+                    inc.invalidate_all();
+                }
+            }
+            let scratch = backend(fx, 1, KernelKind::F32);
+            let fx_now = Fixture {
+                seed: fx.seed,
+                arch: fx.arch.clone(),
+                weights: weights.clone(),
+                act_bits: bits.clone(),
+                images: fx.images.clone(),
+                labels: fx.labels.clone(),
+            };
+            let reference = reference_logits(&scratch, &fx_now);
+            if inc.engine_logits(&weights, &bits).unwrap() != reference {
+                return false;
+            }
+            if inc.accuracy(&weights, &bits).unwrap()
+                != scratch.accuracy(&weights, &bits).unwrap()
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn stats_record_kernel_and_pack_timings() {
+    let mut rng = Rng::new(0xC0DE);
+    let fx = gen_fixture(&mut rng);
+    let bi = backend(&fx, 1, KernelKind::Int);
+    let bf = backend(&fx, 1, KernelKind::F32);
+    bi.accuracy(&fx.weights, &fx.act_bits).unwrap();
+    bf.accuracy(&fx.weights, &fx.act_bits).unwrap();
+    // a second query after an invalidate accumulates more phase time
+    bi.invalidate(0);
+    bf.invalidate(0);
+    bi.accuracy(&fx.weights, &fx.act_bits).unwrap();
+    bf.accuracy(&fx.weights, &fx.act_bits).unwrap();
+    let si = bi.stats();
+    let sf = bf.stats();
+    assert_eq!(si.kernel, KernelKind::Int);
+    assert_eq!(sf.kernel, KernelKind::F32);
+    // the int engine packed (at least) the four prunable layers once
+    assert!(si.pack_secs > 0.0, "int kernel never packed anything");
+    assert_eq!(sf.pack_secs, 0.0, "f32 kernel must not pack");
+    // both kernels account their prunable-layer evaluation time
+    assert!(si.gemm_secs > 0.0);
+    assert!(sf.gemm_secs > 0.0);
+}
+
+#[test]
+fn degenerate_calibration_scale_falls_back_to_f32_per_layer() {
+    // a zero act_scale makes fake_quant a pass-through; the int kernel
+    // cannot code that layer and must fall back to the f32 path for it
+    // (and only it) — logits still bit-identical to the reference
+    let mut rng = Rng::new(0xFA11);
+    let mut fx = gen_fixture(&mut rng);
+    fx.arch.act_scales[1] = 0.0;
+    let bi = backend(&fx, 2, KernelKind::Int);
+    let bf = backend(&fx, 1, KernelKind::F32);
+    let reference = reference_logits(&bf, &fx);
+    assert_eq!(bi.engine_logits(&fx.weights, &fx.act_bits).unwrap(), reference);
+    assert_eq!(bf.engine_logits(&fx.weights, &fx.act_bits).unwrap(), reference);
+}

@@ -190,6 +190,144 @@ fn json_roundtrip_arbitrary_trees() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Activation-grid properties (quant_params / fake_quant edge cases):
+// the int kernel's bit-exactness rests on these invariants, so they
+// are pinned here against random grids.
+
+#[test]
+fn quant_params_clamps_bits_into_the_paper_range() {
+    use hapq::runtime::native::quant_params;
+    forall(
+        "bits outside [2, 8] clamp to the boundary grids",
+        |r| (r.range(-3.0, 15.0) as f32, r.range(1e-3, 4.0) as f32, r.uniform() < 0.5),
+        |&(bits, scale, signed)| {
+            let got = quant_params(bits, scale, signed);
+            let clamped = quant_params(bits.round().clamp(2.0, 8.0), scale, signed);
+            // bits = 1 (paper's forbidden precision) behaves as 2 bits
+            let one = quant_params(1.0, scale, signed);
+            let two = quant_params(2.0, scale, signed);
+            got == clamped && one == two
+        },
+    );
+}
+
+#[test]
+fn quant_params_grid_shape_signed_vs_unsigned() {
+    use hapq::runtime::native::quant_params;
+    forall(
+        "signed grids are symmetric, unsigned start at zero",
+        |r| (2.0 + r.below(7) as f32, r.range(1e-3, 4.0) as f32),
+        |&(bits, scale)| {
+            let (lo_u, hi_u, step_u) = quant_params(bits, scale, false);
+            let (lo_s, hi_s, step_s) = quant_params(bits, scale, true);
+            lo_u == 0.0
+                && hi_u > 0.0
+                && lo_s == -hi_s
+                && step_u > 0.0
+                && step_s > 0.0
+                // the signed grid spans twice the range with the same
+                // level count, so its step is exactly doubled
+                && step_s == 2.0 * step_u
+        },
+    );
+}
+
+#[test]
+fn fake_quant_outputs_are_grid_codes_exactly() {
+    use hapq::quant::QuantGrid;
+    use hapq::runtime::native::{fake_quant, quant_params};
+    forall(
+        "every snapped value is value(code) bitwise, codes in range",
+        |r| {
+            let bits = 2.0 + r.below(7) as f32;
+            let scale = r.range(1e-3, 4.0) as f32;
+            let signed = r.uniform() < 0.5;
+            let vals: Vec<f32> =
+                (0..1 + r.below(32)).map(|_| (r.normal() * 2.0) as f32).collect();
+            (bits, scale, signed, vals)
+        },
+        |(bits, scale, signed, vals)| {
+            let (lo, hi, step) = quant_params(*bits, *scale, *signed);
+            let grid = QuantGrid::new(lo, hi, step);
+            let levels = grid.levels() as i16;
+            let mut snapped = vals.clone();
+            fake_quant(&mut snapped, lo, hi, step);
+            vals.iter().zip(&snapped).all(|(&x, &y)| {
+                let code = grid.code(x);
+                (0..=levels).contains(&code) && grid.value(code) == y
+            })
+        },
+    );
+}
+
+#[test]
+fn fake_quant_clamps_and_fixes_boundary_values() {
+    use hapq::quant::QuantGrid;
+    use hapq::runtime::native::{fake_quant, quant_params};
+    forall(
+        "lo is a fixed point; beyond-range values snap like the boundary",
+        |r| {
+            (
+                2.0 + r.below(7) as f32,
+                r.range(1e-3, 4.0) as f32,
+                r.uniform() < 0.5,
+                (r.range(0.1, 3.0)) as f32,
+            )
+        },
+        |&(bits, scale, signed, overshoot)| {
+            let (lo, hi, step) = quant_params(bits, scale, signed);
+            let grid = QuantGrid::new(lo, hi, step);
+            // the lower clip point is exactly representable (code 0)
+            let mut v = [lo, hi + overshoot, lo - overshoot, hi];
+            fake_quant(&mut v, lo, hi, step);
+            v[0] == lo && v[1] == grid.snap(hi) && v[2] == lo && v[3] == grid.snap(hi)
+        },
+    );
+}
+
+#[test]
+fn grid_code_value_roundtrip_over_all_levels() {
+    use hapq::quant::QuantGrid;
+    use hapq::runtime::native::quant_params;
+    forall(
+        "code(value(n)) == n for every level of every activation grid",
+        |r| (2.0 + r.below(7) as f32, r.range(1e-3, 4.0) as f32, r.uniform() < 0.5),
+        |&(bits, scale, signed)| {
+            let (lo, hi, step) = quant_params(bits, scale, signed);
+            let grid = QuantGrid::new(lo, hi, step);
+            let levels = grid.levels();
+            levels == (bits.exp2() - 1.0) as usize
+                && (0..=levels).all(|n| grid.code(grid.value(n as i16)) == n as i16)
+        },
+    );
+}
+
+#[test]
+fn fake_quant_is_monotone() {
+    use hapq::runtime::native::{fake_quant, quant_params};
+    forall(
+        "x <= y implies snap(x) <= snap(y)",
+        |r| {
+            let a = (r.normal() * 2.0) as f32;
+            let b = (r.normal() * 2.0) as f32;
+            (
+                2.0 + r.below(7) as f32,
+                r.range(1e-3, 4.0) as f32,
+                r.uniform() < 0.5,
+                a.min(b),
+                a.max(b),
+            )
+        },
+        |&(bits, scale, signed, x, y)| {
+            let (lo, hi, step) = quant_params(bits, scale, signed);
+            let mut v = [x, y];
+            fake_quant(&mut v, lo, hi, step);
+            v[0] <= v[1]
+        },
+    );
+}
+
 #[test]
 fn npz_roundtrip_arbitrary_tensors() {
     use hapq::io::npz::{save_npz, Npz};
