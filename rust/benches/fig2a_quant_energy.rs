@@ -23,6 +23,6 @@ fn main() {
     let r88 = grid.iter().find(|(w, a, _)| *w == 8 && *a == 8).unwrap().2;
     println!("\npaper anchor: 5/5 bits -> 29% reduction; measured: {:.1}%", r55 * 100.0);
     println!("8/8 bits must be 0%: measured {:.2}%", r88 * 100.0);
-    println!("MAC-sim P_FG (paper: 0.2): {:.3}", env.energy.rq.p_fg);
+    println!("MAC-sim P_FG (paper: 0.2): {:.3}", env.cost.model().p_fg());
     println!("[{:.2}s]", t0.elapsed().as_secs_f64());
 }

@@ -92,6 +92,9 @@ fn main() {
         rb.update();
     });
 
+    // --- hardware cost model: cached vs scratch + per-target rows ---
+    cost_rows();
+
     // --- exec engine: incremental + threaded oracle (artifact-free) ---
     engine_rows();
 
@@ -119,6 +122,97 @@ fn main() {
         });
     } else {
         println!("(artifacts missing — skipping env-level timings)");
+    }
+}
+
+/// Cost-query throughput on the RL hot path (EXPERIMENTS.md §Perf):
+/// the incremental `CostCache` vs the scratch `EnergyModel` over a
+/// VGG-ish 12-layer stack, walking one layer per step like an episode
+/// does, plus a per-target energy-gain row for every built-in hardware
+/// target. Gains are asserted bit-identical before any timing (same
+/// convention as the int-kernel rows).
+fn cost_rows() {
+    use hapq::hw::cost::{CostCache, CostModel};
+    use hapq::hw::energy::{Compression, EnergyModel};
+    use hapq::hw::target::{HwTarget, BUILTIN_TARGETS};
+
+    let rq = RqTable::compute(1500, 7);
+    let mut dims_v = vec![LayerDims::conv(32, 32, 3, 32, 32, 32, 3, 1)];
+    for i in 0..10 {
+        let hw = 32 >> (i / 3).min(3);
+        let c = 32 << (i / 3).min(2);
+        dims_v.push(LayerDims::conv(hw, hw, c, hw, hw, c, 3, 1));
+    }
+    dims_v.push(LayerDims::fc(512, 10));
+    let n = dims_v.len();
+
+    let t64 = HwTarget::builtin("eyeriss-64").unwrap();
+    let em = EnergyModel::for_target(dims_v.clone(), &t64, rq.clone());
+    let mut scratch = em.clone();
+    let mut cache = CostCache::new(em);
+
+    // an RL-episode walk: one layer's config changes per step
+    let mut wrng = Rng::new(3);
+    let walk: Vec<(usize, Compression)> = (0..4 * n)
+        .map(|i| {
+            (
+                i % n,
+                Compression {
+                    sparsity: wrng.uniform(),
+                    coarse: wrng.uniform() < 0.5,
+                    bits: 2 + wrng.below(7) as u32,
+                },
+            )
+        })
+        .collect();
+
+    // parity before timing: cached == scratch bitwise along the walk
+    let mut cfgs = vec![Compression::dense(); n];
+    for (l, c) in &walk {
+        cfgs[*l] = *c;
+        assert_eq!(
+            cache.energy_gain(&cfgs).to_bits(),
+            CostModel::energy_gain(&mut scratch, &cfgs).to_bits(),
+            "cost-cache energy parity violated in the bench setup"
+        );
+        assert_eq!(
+            cache.latency_gain(&cfgs).to_bits(),
+            CostModel::latency_gain(&mut scratch, &cfgs).to_bits(),
+            "cost-cache latency parity violated in the bench setup"
+        );
+    }
+
+    let t_scratch = time("cost query scratch (12-layer walk)", 300, || {
+        for (l, c) in &walk {
+            cfgs[*l] = *c;
+            std::hint::black_box(CostModel::energy_gain(&mut scratch, &cfgs));
+            std::hint::black_box(CostModel::latency_gain(&mut scratch, &cfgs));
+        }
+    });
+    let t_cached = time("cost query cached  (12-layer walk)", 300, || {
+        for (l, c) in &walk {
+            cfgs[*l] = *c;
+            std::hint::black_box(cache.energy_gain(&cfgs));
+            std::hint::black_box(cache.latency_gain(&cfgs));
+        }
+    });
+    println!(
+        "{:<38} {:>9.2}x",
+        "  -> cost-cache speedup",
+        t_scratch / t_cached.max(1e-12)
+    );
+
+    // per-target energy-gain rows at the hapq-hw reference config
+    let ref_cfgs = vec![Compression { sparsity: 0.5, coarse: true, bits: 4 }; n];
+    for name in BUILTIN_TARGETS {
+        let t = HwTarget::builtin(name).unwrap();
+        let mut tm = EnergyModel::for_target(dims_v.clone(), &t, rq.clone());
+        let gain = tm.gain(&ref_cfgs);
+        let row = format!("energy_gain [{name}] (s=.5/4b)");
+        time(&row, 200, || {
+            std::hint::black_box(CostModel::energy_gain(&mut tm, &ref_cfgs));
+        });
+        println!("{:<38} {:>9.1}%", format!("  -> {name} gain"), gain * 100.0);
     }
 }
 

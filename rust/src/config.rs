@@ -35,6 +35,12 @@ pub struct RunConfig {
     pub kernel: KernelKind,
     /// oracle worker threads (`--threads`; default `HAPQ_THREADS` or 1)
     pub threads: usize,
+    /// hardware-target name driving the cost model (`--hw`; default
+    /// `HAPQ_HW` or `eyeriss-64` — see `hw::target::BUILTIN_TARGETS`)
+    pub hw: String,
+    /// JSON accelerator-profile file; when set it overrides `--hw`
+    /// (`--hw-file`, schema in `hw::target::HwTarget::from_json`)
+    pub hw_file: Option<PathBuf>,
     /// independent seeds to search and merge best-of (`--seeds`)
     pub seeds: usize,
     /// search-checkpoint file (`--checkpoint [PATH]`); an empty path
@@ -62,6 +68,8 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             kernel: crate::runtime::default_kernel(),
             threads: crate::runtime::exec::default_threads(),
+            hw: crate::hw::target::default_hw(),
+            hw_file: None,
             seeds: 1,
             checkpoint: None,
             checkpoint_every: 25,
@@ -125,6 +133,17 @@ impl Cli {
         Ok(self.usize_flag(name, default as usize)? as u64)
     }
 
+    /// Float flag with a default; errors on non-numeric values.
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects a number, got `{v}`"),
+            },
+        }
+    }
+
     /// Optional integer flag (`None` when absent).
     pub fn opt_usize_flag(&self, name: &str) -> Result<Option<usize>> {
         match self.flags.get(name) {
@@ -161,6 +180,8 @@ impl Cli {
             backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
             kernel: KernelKind::parse(&self.str_flag("kernel", d.kernel.name()))?,
             threads: self.usize_flag("threads", d.threads)?.max(1),
+            hw: self.str_flag("hw", &d.hw),
+            hw_file: self.flags.get("hw-file").map(PathBuf::from),
             seeds: self.usize_flag("seeds", d.seeds)?.max(1),
             checkpoint,
             checkpoint_every: self.usize_flag("checkpoint-every", d.checkpoint_every)?,
@@ -264,6 +285,33 @@ mod tests {
         // default is the process default (HAPQ_KERNEL or int)
         let c = Cli::parse(&args("compress")).unwrap();
         assert_eq!(c.run_config().unwrap().kernel, crate::runtime::default_kernel());
+    }
+
+    #[test]
+    fn hw_flags_thread_into_config() {
+        let c = Cli::parse(&args("compress --hw mcu")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.hw, "mcu");
+        assert_eq!(cfg.hw_file, None);
+        let c = Cli::parse(&args("compress --hw-file profiles/npu.json")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.hw_file, Some(PathBuf::from("profiles/npu.json")));
+        // the default is the env-derived target name (HAPQ_HW or
+        // eyeriss-64); the name is validated at resolve time, not here,
+        // so `compare` can carry a comma-list through this field
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().hw, crate::hw::target::default_hw());
+        let c = Cli::parse(&args("compare --hw eyeriss-64,mcu")).unwrap();
+        assert_eq!(c.run_config().unwrap().hw, "eyeriss-64,mcu");
+    }
+
+    #[test]
+    fn f64_flag_parses_and_rejects() {
+        let c = Cli::parse(&args("hw --sparsity 0.25")).unwrap();
+        assert!((c.f64_flag("sparsity", 0.5).unwrap() - 0.25).abs() < 1e-12);
+        assert!((c.f64_flag("missing", 0.5).unwrap() - 0.5).abs() < 1e-12);
+        let c = Cli::parse(&args("hw --sparsity lots")).unwrap();
+        assert!(c.f64_flag("sparsity", 0.5).is_err());
     }
 
     #[test]

@@ -52,20 +52,23 @@ pub fn fig1_sweep(env: &mut CompressionEnv, points: &[f64]) -> Result<Vec<Fig1Ro
 }
 
 /// Fig 2a: whole-accelerator energy reduction for (Qw, Qa) pairs on a
-/// fixed 8-bit MAC accelerator (weights stay dense).
+/// fixed-precision MAC accelerator (weights stay dense). R_Q follows
+/// the env's hardware target — the MAC-sim table on `mac-sim` targets,
+/// the bit-width product on bit-serial ones.
 pub fn fig2a_grid(env: &CompressionEnv) -> Vec<(u32, u32, f64)> {
+    let em = env.cost.model();
     let mut e_mem = 0.0;
     let mut e_comp = 0.0;
     for l in 0..env.n_layers() {
-        let m = env.energy.mapping(l);
-        e_mem += m.mem_energy(&env.energy.acc);
-        e_comp += m.macs as f64 * env.energy.acc.e_mac;
+        let m = em.mapping(l);
+        e_mem += m.mem_energy(em.acc());
+        e_comp += m.macs as f64 * em.acc().e_mac;
     }
     let total = e_mem + e_comp;
     let mut out = Vec::new();
     for qw in 2..=8u32 {
         for qa in 2..=8u32 {
-            let rq = env.energy.rq.rq(qw, qa);
+            let rq = em.rq_pair(qw, qa);
             let reduced = e_mem + e_comp * rq;
             out.push((qw, qa, 1.0 - reduced / total));
         }

@@ -35,16 +35,24 @@ pub struct Job {
     /// seed override for multi-seed sweeps (`None`: inherit the
     /// leader's seed and write to the shared output directory)
     pub seed: Option<u64>,
+    /// hardware-target override for cross-target sweeps (`compare
+    /// --hw a,b`; `None`: inherit the leader's `--hw`/`--hw-file`)
+    pub hw: Option<String>,
 }
 
 impl Job {
-    /// The output directory this job writes to (per-seed jobs get an
-    /// isolated `seed<K>/` subdirectory so sweeps cannot collide).
+    /// The output directory this job writes to (per-target and
+    /// per-seed jobs get isolated `hw-<T>/` / `seed<K>/` subdirectories
+    /// so sweeps cannot collide).
     fn out_dir(&self, out: &Path) -> PathBuf {
-        match self.seed {
-            Some(s) => out.join(format!("seed{s}")),
-            None => out.to_path_buf(),
+        let mut dir = out.to_path_buf();
+        if let Some(hw) = &self.hw {
+            dir = dir.join(format!("hw-{hw}"));
         }
+        if let Some(s) = self.seed {
+            dir = dir.join(format!("seed{s}"));
+        }
+        dir
     }
 
     /// CLI args for the child (`compress` for ours, `baseline` otherwise).
@@ -80,6 +88,16 @@ impl Job {
             "--threads".into(),
             cfg.threads.to_string(),
         ]);
+        // hardware target: an explicit per-job override (cross-target
+        // sweeps) beats the leader's profile file, which beats the
+        // leader's --hw name
+        match (&self.hw, &cfg.hw_file) {
+            (Some(hw), _) => v.extend(["--hw".into(), hw.clone()]),
+            (None, Some(file)) => {
+                v.extend(["--hw-file".into(), file.display().to_string()])
+            }
+            (None, None) => v.extend(["--hw".into(), cfg.hw.clone()]),
+        }
         v
     }
 
@@ -286,6 +304,7 @@ pub fn run_multi_seed_with(
                 model: model.clone(),
                 method: method.clone(),
                 seed: Some(cfg.seed + i as u64),
+                hw: None,
             });
         }
     }
@@ -348,27 +367,64 @@ mod tests {
     #[test]
     fn job_args_shape() {
         let cfg = crate::config::RunConfig::default();
-        let ours = Job { model: "vgg11".into(), method: "ours".into(), seed: None };
+        let ours = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: None };
         let a = ours.args(&cfg);
         assert_eq!(a[0], "compress");
         assert!(a.contains(&"--episodes".to_string()));
-        // workers inherit the leader's backend, kernel and thread choices
+        // workers inherit the leader's backend, kernel, thread and
+        // hardware-target choices
         assert!(a.contains(&"--backend".to_string()));
         assert!(a.contains(&"native".to_string()));
         assert!(a.contains(&"--kernel".to_string()));
         assert!(a.contains(&cfg.kernel.name().to_string()));
         assert!(a.contains(&"--threads".to_string()));
         assert!(a.contains(&cfg.threads.to_string()));
-        let base = Job { model: "vgg11".into(), method: "amc".into(), seed: None };
+        assert!(a.contains(&"--hw".to_string()));
+        assert!(a.contains(&cfg.hw));
+        let base = Job { model: "vgg11".into(), method: "amc".into(), seed: None, hw: None };
         let b = base.args(&cfg);
         assert_eq!(b[0], "baseline");
         assert!(b.contains(&"amc".to_string()));
     }
 
     #[test]
+    fn hw_override_and_profile_file_forwarding() {
+        let mut cfg = crate::config::RunConfig::default();
+        // a per-job target override wins and isolates the out dir
+        let j = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: Some("mcu".into()) };
+        let a = j.args(&cfg);
+        let hi = a.iter().position(|x| x == "--hw").unwrap();
+        assert_eq!(a[hi + 1], "mcu");
+        let oi = a.iter().position(|x| x == "--out").unwrap();
+        assert_eq!(a[oi + 1], cfg.out.join("hw-mcu").display().to_string());
+        assert_eq!(
+            j.report_path(Path::new("out")),
+            PathBuf::from("out/hw-mcu/vgg11__ours.json")
+        );
+        // a leader --hw-file is forwarded verbatim to non-override jobs
+        cfg.hw_file = Some(PathBuf::from("profiles/npu.json"));
+        let j = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: None };
+        let a = j.args(&cfg);
+        let fi = a.iter().position(|x| x == "--hw-file").unwrap();
+        assert_eq!(a[fi + 1], "profiles/npu.json");
+        assert!(!a.contains(&"--hw".to_string()));
+        // ...but a per-job override still beats the file
+        let j = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: Some("bitfusion".into()) };
+        let a = j.args(&cfg);
+        assert!(a.contains(&"--hw".to_string()));
+        assert!(!a.contains(&"--hw-file".to_string()));
+        // target + seed compose into nested isolation dirs
+        let j = Job { model: "m".into(), method: "haq".into(), seed: Some(7), hw: Some("mcu".into()) };
+        assert_eq!(
+            j.report_path(Path::new("out")),
+            PathBuf::from("out/hw-mcu/seed7/m__haq.json")
+        );
+    }
+
+    #[test]
     fn seeded_jobs_get_isolated_seed_and_out_dir() {
         let cfg = crate::config::RunConfig::default();
-        let j = Job { model: "vgg11".into(), method: "haq".into(), seed: Some(43) };
+        let j = Job { model: "vgg11".into(), method: "haq".into(), seed: Some(43), hw: None };
         let a = j.args(&cfg);
         // the seed override replaces the leader's seed…
         let si = a.iter().position(|x| x == "--seed").unwrap();
@@ -384,7 +440,7 @@ mod tests {
 
     #[test]
     fn report_path_convention_matches_save_report() {
-        let j = Job { model: "m".into(), method: "ours".into(), seed: None };
+        let j = Job { model: "m".into(), method: "ours".into(), seed: None, hw: None };
         assert_eq!(
             j.report_path(Path::new("out")),
             PathBuf::from("out/m__ours.json")
@@ -462,7 +518,7 @@ mod tests {
         let out = std::env::temp_dir().join(format!("hapq-launcher-reap-{}", std::process::id()));
         let cfg = crate::config::RunConfig { out: out.clone(), ..Default::default() };
         let grid: Vec<Job> = (0..4)
-            .map(|i| Job { model: format!("m{i}"), method: "ours".into(), seed: None })
+            .map(|i| Job { model: format!("m{i}"), method: "ours".into(), seed: None, hw: None })
             .collect();
         let t0 = std::time::Instant::now();
         let done = run_grid_with(&cfg, grid, 2, Path::new("true")).unwrap();

@@ -26,7 +26,7 @@ use crate::config::RunConfig;
 use crate::env::{CompressionEnv, Metric, Solution};
 use crate::hw::energy::EnergyModel;
 use crate::hw::mac_sim::RqTable;
-use crate::hw::Accel;
+use crate::hw::target::HwTarget;
 use crate::io::json::{self, arr, num, obj, s, Value};
 use crate::model::{ModelArch, Weights};
 use crate::rl::composite::{CompositeAgent, CompositeConfig, CompositeStrategy};
@@ -89,6 +89,11 @@ pub struct RunReport {
     pub threads: usize,
     /// native compute kernel that evaluated prunable layers (`--kernel`)
     pub kernel: crate::runtime::KernelKind,
+    /// hardware target the cost model priced the run against (`--hw`)
+    pub hw: String,
+    /// cumulative seconds spent in hardware cost-model queries
+    /// (`PhaseTimers::hw_s`, timed inside the cost cache)
+    pub hw_s: f64,
     /// activation-cache hit rate of the reward oracle over the run (0..1)
     pub cache_hit_rate: f64,
     /// cumulative seconds the oracle spent (re)packing int-kernel
@@ -138,6 +143,8 @@ impl RunReport {
             ("wall_secs", num(self.wall_secs)),
             ("threads", num(self.threads as f64)),
             ("kernel", s(self.kernel.name())),
+            ("hw", s(&self.hw)),
+            ("hw_s", num(self.hw_s)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("pack_secs", num(self.pack_secs)),
             ("gemm_secs", num(self.gemm_secs)),
@@ -218,10 +225,18 @@ impl Coordinator {
         )
     }
 
-    /// Build the reward-oracle environment for one model.
+    /// Resolve the configured hardware target (`--hw` name or
+    /// `--hw-file` profile; the file wins when both are given).
+    pub fn hw_target(&self) -> Result<HwTarget> {
+        HwTarget::resolve(&self.cfg.hw, self.cfg.hw_file.as_deref())
+    }
+
+    /// Build the reward-oracle environment for one model on the
+    /// configured hardware target.
     pub fn build_env(&self, model: &str) -> Result<CompressionEnv> {
         let (arch, weights, e) = self.load_arch(model)?;
-        let energy = EnergyModel::new(arch.layer_dims()?, Accel::default(), self.rq.clone());
+        let target = self.hw_target()?;
+        let energy = EnergyModel::for_target(arch.layer_dims()?, &target, self.rq.clone());
         let session = self.session(&arch, e, Split::Val, self.cfg.reward_subset)?;
         CompressionEnv::new(arch, weights, energy, session, self.cfg.seed)
     }
@@ -309,6 +324,8 @@ impl Coordinator {
             wall_secs: outcome.wall_secs + t_score.elapsed().as_secs_f64(),
             threads: stats.threads,
             kernel: stats.kernel,
+            hw: env.cost.model().target.name.clone(),
+            hw_s: env.timers.hw_s,
             cache_hit_rate: stats.cache_hit_rate(),
             pack_secs: stats.pack_secs,
             gemm_secs: stats.gemm_secs,
@@ -582,6 +599,8 @@ mod tests {
             wall_secs: 0.1,
             threads: 4,
             kernel: crate::runtime::KernelKind::Int,
+            hw: "eyeriss-64".into(),
+            hw_s: 0.002,
             cache_hit_rate: 0.75,
             pack_secs: 0.01,
             gemm_secs: 0.05,
@@ -596,6 +615,10 @@ mod tests {
         assert_eq!(v.req("kernel").unwrap().as_str().unwrap(), "int");
         assert!(v.req("pack_secs").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.req("gemm_secs").unwrap().as_f64().unwrap() > 0.0);
+        // the hardware target and its cost-query phase timer ride along
+        // so cross-target sweeps stay auditable from the JSON alone
+        assert_eq!(v.req("hw").unwrap().as_str().unwrap(), "eyeriss-64");
+        assert!(v.req("hw_s").unwrap().as_f64().unwrap() > 0.0);
         // uniform accounting: every run JSON (ours AND baselines)
         // carries seed, evals and wall_secs
         assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), 42.0);

@@ -4,7 +4,9 @@
 //! each step the composite agent supplies (pruning ratio, precision,
 //! pruning algorithm) for layer *t*, the env applies them to a working
 //! copy of the weights (dependency-resolved, §4.1), quantizes, queries
-//! the energy model, runs validation inference through the configured
+//! the hardware cost oracle (the [`CostModel`] seam — an incremental
+//! [`CostCache`] over the selected target's energy/latency model),
+//! runs validation inference through the configured
 //! [`InferenceSession`] backend (native interpreter or PJRT), and
 //! returns the LUT-based hardware-aware reward — exactly the loop of
 //! Fig 3. Rewards arrive at *every* step (§4.2.2: Rainbow requires an
@@ -14,6 +16,7 @@ pub mod lut;
 
 use anyhow::Result;
 
+use crate::hw::cost::{CostCache, CostModel};
 use crate::hw::energy::{Compression, EnergyModel};
 use crate::model::{ModelArch, Op, Weights};
 use crate::pruning::{prune, prune_channels, PruneAlg, PruneCtx};
@@ -43,8 +46,9 @@ pub struct PhaseTimers {
     pub prune_s: f64,
     /// post-prune weight quantization, seconds
     pub quant_s: f64,
-    /// energy/latency model queries, seconds
-    pub energy_s: f64,
+    /// hardware cost-model (energy/latency) queries, seconds — timed
+    /// inside the [`CostCache`] and drained into this slot every step
+    pub hw_s: f64,
     /// validation inference (the accuracy oracle), seconds
     pub infer_s: f64,
     /// steps accumulated into the totals above
@@ -147,8 +151,9 @@ pub struct CompressionEnv {
     /// the target model's architecture descriptor
     pub arch: ModelArch,
     dense: Weights,
-    /// the cached accelerator energy model (eqs 3–8)
-    pub energy: EnergyModel,
+    /// the hardware cost oracle: an incremental per-layer cache over
+    /// the selected target's energy/latency model (eqs 3–8)
+    pub cost: CostCache,
     session: InferenceSession,
     /// the reward lookup table (Fig 5)
     pub lut: RewardLut,
@@ -215,7 +220,7 @@ impl CompressionEnv {
         let work = weights.clone();
         Ok(CompressionEnv {
             arch,
-            energy,
+            cost: CostCache::new(energy),
             session,
             lut: RewardLut::paper(),
             baseline_acc,
@@ -259,11 +264,12 @@ impl CompressionEnv {
 
     /// The paper's layer embedding (eq. 1/2), min-max normalised.
     pub fn state(&self, t: usize) -> Vec<f32> {
-        let d = self.energy.dims(t);
+        let em = self.cost.model();
+        let d = em.dims(t);
         let layer = self.arch.layer(&self.arch.prunable[t]).unwrap();
         let is_fc = matches!(layer.op, Op::Fc) as u32 as f32;
-        let e_dense = self.energy.dense_layer(t);
-        let e_now = self.energy.layer(t, &self.cfgs[t]);
+        let e_dense = em.dense_layer(t);
+        let e_now = em.layer(t, &self.cfgs[t]);
         let n = self.n_layers() as f32;
         vec![
             t as f32 / n,                                      // layer index
@@ -352,9 +358,10 @@ impl CompressionEnv {
         self.applied.push(applied);
         self.actions_taken.push(action);
 
-        // hardware feedback: energy/latency model + validation inference
-        let energy_gain = self.energy.gain(&self.cfgs);
-        let latency_gain = self.energy.latency_gain(&self.cfgs);
+        // hardware feedback: incremental cost cache + validation
+        // inference (only layer t's terms re-price — CostCache)
+        let energy_gain = self.cost.energy_gain(&self.cfgs);
+        let latency_gain = self.cost.latency_gain(&self.cfgs);
         let hw_gain = match self.metric {
             Metric::Energy => energy_gain,
             Metric::Latency => latency_gain,
@@ -365,7 +372,7 @@ impl CompressionEnv {
         let ph4 = std::time::Instant::now();
         self.timers.prune_s += (ph1 - ph0).as_secs_f64();
         self.timers.quant_s += (ph2 - ph1).as_secs_f64();
-        self.timers.energy_s += (ph3 - ph2).as_secs_f64();
+        self.timers.hw_s += self.cost.take_secs();
         self.timers.infer_s += (ph4 - ph3).as_secs_f64();
         self.timers.steps += 1;
         self.n_evals += 1;

@@ -1,0 +1,288 @@
+//! The `CostModel` seam between `env/` and `hw/`, and the incremental
+//! per-layer cost cache behind it.
+//!
+//! [`crate::env::CompressionEnv::step`] queries hardware gains at
+//! *every* RL step, and historically re-summed energy and latency over
+//! all layers each time even though one step changes exactly one
+//! layer's [`Compression`] — the same access pattern PRs 2–4 exploited
+//! in the accuracy oracle. [`CostCache`] gives the hardware oracle the
+//! same treatment: per-layer `(energy, cycles)` terms are cached keyed
+//! by that layer's `Compression` and recomputed only for layers whose
+//! configuration changed; totals are summed in fixed layer order, so
+//! every gain is **bit-identical** to the scratch recompute (same f64
+//! values added in the same sequence) — property-tested under random
+//! invalidate sequences in `rust/tests/proptests.rs`.
+//!
+//! [`CostModel`] is the trait the environment programs against; the
+//! scratch [`EnergyModel`] implements it too, so alternative cost
+//! oracles (measured latency tables, remote estimators) plug in
+//! without touching `env/`.
+
+use std::time::Instant;
+
+use super::energy::{Compression, EnergyModel};
+use super::report::{self, LayerReport};
+
+/// Hardware cost oracle for one model on one target — the seam between
+/// the compression environment and the `hw/` subsystem.
+pub trait CostModel {
+    /// Number of modelled layers.
+    fn n_layers(&self) -> usize;
+
+    /// Energy gain (fraction) of a full configuration vs the dense
+    /// 8-bit baseline (eq. 3 over eqs. 4–8).
+    fn energy_gain(&mut self, cfgs: &[Compression]) -> f64;
+
+    /// Latency gain (fraction) vs the dense baseline (§4.2.3).
+    fn latency_gain(&mut self, cfgs: &[Compression]) -> f64;
+
+    /// Per-layer energy/latency breakdown of a configuration.
+    fn breakdown(&self, cfgs: &[Compression]) -> Vec<LayerReport>;
+
+    /// Drop any cached terms for `layer` (its config will be re-priced
+    /// on the next query).
+    fn invalidate(&mut self, layer: usize);
+
+    /// Drop every cached term.
+    fn invalidate_all(&mut self);
+}
+
+/// The scratch oracle is itself a [`CostModel`]: every query recomputes
+/// all layers. The reference the cache is property-tested against.
+impl CostModel for EnergyModel {
+    fn n_layers(&self) -> usize {
+        EnergyModel::n_layers(self)
+    }
+
+    fn energy_gain(&mut self, cfgs: &[Compression]) -> f64 {
+        self.gain(cfgs)
+    }
+
+    fn latency_gain(&mut self, cfgs: &[Compression]) -> f64 {
+        EnergyModel::latency_gain(self, cfgs)
+    }
+
+    fn breakdown(&self, cfgs: &[Compression]) -> Vec<LayerReport> {
+        report::breakdown(self, cfgs)
+    }
+
+    fn invalidate(&mut self, _layer: usize) {}
+
+    fn invalidate_all(&mut self) {}
+}
+
+/// Incremental per-layer cost cache over an [`EnergyModel`].
+///
+/// Caches each layer's `(energy, cycles)` keyed by that layer's
+/// [`Compression`]; a query re-prices only layers whose key changed
+/// (or was invalidated) and sums the per-layer terms in fixed layer
+/// order — bit-identical to the scratch path by construction. The
+/// dense baselines (energy and cycles denominators) are priced once at
+/// construction; the scratch path recomputes them per query.
+#[derive(Clone, Debug)]
+pub struct CostCache {
+    model: EnergyModel,
+    keys: Vec<Option<Compression>>,
+    energy: Vec<f64>,
+    cycles: Vec<f64>,
+    baseline_energy: f64,
+    dense_cycles: f64,
+    secs: f64,
+    queries: u64,
+    recomputed: u64,
+    reused: u64,
+}
+
+impl CostCache {
+    /// Wrap a priced model; the dense baselines are computed here once.
+    pub fn new(model: EnergyModel) -> CostCache {
+        let n = EnergyModel::n_layers(&model);
+        let baseline_energy = model.baseline();
+        let dense = vec![Compression::dense(); n];
+        let dense_cycles = model.cycles(&dense);
+        CostCache {
+            model,
+            keys: vec![None; n],
+            energy: vec![0.0; n],
+            cycles: vec![0.0; n],
+            baseline_energy,
+            dense_cycles,
+            secs: 0.0,
+            queries: 0,
+            recomputed: 0,
+            reused: 0,
+        }
+    }
+
+    /// The underlying scratch oracle (dims, mappings, target, R_Q).
+    pub fn model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    /// Drain the wall-clock seconds spent inside cost queries since the
+    /// last call — the `hw_s` phase-timer feed (`hapq perf`).
+    pub fn take_secs(&mut self) -> f64 {
+        std::mem::take(&mut self.secs)
+    }
+
+    /// Gain queries served.
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    /// Per-layer terms re-priced across all queries.
+    pub fn recomputed(&self) -> u64 {
+        self.recomputed
+    }
+
+    /// Per-layer terms served from cache across all queries.
+    pub fn reused(&self) -> u64 {
+        self.reused
+    }
+
+    /// Fraction of per-layer term *lookups* served from cache (0..1).
+    /// Note the denominator counts every lookup: one env step issues
+    /// two gain queries (energy then latency) that each scan all `n`
+    /// layers, so the steady-state RL value approaches `(2n−1)/2n` —
+    /// read the raw [`Self::recomputed`]/[`Self::reused`] counts for
+    /// per-step arithmetic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.recomputed + self.reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.reused as f64 / total as f64
+        }
+    }
+
+    /// Re-price layers whose configuration no longer matches the cache.
+    fn refresh(&mut self, cfgs: &[Compression]) {
+        assert_eq!(cfgs.len(), self.keys.len());
+        for (l, cfg) in cfgs.iter().enumerate() {
+            if self.keys[l] == Some(*cfg) {
+                self.reused += 1;
+            } else {
+                self.energy[l] = self.model.layer(l, cfg);
+                self.cycles[l] = self.model.layer_cycles(l, cfg);
+                self.keys[l] = Some(*cfg);
+                self.recomputed += 1;
+            }
+        }
+    }
+}
+
+impl CostModel for CostCache {
+    fn n_layers(&self) -> usize {
+        self.keys.len()
+    }
+
+    fn energy_gain(&mut self, cfgs: &[Compression]) -> f64 {
+        let t0 = Instant::now();
+        self.queries += 1;
+        self.refresh(cfgs);
+        let total: f64 = self.energy.iter().sum();
+        let gain = 1.0 - total / self.baseline_energy;
+        self.secs += t0.elapsed().as_secs_f64();
+        gain
+    }
+
+    fn latency_gain(&mut self, cfgs: &[Compression]) -> f64 {
+        let t0 = Instant::now();
+        self.queries += 1;
+        self.refresh(cfgs);
+        let total: f64 = self.cycles.iter().sum();
+        let gain = 1.0 - total / self.dense_cycles;
+        self.secs += t0.elapsed().as_secs_f64();
+        gain
+    }
+
+    fn breakdown(&self, cfgs: &[Compression]) -> Vec<LayerReport> {
+        report::breakdown(&self.model, cfgs)
+    }
+
+    fn invalidate(&mut self, layer: usize) {
+        self.keys[layer] = None;
+    }
+
+    fn invalidate_all(&mut self) {
+        self.keys.iter_mut().for_each(|k| *k = None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::dataflow::LayerDims;
+    use crate::hw::mac_sim::RqTable;
+    use crate::hw::Accel;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(
+            vec![
+                LayerDims::conv(16, 16, 3, 16, 16, 16, 3, 1),
+                LayerDims::conv(16, 16, 16, 8, 8, 32, 3, 2),
+                LayerDims::fc(256, 10),
+            ],
+            Accel::default(),
+            RqTable::compute(600, 3),
+        )
+    }
+
+    #[test]
+    fn cache_matches_scratch_and_counts_reuse() {
+        let mut scratch = model();
+        let mut cache = CostCache::new(model());
+        let mut cfgs = vec![Compression::dense(); 3];
+        // an RL-style walk: one layer changes per step
+        for (t, bits) in [(0usize, 4u32), (1, 6), (2, 2)] {
+            cfgs[t] = Compression { sparsity: 0.3 + t as f64 / 10.0, coarse: t % 2 == 0, bits };
+            assert_eq!(
+                cache.energy_gain(&cfgs).to_bits(),
+                scratch.energy_gain(&cfgs).to_bits()
+            );
+            assert_eq!(
+                cache.latency_gain(&cfgs).to_bits(),
+                scratch.latency_gain(&cfgs).to_bits()
+            );
+        }
+        // 6 queries over 3 layers: the walk re-priced 3 + the initial 2
+        // dense fills; everything else came from cache
+        assert_eq!(cache.queries(), 6);
+        assert!(cache.reused() > cache.recomputed(), "{cache:?}");
+        assert!(cache.hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn invalidate_forces_reprice_with_identical_numbers() {
+        let mut scratch = model();
+        let mut cache = CostCache::new(model());
+        let cfgs = vec![Compression { sparsity: 0.5, coarse: true, bits: 4 }; 3];
+        let g0 = cache.energy_gain(&cfgs);
+        let before = cache.recomputed();
+        cache.invalidate(1);
+        let g1 = cache.energy_gain(&cfgs);
+        assert_eq!(cache.recomputed(), before + 1, "layer 1 must re-price");
+        cache.invalidate_all();
+        let g2 = cache.energy_gain(&cfgs);
+        assert_eq!(cache.recomputed(), before + 4, "all 3 must re-price");
+        assert_eq!(g0.to_bits(), g1.to_bits());
+        assert_eq!(g0.to_bits(), g2.to_bits());
+        assert_eq!(g0.to_bits(), scratch.energy_gain(&cfgs).to_bits());
+    }
+
+    #[test]
+    fn take_secs_drains_and_breakdown_matches_report() {
+        let mut cache = CostCache::new(model());
+        let cfgs = vec![Compression::dense(); 3];
+        let _ = cache.energy_gain(&cfgs);
+        assert!(cache.take_secs() >= 0.0);
+        assert_eq!(cache.take_secs(), 0.0, "drained");
+        let rows = CostModel::breakdown(&cache, &cfgs);
+        let direct = report::breakdown(cache.model(), &cfgs);
+        assert_eq!(rows.len(), direct.len());
+        for (a, b) in rows.iter().zip(&direct) {
+            assert_eq!(a.e_compressed.to_bits(), b.e_compressed.to_bits());
+            assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        }
+    }
+}

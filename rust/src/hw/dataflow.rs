@@ -7,7 +7,10 @@
 //! picks the mapping that minimises hierarchical access energy under the
 //! RF/global-buffer capacity constraints; the winning mapping's access
 //! counts feed the energy model. Counts are in 8-bit words (the
-//! accelerator's native datapath).
+//! accelerator's native datapath). The mapper is target-generic: each
+//! [`crate::hw::target::HwTarget`] maps every layer against its own
+//! buffer capacities and access energies, so the same model places
+//! differently on `eyeriss-64` than on an `mcu`-class memory hierarchy.
 
 use super::Accel;
 

@@ -1,4 +1,5 @@
-//! The paper's energy model, eqs (3)–(8).
+//! The paper's energy model, eqs (3)–(8), generalised over hardware
+//! targets.
 //!
 //! E_total = Σ_l E_mem^l + E_comp^l            (3)
 //! E_mem   = #acc  · e_mem  · R_mem            (4)
@@ -7,12 +8,16 @@
 //! with reduction coefficients (7) for fine-grained pruning
 //! (R_mem = 1, R_pruned = P_FG·S, R_unpruned = (1−S)·R_Q) and (8) for
 //! coarse-grained (R_mem = 1−S, R_pruned = 0, R_unpruned = (1−S)·R_Q).
-//! #acc/#comp come from the dataflow mapper, R_Q/P_FG from the MAC
-//! switching simulator — both measured once and cached, so an energy
-//! query on the RL hot path is a handful of multiplies.
+//! #acc/#comp come from the dataflow mapper; R_Q/P_FG come from the
+//! target's [`ComputeScaling`] rule — the MAC switching simulator for
+//! fixed parallel multipliers (the paper's accelerator), an analytic
+//! bit-width-product law for bit-serial arrays — both a handful of
+//! multiplies on the RL hot path. The incremental per-layer cache
+//! wrapping this oracle lives in [`super::cost`].
 
 use super::dataflow::{map_layer, LayerDims, Mapping};
 use super::mac_sim::RqTable;
+use super::target::{ComputeScaling, HwTarget};
 use super::Accel;
 
 /// Per-layer compression configuration chosen by the agent.
@@ -33,30 +38,45 @@ impl Compression {
     }
 }
 
-/// Cached energy oracle for one model on one accelerator.
+/// Cached energy oracle for one model on one hardware target.
 #[derive(Clone, Debug)]
 pub struct EnergyModel {
-    /// the accelerator's access-energy configuration
-    pub acc: Accel,
-    /// the MAC-sim R_Q / P_FG table
+    /// the hardware target being modelled (accelerator + scaling rule)
+    pub target: HwTarget,
+    /// the MAC-sim R_Q / P_FG table (consulted on mac-sim targets)
     pub rq: RqTable,
     /// (dims, mapping, weighted mem energy, comp energy) per layer — dense/8-bit
     layers: Vec<(LayerDims, Mapping, f64, f64)>,
 }
 
 impl EnergyModel {
-    /// Map every layer once and cache its dense access/energy numbers.
+    /// Map every layer once against a bare accelerator config — the
+    /// historical constructor: equivalent to an anonymous mac-sim
+    /// target ([`HwTarget::custom`]) and bit-identical to the
+    /// pre-refactor hardcoded path when `acc` is `Accel::default()`.
     pub fn new(dims: Vec<LayerDims>, acc: Accel, rq: RqTable) -> Self {
+        Self::for_target(dims, &HwTarget::custom(acc), rq)
+    }
+
+    /// Map every layer once against a named hardware target and cache
+    /// its dense access/energy numbers.
+    pub fn for_target(dims: Vec<LayerDims>, target: &HwTarget, rq: RqTable) -> Self {
+        let acc = &target.accel;
         let layers = dims
             .into_iter()
             .map(|d| {
-                let m = map_layer(&d, &acc);
-                let e_mem = m.mem_energy(&acc);
+                let m = map_layer(&d, acc);
+                let e_mem = m.mem_energy(acc);
                 let e_comp = m.macs as f64 * acc.e_mac;
                 (d, m, e_mem, e_comp)
             })
             .collect();
-        EnergyModel { acc, rq, layers }
+        EnergyModel { target: target.clone(), rq, layers }
+    }
+
+    /// The target's accelerator configuration.
+    pub fn acc(&self) -> &Accel {
+        &self.target.accel
     }
 
     /// Number of modelled layers.
@@ -74,6 +94,35 @@ impl EnergyModel {
         &self.layers[l].1
     }
 
+    /// R_Q (eq. 6) for a (weights, activations) precision pair under
+    /// the target's scaling rule: the MAC-sim table for fixed parallel
+    /// multipliers, the bit-width product for bit-serial arrays. Both
+    /// rules are normalised to the paper's dense 8/8-bit reference
+    /// (`rq_pair(8, 8) == 1`), which is what makes `gain(dense) == 0`
+    /// hold on every target — the dense baseline (eq. 3 denominator)
+    /// carries no precision scaling.
+    pub fn rq_pair(&self, wbits: u32, abits: u32) -> f64 {
+        match self.target.scaling {
+            ComputeScaling::MacSim => self.rq.rq(wbits, abits),
+            ComputeScaling::BitSerial => {
+                let w = wbits.clamp(2, 8) as f64;
+                let a = abits.clamp(2, 8) as f64;
+                (w * a) / 64.0 // dense reference: 8 × 8 bits
+            }
+        }
+    }
+
+    /// P_FG (§4.3): relative energy of a MAC whose activation operand
+    /// is a pruned-weight zero. Gate-level measurement on mac-sim
+    /// targets; a single 1×1 step (vs the 8×8-bit dense reference) on
+    /// bit-serial arrays.
+    pub fn p_fg(&self) -> f64 {
+        match self.target.scaling {
+            ComputeScaling::MacSim => self.rq.p_fg,
+            ComputeScaling::BitSerial => 1.0 / 64.0,
+        }
+    }
+
     /// Dense 8-bit baseline energy of layer `l` (the paper's reference).
     pub fn dense_layer(&self, l: usize) -> f64 {
         self.layers[l].2 + self.layers[l].3
@@ -83,13 +132,18 @@ impl EnergyModel {
     pub fn layer(&self, l: usize, cfg: &Compression) -> f64 {
         let (_, _, e_mem, e_comp) = self.layers[l];
         let s = cfg.sparsity.clamp(0.0, 1.0);
-        let rq = self.rq.rq(cfg.bits, cfg.bits);
+        let rq = self.rq_pair(cfg.bits, cfg.bits);
         let (r_mem, r_pruned, r_unpruned) = if cfg.coarse {
             (1.0 - s, 0.0, (1.0 - s) * rq) // eq (8)
         } else {
-            (1.0, self.rq.p_fg * s, (1.0 - s) * rq) // eq (7)
+            (1.0, self.p_fg() * s, (1.0 - s) * rq) // eq (7)
         };
         e_mem * r_mem + e_comp * (r_pruned + r_unpruned)
+    }
+
+    /// Latency (cycles) of layer `l` under a compression config.
+    pub fn layer_cycles(&self, l: usize, cfg: &Compression) -> f64 {
+        super::latency::cycles_on(&self.layers[l].1, &self.target, cfg)
     }
 
     /// E_total (eq. 3) for a full per-layer configuration.
@@ -115,10 +169,9 @@ impl EnergyModel {
     /// hardware metric" hook, backed by [`super::latency`].
     pub fn cycles(&self, cfgs: &[Compression]) -> f64 {
         assert_eq!(cfgs.len(), self.layers.len());
-        self.layers
-            .iter()
+        (0..self.layers.len())
             .zip(cfgs)
-            .map(|((_, m, _, _), c)| super::latency::layer_cycles(m, &self.acc, c))
+            .map(|(l, c)| self.layer_cycles(l, c))
             .sum()
     }
 
@@ -133,13 +186,16 @@ impl EnergyModel {
 mod tests {
     use super::*;
 
-    fn model() -> EnergyModel {
-        let dims = vec![
+    fn dims3() -> Vec<LayerDims> {
+        vec![
             LayerDims::conv(16, 16, 3, 16, 16, 16, 3, 1),
             LayerDims::conv(16, 16, 16, 8, 8, 32, 3, 2),
             LayerDims::fc(512, 10),
-        ];
-        EnergyModel::new(dims, Accel::default(), RqTable::compute(1500, 7))
+        ]
+    }
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(dims3(), Accel::default(), RqTable::compute(1500, 7))
     }
 
     #[test]
@@ -211,5 +267,69 @@ mod tests {
         let m = model();
         let c = Compression { sparsity: 1.0, coarse: true, bits: 8 };
         assert!(m.layer(0, &c) < 1e-9);
+    }
+
+    #[test]
+    fn bit_serial_scaling_is_the_bit_width_product() {
+        let t = HwTarget::builtin("bitfusion").unwrap();
+        let m = EnergyModel::for_target(dims3(), &t, RqTable::compute(400, 7));
+        assert_eq!(m.rq_pair(8, 8).to_bits(), 1.0f64.to_bits());
+        assert_eq!(m.rq_pair(2, 2).to_bits(), (4.0f64 / 64.0).to_bits());
+        assert_eq!(m.rq_pair(4, 2).to_bits(), (8.0f64 / 64.0).to_bits());
+        assert_eq!(m.p_fg().to_bits(), (1.0f64 / 64.0).to_bits());
+        // exact monotone in bits, no simulation noise
+        let mut prev = f64::INFINITY;
+        for bits in (2..=8u32).rev() {
+            let c = Compression { sparsity: 0.0, coarse: false, bits };
+            let e = m.total(&[c, c, c]);
+            assert!(e < prev, "bits={bits}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn bit_serial_dense_gain_is_zero_for_any_mac_bits() {
+        // the dense baseline carries no precision scaling, so rq_pair
+        // must be normalised to the 8/8 reference (== 1) even when the
+        // profile's native mac_bits differs — otherwise gain(dense)
+        // would be negative on low-precision bit-serial profiles
+        let t = HwTarget {
+            name: "bs4".into(),
+            description: String::new(),
+            accel: Accel { mac_bits: 4, ..Accel::default() },
+            scaling: ComputeScaling::BitSerial,
+        };
+        let m = EnergyModel::for_target(dims3(), &t, RqTable::compute(300, 7));
+        assert_eq!(m.rq_pair(8, 8).to_bits(), 1.0f64.to_bits());
+        let dense = vec![Compression::dense(); 3];
+        assert!(m.gain(&dense).abs() < 1e-12, "gain(dense) = {}", m.gain(&dense));
+        assert!(m.latency_gain(&dense).abs() < 1e-12);
+    }
+
+    #[test]
+    fn targets_disagree_on_the_same_config() {
+        // the whole point of the subsystem: one configuration prices
+        // differently on different hardware
+        let rq = RqTable::compute(400, 7);
+        let e64 = EnergyModel::for_target(
+            dims3(),
+            &HwTarget::builtin("eyeriss-64").unwrap(),
+            rq.clone(),
+        );
+        let mcu = EnergyModel::for_target(
+            dims3(),
+            &HwTarget::builtin("mcu").unwrap(),
+            rq,
+        );
+        assert_ne!(e64.baseline().to_bits(), mcu.baseline().to_bits());
+        // the MCU's external memory dominates: its memory share of the
+        // dense baseline exceeds the Eyeriss one
+        let mem_share = |m: &EnergyModel| {
+            let mem: f64 = (0..m.n_layers())
+                .map(|l| m.mapping(l).mem_energy(m.acc()))
+                .sum();
+            mem / m.baseline()
+        };
+        assert!(mem_share(&mcu) > mem_share(&e64));
     }
 }

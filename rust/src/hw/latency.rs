@@ -17,13 +17,44 @@
 
 use super::dataflow::Mapping;
 use super::energy::Compression;
+use super::target::{ComputeScaling, HwTarget};
 use super::Accel;
 
 /// DRAM words (8-bit) per accelerator cycle — 3.2 Gbps @ ~1 GHz ≈ 0.4
 /// words/cycle across the four corner channels (paper §5.1).
 pub const DRAM_WORDS_PER_CYCLE: f64 = 0.4;
 
-/// Cycle estimate for one layer under a compression config.
+/// Cycle estimate for one layer under a hardware target's scaling
+/// rule: fixed parallel arrays issue every MAC in one slot regardless
+/// of precision ([`layer_cycles`], the paper's model); bit-serial
+/// arrays additionally scale compute time with the product of the
+/// operand bit-widths, normalised to the dense 8/8-bit reference.
+pub fn cycles_on(m: &Mapping, target: &HwTarget, cfg: &Compression) -> f64 {
+    match target.scaling {
+        ComputeScaling::MacSim => layer_cycles(m, &target.accel, cfg),
+        ComputeScaling::BitSerial => {
+            let acc = &target.accel;
+            let pes = (acc.pe_rows * acc.pe_cols) as f64;
+            let util = 0.7;
+            let s = cfg.sparsity.clamp(0.0, 1.0);
+            let (mac_factor, mem_factor) = if cfg.coarse {
+                (1.0 - s, 1.0 - s) // pruned lanes disappear entirely (eq 8)
+            } else {
+                (1.0, 1.0) // zeros still occupy serial issue slots
+            };
+            // normalised to the dense 8/8-bit reference, matching the
+            // energy model's rq_pair so both gains share one baseline
+            let b = cfg.bits.clamp(2, 8) as f64;
+            let serial = (b * b) / 64.0;
+            let t_comp = m.macs as f64 * mac_factor * serial / (pes * util);
+            let t_mem = m.dram as f64 * mem_factor / DRAM_WORDS_PER_CYCLE;
+            t_comp.max(t_mem)
+        }
+    }
+}
+
+/// Cycle estimate for one layer under a compression config on a fixed
+/// parallel (mac-sim) array.
 pub fn layer_cycles(m: &Mapping, acc: &Accel, cfg: &Compression) -> f64 {
     let pes = (acc.pe_rows * acc.pe_cols) as f64;
     // utilisation: output-channel × spatial tiles rarely fill the array
@@ -39,20 +70,6 @@ pub fn layer_cycles(m: &Mapping, acc: &Accel, cfg: &Compression) -> f64 {
     let t_comp = m.macs as f64 * mac_factor / (pes * util);
     let t_mem = m.dram as f64 * mem_factor / DRAM_WORDS_PER_CYCLE;
     t_comp.max(t_mem)
-}
-
-/// Whole-model latency (cycles) for a per-layer configuration.
-pub fn total_cycles(
-    mappings: &[&Mapping],
-    acc: &Accel,
-    cfgs: &[Compression],
-) -> f64 {
-    assert_eq!(mappings.len(), cfgs.len());
-    mappings
-        .iter()
-        .zip(cfgs)
-        .map(|(m, c)| layer_cycles(m, acc, c))
-        .sum()
 }
 
 #[cfg(test)]
@@ -100,11 +117,27 @@ mod tests {
     }
 
     #[test]
-    fn total_is_sum() {
-        let (m, acc) = setup();
-        let cfgs = vec![Compression::dense(); 3];
-        let t3 = total_cycles(&[&m, &m, &m], &acc, &cfgs);
-        let t1 = layer_cycles(&m, &acc, &Compression::dense());
-        assert!((t3 - 3.0 * t1).abs() < 1e-9);
+    fn bit_serial_latency_drops_with_precision() {
+        use crate::hw::target::HwTarget;
+        let t = HwTarget::builtin("bitfusion").unwrap();
+        let d = LayerDims::conv(16, 16, 32, 16, 16, 64, 3, 1);
+        let m = map_layer(&d, &t.accel);
+        let mut prev = f64::INFINITY;
+        for bits in (2..=8u32).rev() {
+            let c = Compression { sparsity: 0.0, coarse: false, bits };
+            let cy = cycles_on(&m, &t, &c);
+            assert!(cy <= prev + 1e-9, "bits={bits}");
+            // never below the memory roofline
+            assert!(cy + 1e-9 >= m.dram as f64 / DRAM_WORDS_PER_CYCLE);
+            prev = cy;
+        }
+        // on a mac-sim target cycles_on IS layer_cycles, bit for bit
+        let e64 = HwTarget::builtin("eyeriss-64").unwrap();
+        let c = Compression { sparsity: 0.4, coarse: true, bits: 5 };
+        assert_eq!(
+            cycles_on(&m, &e64, &c).to_bits(),
+            layer_cycles(&m, &e64.accel, &c).to_bits()
+        );
     }
+
 }

@@ -11,6 +11,11 @@
 //! is taken proportional to weighted node toggle counts plus a static
 //! leakage floor. Only the *ratio* to the 8/8 baseline is consumed by
 //! the energy model — the same normalisation the ASIC flow used.
+//!
+//! The table models fixed parallel multipliers, i.e. `mac-sim` scaling
+//! targets ([`crate::hw::target::ComputeScaling::MacSim`]); bit-serial
+//! targets bypass it with an analytic bit-width-product law
+//! ([`crate::hw::energy::EnergyModel::rq_pair`]).
 
 use crate::util::rng::Rng;
 

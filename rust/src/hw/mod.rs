@@ -1,21 +1,33 @@
 //! Hardware substrates: the gate-level MAC switching-activity simulator
 //! (Synopsys-flow substitute), the Eyeriss-style dataflow mapper
-//! (NN-Dataflow substitute), and the paper's energy model (eqs 3–8).
+//! (NN-Dataflow substitute), the paper's energy model (eqs 3–8), and
+//! the pluggable target subsystem on top — named accelerator profiles
+//! ([`target::HwTarget`], `--hw`/`--hw-file`) behind the
+//! [`cost::CostModel`] seam with an incremental per-layer cost cache
+//! ([`cost::CostCache`]) serving the RL hot path.
 
+pub mod cost;
 pub mod dataflow;
 pub mod energy;
 pub mod latency;
 pub mod mac_sim;
 pub mod report;
+pub mod target;
 
-/// Eyeriss-based accelerator configuration (paper §5.1, Fig 6).
+/// One accelerator's PE array, memory hierarchy and access energies —
+/// the numeric core of a [`target::HwTarget`]. The default is the
+/// paper's Eyeriss-based configuration (§5.1, Fig 6), also available
+/// by name as the `eyeriss-64` target.
 #[derive(Clone, Debug)]
 pub struct Accel {
     /// PE array rows per tile (paper: 64×64)
     pub pe_rows: usize,
     /// PE array columns per tile
     pub pe_cols: usize,
-    /// per-PE register file bytes (paper: 64 B)
+    /// per-PE register file bytes (paper: 64 B). Descriptive only for
+    /// now: the dataflow mapper derives RF *traffic* from spatial
+    /// reuse, not RF capacity, so this knob does not move any cost —
+    /// only `e_rf` (the per-access energy) does.
     pub rf_bytes: usize,
     /// shared global buffer bytes (paper: 32 KB)
     pub gb_bytes: usize,

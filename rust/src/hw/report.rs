@@ -21,6 +21,8 @@ pub struct LayerReport {
     pub dense_share: f64,
     /// fraction of this layer's energy removed by the config
     pub layer_gain: f64,
+    /// latency (cycles) of the layer under the evaluated configuration
+    pub cycles: f64,
 }
 
 /// Full breakdown for a configuration.
@@ -38,6 +40,7 @@ pub fn breakdown(model: &EnergyModel, cfgs: &[Compression]) -> Vec<LayerReport> 
                 e_compressed: e_c,
                 dense_share: e_dense / baseline,
                 layer_gain: 1.0 - e_c / e_dense.max(1e-12),
+                cycles: model.layer_cycles(l, &cfgs[l]),
             }
         })
         .collect()
@@ -90,6 +93,7 @@ mod tests {
         let s: f64 = rows.iter().map(|r| r.dense_share).sum();
         assert!((s - 1.0).abs() < 1e-9);
         assert!(rows.iter().all(|r| r.layer_gain.abs() < 1e-9));
+        assert!(rows.iter().all(|r| r.cycles > 0.0));
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Named hardware targets — the pluggable face of the `hw/` subsystem.
+//!
+//! The paper evaluates one Eyeriss-style accelerator (§5.1), but its
+//! central claim — the optimal compression policy is *hardware-aware* —
+//! only bites when the hardware can change: HAQ (Wang et al.) showed
+//! the learned bit policy specialises per accelerator (edge vs cloud,
+//! spatial vs temporal), and MCU-class targets invert the energy
+//! balance entirely (DRAM-dominated). A [`HwTarget`] bundles the
+//! accelerator configuration ([`Accel`]) with a [`ComputeScaling`] rule
+//! describing how MAC energy responds to operand precision; built-in
+//! profiles are selected by name (`--hw`, env default `HAPQ_HW`) and
+//! custom ones load from JSON (`--hw-file`, via [`crate::io::json`]).
+//!
+//! `eyeriss-64` is the pre-refactor hardcoded `Accel::default()` target
+//! and MUST stay bit-identical to it — pinned by
+//! `rust/tests/hw_target.rs` against an in-test copy of the old cost
+//! computation.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Accel;
+use crate::io::json::{self, num, obj, s, Value};
+
+/// How MAC (compute) energy scales with operand precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeScaling {
+    /// Fixed parallel multiplier: R_Q / P_FG come from the gate-level
+    /// MAC switching simulator ([`super::mac_sim::RqTable`]) — the
+    /// paper's model (eq. 6).
+    MacSim,
+    /// Bit-serial datapath (BitFusion-style): compute energy and
+    /// compute cycles scale with the *product* of the operand
+    /// bit-widths, normalised to the dense 8/8-bit reference, and a
+    /// zeroed operand costs a single 1×1 step.
+    BitSerial,
+}
+
+impl ComputeScaling {
+    /// JSON/CLI spelling of the scaling rule.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeScaling::MacSim => "mac-sim",
+            ComputeScaling::BitSerial => "bit-serial",
+        }
+    }
+
+    /// Parse a JSON/CLI spelling.
+    pub fn parse(text: &str) -> Result<ComputeScaling> {
+        match text {
+            "mac-sim" => Ok(ComputeScaling::MacSim),
+            "bit-serial" => Ok(ComputeScaling::BitSerial),
+            other => bail!("unknown compute scaling `{other}` (want mac-sim|bit-serial)"),
+        }
+    }
+}
+
+/// A named accelerator profile: everything the cost model needs to
+/// price a compression configuration on one piece of hardware.
+#[derive(Clone, Debug)]
+pub struct HwTarget {
+    /// profile name (recorded in run JSON as `hw`)
+    pub name: String,
+    /// one-line description printed by `hapq hw`
+    pub description: String,
+    /// PE array / memory hierarchy / access energies
+    pub accel: Accel,
+    /// how compute energy responds to operand precision
+    pub scaling: ComputeScaling,
+}
+
+/// The built-in profile names, in `hapq hw` table order.
+pub const BUILTIN_TARGETS: &[&str] = &["eyeriss-64", "eyeriss-128", "bitfusion", "mcu"];
+
+/// The default target name: `HAPQ_HW` if set and non-empty, else
+/// `eyeriss-64` (the paper's accelerator).
+pub fn default_hw() -> String {
+    match std::env::var("HAPQ_HW") {
+        Ok(v) if !v.is_empty() => v,
+        _ => "eyeriss-64".to_string(),
+    }
+}
+
+impl HwTarget {
+    /// A built-in profile by name (`None` for unknown names).
+    pub fn builtin(name: &str) -> Option<HwTarget> {
+        let t = match name {
+            // The paper's accelerator (§5.1, Fig 6) — numbers are
+            // exactly `Accel::default()`; the golden-parity tests pin
+            // this profile bit-identical to the pre-refactor path.
+            "eyeriss-64" => HwTarget {
+                name: name.into(),
+                description: "Eyeriss-style 64x64 PE array, 32 KB global buffer (paper \
+                              §5.1 — the default)"
+                    .into(),
+                accel: Accel::default(),
+                scaling: ComputeScaling::MacSim,
+            },
+            // A scaled-up spatial array: 4x the PEs, 4x the buffer —
+            // the "cloud" point of a HAQ-style edge/cloud sweep.
+            "eyeriss-128" => HwTarget {
+                name: name.into(),
+                description: "scaled-up Eyeriss: 128x128 PEs, 128 KB global buffer \
+                              (cloud-class spatial array)"
+                    .into(),
+                accel: Accel {
+                    pe_rows: 128,
+                    pe_cols: 128,
+                    gb_bytes: 128 * 1024,
+                    ..Accel::default()
+                },
+                scaling: ComputeScaling::MacSim,
+            },
+            // BitFusion-style bit-serial/bit-parallel composable array:
+            // compute energy and cycles scale with the product of the
+            // operand bit-widths, so low precision pays off
+            // quadratically rather than through toggle statistics.
+            "bitfusion" => HwTarget {
+                name: name.into(),
+                description: "BitFusion-style bit-serial array: compute energy/cycles \
+                              scale with the product of operand bit-widths"
+                    .into(),
+                accel: Accel {
+                    pe_rows: 32,
+                    pe_cols: 32,
+                    gb_bytes: 16 * 1024,
+                    ..Accel::default()
+                },
+                scaling: ComputeScaling::BitSerial,
+            },
+            // Cortex-M-class MCU: a single MAC issue slot, a modest
+            // SRAM standing in for the global buffer, and external
+            // memory that dwarfs everything else (Deutel et al.: MCU
+            // deployments are DRAM/flash-dominated).
+            "mcu" => HwTarget {
+                name: name.into(),
+                description: "Cortex-M-class MCU: single MAC, 64 KB SRAM, external \
+                              memory at 800x a MAC (DRAM-dominated)"
+                    .into(),
+                accel: Accel {
+                    pe_rows: 1,
+                    pe_cols: 1,
+                    rf_bytes: 32,
+                    gb_bytes: 64 * 1024,
+                    mac_bits: 8,
+                    e_mac: 1.0,
+                    e_rf: 0.5,
+                    e_gb: 1.5,
+                    e_dram: 800.0,
+                },
+                scaling: ComputeScaling::MacSim,
+            },
+            _ => return None,
+        };
+        Some(t)
+    }
+
+    /// Resolve the CLI selection: an explicit `--hw-file` profile wins,
+    /// otherwise `name` must be a built-in.
+    pub fn resolve(name: &str, file: Option<&Path>) -> Result<HwTarget> {
+        if let Some(path) = file {
+            return Self::load(path);
+        }
+        Self::builtin(name).ok_or_else(|| {
+            anyhow!(
+                "unknown hardware target `{name}`; built-ins: {BUILTIN_TARGETS:?} \
+                 (or pass a JSON profile via --hw-file)"
+            )
+        })
+    }
+
+    /// Load a JSON profile file (`--hw-file`).
+    pub fn load(path: &Path) -> Result<HwTarget> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading hardware profile {path:?}"))?;
+        Self::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parsing hardware profile {path:?}"))
+    }
+
+    /// Parse a profile from JSON. Only `name` is required; every other
+    /// field defaults to the `eyeriss-64` value, so a profile file can
+    /// describe just the deltas:
+    ///
+    /// ```json
+    /// {"name": "my-npu", "pe_rows": 16, "pe_cols": 16,
+    ///  "gb_bytes": 65536, "e_dram": 400.0, "compute": "bit-serial"}
+    /// ```
+    ///
+    /// Note `rf_bytes` is accepted for completeness but currently
+    /// descriptive only — the mapper models RF *access energy*
+    /// (`e_rf`), not RF capacity (see [`Accel::rf_bytes`]).
+    pub fn from_json(v: &Value) -> Result<HwTarget> {
+        let name = v.req("name")?.as_str()?.to_string();
+        let d = Accel::default();
+        let f = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                Some(x) => x.as_f64(),
+                None => Ok(default),
+            }
+        };
+        // strict integer fields: reject fractional, non-finite or
+        // absurd values instead of silently truncating/wrapping them
+        // through `as` casts (a typo'd profile must fail loudly)
+        let u = |key: &str, default: usize| -> Result<usize> {
+            match v.get(key) {
+                Some(x) => {
+                    let raw = x.as_f64()?;
+                    if !raw.is_finite() || raw.fract() != 0.0 || !(0.0..=1e12).contains(&raw)
+                    {
+                        bail!(
+                            "hardware profile field `{key}` must be a non-negative \
+                             integer, got {raw}"
+                        );
+                    }
+                    Ok(raw as usize)
+                }
+                None => Ok(default),
+            }
+        };
+        let mac_bits = u("mac_bits", d.mac_bits as usize)?;
+        if !(2..=8).contains(&mac_bits) {
+            bail!("hardware profile `{name}`: mac_bits must be in [2, 8], got {mac_bits}");
+        }
+        let accel = Accel {
+            pe_rows: u("pe_rows", d.pe_rows)?,
+            pe_cols: u("pe_cols", d.pe_cols)?,
+            rf_bytes: u("rf_bytes", d.rf_bytes)?,
+            gb_bytes: u("gb_bytes", d.gb_bytes)?,
+            mac_bits: mac_bits as u32,
+            e_mac: f("e_mac", d.e_mac)?,
+            e_rf: f("e_rf", d.e_rf)?,
+            e_gb: f("e_gb", d.e_gb)?,
+            e_dram: f("e_dram", d.e_dram)?,
+        };
+        if accel.pe_rows == 0 || accel.pe_cols == 0 || accel.gb_bytes == 0 {
+            bail!("hardware profile `{name}`: pe_rows/pe_cols/gb_bytes must be positive");
+        }
+        // the PE count (rows × cols) feeds usize arithmetic on the
+        // latency roofline — keep it far from overflow
+        if (accel.pe_rows as u64).saturating_mul(accel.pe_cols as u64) > 1u64 << 32 {
+            bail!("hardware profile `{name}`: pe_rows * pe_cols must be <= 2^32");
+        }
+        for (key, e) in [
+            ("e_mac", accel.e_mac),
+            ("e_rf", accel.e_rf),
+            ("e_gb", accel.e_gb),
+            ("e_dram", accel.e_dram),
+        ] {
+            // a negative access energy would make the mapper *maximise*
+            // traffic and push gains outside [0, 1] with no diagnostic
+            if !e.is_finite() || e <= 0.0 {
+                bail!("hardware profile `{name}`: {key} must be finite and positive, got {e}");
+            }
+        }
+        let scaling = match v.get("compute") {
+            Some(x) => ComputeScaling::parse(x.as_str()?)?,
+            None => ComputeScaling::MacSim,
+        };
+        let description = match v.get("description") {
+            Some(x) => x.as_str()?.to_string(),
+            None => format!("custom profile loaded from JSON ({})", scaling.name()),
+        };
+        Ok(HwTarget { name, description, accel, scaling })
+    }
+
+    /// Serialise the profile to the `--hw-file` JSON schema.
+    pub fn to_json(&self) -> Value {
+        let a = &self.accel;
+        obj(vec![
+            ("name", s(&self.name)),
+            ("description", s(&self.description)),
+            ("pe_rows", num(a.pe_rows as f64)),
+            ("pe_cols", num(a.pe_cols as f64)),
+            ("rf_bytes", num(a.rf_bytes as f64)),
+            ("gb_bytes", num(a.gb_bytes as f64)),
+            ("mac_bits", num(a.mac_bits as f64)),
+            ("e_mac", num(a.e_mac)),
+            ("e_rf", num(a.e_rf)),
+            ("e_gb", num(a.e_gb)),
+            ("e_dram", num(a.e_dram)),
+            ("compute", s(self.scaling.name())),
+        ])
+    }
+
+    /// Wrap a bare [`Accel`] as an anonymous mac-sim target — the
+    /// compatibility shim behind [`super::energy::EnergyModel::new`].
+    pub fn custom(accel: Accel) -> HwTarget {
+        HwTarget {
+            name: "custom".into(),
+            description: "ad-hoc Accel configuration (mac-sim scaling)".into(),
+            accel,
+            scaling: ComputeScaling::MacSim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_default_is_eyeriss64() {
+        for name in BUILTIN_TARGETS {
+            let t = HwTarget::builtin(name).unwrap();
+            assert_eq!(&t.name, name);
+            assert!(!t.description.is_empty());
+        }
+        assert!(HwTarget::builtin("tpu-v9").is_none());
+        assert!(HwTarget::resolve("tpu-v9", None).is_err());
+        // the env default falls back to the paper's accelerator
+        if std::env::var("HAPQ_HW").is_err() {
+            assert_eq!(default_hw(), "eyeriss-64");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        for name in BUILTIN_TARGETS {
+            let t = HwTarget::builtin(name).unwrap();
+            let back = HwTarget::from_json(&t.to_json()).unwrap();
+            assert_eq!(back.name, t.name);
+            assert_eq!(back.scaling, t.scaling);
+            assert_eq!(back.accel.pe_rows, t.accel.pe_rows);
+            assert_eq!(back.accel.pe_cols, t.accel.pe_cols);
+            assert_eq!(back.accel.rf_bytes, t.accel.rf_bytes);
+            assert_eq!(back.accel.gb_bytes, t.accel.gb_bytes);
+            assert_eq!(back.accel.mac_bits, t.accel.mac_bits);
+            assert_eq!(back.accel.e_mac.to_bits(), t.accel.e_mac.to_bits());
+            assert_eq!(back.accel.e_rf.to_bits(), t.accel.e_rf.to_bits());
+            assert_eq!(back.accel.e_gb.to_bits(), t.accel.e_gb.to_bits());
+            assert_eq!(back.accel.e_dram.to_bits(), t.accel.e_dram.to_bits());
+        }
+    }
+
+    #[test]
+    fn partial_json_inherits_eyeriss64_defaults() {
+        let v = json::parse(r#"{"name": "half-buffer", "gb_bytes": 16384}"#).unwrap();
+        let t = HwTarget::from_json(&v).unwrap();
+        let d = Accel::default();
+        assert_eq!(t.accel.gb_bytes, 16384);
+        assert_eq!(t.accel.pe_rows, d.pe_rows);
+        assert_eq!(t.accel.e_dram, d.e_dram);
+        assert_eq!(t.scaling, ComputeScaling::MacSim);
+        // name is mandatory; bad scaling and degenerate arrays rejected
+        assert!(HwTarget::from_json(&json::parse(r#"{"pe_rows": 4}"#).unwrap()).is_err());
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "compute": "quantum"}"#).unwrap()
+        )
+        .is_err());
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "pe_rows": 0}"#).unwrap()
+        )
+        .is_err());
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "mac_bits": 16}"#).unwrap()
+        )
+        .is_err());
+        // negative or zero access energies are rejected, not priced
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "e_dram": -5.0}"#).unwrap()
+        )
+        .is_err());
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "e_rf": 0}"#).unwrap()
+        )
+        .is_err());
+        // fractional integer fields are rejected, never truncated
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "mac_bits": 3.7}"#).unwrap()
+        )
+        .is_err());
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "pe_rows": 63.9}"#).unwrap()
+        )
+        .is_err());
+        // absurd PE arrays whose product would overflow are rejected
+        assert!(HwTarget::from_json(
+            &json::parse(r#"{"name": "x", "pe_rows": 10000000000, "pe_cols": 10000000000}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hw_file_wins_over_name() {
+        let dir = std::env::temp_dir().join(format!("hapq-hwfile-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("npu.json");
+        std::fs::write(&path, r#"{"name": "my-npu", "compute": "bit-serial"}"#).unwrap();
+        let t = HwTarget::resolve("eyeriss-64", Some(path.as_path())).unwrap();
+        assert_eq!(t.name, "my-npu");
+        assert_eq!(t.scaling, ComputeScaling::BitSerial);
+        let missing = dir.join("missing.json");
+        assert!(HwTarget::resolve("eyeriss-64", Some(missing.as_path())).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -14,9 +14,18 @@
 //! hapq fig8      --model resnet18               # per-layer policy dump
 //! hapq ablate    --model vgg11                  # agent-design ablations
 //! hapq perf      --model vgg11                  # hot-path latency metrics
+//! hapq hw        --model vgg11                  # per-target cost breakdown
 //! ```
 //!
 //! `compare --jobs N` fans out over N worker processes.
+//!
+//! Every command accepts `--hw NAME` (default `HAPQ_HW` or
+//! `eyeriss-64`) selecting the hardware target the cost model prices
+//! against — built-ins: `eyeriss-64`, `eyeriss-128`, `bitfusion`
+//! (bit-serial), `mcu` — or `--hw-file PATH` loading a JSON
+//! accelerator profile. `compare --hw a,b` fans the grid out over a
+//! target list for cross-hardware sweeps (reports land under
+//! `out/hw-<target>/`).
 //!
 //! Search runs (`compress`, `baseline`, `compare`) additionally accept:
 //!
@@ -66,13 +75,17 @@ fn print_help() {
         "hapq — Hardware-Aware DNN Compression via Diverse Pruning and \
          Mixed-Precision Quantization\n\
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
-         fig5, fig8, ablate, report, perf\n\
+         fig5, fig8, ablate, report, perf, hw\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
          --reward-subset N --model NAME --backend native|pjrt \
-         --kernel f32|int --threads N\n\
+         --kernel f32|int --threads N \
+         --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
          --checkpoint [PATH] --checkpoint-every K --resume --stop-after N\n\
-         compare flags: --models a,b|all --methods ours,amc,... --jobs N"
+         compare flags: --models a,b|all --methods ours,amc,... --jobs N \
+         --hw a,b (cross-target sweep)\n\
+         hw flags: --model NAME --sparsity S --bits B (reference config \
+         for the per-layer breakdown and the cross-target table)"
     );
 }
 
@@ -200,6 +213,104 @@ fn run(args: &[String]) -> Result<()> {
                 .map(str::to_string)
                 .collect();
             let jobs = cli.usize_flag("jobs", 1)?;
+            // cross-hardware sweep: `--hw a,b` fans every (model,
+            // method) pair over the target list, one report per target
+            // under `out/hw-<target>/`
+            let targets: Vec<String> =
+                coord.cfg.hw.split(',').map(str::to_string).collect();
+            if targets.len() > 1 {
+                if coord.cfg.seeds > 1 {
+                    anyhow::bail!(
+                        "--seeds and a multi-target --hw list do not compose; \
+                         sweep one target at a time"
+                    );
+                }
+                if coord.cfg.hw_file.is_some() {
+                    anyhow::bail!(
+                        "--hw-file selects a single profile; it cannot combine \
+                         with a multi-target --hw list"
+                    );
+                }
+                // validate every name before any work starts
+                for t in &targets {
+                    hapq::hw::target::HwTarget::resolve(t, None)?;
+                }
+                if jobs > 1 {
+                    let mut grid: Vec<hapq::coordinator::launcher::Job> = Vec::new();
+                    for t in &targets {
+                        for m in &models {
+                            for me in &methods {
+                                grid.push(hapq::coordinator::launcher::Job {
+                                    model: m.clone(),
+                                    method: me.clone(),
+                                    seed: None,
+                                    hw: Some(t.clone()),
+                                });
+                            }
+                        }
+                    }
+                    let results =
+                        hapq::coordinator::launcher::run_grid(&coord.cfg, grid, jobs)?;
+                    println!(
+                        "{:<12} {:<12} {:<8} {:>11} {:>13}",
+                        "hw", "model", "method", "energy-gain", "test-acc-loss"
+                    );
+                    for (job, res) in results {
+                        let hw = job.hw.as_deref().unwrap_or("-");
+                        match res {
+                            Ok(v) => println!(
+                                "{:<12} {:<12} {:<8} {:>10.1}% {:>12.2}%",
+                                hw,
+                                job.model,
+                                job.method,
+                                v.req("energy_gain")?.as_f64()? * 100.0,
+                                v.req("test_acc_loss")?.as_f64()? * 100.0
+                            ),
+                            Err(e) => println!(
+                                "{:<12} {:<12} {:<8} FAILED: {e}",
+                                hw, job.model, job.method
+                            ),
+                        }
+                    }
+                    return Ok(());
+                }
+                println!(
+                    "{:<12} {:<12} {:<8} {:>11} {:>10} {:>8}",
+                    "hw", "model", "method", "energy-gain", "acc-loss", "evals"
+                );
+                for t in &targets {
+                    let mut tcfg = coord.cfg.clone();
+                    tcfg.hw = t.clone();
+                    tcfg.out = coord.cfg.out.join(format!("hw-{t}"));
+                    // the R_Q table and manifest are target-independent:
+                    // reuse the leader's instead of re-simulating per target
+                    let tcoord = Coordinator {
+                        cfg: tcfg,
+                        rq: coord.rq.clone(),
+                        models: coord.models.clone(),
+                    };
+                    for model in &models {
+                        for method in &methods {
+                            let report = if method == "ours" {
+                                tcoord.compress(model, false)?
+                            } else {
+                                tcoord.run_baseline(model, method)?
+                            };
+                            tcoord.save_report(&report)?;
+                            println!(
+                                "{:<12} {:<12} {:<8} {:>10.1}% {:>9.2}% {:>8}",
+                                t,
+                                model,
+                                method,
+                                report.best.energy_gain * 100.0,
+                                report.test_acc_loss() * 100.0,
+                                report.evals
+                            );
+                        }
+                    }
+                }
+                return Ok(());
+            }
             if coord.cfg.seeds > 1 {
                 // multi-seed grid: every (model, method) pair sweeps
                 // --seeds consecutive seeds across the worker pool and
@@ -219,6 +330,7 @@ fn run(args: &[String]) -> Result<()> {
                             model: m.clone(),
                             method: me.clone(),
                             seed: None,
+                            hw: None,
                         })
                     })
                     .collect();
@@ -370,22 +482,124 @@ fn run(args: &[String]) -> Result<()> {
             let model = cli.str_flag("model", "vgg11");
             let coord = Coordinator::new(cfg)?;
             let env = coord.build_env(&model)?;
+            let em = env.cost.model();
             let n = env.n_layers();
             let dense = vec![hapq::hw::energy::Compression::dense(); n];
-            println!("# {model}: dense-baseline energy breakdown");
+            println!(
+                "# {model} on {}: dense-baseline energy breakdown",
+                em.target.name
+            );
             println!(
                 "{:<6} {:>12} {:>12} {:>12} {:>8}",
                 "layer", "MACs", "DRAM-words", "E(dense)", "share"
             );
-            for r in hapq::hw::report::breakdown(&env.energy, &dense) {
+            for r in hapq::hw::report::breakdown(em, &dense) {
                 println!(
                     "{:<6} {:>12} {:>12} {:>12.0} {:>7.1}%",
                     r.layer, r.macs, r.dram, r.e_dense, r.dense_share * 100.0
                 );
             }
-            let hs = hapq::hw::report::hotspots(&env.energy, &dense, 0.5);
+            let hs = hapq::hw::report::hotspots(em, &dense, 0.5);
             println!("
 hotspots holding 50% of energy: {hs:?}");
+            Ok(())
+        }
+        "hw" => {
+            // per-layer cost breakdown + cross-target comparison: pure
+            // cost-model analysis, no weights or inference involved
+            use hapq::hw::cost::CostModel;
+            use hapq::hw::energy::{Compression, EnergyModel};
+            use hapq::hw::target::{HwTarget, BUILTIN_TARGETS};
+            let model = cli.str_flag("model", "vgg11");
+            let sparsity = cli.f64_flag("sparsity", 0.5)?;
+            let bits = cli.usize_flag("bits", 4)? as u32;
+            if !(0.0..=1.0).contains(&sparsity) || !(2..=8).contains(&bits) {
+                anyhow::bail!("--sparsity must be in [0,1] and --bits in [2,8]");
+            }
+            let coord = Coordinator::new(cfg)?;
+            let entry = coord.entry(&model)?;
+            let arch =
+                hapq::model::ModelArch::load(&coord.cfg.artifacts.join(&entry.arch))?;
+            let dims = arch.layer_dims()?;
+            let n = dims.len();
+            let reference = Compression { sparsity, coarse: true, bits };
+            let cfgs = vec![reference; n];
+            let dense = vec![Compression::dense(); n];
+
+            let target = coord.hw_target()?;
+            let em = EnergyModel::for_target(dims.clone(), &target, coord.rq.clone());
+            println!("# {model} on {} — {}", target.name, target.description);
+            println!(
+                "# per-layer breakdown at s={sparsity:.2} (structured), {bits}-bit"
+            );
+            println!(
+                "{:<6} {:>12} {:>12} {:>14} {:>7} {:>14} {:>7} {:>14}",
+                "layer", "MACs", "DRAM-words", "E(dense)", "share", "E(cfg)", "gain",
+                "cycles(cfg)"
+            );
+            for r in hapq::hw::report::breakdown(&em, &cfgs) {
+                println!(
+                    "{:<6} {:>12} {:>12} {:>14.0} {:>6.1}% {:>14.0} {:>6.1}% {:>14.0}",
+                    r.layer,
+                    r.macs,
+                    r.dram,
+                    r.e_dense,
+                    r.dense_share * 100.0,
+                    r.e_compressed,
+                    r.layer_gain * 100.0,
+                    r.cycles
+                );
+            }
+            let hs = hapq::hw::report::hotspots(&em, &cfgs, 0.5);
+            println!("hotspots holding 50% of remaining energy: {hs:?}");
+
+            println!();
+            println!(
+                "# cross-target comparison at s={sparsity:.2} (structured), {bits}-bit"
+            );
+            println!(
+                "{:<12} {:>16} {:>16} {:>12} {:>13}",
+                "target", "E(dense)", "cycles(dense)", "energy-gain", "latency-gain"
+            );
+            let mut table: Vec<(String, HwTarget)> = BUILTIN_TARGETS
+                .iter()
+                .map(|name| (name.to_string(), HwTarget::builtin(name).expect("builtin")))
+                .collect();
+            // a loaded profile always gets its own row (marked `*`),
+            // even when its name shadows a built-in — the built-in row
+            // keeps the built-in numbers
+            let custom = coord.cfg.hw_file.is_some()
+                || !BUILTIN_TARGETS.contains(&target.name.as_str());
+            if custom {
+                table.push((format!("{}*", target.name), target.clone()));
+            }
+            let selected_label =
+                if custom { format!("{}*", target.name) } else { target.name.clone() };
+            for (label, t) in &table {
+                // the selected target was already mapped for the
+                // breakdown above — reuse it instead of re-running the
+                // dataflow tile search over every layer
+                let mut tm = if *label == selected_label {
+                    em.clone()
+                } else {
+                    EnergyModel::for_target(dims.clone(), t, coord.rq.clone())
+                };
+                let e0 = tm.baseline();
+                let cy0 = tm.cycles(&dense);
+                let eg = tm.energy_gain(&cfgs);
+                let lg = tm.latency_gain(&cfgs);
+                println!(
+                    "{:<12} {:>16.0} {:>16.0} {:>11.1}% {:>12.1}%",
+                    label,
+                    e0,
+                    cy0,
+                    eg * 100.0,
+                    lg * 100.0
+                );
+            }
+            if custom {
+                println!("(* the --hw/--hw-file selection the breakdown above used)");
+            }
             Ok(())
         }
         "perf" => {
@@ -421,10 +635,10 @@ hotspots holding 50% of energy: {hs:?}");
                 hapq::coordinator::rss_kib() / 1024
             );
             println!(
-                "  per-step phases: prune {:.3} ms | quant {:.3} ms | energy {:.3} ms | inference {:.3} ms",
+                "  per-step phases: prune {:.3} ms | quant {:.3} ms | hw {:.3} ms | inference {:.3} ms",
                 t.prune_s * 1e3 / steps,
                 t.quant_s * 1e3 / steps,
-                t.energy_s * 1e3 / steps,
+                t.hw_s * 1e3 / steps,
                 t.infer_s * 1e3 / steps
             );
             println!(
@@ -432,6 +646,13 @@ hotspots holding 50% of energy: {hs:?}");
                 stats.cache_hit_rate() * 100.0,
                 stats.layers_computed,
                 stats.layers_reused
+            );
+            println!(
+                "  cost model [{}]: hit-rate {:.1}% ({} layer terms re-priced, {} reused)",
+                env.cost.model().target.name,
+                env.cost.hit_rate() * 100.0,
+                env.cost.recomputed(),
+                env.cost.reused()
             );
             println!(
                 "  oracle kernel phases: pack {:.1} ms | prunable-layer eval {:.1} ms (cumulative)",

@@ -28,12 +28,14 @@ use super::SearchStrategy;
 
 /// File magic ("HAPQSRCH").
 pub const MAGIC: &[u8; 8] = b"HAPQSRCH";
-/// Format version.
-pub const VERSION: u32 = 1;
+/// Format version (2: the header gained the hardware-target name).
+pub const VERSION: u32 = 2;
 
 /// Identity of a search run — written into every checkpoint and
 /// validated on resume, so a checkpoint can never silently continue a
-/// *different* search (other model, method, seed or budget).
+/// *different* search (other model, method, seed, budget, or hardware
+/// target — replay buffers and the best-so-far were priced on one cost
+/// surface and must not be continued on another).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CheckpointHeader {
     /// method string (`ours`, `amc`, …)
@@ -46,6 +48,11 @@ pub struct CheckpointHeader {
     pub episodes: usize,
     /// prunable-layer count (episode length)
     pub n_layers: usize,
+    /// canonical JSON of the resolved hardware-target profile pricing
+    /// the run's cost surface (`--hw`/`--hw-file`) — the full profile
+    /// rather than its name, so an edited profile file with an
+    /// unchanged name still refuses to resume
+    pub hw: String,
 }
 
 /// Resumable driver progress — everything the [`super::SearchDriver`]
@@ -140,6 +147,7 @@ fn write_header(w: &mut BinWriter, h: &CheckpointHeader) {
     w.u64(h.seed);
     w.usize(h.episodes);
     w.usize(h.n_layers);
+    w.str(&h.hw);
 }
 
 fn read_and_check_header(r: &mut BinReader, expect: &CheckpointHeader) -> Result<()> {
@@ -160,11 +168,12 @@ fn read_and_check_header(r: &mut BinReader, expect: &CheckpointHeader) -> Result
         seed: r.u64()?,
         episodes: r.usize()?,
         n_layers: r.usize()?,
+        hw: r.str()?,
     };
     if &got != expect {
         bail!(
             "checkpoint belongs to a different run: saved {got:?}, this run is {expect:?} \
-             — pass the matching --model/--method/--seed/--episodes or delete the file"
+             — pass the matching --model/--method/--seed/--episodes/--hw or delete the file"
         );
     }
     Ok(())
@@ -220,7 +229,7 @@ fn save(
     w.f64(progress.elapsed_secs);
     w.f64(progress.timers.prune_s);
     w.f64(progress.timers.quant_s);
-    w.f64(progress.timers.energy_s);
+    w.f64(progress.timers.hw_s);
     w.f64(progress.timers.infer_s);
     w.u64(progress.timers.steps);
     w.f64s(&progress.curve);
@@ -265,7 +274,7 @@ fn load(
     let timers = PhaseTimers {
         prune_s: r.f64()?,
         quant_s: r.f64()?,
-        energy_s: r.f64()?,
+        hw_s: r.f64()?,
         infer_s: r.f64()?,
         steps: r.u64()?,
     };
@@ -320,6 +329,7 @@ mod tests {
             seed: 42,
             episodes: 100,
             n_layers: 9,
+            hw: "eyeriss-64".into(),
         };
         let mut w = BinWriter::new();
         write_header(&mut w, &h);
@@ -328,6 +338,11 @@ mod tests {
         let other = CheckpointHeader { seed: 43, ..h.clone() };
         let mut bad = BinReader::new(&w.buf);
         assert!(read_and_check_header(&mut bad, &other).is_err());
+        // a checkpoint priced on one hardware target must refuse to
+        // continue on another (mixed cost surfaces)
+        let other_hw = CheckpointHeader { hw: "mcu".into(), ..h.clone() };
+        let mut bad_hw = BinReader::new(&w.buf);
+        assert!(read_and_check_header(&mut bad_hw, &other_hw).is_err());
         let mut not_magic = BinReader::new(b"NOTMAGIC rest");
         assert!(read_and_check_header(&mut not_magic, &h).is_err());
     }

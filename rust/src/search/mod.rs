@@ -184,6 +184,10 @@ impl SearchDriver {
             seed: self.cfg.seed,
             episodes: strategy.episodes(),
             n_layers: env.n_layers(),
+            // the full resolved profile, not just the name: an edited
+            // --hw-file with an unchanged name is a different cost
+            // surface and must not resume
+            hw: env.cost.model().target.to_json().to_string(),
         }
     }
 

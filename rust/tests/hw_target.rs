@@ -1,0 +1,382 @@
+//! Golden-parity guarantees for the pluggable hardware-target
+//! subsystem, with NO artifacts needed (same pattern as
+//! `tests/search_driver.rs`):
+//!
+//! 1. **Cost-math parity**: this file carries a verbatim in-test copy
+//!    of the PRE-REFACTOR cost computation (the hardcoded
+//!    `Accel::default()` energy/latency path) and asserts the
+//!    refactored `eyeriss-64` target reproduces every per-layer
+//!    energy, total, gain, cycle count and breakdown row
+//!    **bit-identically**.
+//! 2. **Search parity**: a search run on an env built via the
+//!    `eyeriss-64` target is bit-identical to one built via the
+//!    historical `EnergyModel::new(dims, Accel::default(), rq)`
+//!    constructor, and every `StepResult` gain matches the golden
+//!    math recomputed from the applied configs.
+//! 3. Profile pinning: the `eyeriss-64` built-in carries exactly the
+//!    pre-refactor `Accel::default()` numbers.
+
+use hapq::baselines;
+use hapq::env::{Action, CompressionEnv};
+use hapq::hw::dataflow::{map_layer, LayerDims, Mapping};
+use hapq::hw::energy::{Compression, EnergyModel};
+use hapq::hw::mac_sim::RqTable;
+use hapq::hw::target::{ComputeScaling, HwTarget, BUILTIN_TARGETS};
+use hapq::hw::Accel;
+use hapq::io::json;
+use hapq::model::{ModelArch, Weights};
+use hapq::runtime::{EvalData, InferenceSession, NativeBackend};
+use hapq::search::SearchDriver;
+use hapq::tensor::Tensor;
+use hapq::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Golden reference — a verbatim copy of the pre-refactor cost
+// computation (hw/energy.rs + hw/latency.rs before the target
+// subsystem existed), hardcoded to `Accel::default()`. Do NOT
+// "simplify" this to call the refactored code; its whole value is
+// being the historical math.
+
+struct GoldenModel {
+    acc: Accel,
+    rq: RqTable,
+    layers: Vec<(LayerDims, Mapping, f64, f64)>,
+}
+
+impl GoldenModel {
+    fn new(dims: Vec<LayerDims>, rq: RqTable) -> Self {
+        let acc = Accel::default();
+        let layers = dims
+            .into_iter()
+            .map(|d| {
+                let m = map_layer(&d, &acc);
+                let e_mem = m.mem_energy(&acc);
+                let e_comp = m.macs as f64 * acc.e_mac;
+                (d, m, e_mem, e_comp)
+            })
+            .collect();
+        GoldenModel { acc, rq, layers }
+    }
+
+    fn dense_layer(&self, l: usize) -> f64 {
+        self.layers[l].2 + self.layers[l].3
+    }
+
+    fn layer(&self, l: usize, cfg: &Compression) -> f64 {
+        let (_, _, e_mem, e_comp) = self.layers[l];
+        let s = cfg.sparsity.clamp(0.0, 1.0);
+        let rq = self.rq.rq(cfg.bits, cfg.bits);
+        let (r_mem, r_pruned, r_unpruned) = if cfg.coarse {
+            (1.0 - s, 0.0, (1.0 - s) * rq) // eq (8)
+        } else {
+            (1.0, self.rq.p_fg * s, (1.0 - s) * rq) // eq (7)
+        };
+        e_mem * r_mem + e_comp * (r_pruned + r_unpruned)
+    }
+
+    fn total(&self, cfgs: &[Compression]) -> f64 {
+        cfgs.iter().enumerate().map(|(l, c)| self.layer(l, c)).sum()
+    }
+
+    fn baseline(&self) -> f64 {
+        (0..self.layers.len()).map(|l| self.dense_layer(l)).sum()
+    }
+
+    fn gain(&self, cfgs: &[Compression]) -> f64 {
+        1.0 - self.total(cfgs) / self.baseline()
+    }
+
+    /// Verbatim pre-refactor `latency::layer_cycles`.
+    fn layer_cycles(&self, m: &Mapping, cfg: &Compression) -> f64 {
+        let pes = (self.acc.pe_rows * self.acc.pe_cols) as f64;
+        let util = 0.7;
+        let s = cfg.sparsity.clamp(0.0, 1.0);
+        let (mac_factor, mem_factor) = if cfg.coarse {
+            (1.0 - s, 1.0 - s)
+        } else {
+            (1.0, 1.0)
+        };
+        let t_comp = m.macs as f64 * mac_factor / (pes * util);
+        let t_mem = m.dram as f64 * mem_factor / 0.4;
+        t_comp.max(t_mem)
+    }
+
+    fn cycles(&self, cfgs: &[Compression]) -> f64 {
+        self.layers
+            .iter()
+            .zip(cfgs)
+            .map(|((_, m, _, _), c)| self.layer_cycles(m, c))
+            .sum()
+    }
+
+    fn latency_gain(&self, cfgs: &[Compression]) -> f64 {
+        let dense = vec![Compression::dense(); self.layers.len()];
+        1.0 - self.cycles(cfgs) / self.cycles(&dense)
+    }
+}
+
+fn mixed_dims() -> Vec<LayerDims> {
+    vec![
+        LayerDims::conv(16, 16, 3, 16, 16, 16, 3, 1),
+        LayerDims::conv(16, 16, 16, 8, 8, 32, 3, 2),
+        LayerDims::dwconv(8, 8, 32, 8, 8, 3, 1),
+        LayerDims::fc(512, 10),
+    ]
+}
+
+fn random_cfg(rng: &mut Rng) -> Compression {
+    Compression {
+        sparsity: rng.uniform(),
+        coarse: rng.uniform() < 0.5,
+        bits: 2 + rng.below(7) as u32,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Cost-math parity, bit for bit
+
+#[test]
+fn eyeriss64_target_bit_identical_to_prerefactor_cost_math() {
+    let rq = RqTable::compute(800, 3);
+    let golden = GoldenModel::new(mixed_dims(), rq.clone());
+    let target = HwTarget::builtin("eyeriss-64").unwrap();
+    let em = EnergyModel::for_target(mixed_dims(), &target, rq);
+    assert_eq!(em.baseline().to_bits(), golden.baseline().to_bits());
+
+    let mut rng = Rng::new(11);
+    for _ in 0..200 {
+        let cfgs: Vec<Compression> =
+            (0..em.n_layers()).map(|_| random_cfg(&mut rng)).collect();
+        for (l, c) in cfgs.iter().enumerate() {
+            assert_eq!(
+                em.layer(l, c).to_bits(),
+                golden.layer(l, c).to_bits(),
+                "layer {l} energy diverged for {c:?}"
+            );
+        }
+        assert_eq!(em.total(&cfgs).to_bits(), golden.total(&cfgs).to_bits());
+        assert_eq!(em.gain(&cfgs).to_bits(), golden.gain(&cfgs).to_bits());
+        assert_eq!(em.cycles(&cfgs).to_bits(), golden.cycles(&cfgs).to_bits());
+        assert_eq!(
+            em.latency_gain(&cfgs).to_bits(),
+            golden.latency_gain(&cfgs).to_bits()
+        );
+    }
+}
+
+#[test]
+fn hw_breakdown_on_eyeriss64_matches_prerefactor_rows() {
+    let rq = RqTable::compute(800, 3);
+    let golden = GoldenModel::new(mixed_dims(), rq.clone());
+    let target = HwTarget::builtin("eyeriss-64").unwrap();
+    let em = EnergyModel::for_target(mixed_dims(), &target, rq);
+
+    let mut rng = Rng::new(29);
+    let cfgs: Vec<Compression> =
+        (0..em.n_layers()).map(|_| random_cfg(&mut rng)).collect();
+    let rows = hapq::hw::report::breakdown(&em, &cfgs);
+    assert_eq!(rows.len(), golden.layers.len());
+    let baseline = golden.baseline();
+    for (l, r) in rows.iter().enumerate() {
+        // verbatim pre-refactor report.rs row math
+        let e_dense = golden.dense_layer(l);
+        let e_c = golden.layer(l, &cfgs[l]);
+        assert_eq!(r.macs, golden.layers[l].1.macs);
+        assert_eq!(r.dram, golden.layers[l].1.dram);
+        assert_eq!(r.e_dense.to_bits(), e_dense.to_bits());
+        assert_eq!(r.e_compressed.to_bits(), e_c.to_bits());
+        assert_eq!(r.dense_share.to_bits(), (e_dense / baseline).to_bits());
+        assert_eq!(
+            r.layer_gain.to_bits(),
+            (1.0 - e_c / e_dense.max(1e-12)).to_bits()
+        );
+        assert_eq!(
+            r.cycles.to_bits(),
+            golden.layer_cycles(&golden.layers[l].1, &cfgs[l]).to_bits()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Search parity on the synthetic fixture env (no artifacts)
+
+const FIX1: &str = r#"{
+  "name": "fix1", "dataset": "synth-fix", "input": [2, 2, 1], "classes": 2,
+  "batch": 2,
+  "layers": [
+    {"name": "c1", "op": "conv", "inputs": ["input"], "k": 1, "stride": 1,
+     "relu": true, "in_shape": [2,2,1], "out_shape": [2,2,1], "in_ch": 1,
+     "out_ch": 1},
+    {"name": "gap", "op": "gap", "inputs": ["c1"], "in_shape": [2,2,1],
+     "out_shape": [1]},
+    {"name": "f1", "op": "fc", "inputs": ["gap"], "relu": false,
+     "in_shape": [1], "out_shape": [2], "in_ch": 1, "out_ch": 2}
+  ],
+  "prunable": ["c1", "f1"],
+  "dep_groups": [],
+  "act_scales": [0.3533568904593639, 0.3533568904593639],
+  "act_signed": [false, false],
+  "acc_int8": 1.0, "n_params": 5
+}"#;
+
+fn mk_env_with(energy: EnergyModel, seed: u64) -> CompressionEnv {
+    let arch = ModelArch::from_json(&json::parse(FIX1).unwrap()).unwrap();
+    let weights = Weights {
+        w: vec![
+            Tensor::new(vec![1, 1, 1, 1], vec![2.0]),
+            Tensor::new(vec![1, 2], vec![1.0, -1.0]),
+        ],
+        b: vec![
+            Tensor::new(vec![1], vec![-0.4]),
+            Tensor::new(vec![2], vec![0.0, 0.25]),
+        ],
+        sal: vec![Tensor::full(vec![1, 1, 1, 1], 1.0), Tensor::full(vec![1, 2], 1.0)],
+        chsq: vec![vec![1.0], vec![1.0, 1.0]],
+    };
+    let images = Tensor::new(
+        vec![4, 2, 2, 1],
+        vec![
+            0.2, 0.4, 0.6, 0.8, //
+            0.05, 0.1, 0.15, 0.1, //
+            0.7, 0.7, 0.2, 0.3, //
+            0.9, 0.8, 0.7, 0.6,
+        ],
+    );
+    let labels = vec![0i64, 1, 0, 0];
+    let data = EvalData::from_arrays(&arch, &images, &labels, 16, arch.batch).unwrap();
+    let session =
+        InferenceSession::from_backend(Box::new(NativeBackend::new(&arch, data).unwrap()));
+    CompressionEnv::new(arch, weights, energy, session, seed).unwrap()
+}
+
+fn fixture_dims() -> Vec<LayerDims> {
+    ModelArch::from_json(&json::parse(FIX1).unwrap())
+        .unwrap()
+        .layer_dims()
+        .unwrap()
+}
+
+#[test]
+fn env_steps_on_eyeriss64_match_golden_cost_math() {
+    let rq = RqTable::compute(300, 3);
+    let golden = GoldenModel::new(fixture_dims(), rq.clone());
+    let target = HwTarget::builtin("eyeriss-64").unwrap();
+    let em = EnergyModel::for_target(fixture_dims(), &target, rq);
+    let mut env = mk_env_with(em, 7);
+    let n = env.n_layers();
+    env.reset();
+    let mut cfgs = vec![Compression::dense(); n];
+    for t in 0..n {
+        let step = env
+            .step(Action { ratio: 0.4, bits: 0.6, alg: t % 7 })
+            .unwrap();
+        cfgs[t] = Compression {
+            sparsity: step.applied.sparsity,
+            coarse: step.applied.alg.coarse(),
+            bits: step.applied.bits,
+        };
+        assert_eq!(
+            step.energy_gain.to_bits(),
+            golden.gain(&cfgs).to_bits(),
+            "step {t}: energy gain diverged from the pre-refactor math"
+        );
+        assert_eq!(
+            step.latency_gain.to_bits(),
+            golden.latency_gain(&cfgs).to_bits(),
+            "step {t}: latency gain diverged from the pre-refactor math"
+        );
+    }
+    // the cost-query phase timer accumulated through the cache
+    assert!(env.timers.hw_s >= 0.0);
+    assert_eq!(env.timers.steps, n as u64);
+}
+
+#[test]
+fn search_on_eyeriss64_bit_identical_to_default_accel_ctor() {
+    let rq = RqTable::compute(300, 3);
+    let cfg = baselines::asqj::AsqjConfig { iters: 6, rho: 0.15, seed: 0 };
+
+    // historical construction: bare Accel::default()
+    let mut env_a = mk_env_with(
+        EnergyModel::new(fixture_dims(), Accel::default(), rq.clone()),
+        7,
+    );
+    let mut sa = baselines::asqj::AsqjStrategy::new(&cfg, env_a.n_layers());
+    let out_a = SearchDriver::plain().run(&mut env_a, &mut sa).unwrap();
+
+    // refactored construction: the named eyeriss-64 target
+    let target = HwTarget::builtin("eyeriss-64").unwrap();
+    let mut env_b = mk_env_with(
+        EnergyModel::for_target(fixture_dims(), &target, rq),
+        7,
+    );
+    let mut sb = baselines::asqj::AsqjStrategy::new(&cfg, env_b.n_layers());
+    let out_b = SearchDriver::plain().run(&mut env_b, &mut sb).unwrap();
+
+    assert_eq!(out_a.evals, out_b.evals);
+    let (a, b) = (out_a.best.unwrap(), out_b.best.unwrap());
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.acc_loss.to_bits(), b.acc_loss.to_bits());
+    assert_eq!(a.energy_gain.to_bits(), b.energy_gain.to_bits());
+    assert_eq!(a.latency_gain.to_bits(), b.latency_gain.to_bits());
+    assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+    for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+        assert_eq!(x.sparsity.to_bits(), y.sparsity.to_bits());
+        assert_eq!(x.bits, y.bits);
+        assert_eq!(x.alg.index(), y.alg.index());
+    }
+}
+
+#[test]
+fn other_targets_change_the_search_surface() {
+    // selecting a different target must actually change the reward
+    // surface the search sees (hardware-awareness is not a no-op)
+    let rq = RqTable::compute(300, 3);
+    let e64 = HwTarget::builtin("eyeriss-64").unwrap();
+    let mcu = HwTarget::builtin("mcu").unwrap();
+    let mut env_a = mk_env_with(
+        EnergyModel::for_target(fixture_dims(), &e64, rq.clone()),
+        7,
+    );
+    let mut env_b = mk_env_with(EnergyModel::for_target(fixture_dims(), &mcu, rq), 7);
+    let n = env_a.n_layers();
+    let actions: Vec<Action> = (0..n)
+        .map(|t| Action { ratio: 0.5, bits: 0.3, alg: t % 7 })
+        .collect();
+    let sol_a = env_a.evaluate_config(&actions).unwrap();
+    let sol_b = env_b.evaluate_config(&actions).unwrap();
+    assert_ne!(
+        sol_a.energy_gain.to_bits(),
+        sol_b.energy_gain.to_bits(),
+        "mcu and eyeriss-64 priced the same config identically"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Profile pinning
+
+#[test]
+fn eyeriss64_profile_carries_the_prerefactor_accel_numbers() {
+    let t = HwTarget::builtin("eyeriss-64").unwrap();
+    let a = &t.accel;
+    let d = Accel::default();
+    assert_eq!(a.pe_rows, 64);
+    assert_eq!(a.pe_cols, 64);
+    assert_eq!(a.rf_bytes, 64);
+    assert_eq!(a.gb_bytes, 32 * 1024);
+    assert_eq!(a.mac_bits, 8);
+    assert_eq!(a.e_mac.to_bits(), 1.0f64.to_bits());
+    assert_eq!(a.e_rf.to_bits(), 1.0f64.to_bits());
+    assert_eq!(a.e_gb.to_bits(), 6.0f64.to_bits());
+    assert_eq!(a.e_dram.to_bits(), 200.0f64.to_bits());
+    assert_eq!(t.scaling, ComputeScaling::MacSim);
+    // and those ARE the Default numbers the old code hardcoded
+    assert_eq!(a.pe_rows, d.pe_rows);
+    assert_eq!(a.gb_bytes, d.gb_bytes);
+    assert_eq!(a.e_dram.to_bits(), d.e_dram.to_bits());
+    // every built-in resolves end to end through the CLI path
+    for name in BUILTIN_TARGETS {
+        let t = HwTarget::resolve(name, None).unwrap();
+        assert_eq!(&t.name, name);
+    }
+}

@@ -212,6 +212,34 @@ fn report_json_roundtrips() {
     assert_eq!(v.req("kernel").unwrap().as_str().unwrap(), c.cfg.kernel.name());
     assert!(v.req("pack_secs").unwrap().as_f64().unwrap() >= 0.0);
     assert!(v.req("gemm_secs").unwrap().as_f64().unwrap() > 0.0);
+    // the hardware target and its cost-query phase timer ride along so
+    // cross-target sweeps are auditable from the JSON alone; an `ours`
+    // run prices every step, so the timer must have accumulated
+    assert_eq!(v.req("hw").unwrap().as_str().unwrap(), c.cfg.hw);
+    assert!(v.req("hw_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn hw_flag_selects_target_end_to_end() {
+    let Some(mut c) = coord(64) else { return };
+    c.cfg.hw = "mcu".to_string();
+    let env = c.build_env("vgg11").unwrap();
+    assert_eq!(env.cost.model().target.name, "mcu");
+    // a different target is a genuinely different cost surface
+    let (arch, _, _) = c.load_arch("vgg11").unwrap();
+    let e64 = hapq::hw::energy::EnergyModel::for_target(
+        arch.layer_dims().unwrap(),
+        &hapq::hw::target::HwTarget::builtin("eyeriss-64").unwrap(),
+        c.rq.clone(),
+    );
+    assert_ne!(
+        env.cost.model().baseline().to_bits(),
+        e64.baseline().to_bits(),
+        "mcu and eyeriss-64 priced the dense model identically"
+    );
+    // unknown names fail fast, before any search starts
+    c.cfg.hw = "not-a-target".to_string();
+    assert!(c.build_env("vgg11").is_err());
 }
 
 // ---------------------------------------------------------------------------

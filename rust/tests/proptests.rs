@@ -155,6 +155,109 @@ fn dataflow_mapping_deterministic_and_fits_buffer() {
 }
 
 #[test]
+fn builtin_targets_cost_monotone_and_bounded() {
+    use hapq::hw::target::{HwTarget, BUILTIN_TARGETS};
+    // the seed-7 table is the one energy.rs's bit-monotonicity test
+    // pins; 2-bit steps stay above the MAC-sim sampling noise floor
+    let rq = RqTable::compute(1500, 7);
+    forall(
+        "per-target gains monotone in sparsity/bits, bounded, shares sum to 1",
+        |r| {
+            let hw = 4 + r.below(12);
+            let ci = 2 + r.below(24);
+            let co = 2 + r.below(24);
+            let dims = vec![
+                LayerDims::conv(hw, hw, ci, hw, hw, co, 3, 1),
+                LayerDims::fc(64, 10),
+            ];
+            (
+                dims,
+                r.below(BUILTIN_TARGETS.len()),
+                r.range(0.0, 0.8),
+                2 + r.below(5) as u32,
+                r.range(0.05, 0.2),
+            )
+        },
+        |(dims, ti, s, b, ds)| {
+            let t = HwTarget::builtin(BUILTIN_TARGETS[*ti]).unwrap();
+            let m = EnergyModel::for_target(dims.clone(), &t, rq.clone());
+            let n = m.n_layers();
+            let uni = |s: f64, coarse: bool, bits: u32| {
+                vec![Compression { sparsity: s, coarse, bits }; n]
+            };
+            // energy & latency gains nondecreasing in structured sparsity
+            let g_lo = m.gain(&uni(*s, true, *b));
+            let g_hi = m.gain(&uni((*s + *ds).min(1.0), true, *b));
+            let lg_lo = m.latency_gain(&uni(*s, true, *b));
+            let lg_hi = m.latency_gain(&uni((*s + *ds).min(1.0), true, *b));
+            // energy gain nonincreasing in bits (2-bit step)
+            let g_b = m.gain(&uni(0.0, false, *b));
+            let g_b2 = m.gain(&uni(0.0, false, *b + 2));
+            // all gains bounded in [0, 1]
+            let bounded =
+                |g: f64| (-1e-9..=1.0 + 1e-9).contains(&g);
+            // per-layer dense shares sum to 1
+            let rows = hapq::hw::report::breakdown(&m, &uni(*s, true, *b));
+            let share: f64 = rows.iter().map(|r| r.dense_share).sum();
+            g_hi + 1e-9 >= g_lo
+                && lg_hi + 1e-9 >= lg_lo
+                && g_b + 1e-9 >= g_b2
+                && [g_lo, g_hi, lg_lo, lg_hi, g_b, g_b2].iter().all(|&g| bounded(g))
+                && (share - 1.0).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn cost_cache_matches_scratch_bitwise_under_invalidates() {
+    use hapq::hw::cost::{CostCache, CostModel};
+    use hapq::hw::target::{HwTarget, BUILTIN_TARGETS};
+    let rq = RqTable::compute(600, 5);
+    for name in BUILTIN_TARGETS {
+        let t = HwTarget::builtin(name).unwrap();
+        let dims = vec![
+            LayerDims::conv(12, 12, 8, 12, 12, 16, 3, 1),
+            LayerDims::conv(12, 12, 16, 6, 6, 16, 3, 2),
+            LayerDims::fc(128, 10),
+        ];
+        let em = EnergyModel::for_target(dims, &t, rq.clone());
+        let mut scratch = em.clone();
+        let mut cache = CostCache::new(em);
+        let n = scratch.n_layers();
+        let mut rng = Rng::new(0x7A57);
+        let mut cfgs = vec![Compression::dense(); n];
+        for step in 0..200 {
+            match rng.below(5) {
+                0..=2 => {
+                    let l = rng.below(n);
+                    cfgs[l] = Compression {
+                        sparsity: rng.uniform(),
+                        coarse: rng.uniform() < 0.5,
+                        bits: 2 + rng.below(7) as u32,
+                    };
+                }
+                3 => cache.invalidate(rng.below(n)),
+                _ => cache.invalidate_all(),
+            }
+            assert_eq!(
+                cache.energy_gain(&cfgs).to_bits(),
+                CostModel::energy_gain(&mut scratch, &cfgs).to_bits(),
+                "{name}: energy gain diverged at step {step}"
+            );
+            assert_eq!(
+                cache.latency_gain(&cfgs).to_bits(),
+                CostModel::latency_gain(&mut scratch, &cfgs).to_bits(),
+                "{name}: latency gain diverged at step {step}"
+            );
+        }
+        assert!(
+            cache.reused() > 0 && cache.recomputed() > 0,
+            "{name}: the walk must exercise both cache paths"
+        );
+    }
+}
+
+#[test]
 fn reward_lut_monotone_in_gain_within_target_region() {
     let lut = hapq::env::lut::RewardLut::paper();
     forall(
