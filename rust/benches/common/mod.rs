@@ -8,9 +8,115 @@
 
 use hapq::config::RunConfig;
 use hapq::coordinator::Coordinator;
+use hapq::io::json::{self, Value};
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Time `iters` calls of `f` and print the paper-style row; returns
+/// seconds per iteration.
+#[allow(dead_code)]
+pub fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    let t = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<38} {:>10.3} ms/iter  ({iters} iters)", per * 1e3);
+    per
+}
+
+/// Parity-before-timing convention (EXPERIMENTS.md §Perf): every
+/// timed pair of equivalent computations asserts bitwise-identical
+/// results *first*, so a speedup row can never hide a semantics
+/// divergence. f32 buffers compare by `to_bits`.
+#[allow(dead_code)]
+pub fn assert_f32_bits_eq(label: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{label}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: bit-parity violated at index {i} ({x} vs {y})"
+        );
+    }
+}
+
+/// [`assert_f32_bits_eq`] for f64 results (accuracies, gains).
+#[allow(dead_code)]
+pub fn assert_f64_bits_eq(label: &str, a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "{label}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: bit-parity violated at index {i} ({x} vs {y})"
+        );
+    }
+}
+
+/// Machine-readable bench collector: every timed row, rows-per-second
+/// rate, and speedup ratio lands in `BENCH_<name>.json` at the repo
+/// root so the perf trajectory is comparable across PRs
+/// (EXPERIMENTS.md §Perf documents the schema).
+#[allow(dead_code)]
+pub struct BenchJson {
+    name: &'static str,
+    rows: Vec<(String, f64)>,
+    rates: Vec<(String, f64)>,
+    speedups: Vec<(String, f64)>,
+}
+
+#[allow(dead_code)]
+impl BenchJson {
+    pub fn new(name: &'static str) -> BenchJson {
+        BenchJson { name, rows: Vec::new(), rates: Vec::new(), speedups: Vec::new() }
+    }
+
+    /// [`time`] + record the seconds-per-iteration row.
+    pub fn timed<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) -> f64 {
+        let per = time(name, iters, f);
+        self.rows.push((name.to_string(), per));
+        per
+    }
+
+    /// Record a throughput rate (e.g. GEMM output rows per second).
+    pub fn rate(&mut self, key: &str, rows_per_sec: f64) {
+        println!("{:<38} {:>10.0} rows/s", format!("  -> {key}"), rows_per_sec);
+        self.rates.push((key.to_string(), rows_per_sec));
+    }
+
+    /// Record and print a `baseline / fast` speedup ratio under a
+    /// stable snake_case key (CI greps for these).
+    pub fn speedup(&mut self, key: &str, baseline_secs: f64, fast_secs: f64) -> f64 {
+        let x = baseline_secs / fast_secs.max(1e-12);
+        println!("{:<38} {:>9.2}x", format!("  -> {key}"), x);
+        self.speedups.push((key.to_string(), x));
+        x
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (one directory above
+    /// the crate manifest).
+    pub fn write(&self) {
+        let kv = |pairs: &[(String, f64)]| {
+            json::obj(pairs.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect())
+        };
+        let doc: Value = json::obj(vec![
+            ("bench", json::s(self.name)),
+            ("schema", json::num(1.0)),
+            ("secs_per_iter", kv(&self.rows)),
+            ("rows_per_sec", kv(&self.rates)),
+            ("speedups", kv(&self.speedups)),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, doc.to_string()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => println!("\nfailed to write {}: {e}", path.display()),
+        }
+    }
 }
 
 pub fn bench_config() -> RunConfig {

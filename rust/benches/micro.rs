@@ -1,46 +1,47 @@
 //! Micro-benchmarks of the L3 hot path (the §Perf foundation):
 //! component latencies that make up one RL step —
 //! prune + quantize + energy + oracle inference + agent update.
+//!
+//! Conventions (EXPERIMENTS.md §Perf):
+//! - every timed pair of equivalent computations asserts bitwise
+//!   parity *before* timing (`common::assert_f32_bits_eq`), so a
+//!   speedup row can never mask a semantics divergence;
+//! - all rows, rows-per-second rates and speedup ratios are also
+//!   written machine-readably to `BENCH_micro.json` at the repo root
+//!   (`common::BenchJson`), so CI can diff the perf trajectory.
 
 mod common;
 
-use std::time::Instant;
+use std::sync::Arc;
 
+use common::{assert_f32_bits_eq, assert_f64_bits_eq, BenchJson};
 use hapq::env::Action;
 use hapq::hw::dataflow::{map_layer, LayerDims};
 use hapq::hw::mac_sim::RqTable;
 use hapq::hw::Accel;
 use hapq::io::json;
 use hapq::model::{ModelArch, Weights};
-use hapq::nn::mat::{CodeMat, Mat, PackedMat};
+use hapq::nn::mat::{CodeMat, Mat, PackedMat, DEFAULT_GEMM_TILE};
 use hapq::pruning::{prune, PruneAlg, PruneCtx};
 use hapq::quant::{quantize_weights, QuantGrid};
 use hapq::runtime::native::quant_params;
-use hapq::runtime::{EvalData, InferenceBackend, KernelKind, NativeBackend};
+use hapq::runtime::{Candidate, EvalData, InferenceBackend, KernelKind, NativeBackend};
 use hapq::tensor::Tensor;
 use hapq::util::rng::Rng;
 
-fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    let t = Instant::now();
-    for _ in 0..iters {
-        f();
-    }
-    let per = t.elapsed().as_secs_f64() / iters as f64;
-    println!("{name:<38} {:>10.3} ms/iter  ({iters} iters)", per * 1e3);
-    per
-}
-
 fn main() {
     common::banner("micro", "hot-path component latencies (EXPERIMENTS.md §Perf)");
+    let mut bj = BenchJson::new("micro");
+    let bj = &mut bj;
 
     // --- hw substrates ---
-    time("mac_sim: RqTable::compute(4000)", 3, || {
+    bj.timed("mac_sim: RqTable::compute(4000)", 3, || {
         let t = RqTable::compute(4000, 1);
         std::hint::black_box(&t);
     });
     let acc = Accel::default();
     let dims = LayerDims::conv(16, 16, 64, 16, 16, 128, 3, 1);
-    time("dataflow: map_layer (64->128ch conv)", 200, || {
+    bj.timed("dataflow: map_layer (64->128ch conv)", 200, || {
         std::hint::black_box(map_layer(&dims, &acc));
     });
 
@@ -53,7 +54,7 @@ fn main() {
     let sal = Tensor::full(w0.shape.clone(), 0.5);
     for alg in [PruneAlg::Level, PruneAlg::L1Ranked, PruneAlg::Splicing] {
         let name = format!("prune {:<10} (110k weights)", alg.name());
-        time(&name, 20, || {
+        bj.timed(&name, 20, || {
             let mut w = w0.clone();
             let chsq = vec![1.0f32; 128];
             let mut r = Rng::new(9);
@@ -61,7 +62,7 @@ fn main() {
             std::hint::black_box(prune(&mut w, alg, 0.5, &mut ctx));
         });
     }
-    time("quantize_weights 4-bit (110k weights)", 20, || {
+    bj.timed("quantize_weights 4-bit (110k weights)", 20, || {
         let mut w = w0.clone();
         std::hint::black_box(quantize_weights(&mut w, 4));
     });
@@ -80,7 +81,7 @@ fn main() {
             done: false,
         });
     }
-    time("ddpg update (batch 64, 3x300 nets)", 10, || {
+    bj.timed("ddpg update (batch 64, 3x300 nets)", 10, || {
         agent.update();
     });
     let mut rb = hapq::rl::rainbow::Rainbow::new(hapq::rl::rainbow::RainbowConfig::default(), 5);
@@ -88,25 +89,28 @@ fn main() {
         let f: Vec<f32> = (0..300).map(|_| r.uniform() as f32).collect();
         rb.observe(f.clone(), 2, 0.3, f, false);
     }
-    time("rainbow update (batch 64, C51x7)", 10, || {
+    bj.timed("rainbow update (batch 64, C51x7)", 10, || {
         rb.update();
     });
 
     // --- hardware cost model: cached vs scratch + per-target rows ---
-    cost_rows();
+    cost_rows(bj);
 
     // --- exec engine: incremental + threaded oracle (artifact-free) ---
-    engine_rows();
+    engine_rows(bj);
 
     // --- int vs f32 kernel: GEMM + oracle end-to-end (artifact-free) ---
-    kernel_rows();
+    kernel_rows(bj);
+
+    // --- batched candidate pricing vs serial one-at-a-time ---
+    batched_rows(bj);
 
     // --- full env step & episode (needs artifacts) ---
     if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
         let mut env = coord.build_env("vgg11").unwrap();
         let n = env.n_layers();
         let mut k = 0usize;
-        time("env full step (prune+quant+E+infer)", 20, || {
+        bj.timed("env full step (prune+quant+E+infer)", 20, || {
             if k % n == 0 {
                 env.reset();
             }
@@ -117,12 +121,14 @@ fn main() {
         });
         let actions: Vec<Action> =
             (0..n).map(|l| Action { ratio: 0.3, bits: 0.7, alg: l % 7 }).collect();
-        time("env full episode (vgg11, 10 layers)", 5, || {
+        bj.timed("env full episode (vgg11, 10 layers)", 5, || {
             env.evaluate_config(&actions).unwrap();
         });
     } else {
         println!("(artifacts missing — skipping env-level timings)");
     }
+
+    bj.write();
 }
 
 /// Cost-query throughput on the RL hot path (EXPERIMENTS.md §Perf):
@@ -131,7 +137,7 @@ fn main() {
 /// does, plus a per-target energy-gain row for every built-in hardware
 /// target. Gains are asserted bit-identical before any timing (same
 /// convention as the int-kernel rows).
-fn cost_rows() {
+fn cost_rows(bj: &mut BenchJson) {
     use hapq::hw::cost::{CostCache, CostModel};
     use hapq::hw::energy::{Compression, EnergyModel};
     use hapq::hw::target::{HwTarget, BUILTIN_TARGETS};
@@ -182,25 +188,21 @@ fn cost_rows() {
         );
     }
 
-    let t_scratch = time("cost query scratch (12-layer walk)", 300, || {
+    let t_scratch = bj.timed("cost query scratch (12-layer walk)", 300, || {
         for (l, c) in &walk {
             cfgs[*l] = *c;
             std::hint::black_box(CostModel::energy_gain(&mut scratch, &cfgs));
             std::hint::black_box(CostModel::latency_gain(&mut scratch, &cfgs));
         }
     });
-    let t_cached = time("cost query cached  (12-layer walk)", 300, || {
+    let t_cached = bj.timed("cost query cached  (12-layer walk)", 300, || {
         for (l, c) in &walk {
             cfgs[*l] = *c;
             std::hint::black_box(cache.energy_gain(&cfgs));
             std::hint::black_box(cache.latency_gain(&cfgs));
         }
     });
-    println!(
-        "{:<38} {:>9.2}x",
-        "  -> cost-cache speedup",
-        t_scratch / t_cached.max(1e-12)
-    );
+    bj.speedup("cost_cached_vs_scratch", t_scratch, t_cached);
 
     // per-target energy-gain rows at the hapq-hw reference config
     let ref_cfgs = vec![Compression { sparsity: 0.5, coarse: true, bits: 4 }; n];
@@ -209,7 +211,7 @@ fn cost_rows() {
         let mut tm = EnergyModel::for_target(dims_v.clone(), &t, rq.clone());
         let gain = tm.gain(&ref_cfgs);
         let row = format!("energy_gain [{name}] (s=.5/4b)");
-        time(&row, 200, || {
+        bj.timed(&row, 200, || {
             std::hint::black_box(CostModel::energy_gain(&mut tm, &ref_cfgs));
         });
         println!("{:<38} {:>9.1}%", format!("  -> {name} gain"), gain * 100.0);
@@ -276,12 +278,26 @@ fn bench5_setup() -> (ModelArch, Weights, Tensor, Vec<i64>) {
     (arch, weights, images, labels)
 }
 
+/// 50% prune + 4-bit quantize every prunable layer of [`bench5_setup`]
+/// weights — the tensors the reward oracle actually scores.
+fn compress5(weights: &mut Weights) {
+    for wt in weights.w.iter_mut() {
+        let sal = Tensor::full(wt.shape.clone(), 1.0);
+        let chsq = vec![1.0f32; wt.out_channels(false)];
+        let mut prng = Rng::new(31);
+        let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+        prune(wt, PruneAlg::Level, 0.5, &mut ctx);
+        quantize_weights(wt, 4);
+    }
+}
+
 /// Timing the `runtime/exec` engine on [`bench5_setup`]: full recompute
 /// vs incremental resume vs a multi-thread pool — the §Perf evidence
 /// that ships with CI, no artifacts needed. Results are bit-identical
 /// across all three rows.
-fn engine_rows() {
+fn engine_rows(bj: &mut BenchJson) {
     let (arch, weights, images, labels) = bench5_setup();
+    let n_ex = labels.len() as f64;
     let mk_backend = |threads: usize| {
         let data =
             EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
@@ -290,35 +306,38 @@ fn engine_rows() {
     let bits = [6.0f32, 6.0, 6.0, 6.0];
 
     let b1 = mk_backend(1);
-    time("oracle full recompute (5-node, 64 ex)", 10, || {
+    let t_full = bj.timed("oracle full recompute (5-node, 64 ex)", 10, || {
         b1.invalidate_all();
         std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
     });
-    time("oracle incremental, last layer dirty", 10, || {
+    bj.rate("oracle_full_examples_per_sec", n_ex / t_full);
+    bj.timed("oracle incremental, last layer dirty", 10, || {
         b1.invalidate(3);
         std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
     });
-    time("oracle incremental, mid layer dirty", 10, || {
+    bj.timed("oracle incremental, mid layer dirty", 10, || {
         b1.invalidate(1);
         std::hint::black_box(b1.accuracy(&weights, &bits).unwrap());
     });
     let b4 = mk_backend(4);
-    time("oracle full recompute, 4 threads", 10, || {
+    bj.timed("oracle full recompute, 4 threads", 10, || {
         b4.invalidate_all();
         std::hint::black_box(b4.accuracy(&weights, &bits).unwrap());
     });
-    time("oracle incremental + 4 threads, mid dirty", 10, || {
+    bj.timed("oracle incremental + 4 threads, mid dirty", 10, || {
         b4.invalidate(1);
         std::hint::black_box(b4.accuracy(&weights, &bits).unwrap());
     });
 }
 
-/// Int vs f32 kernel (EXPERIMENTS.md §Perf): a raw GEMM row and the
-/// oracle end-to-end on [`bench5_setup`] with *compressed* weights
-/// (50% pruned + 4-bit quantized — the tensors the reward oracle
-/// actually scores). Logits are bit-identical across the kernel rows
-/// (rust/tests/kernel_conformance.rs); only wall-clock may differ.
-fn kernel_rows() {
+/// Int vs f32 kernel (EXPERIMENTS.md §Perf): raw GEMM rows (f32 dense,
+/// scalar int, blocked/tiled int) and the oracle end-to-end on
+/// [`bench5_setup`] with *compressed* weights (50% pruned + 4-bit
+/// quantized — the tensors the reward oracle actually scores). Every
+/// timed pair asserts bit-parity first; the blocked kernel is required
+/// bitwise-identical to the scalar path at every tile size
+/// (rust/tests/kernel_conformance.rs), so only wall-clock may differ.
+fn kernel_rows(bj: &mut BenchJson) {
     // --- raw GEMM: f32 matmul vs packed code matmul, 1024x288 · 288x64,
     //     4-bit activations, 50% of weight rows pruned ---
     let (lo, hi, step) = quant_params(4.0, 0.5, false);
@@ -344,24 +363,34 @@ fn kernel_rows() {
         .collect();
     let wmat = Mat::from_vec(kdim, ndim, wdense.clone());
     let packed = PackedMat::pack(kdim, ndim, &wdense);
-    let t_f32 = time("gemm f32 1024x288x64 (50% pruned w)", 20, || {
+
+    // parity before timing, uniformly: the int path must reproduce the
+    // f32 path bitwise, and blocked must reproduce scalar bitwise
+    let y_f32 = acts.matmul(&wmat);
+    let y_int = packed.code_matmul(&codes, &lut);
+    let y_scalar = packed.code_matmul_scalar(&codes, &lut);
+    let y_blocked = packed.code_matmul_tiled(&codes, &lut, DEFAULT_GEMM_TILE);
+    assert_f32_bits_eq("raw GEMM f32 vs int", &y_f32.d, &y_int.d);
+    assert_f32_bits_eq("raw GEMM blocked vs scalar", &y_scalar.d, &y_blocked.d);
+
+    let t_f32 = bj.timed("gemm f32 1024x288x64 (50% pruned w)", 20, || {
         std::hint::black_box(acts.matmul(&wmat));
     });
-    let t_int = time("gemm int 1024x288x64 (packed+codes)", 20, || {
-        std::hint::black_box(packed.code_matmul(&codes, &lut));
+    let t_scalar = bj.timed("gemm int scalar (reference path)", 20, || {
+        std::hint::black_box(packed.code_matmul_scalar(&codes, &lut));
     });
-    println!("{:<38} {:>9.2}x", "  -> int GEMM speedup", t_f32 / t_int.max(1e-12));
+    let t_blocked = bj.timed("gemm int blocked (tile=64, 8 lanes)", 20, || {
+        std::hint::black_box(packed.code_matmul_tiled(&codes, &lut, DEFAULT_GEMM_TILE));
+    });
+    bj.rate("gemm_f32", rows as f64 / t_f32);
+    bj.rate("gemm_int_scalar", rows as f64 / t_scalar);
+    bj.rate("gemm_int_blocked", rows as f64 / t_blocked);
+    bj.speedup("gemm_int_vs_f32", t_f32, t_blocked);
+    bj.speedup("gemm_blocked_vs_scalar", t_scalar, t_blocked);
 
     // --- oracle end-to-end: same engine, both kernels ---
     let (arch, mut weights, images, labels) = bench5_setup();
-    for wt in weights.w.iter_mut() {
-        let sal = Tensor::full(wt.shape.clone(), 1.0);
-        let chsq = vec![1.0f32; wt.out_channels(false)];
-        let mut prng = Rng::new(31);
-        let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
-        prune(wt, PruneAlg::Level, 0.5, &mut ctx);
-        quantize_weights(wt, 4);
-    }
+    compress5(&mut weights);
     let mk = |kernel: KernelKind| {
         let data =
             EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
@@ -370,26 +399,99 @@ fn kernel_rows() {
     let bits = [4.0f32, 4.0, 4.0, 4.0];
     let bf = mk(KernelKind::F32);
     let bi = mk(KernelKind::Int);
-    assert_eq!(
-        bf.engine_logits(&weights, &bits).unwrap(),
-        bi.engine_logits(&weights, &bits).unwrap(),
-        "kernel parity violated in the bench setup"
-    );
-    let tf = time("oracle e2e full recompute, f32 kernel", 10, || {
+    let lf = bf.engine_logits(&weights, &bits).unwrap();
+    let li = bi.engine_logits(&weights, &bits).unwrap();
+    assert_f32_bits_eq("oracle e2e f32 vs int logits", &lf, &li);
+    let tf = bj.timed("oracle e2e full recompute, f32 kernel", 10, || {
         bf.invalidate_all();
         std::hint::black_box(bf.accuracy(&weights, &bits).unwrap());
     });
-    let ti = time("oracle e2e full recompute, int kernel", 10, || {
+    let ti = bj.timed("oracle e2e full recompute, int kernel", 10, || {
         bi.invalidate_all();
         std::hint::black_box(bi.accuracy(&weights, &bits).unwrap());
     });
-    println!("{:<38} {:>9.2}x", "  -> int oracle speedup", tf / ti.max(1e-12));
-    time("oracle e2e mid dirty, f32 kernel", 10, || {
+    bj.speedup("oracle_int_vs_f32", tf, ti);
+    bj.timed("oracle e2e mid dirty, f32 kernel", 10, || {
         bf.invalidate(1);
         std::hint::black_box(bf.accuracy(&weights, &bits).unwrap());
     });
-    time("oracle e2e mid dirty, int kernel", 10, || {
+    bj.timed("oracle e2e mid dirty, int kernel", 10, || {
         bi.invalidate(1);
         std::hint::black_box(bi.accuracy(&weights, &bits).unwrap());
     });
+}
+
+/// Batched candidate pricing (tentpole of the blocked-GEMM PR): the
+/// engine prices K per-layer candidate configs per forward shard in
+/// one pass, reusing the shared activation-checkpoint prefix, vs the
+/// serial swap-eval-restore loop (the `InferenceBackend` trait
+/// default, inlined here because `NativeBackend` overrides it with the
+/// batched fast path). Accuracies are asserted bit-identical before
+/// timing.
+fn batched_rows(bj: &mut BenchJson) {
+    let (arch, weights0, images, labels) = bench5_setup();
+    let mut weights = weights0.clone();
+    compress5(&mut weights);
+    let data =
+        EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
+    let backend = NativeBackend::with_options(&arch, data, 1, KernelKind::Int).unwrap();
+    let bits = [4.0f32, 4.0, 4.0, 4.0];
+
+    // K=8 candidate configs for the mid conv layer (prunable index 1),
+    // spanning prune ratios and bit widths like a proposal batch would
+    let cands: Vec<Candidate> = (0..8)
+        .map(|k| {
+            let mut wt = weights0.w[1].clone();
+            let sal = Tensor::full(wt.shape.clone(), 1.0);
+            let chsq = vec![1.0f32; wt.out_channels(false)];
+            let mut prng = Rng::new(100 + k as u64);
+            let mut ctx =
+                PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+            prune(&mut wt, PruneAlg::Level, 0.2 + 0.07 * k as f32, &mut ctx);
+            let cbits = 2 + (k % 7) as u32;
+            quantize_weights(&mut wt, cbits);
+            Candidate {
+                layer: 1,
+                w: Arc::new(wt),
+                b: Arc::new(weights0.b[1].clone()),
+                bits: cbits as f32,
+            }
+        })
+        .collect();
+
+    // serial semantics: swap the layer in, invalidate, score, restore
+    let serial = |w0: &Weights, bits0: &[f32]| -> Vec<f64> {
+        let mut w = w0.clone();
+        let mut bits = bits0.to_vec();
+        cands
+            .iter()
+            .map(|c| {
+                let (ow, ob, obits) = (w.w[c.layer].clone(), w.b[c.layer].clone(), bits[c.layer]);
+                backend.invalidate(c.layer);
+                w.w[c.layer] = (*c.w).clone();
+                w.b[c.layer] = (*c.b).clone();
+                bits[c.layer] = c.bits;
+                let acc = backend.accuracy(&w, &bits).unwrap();
+                w.w[c.layer] = ow;
+                w.b[c.layer] = ob;
+                bits[c.layer] = obits;
+                backend.invalidate(c.layer);
+                acc
+            })
+            .collect()
+    };
+
+    // parity before timing: batched == serial bitwise
+    let acc_serial = serial(&weights, &bits);
+    let acc_batch = backend.accuracy_batch(&weights, &bits, &cands).unwrap();
+    assert_f64_bits_eq("oracle batched vs serial accuracies", &acc_serial, &acc_batch);
+
+    let t_serial = bj.timed("oracle price 8 cands, serial loop", 5, || {
+        std::hint::black_box(serial(&weights, &bits));
+    });
+    let t_batch = bj.timed("oracle price 8 cands, batched pass", 5, || {
+        std::hint::black_box(backend.accuracy_batch(&weights, &bits, &cands).unwrap());
+    });
+    bj.rate("oracle_batched_cands_per_sec", cands.len() as f64 / t_batch);
+    bj.speedup("oracle_batched_vs_serial", t_serial, t_batch);
 }

@@ -35,6 +35,10 @@ pub struct RunConfig {
     pub kernel: KernelKind,
     /// oracle worker threads (`--threads`; default `HAPQ_THREADS` or 1)
     pub threads: usize,
+    /// blocked-GEMM column tile width (`--gemm-tile`; default
+    /// `HAPQ_GEMM_TILE` or `nn::mat::DEFAULT_GEMM_TILE` — a perf/testing
+    /// knob only, results are bit-identical at every width)
+    pub gemm_tile: Option<usize>,
     /// hardware-target name driving the cost model (`--hw`; default
     /// `HAPQ_HW` or `eyeriss-64` — see `hw::target::BUILTIN_TARGETS`)
     pub hw: String,
@@ -68,6 +72,7 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             kernel: crate::runtime::default_kernel(),
             threads: crate::runtime::exec::default_threads(),
+            gemm_tile: None,
             hw: crate::hw::target::default_hw(),
             hw_file: None,
             seeds: 1,
@@ -180,6 +185,7 @@ impl Cli {
             backend: BackendKind::parse(&self.str_flag("backend", d.backend.name()))?,
             kernel: KernelKind::parse(&self.str_flag("kernel", d.kernel.name()))?,
             threads: self.usize_flag("threads", d.threads)?.max(1),
+            gemm_tile: self.opt_usize_flag("gemm-tile")?.map(|t| t.max(1)),
             hw: self.str_flag("hw", &d.hw),
             hw_file: self.flags.get("hw-file").map(PathBuf::from),
             seeds: self.usize_flag("seeds", d.seeds)?.max(1),
@@ -312,6 +318,20 @@ mod tests {
         assert!((c.f64_flag("missing", 0.5).unwrap() - 0.5).abs() < 1e-12);
         let c = Cli::parse(&args("hw --sparsity lots")).unwrap();
         assert!(c.f64_flag("sparsity", 0.5).is_err());
+    }
+
+    #[test]
+    fn gemm_tile_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --gemm-tile 3")).unwrap();
+        assert_eq!(c.run_config().unwrap().gemm_tile, Some(3));
+        // zero-width tiles clamp to 1
+        let c = Cli::parse(&args("compress --gemm-tile 0")).unwrap();
+        assert_eq!(c.run_config().unwrap().gemm_tile, Some(1));
+        // absent means "use HAPQ_GEMM_TILE / the built-in default"
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().gemm_tile, None);
+        let c = Cli::parse(&args("compress --gemm-tile wide")).unwrap();
+        assert!(c.run_config().is_err());
     }
 
     #[test]

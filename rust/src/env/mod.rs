@@ -21,7 +21,7 @@ use crate::hw::energy::{Compression, EnergyModel};
 use crate::model::{ModelArch, Op, Weights};
 use crate::pruning::{prune, prune_channels, PruneAlg, PruneCtx};
 use crate::quant::quantize_weights;
-use crate::runtime::InferenceSession;
+use crate::runtime::{Candidate, InferenceSession};
 use crate::util::rng::Rng;
 use lut::RewardLut;
 
@@ -394,6 +394,85 @@ impl CompressionEnv {
             hw_gain,
             applied,
         })
+    }
+
+    /// Price a batch of candidate actions for the *current* layer
+    /// without advancing the episode: for each action, replicate
+    /// exactly what [`Self::step`] would apply (resolution → pruning →
+    /// quantization → cost query → accuracy) on clones, and return the
+    /// LUT reward each action would earn. Episode state — working
+    /// weights, configs, act bits, group masks, the step counter, and
+    /// crucially the pruning RNG stream — is left untouched, so a
+    /// subsequent [`Self::step`] behaves bit-identically whether or not
+    /// candidates were priced first (the search-driver parity test
+    /// pins this).
+    ///
+    /// Each candidate sees a *clone* of the episode RNG, i.e. exactly
+    /// the draws `step` would make for it; the accuracies come from one
+    /// batched oracle query ([`InferenceSession::accuracy_batch`]),
+    /// which amortizes the shared activation-checkpoint prefix across
+    /// the batch. Speculative [`CostCache`] queries are safe: the
+    /// incremental cache is bit-exact along any query walk.
+    pub fn price_candidates(&mut self, actions: &[Action]) -> Result<Vec<f64>> {
+        let t = self.t;
+        assert!(t < self.n_layers(), "episode finished; call reset()");
+        if actions.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ph0 = std::time::Instant::now();
+        let mut cands = Vec::with_capacity(actions.len());
+        let mut hw_gains = Vec::with_capacity(actions.len());
+        for &action in actions {
+            let want_alg = PruneAlg::from_index(action.alg);
+            let sparsity_target = action.sparsity();
+            let bits = action.precision();
+            let (alg, forced_mask, _) = self.resolve(t, want_alg);
+            let mut wt = self.work.w[t].clone();
+            let mut rng = self.rng.clone();
+            let result = if let Some((_ratio, chans)) = forced_mask {
+                prune_channels(&mut wt, &chans)
+            } else {
+                let mut ctx = PruneCtx {
+                    saliency: &self.dense.sal[t],
+                    chsq: &self.dense.chsq[t],
+                    dwconv: false,
+                    rng: &mut rng,
+                };
+                prune(&mut wt, alg, sparsity_target, &mut ctx)
+            };
+            quantize_weights(&mut wt, bits);
+            let mut cfgs = self.cfgs.clone();
+            cfgs[t] =
+                Compression { sparsity: result.sparsity, coarse: alg.coarse(), bits };
+            let energy_gain = self.cost.energy_gain(&cfgs);
+            let latency_gain = self.cost.latency_gain(&cfgs);
+            hw_gains.push(match self.metric {
+                Metric::Energy => energy_gain,
+                Metric::Latency => latency_gain,
+                Metric::Edp => 1.0 - (1.0 - energy_gain) * (1.0 - latency_gain),
+            });
+            cands.push(Candidate {
+                layer: t,
+                w: std::sync::Arc::new(wt),
+                b: std::sync::Arc::new(self.work.b[t].clone()),
+                bits: bits as f32,
+            });
+        }
+        let ph1 = std::time::Instant::now();
+        let accs = self.session.accuracy_batch(&self.work, &self.act_bits, &cands)?;
+        let ph2 = std::time::Instant::now();
+        // the cost queries ran inside the prep loop: attribute their
+        // share to hw_s and the remainder (prune + quant) to prune_s
+        let hw = self.cost.take_secs();
+        self.timers.hw_s += hw;
+        self.timers.prune_s += ((ph1 - ph0).as_secs_f64() - hw).max(0.0);
+        self.timers.infer_s += (ph2 - ph1).as_secs_f64();
+        self.n_evals += actions.len() as u64;
+        Ok(accs
+            .iter()
+            .zip(&hw_gains)
+            .map(|(&acc, &hw)| self.lut.reward((self.baseline_acc - acc).max(0.0), hw))
+            .collect())
     }
 
     /// Snapshot the finished episode as a solution record.

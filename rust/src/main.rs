@@ -50,7 +50,9 @@
 //! `int`) picks the native compute kernel: `int` is the quantized
 //! fast path, `f32` the reference — logits are bit-identical either
 //! way (`rust/tests/kernel_conformance.rs`), so the flag is purely a
-//! performance knob.
+//! performance knob. `--gemm-tile N` (default: `HAPQ_GEMM_TILE` or 64)
+//! sets the blocked integer GEMM's column tile width — also purely a
+//! perf/testing knob, bit-identical at every width.
 
 use std::time::Instant;
 
@@ -78,7 +80,7 @@ fn print_help() {
          fig5, fig8, ablate, report, perf, hw\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
          --reward-subset N --model NAME --backend native|pjrt \
-         --kernel f32|int --threads N \
+         --kernel f32|int --threads N --gemm-tile N \
          --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
          --checkpoint [PATH] --checkpoint-every K --resume --stop-after N\n\
@@ -121,6 +123,9 @@ fn print_multi_seed(
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args)?;
     let cfg: RunConfig = cli.run_config()?;
+    if let Some(tile) = cfg.gemm_tile {
+        hapq::nn::mat::set_gemm_tile(tile);
+    }
     match cli.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print_help();

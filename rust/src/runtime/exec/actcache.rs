@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::runtime::native::{eval_layer, eval_layer_int, quant_params, Feat, LayerParams};
 use crate::runtime::top1_correct;
 
-use super::pool::Job;
+use super::pool::{CandJob, Job};
 use super::{Plan, Shard};
 
 /// What one shard evaluation returns to the pool.
@@ -117,6 +117,103 @@ impl ActCache {
         let classes = last.data.len() / shard.rows;
         let correct = top1_correct(&last.data, classes, &shard.labels);
         let logits = if job.want_logits { last.data.clone() } else { Vec::new() };
+        Ok(ShardOutcome { correct, computed, reused, gemm_s, logits })
+    }
+
+    /// Price one candidate layer-config against the shard's cached
+    /// activations: recompute only the suffix reachable from the
+    /// proposed layer into scratch slots, resolving inputs
+    /// scratch-first-else-cache. The checkpoint cache is **never**
+    /// mutated, so the engine's state after a batched query is
+    /// identical to after the plain base query — which is what makes
+    /// batched pricing bitwise-equal to serial one-at-a-time
+    /// evaluation (`tests/kernel_conformance.rs`).
+    ///
+    /// Requires [`Self::eval`] to have run with the same `job` first
+    /// (the pool guarantees this ordering), so every input slot the
+    /// suffix reads is populated.
+    pub fn eval_candidate(
+        &self,
+        plan: &Plan,
+        shard: &Shard,
+        job: &Job,
+        cand: &CandJob,
+        want_logits: bool,
+    ) -> Result<ShardOutcome> {
+        let n_slots = plan.n_slots();
+        let cli = plan.layer_of_prunable[cand.pi];
+        let mut scratch: Vec<Option<Feat>> = (0..n_slots).map(|_| None).collect();
+        let mut computed = 0u64;
+        // the whole prefix before the proposed layer is served from the
+        // shared checkpoint cache
+        let mut reused = cli as u64;
+        let mut gemm_s = 0.0f64;
+        for (li, layer) in plan.arch.layers.iter().enumerate().skip(cli) {
+            let needs =
+                li == cli || plan.input_slots[li].iter().any(|&s| scratch[s].is_some());
+            if !needs {
+                reused += 1;
+                continue;
+            }
+            let out = {
+                let ins: Vec<&Feat> = plan.input_slots[li]
+                    .iter()
+                    .map(|&s| {
+                        scratch[s]
+                            .as_ref()
+                            .or(self.feats[s].as_ref())
+                            .expect("base eval leaves every input slot computed")
+                    })
+                    .collect();
+                match plan.prunable_of_layer[li] {
+                    Some(i) => {
+                        let t0 = std::time::Instant::now();
+                        // the proposed layer uses the candidate's
+                        // weights/pack; every other prunable layer in
+                        // the suffix re-evaluates with the job's base
+                        // parameters
+                        let (pack, w, bias, bits) = if i == cand.pi {
+                            (cand.pack.as_ref(), &cand.w, &cand.b.data, cand.bits)
+                        } else {
+                            (
+                                job.packs.get(i).and_then(|p| p.as_ref()),
+                                &job.w[i],
+                                &job.b[i].data,
+                                job.bits[i],
+                            )
+                        };
+                        let y = match pack {
+                            Some(pack) => eval_layer_int(layer, pack, w, bias, &ins)?,
+                            None => eval_layer(
+                                layer,
+                                Some(LayerParams {
+                                    w,
+                                    bias,
+                                    grid: quant_params(
+                                        bits,
+                                        plan.arch.act_scales[i],
+                                        plan.arch.act_signed[i],
+                                    ),
+                                }),
+                                &ins,
+                            )?,
+                        };
+                        gemm_s += t0.elapsed().as_secs_f64();
+                        y
+                    }
+                    None => eval_layer(layer, None, &ins)?,
+                }
+            };
+            scratch[li + 1] = Some(out);
+            computed += 1;
+        }
+        let last = scratch[n_slots - 1]
+            .as_ref()
+            .or(self.feats[n_slots - 1].as_ref())
+            .expect("final slot is computed or cached");
+        let classes = last.data.len() / shard.rows;
+        let correct = top1_correct(&last.data, classes, &shard.labels);
+        let logits = if want_logits { last.data.clone() } else { Vec::new() };
         Ok(ShardOutcome { correct, computed, reused, gemm_s, logits })
     }
 }

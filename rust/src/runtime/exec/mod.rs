@@ -52,10 +52,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::model::{ModelArch, Weights};
 use crate::runtime::native::{pack_layer, quant_params, PackedLayer};
-use crate::runtime::{EvalData, KernelKind, RuntimeStats};
+use crate::runtime::{Candidate, EvalData, KernelKind, RuntimeStats};
 use crate::tensor::Tensor;
 
-use pool::{Job, Pool};
+use pool::{CandJob, Job, Pool};
 
 /// Worker-thread default for new sessions: the `HAPQ_THREADS`
 /// environment variable when set to a positive integer, else 1. The
@@ -209,6 +209,10 @@ struct EngineState {
 struct EvalOut {
     correct: usize,
     logits: Vec<f32>,
+    /// per-candidate correct counts (batched oracle mode)
+    cand_correct: Vec<usize>,
+    /// per-candidate logits in example order (batched + want_logits)
+    cand_logits: Vec<Vec<f32>>,
 }
 
 /// The evaluation engine: an execution plan, a worker pool holding
@@ -282,7 +286,7 @@ impl Engine {
     /// Top-1 accuracy of `weights` + `act_bits` over every shard.
     /// The hot path: no logits are copied out of the workers.
     pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
-        let out = self.eval(weights, act_bits, false)?;
+        let out = self.eval(weights, act_bits, false, &[])?;
         Ok(out.correct as f64 / self.n_examples as f64)
     }
 
@@ -290,7 +294,41 @@ impl Engine {
     /// example order (tests compare this bitwise across thread counts
     /// and against the from-scratch reference forward).
     pub fn logits(&self, weights: &Weights, act_bits: &[f32]) -> Result<Vec<f32>> {
-        Ok(self.eval(weights, act_bits, true)?.logits)
+        Ok(self.eval(weights, act_bits, true, &[])?.logits)
+    }
+
+    /// Batched oracle: price every candidate layer-config in one
+    /// broadcast. The base config runs first (syncing every shard's
+    /// checkpoint cache exactly as [`Self::accuracy`] would), then each
+    /// candidate recomputes only its suffix against the shared prefix,
+    /// with its pack built once engine-side. Returns one top-1 accuracy
+    /// per candidate, bitwise-equal to evaluating each candidate
+    /// serially via invalidate + [`Self::accuracy`] + restore. Engine
+    /// state afterwards is identical to a plain base evaluation.
+    pub fn accuracy_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<f64>> {
+        let out = self.eval(weights, act_bits, false, cands)?;
+        Ok(out
+            .cand_correct
+            .iter()
+            .map(|&c| c as f64 / self.n_examples as f64)
+            .collect())
+    }
+
+    /// Batched-oracle logits: per candidate, the final-layer logits in
+    /// example order (the conformance suite compares these bitwise
+    /// against serial per-candidate evaluation).
+    pub fn logits_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(self.eval(weights, act_bits, true, cands)?.cand_logits)
     }
 
     /// Mark one prunable layer's staged weights dirty.
@@ -326,7 +364,13 @@ impl Engine {
         self.threads
     }
 
-    fn eval(&self, weights: &Weights, act_bits: &[f32], want_logits: bool) -> Result<EvalOut> {
+    fn eval(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        want_logits: bool,
+        cands: &[Candidate],
+    ) -> Result<EvalOut> {
         let n = self.n_prunable;
         if act_bits.len() != n {
             bail!("act_bits len {} vs {n} prunable", act_bits.len());
@@ -336,6 +380,11 @@ impl Engine {
         }
         if weights.b.len() != n {
             bail!("weights hold {} biases vs {n} prunable", weights.b.len());
+        }
+        for c in cands {
+            if c.layer >= n {
+                bail!("candidate layer {} out of range ({n} prunable)", c.layer);
+            }
         }
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         let fresh = st.all_dirty || st.staged_w.len() != n;
@@ -383,6 +432,41 @@ impl Engine {
             st.pack_s += t0.elapsed().as_secs_f64();
         }
 
+        // batched oracle: build each candidate's pack once, engine-side
+        // (shared by every worker via Arc), timed into pack_s like the
+        // base restage packs
+        let cand_jobs: Vec<CandJob> = {
+            let t0 = Instant::now();
+            let jobs = cands
+                .iter()
+                .map(|c| {
+                    let pack = if self.kernel == KernelKind::Int {
+                        let li = self.plan.layer_of_prunable[c.layer];
+                        let layer = &self.plan.arch.layers[li];
+                        let grid = quant_params(
+                            c.bits,
+                            self.plan.arch.act_scales[c.layer],
+                            self.plan.arch.act_signed[c.layer],
+                        );
+                        pack_layer(layer, &c.w, grid).map(Arc::new)
+                    } else {
+                        None
+                    };
+                    CandJob {
+                        pi: c.layer,
+                        w: c.w.clone(),
+                        b: c.b.clone(),
+                        bits: c.bits,
+                        pack,
+                    }
+                })
+                .collect();
+            if !cands.is_empty() {
+                st.pack_s += t0.elapsed().as_secs_f64();
+            }
+            jobs
+        };
+
         let mut dirty_layers = vec![false; self.plan.arch.layers.len()];
         for (i, dirty) in dirty_p.iter().enumerate() {
             if *dirty {
@@ -396,13 +480,19 @@ impl Engine {
             bits: st.last_bits.clone(),
             dirty_layers,
             want_logits,
+            cands: cand_jobs,
         });
         match self.pool.run(job) {
             Ok(agg) => {
                 st.computed += agg.computed;
                 st.reused += agg.reused;
                 st.gemm_s += agg.gemm_s;
-                Ok(EvalOut { correct: agg.correct, logits: agg.logits })
+                Ok(EvalOut {
+                    correct: agg.correct,
+                    logits: agg.logits,
+                    cand_correct: agg.cand_correct,
+                    cand_logits: agg.cand_logits,
+                })
             }
             Err(e) => {
                 // a failed query leaves worker caches in unknown states;

@@ -18,6 +18,24 @@ use crate::tensor::Tensor;
 use super::actcache::ActCache;
 use super::{Plan, Shard};
 
+/// One candidate layer-config riding along a broadcast job: the
+/// proposal's weights/bias/precision for a single prunable layer,
+/// priced against the job's shared activation-checkpoint prefix
+/// without touching any cached state.
+pub(crate) struct CandJob {
+    /// prunable index of the proposed layer
+    pub pi: usize,
+    /// proposed weight tensor for that layer
+    pub w: Arc<Tensor>,
+    /// proposed bias tensor for that layer
+    pub b: Arc<Tensor>,
+    /// proposed activation precision for that layer
+    pub bits: f32,
+    /// int-kernel pack of the proposal (built once engine-side);
+    /// `None` = f32 path, exactly like a missing entry in `Job::packs`
+    pub pack: Option<Arc<PackedLayer>>,
+}
+
 /// One broadcast evaluation request: the engine's staged per-layer
 /// weight snapshot (and, on the int kernel, the per-layer packs) plus
 /// the dirty set for this query.
@@ -37,6 +55,10 @@ pub(crate) struct Job {
     /// collect final-layer logits? accuracy queries (the RL hot path)
     /// leave this false and skip the per-example copy entirely
     pub want_logits: bool,
+    /// candidate layer-configs priced against the shared cache prefix
+    /// after the base pass (batched oracle mode); empty on plain
+    /// queries
+    pub cands: Vec<CandJob>,
 }
 
 /// One worker's fold over its shards.
@@ -52,6 +74,12 @@ pub(crate) struct Partial {
     pub gemm_s: f64,
     /// `(shard index, final-layer logits)` per owned shard
     pub shards: Vec<(usize, Vec<f32>)>,
+    /// per-candidate correct counts, `Job::cands` order
+    pub cand_correct: Vec<usize>,
+    /// `(shard index, per-candidate final-layer logits)` per owned
+    /// shard — populated only when the job wants logits and carries
+    /// candidates
+    pub cand_shards: Vec<(usize, Vec<Vec<f32>>)>,
 }
 
 struct Reply {
@@ -70,6 +98,10 @@ pub(crate) struct Aggregate {
     pub gemm_s: f64,
     /// final-layer logits concatenated in example order
     pub logits: Vec<f32>,
+    /// per-candidate correct counts over all shards, `Job::cands` order
+    pub cand_correct: Vec<usize>,
+    /// per-candidate final-layer logits concatenated in example order
+    pub cand_logits: Vec<Vec<f32>>,
 }
 
 /// The pool: job senders + the shared reply channel + join handles.
@@ -111,6 +143,8 @@ impl Pool {
         let mut reused = 0u64;
         let mut gemm_s = 0.0f64;
         let mut parts: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut cand_correct = vec![0usize; job.cands.len()];
+        let mut cand_parts: Vec<(usize, Vec<Vec<f32>>)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..self.txs.len() {
             match self.rx.recv() {
@@ -121,6 +155,10 @@ impl Pool {
                         reused += p.reused;
                         gemm_s += p.gemm_s;
                         parts.extend(p.shards);
+                        for (a, &b) in cand_correct.iter_mut().zip(&p.cand_correct) {
+                            *a += b;
+                        }
+                        cand_parts.extend(p.cand_shards);
                     }
                     Err(e) => {
                         if first_err.is_none() {
@@ -141,7 +179,14 @@ impl Pool {
         }
         parts.sort_by_key(|(gi, _)| *gi);
         let logits = parts.into_iter().flat_map(|(_, l)| l).collect();
-        Ok(Aggregate { correct, computed, reused, gemm_s, logits })
+        cand_parts.sort_by_key(|(gi, _)| *gi);
+        let mut cand_logits: Vec<Vec<f32>> = vec![Vec::new(); job.cands.len()];
+        for (_, per_cand) in cand_parts {
+            for (ci, l) in per_cand.into_iter().enumerate() {
+                cand_logits[ci].extend(l);
+            }
+        }
+        Ok(Aggregate { correct, computed, reused, gemm_s, logits, cand_correct, cand_logits })
     }
 }
 
@@ -162,7 +207,10 @@ fn eval_set(
     caches: &mut [ActCache],
     job: &Job,
 ) -> Result<Partial> {
-    let mut p = Partial::default();
+    let mut p = Partial {
+        cand_correct: vec![0usize; job.cands.len()],
+        ..Partial::default()
+    };
     for ((gi, shard), cache) in set.iter().zip(caches.iter_mut()) {
         let out = cache.eval(plan, shard, job)?;
         p.correct += out.correct;
@@ -171,6 +219,26 @@ fn eval_set(
         p.gemm_s += out.gemm_s;
         if job.want_logits {
             p.shards.push((*gi, out.logits));
+        }
+        // batched oracle: the base pass above synced this shard's
+        // checkpoint cache, so every candidate reuses the shared
+        // prefix and recomputes only its own suffix (scratch slots —
+        // the cache itself is never touched)
+        if !job.cands.is_empty() {
+            let mut per_cand: Vec<Vec<f32>> = Vec::new();
+            for (ci, cand) in job.cands.iter().enumerate() {
+                let co = cache.eval_candidate(plan, shard, job, cand, job.want_logits)?;
+                p.cand_correct[ci] += co.correct;
+                p.computed += co.computed;
+                p.reused += co.reused;
+                p.gemm_s += co.gemm_s;
+                if job.want_logits {
+                    per_cand.push(co.logits);
+                }
+            }
+            if job.want_logits {
+                p.cand_shards.push((*gi, per_cand));
+            }
         }
     }
     Ok(p)

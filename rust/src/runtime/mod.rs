@@ -28,6 +28,7 @@ pub mod native;
 pub mod pjrt;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -171,6 +172,23 @@ impl RuntimeStats {
     }
 }
 
+/// One proposed layer-config for batched oracle pricing: the
+/// candidate's weights/bias/activation-precision for a single prunable
+/// layer, evaluated against the current base weights with every other
+/// layer unchanged. `Arc` so the engine can share the tensors with its
+/// worker pool without re-cloning per worker.
+#[derive(Clone)]
+pub struct Candidate {
+    /// prunable-layer index the proposal replaces
+    pub layer: usize,
+    /// proposed weight tensor
+    pub w: Arc<Tensor>,
+    /// proposed bias tensor
+    pub b: Arc<Tensor>,
+    /// proposed activation precision (bits, 2..=8)
+    pub bits: f32,
+}
+
 /// An executor that can score compressed weights — the reward oracle.
 ///
 /// Contract shared by all backends: one call evaluates the *whole*
@@ -208,6 +226,43 @@ pub trait InferenceBackend {
     /// Backends without an incremental engine keep the default.
     fn stats(&self) -> RuntimeStats {
         RuntimeStats::default()
+    }
+
+    /// Price a batch of candidate layer-configs against the base
+    /// `(weights, act_bits)`: one top-1 accuracy per candidate, each as
+    /// if only that candidate's layer had been replaced. After the
+    /// call, staged/cached backend state must be as if only the base
+    /// config had been evaluated.
+    ///
+    /// The default is the *serial semantics definition* any batched
+    /// implementation must match bitwise: clone the base, swap one
+    /// layer in, invalidate around the query, restore. Correct for any
+    /// incremental backend; engines with a shared-prefix fast path
+    /// (the native [`exec::Engine`]) override it.
+    fn accuracy_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<f64>> {
+        let mut w = weights.clone();
+        let mut bits = act_bits.to_vec();
+        let mut out = Vec::with_capacity(cands.len());
+        for c in cands {
+            let (orig_w, orig_b, orig_bits) =
+                (w.w[c.layer].clone(), w.b[c.layer].clone(), bits[c.layer]);
+            self.invalidate(c.layer);
+            w.w[c.layer] = (*c.w).clone();
+            w.b[c.layer] = (*c.b).clone();
+            bits[c.layer] = c.bits;
+            let acc = self.accuracy(&w, &bits);
+            w.w[c.layer] = orig_w;
+            w.b[c.layer] = orig_b;
+            bits[c.layer] = orig_bits;
+            self.invalidate(c.layer);
+            out.push(acc?);
+        }
+        Ok(out)
     }
 }
 
@@ -421,6 +476,20 @@ impl InferenceSession {
     /// Top-1 accuracy of the given compressed weights + activation bits.
     pub fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
         self.backend.accuracy(weights, act_bits)
+    }
+
+    /// Price a batch of candidate layer-configs in one call — one
+    /// accuracy per candidate, bitwise-equal to serial one-at-a-time
+    /// evaluation (see [`InferenceBackend::accuracy_batch`]). The
+    /// native engine amortizes the shared activation-checkpoint prefix
+    /// across the batch.
+    pub fn accuracy_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<f64>> {
+        self.backend.accuracy_batch(weights, act_bits, cands)
     }
 
     /// Execution statistics of the backend (threads, cache hit rate) —

@@ -68,7 +68,7 @@
 use anyhow::{bail, Result};
 
 use super::exec::{default_threads, Engine};
-use super::{default_kernel, EvalData, InferenceBackend, KernelKind, RuntimeStats};
+use super::{default_kernel, Candidate, EvalData, InferenceBackend, KernelKind, RuntimeStats};
 use crate::model::{Layer, ModelArch, Op, Weights};
 use crate::nn::mat::{CodeMat, Mat, PackedMat};
 use crate::quant::QuantGrid;
@@ -664,6 +664,19 @@ impl NativeBackend {
         self.engine.logits(weights, act_bits)
     }
 
+    /// Batched-oracle logits: per candidate layer-config, the
+    /// final-layer logits in example order — the conformance suite
+    /// compares these bitwise against serial per-candidate
+    /// [`Self::engine_logits`] evaluation.
+    pub fn engine_logits_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.engine.logits_batch(weights, act_bits, cands)
+    }
+
     fn forward(&self, weights: &Weights, act_bits: &[f32], images: &[f32]) -> Result<Feat> {
         let [h, w, c] = self.data.input;
         let b = self.data.batch;
@@ -703,6 +716,18 @@ impl NativeBackend {
 impl InferenceBackend for NativeBackend {
     fn accuracy(&self, weights: &Weights, act_bits: &[f32]) -> Result<f64> {
         self.engine.accuracy(weights, act_bits)
+    }
+
+    fn accuracy_batch(
+        &self,
+        weights: &Weights,
+        act_bits: &[f32],
+        cands: &[Candidate],
+    ) -> Result<Vec<f64>> {
+        // shared-prefix fast path: one broadcast prices every candidate
+        // against the synced activation-checkpoint caches, bitwise-equal
+        // to the trait's serial definition (kernel_conformance.rs)
+        self.engine.accuracy_batch(weights, act_bits, cands)
     }
 
     fn invalidate(&self, layer: usize) {

@@ -62,6 +62,24 @@ pub trait SearchStrategy {
     /// The action for layer `t` given the current state embedding.
     fn propose(&mut self, t: usize, state: &[f32]) -> Action;
 
+    /// Candidate actions to batch-price against the oracle *before*
+    /// [`Self::propose`] is called for layer `t` (the batched-oracle
+    /// hook: the driver prices them in one
+    /// [`CompressionEnv::price_candidates`] call and reports the
+    /// rewards via [`Self::observe_candidates`]). `None` or an empty
+    /// vec skips pricing entirely — the default, which leaves every
+    /// existing strategy's env call sequence byte-identical to the
+    /// historical loops (pricing never mutates episode state, so
+    /// opting in preserves golden parity of the steps themselves).
+    fn propose_candidates(&mut self, _t: usize, _state: &[f32]) -> Option<Vec<Action>> {
+        None
+    }
+
+    /// Receive the LUT rewards the candidates from
+    /// [`Self::propose_candidates`] would earn (same order). Called
+    /// before [`Self::propose`] for the same layer.
+    fn observe_candidates(&mut self, _t: usize, _cands: &[Action], _rewards: &[f64]) {}
+
     /// Observe one env transition (`s` is the pre-step state, `action`
     /// what [`Self::propose`] returned). RL strategies store and learn
     /// here; analytic strategies ignore it.
@@ -284,6 +302,16 @@ impl SearchDriver {
             #[allow(unused_assignments)]
             let mut last = None;
             loop {
+                // batched-oracle hook: price the strategy's proposal
+                // batch (if any) before it commits to an action —
+                // pricing leaves the episode bit-identical, so the
+                // default (no candidates) changes nothing
+                if let Some(cands) = strategy.propose_candidates(t, &state) {
+                    if !cands.is_empty() {
+                        let rewards = env.price_candidates(&cands)?;
+                        strategy.observe_candidates(t, &cands, &rewards);
+                    }
+                }
                 let action = strategy.propose(t, &state);
                 let step = env.step(action)?;
                 strategy.observe(&state, &action, &step);

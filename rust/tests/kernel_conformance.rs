@@ -16,11 +16,14 @@
 //! tolerance.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use hapq::model::{Layer, ModelArch, Op, Weights};
+use hapq::nn::mat::{set_gemm_tile, CodeMat, Mat, PackedMat, DEFAULT_GEMM_TILE};
 use hapq::pruning::{prune, PruneAlg, PruneCtx};
-use hapq::quant::quantize_weights;
-use hapq::runtime::{EvalData, InferenceBackend, KernelKind, NativeBackend};
+use hapq::quant::{quantize_weights, QuantGrid};
+use hapq::runtime::native::quant_params;
+use hapq::runtime::{Candidate, EvalData, InferenceBackend, KernelKind, NativeBackend};
 use hapq::tensor::Tensor;
 use hapq::util::proptest::forall;
 use hapq::util::rng::Rng;
@@ -398,6 +401,156 @@ fn stats_record_kernel_and_pack_timings() {
     // both kernels account their prunable-layer evaluation time
     assert!(si.gemm_secs > 0.0);
     assert!(sf.gemm_secs > 0.0);
+}
+
+/// Raw-GEMM conformance for the blocked/tiled kernel: at every tile
+/// width — including widths that leave 4x8-block, 8-lane, and scalar
+/// remainders — `code_matmul_tiled` must be bitwise-equal to the
+/// scalar int path AND to the dense f32 matmul, on shapes that probe
+/// every remainder branch (n < 8, n = multiple of 8, 8 < n < 32,
+/// n > 32 with tails, single row/col).
+#[test]
+fn blocked_gemm_bitwise_equal_to_scalar_and_f32_across_tiles() {
+    let (lo, hi, step) = quant_params(4.0, 0.5, false);
+    let grid = QuantGrid::new(lo, hi, step);
+    let lut = grid.lut().unwrap();
+    let mut rng = Rng::new(0xB10C);
+    let shapes =
+        [(1usize, 1usize, 1usize), (2, 7, 8), (3, 9, 33), (5, 40, 70), (4, 16, 32), (2, 5, 9)];
+    for &(r, k, n) in &shapes {
+        // ~30% exact-zero activations (post-ReLU pattern) + a third of
+        // the weight rows fully pruned, so pack drops planes
+        let codes = CodeMat {
+            r,
+            c: k,
+            d: (0..r * k)
+                .map(|_| if rng.uniform() < 0.3 { 0 } else { 1 + rng.below(grid.levels()) as i16 })
+                .collect(),
+        };
+        let acts =
+            Mat::from_vec(r, k, codes.d.iter().map(|&c| lut[(c + 1) as usize]).collect());
+        let wdense: Vec<f32> = (0..k * n)
+            .map(|i| if (i / n) % 3 == 0 { 0.0 } else { rng.normal() as f32 * 0.2 })
+            .collect();
+        let wmat = Mat::from_vec(k, n, wdense.clone());
+        let packed = PackedMat::pack(k, n, &wdense);
+        let y_f32 = acts.matmul(&wmat);
+        let y_scalar = packed.code_matmul_scalar(&codes, &lut);
+        assert_eq!(
+            y_scalar.d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_f32.d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "scalar int != f32 reference at shape ({r},{k},{n})"
+        );
+        for tile in [1usize, 3, 8, 17, DEFAULT_GEMM_TILE] {
+            let y_tiled = packed.code_matmul_tiled(&codes, &lut, tile);
+            assert_eq!(
+                y_tiled.d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_scalar.d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "blocked != scalar at shape ({r},{k},{n}), tile {tile}"
+            );
+        }
+    }
+}
+
+/// Engine-level tile sweep: the full oracle (threads {1,4}) is bitwise
+/// invariant under the process-wide GEMM tile override. Safe to run
+/// concurrently with the other tests in this binary: every tile width
+/// is bit-identical, so a racing reader only changes wall-clock.
+#[test]
+fn engine_logits_bitwise_invariant_under_gemm_tile_and_threads() {
+    forall("engine invariant under gemm tile {1,3,8,17}", gen_fixture, |fx| {
+        let bf = backend(fx, 1, KernelKind::F32);
+        let reference = reference_logits(&bf, fx);
+        let ok = [1usize, 3, 8, 17].iter().all(|&tile| {
+            set_gemm_tile(tile);
+            [1usize, 4].iter().all(|&threads| {
+                let bi = backend(fx, threads, KernelKind::Int);
+                bi.engine_logits(&fx.weights, &fx.act_bits).unwrap() == reference
+            })
+        });
+        set_gemm_tile(0); // clear the override for the other tests
+        ok
+    });
+}
+
+/// Compress one layer of the fixture into a [`Candidate`] the way an
+/// RL proposal batch would: perturb, re-prune, re-quantize.
+fn gen_candidate(fx: &Fixture, rng: &mut Rng) -> Candidate {
+    let li = rng.below(fx.arch.prunable.len());
+    let mut wt = fx.weights.w[li].clone();
+    for v in wt.data.iter_mut() {
+        *v = *v * 1.3 + 0.02;
+    }
+    let sal = Tensor::full(wt.shape.clone(), 1.0);
+    let chsq = vec![1.0f32; wt.out_channels(false)];
+    let mut prng = Rng::new(rng.next_u64());
+    let mut ctx = PruneCtx { saliency: &sal, chsq: &chsq, dwconv: false, rng: &mut prng };
+    prune(&mut wt, PruneAlg::Level, 0.1 + 0.7 * rng.uniform() as f32, &mut ctx);
+    let wbits = 2 + rng.below(7) as u32;
+    quantize_weights(&mut wt, wbits);
+    Candidate {
+        layer: li,
+        w: Arc::new(wt),
+        b: Arc::new(fx.weights.b[li].clone()),
+        bits: BITS[rng.below(BITS.len())],
+    }
+}
+
+/// Batched candidate pricing must be bitwise-equal to the serial
+/// one-at-a-time semantics (the `InferenceBackend` trait default:
+/// invalidate -> swap layer -> score -> restore -> invalidate), on both
+/// kernels, including duplicate-layer candidates — and must leave the
+/// engine's incremental state untouched.
+#[test]
+fn batched_candidate_pricing_bitwise_equal_to_serial() {
+    forall("batched == serial candidate pricing", gen_fixture, |fx| {
+        let mut rng = Rng::new(fx.seed ^ 0xCA4D);
+        let n_cands = 2 + rng.below(4);
+        let cands: Vec<Candidate> =
+            (0..n_cands).map(|_| gen_candidate(fx, &mut rng)).collect();
+        for kernel in [KernelKind::Int, KernelKind::F32] {
+            let b = backend(fx, 1 + (fx.seed % 3) as usize, kernel);
+            let base_before = b.accuracy(&fx.weights, &fx.act_bits).unwrap();
+
+            // serial reference: the trait-default swap loop, inlined
+            // because NativeBackend overrides it with the batched path
+            let mut w = fx.weights.clone();
+            let mut bits = fx.act_bits.clone();
+            let mut serial_acc = Vec::new();
+            let mut serial_logits = Vec::new();
+            for c in &cands {
+                let (ow, ob, obits) =
+                    (w.w[c.layer].clone(), w.b[c.layer].clone(), bits[c.layer]);
+                b.invalidate(c.layer);
+                w.w[c.layer] = (*c.w).clone();
+                w.b[c.layer] = (*c.b).clone();
+                bits[c.layer] = c.bits;
+                serial_acc.push(b.accuracy(&w, &bits).unwrap());
+                serial_logits.push(b.engine_logits(&w, &bits).unwrap());
+                w.w[c.layer] = ow;
+                w.b[c.layer] = ob;
+                bits[c.layer] = obits;
+                b.invalidate(c.layer);
+            }
+
+            let batch_acc = b.accuracy_batch(&fx.weights, &fx.act_bits, &cands).unwrap();
+            let batch_logits =
+                b.engine_logits_batch(&fx.weights, &fx.act_bits, &cands).unwrap();
+            if batch_acc.iter().map(|a| a.to_bits()).collect::<Vec<_>>()
+                != serial_acc.iter().map(|a| a.to_bits()).collect::<Vec<_>>()
+            {
+                return false;
+            }
+            if batch_logits != serial_logits {
+                return false;
+            }
+            // the batch never disturbs the engine's incremental state
+            if b.accuracy(&fx.weights, &fx.act_bits).unwrap() != base_before {
+                return false;
+            }
+        }
+        true
+    });
 }
 
 #[test]

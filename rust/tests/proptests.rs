@@ -431,6 +431,159 @@ fn fake_quant_is_monotone() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// PackedMat::pack properties (the int kernel's pack-time contract):
+// pack drops exactly the all-zero rows/columns of the dense operand,
+// `live_col_count` stays consistent with the storage shape, and the
+// packed GEMM agrees bitwise with the dense f32 matmul on the
+// degenerate 1×N / N×1 shapes the blocked kernel's remainder paths see.
+
+#[test]
+fn packed_mat_pack_drops_exactly_the_zero_planes() {
+    use hapq::nn::mat::PackedMat;
+    forall(
+        "live planes mirror the dense operand; storage is consistent",
+        |r| {
+            let k = 1 + r.below(12);
+            let n = 1 + r.below(12);
+            let mut data = vec![0.0f32; k * n];
+            for v in data.iter_mut() {
+                if r.uniform() < 0.5 {
+                    *v = (r.normal() as f32) * 0.5;
+                }
+            }
+            // kill a few whole rows/columns so pruned planes appear;
+            // sometimes kill everything (the all-zero-plane edge)
+            for _ in 0..r.below(3) {
+                let row = r.below(k);
+                data[row * n..row * n + n].fill(0.0);
+            }
+            for _ in 0..r.below(3) {
+                let col = r.below(n);
+                for kk in 0..k {
+                    data[kk * n + col] = 0.0;
+                }
+            }
+            if r.below(12) == 0 {
+                data.fill(0.0);
+            }
+            (k, n, data)
+        },
+        |(k, n, data)| {
+            let (k, n) = (*k, *n);
+            let p = PackedMat::pack(k, n, data);
+            let want_rows: Vec<u32> = (0..k)
+                .filter(|&kk| (0..n).any(|c| data[kk * n + c] != 0.0))
+                .map(|x| x as u32)
+                .collect();
+            let want_cols: Vec<u32> = (0..n)
+                .filter(|&c| (0..k).any(|kk| data[kk * n + c] != 0.0))
+                .map(|x| x as u32)
+                .collect();
+            // live_cols is None exactly when every column is live
+            let cols_ok = match &p.live_cols {
+                None => want_cols.len() == n,
+                Some(cols) => *cols == want_cols && want_cols.len() < n,
+            };
+            // packed storage holds exactly the live intersection,
+            // bitwise-equal to the dense source
+            let lc = p.live_col_count();
+            let d_ok = p.d.len() == want_rows.len() * lc
+                && p.live_rows.iter().enumerate().all(|(ri, &kk)| {
+                    want_cols.iter().enumerate().all(|(ci, &c)| {
+                        p.d[ri * lc + ci].to_bits()
+                            == data[kk as usize * n + c as usize].to_bits()
+                    })
+                });
+            p.live_rows == want_rows && cols_ok && lc == want_cols.len() && d_ok
+        },
+    );
+}
+
+#[test]
+fn packed_mat_single_live_row_and_column() {
+    use hapq::nn::mat::PackedMat;
+    forall(
+        "one nonzero element packs to a 1x1 plane",
+        |r| {
+            let k = 1 + r.below(16);
+            let n = 1 + r.below(16);
+            let ri = r.below(k);
+            let ci = r.below(n);
+            let v = (0.1 + r.uniform() as f32).copysign(if r.uniform() < 0.5 { -1.0 } else { 1.0 });
+            (k, n, ri, ci, v)
+        },
+        |&(k, n, ri, ci, v)| {
+            let mut data = vec![0.0f32; k * n];
+            data[ri * n + ci] = v;
+            let p = PackedMat::pack(k, n, &data);
+            let cols_ok = if n == 1 {
+                p.live_cols.is_none() // the single column is live
+            } else {
+                p.live_cols.as_deref() == Some(&[ci as u32])
+            };
+            p.live_rows == [ri as u32]
+                && cols_ok
+                && p.live_col_count() == 1
+                && p.d.len() == 1
+                && p.d[0].to_bits() == v.to_bits()
+        },
+    );
+}
+
+#[test]
+fn packed_code_matmul_matches_dense_on_degenerate_shapes() {
+    use hapq::nn::mat::{CodeMat, Mat, PackedMat};
+    use hapq::quant::QuantGrid;
+    use hapq::runtime::native::quant_params;
+    forall(
+        "pack + code_matmul == dense matmul bitwise on 1xN and Nx1",
+        |r| {
+            let bits = 2.0 + r.below(7) as f32;
+            let scale = r.range(0.2, 2.0) as f32;
+            let k = 1 + r.below(24);
+            let long = 1 + r.below(24);
+            // (rows, cols): one of the two GEMM dims pinned to 1
+            let (rows, cols) = if r.uniform() < 0.5 { (1, long) } else { (long, 1) };
+            (bits, scale, rows, k, cols, r.next_u64())
+        },
+        |&(bits, scale, rows, k, cols, seed)| {
+            let (lo, hi, step) = quant_params(bits, scale, false);
+            let grid = QuantGrid::new(lo, hi, step);
+            let lut = grid.lut().unwrap();
+            let mut rng = Rng::new(seed);
+            // codes mix structural zeros (-1), grid zeros (0) and live
+            // levels — everything the engine's im2col can emit
+            let codes = CodeMat {
+                r: rows,
+                c: k,
+                d: (0..rows * k)
+                    .map(|_| match rng.below(4) {
+                        0 => -1,
+                        1 => 0,
+                        _ => 1 + rng.below(grid.levels()) as i16,
+                    })
+                    .collect(),
+            };
+            let acts = Mat::from_vec(
+                rows,
+                k,
+                codes.d.iter().map(|&c| lut[(c + 1) as usize]).collect(),
+            );
+            let wdense: Vec<f32> = (0..k * cols)
+                .map(|_| if rng.uniform() < 0.4 { 0.0 } else { rng.normal() as f32 * 0.3 })
+                .collect();
+            let wmat = Mat::from_vec(k, cols, wdense.clone());
+            let packed = PackedMat::pack(k, cols, &wdense);
+            let dense = acts.matmul(&wmat);
+            let bitwise = |m: &Mat| m.d.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            bitwise(&packed.code_matmul(&codes, &lut)) == bitwise(&dense)
+                && bitwise(&packed.code_matmul_scalar(&codes, &lut)) == bitwise(&dense)
+                && bitwise(&packed.code_matmul_tiled(&codes, &lut, 3)) == bitwise(&dense)
+        },
+    );
+}
+
 #[test]
 fn npz_roundtrip_arbitrary_tensors() {
     use hapq::io::npz::{save_npz, Npz};

@@ -779,6 +779,151 @@ fn resume_reproduces_uninterrupted_nsga2() {
 }
 
 // ---------------------------------------------------------------------------
+// Batched candidate pricing: env purity + serial ground truth + driver
+// hook wiring
+
+#[test]
+fn price_candidates_matches_serial_steps_and_keeps_episode_pure() {
+    let probe_cands: Vec<Action> = (0..5)
+        .map(|i| Action { ratio: 0.1 + 0.15 * i as f64, bits: 0.2 + 0.15 * i as f64, alg: i % 7 })
+        .collect();
+    let ep_actions = [
+        Action { ratio: 0.3, bits: 0.7, alg: 1 },
+        Action { ratio: 0.5, bits: 0.4, alg: 4 },
+    ];
+
+    // twin A: the plain episode
+    let mut env_a = mk_env(ENV_SEED);
+    env_a.reset();
+    let steps_a: Vec<_> =
+        (0..env_a.n_layers()).map(|t| env_a.step(ep_actions[t]).unwrap()).collect();
+
+    // twin B: same episode, but a pricing batch fires before every step
+    let mut env_b = mk_env(ENV_SEED);
+    env_b.reset();
+    let mut prices = Vec::new();
+    for (t, st_a) in steps_a.iter().enumerate() {
+        prices.push(env_b.price_candidates(&probe_cands).unwrap());
+        let st_b = env_b.step(ep_actions[t]).unwrap();
+        // bitwise: pricing must not perturb the episode stream
+        assert_eq!(st_b.reward.to_bits(), st_a.reward.to_bits(), "reward diverged at t={t}");
+        assert_eq!(st_b.done, st_a.done, "done flag diverged at t={t}");
+        for (x, y) in st_b.state.iter().zip(&st_a.state) {
+            assert_eq!(x.to_bits(), y.to_bits(), "state diverged at t={t}");
+        }
+    }
+    // eval accounting: the episode's evals plus K per pricing call
+    assert_eq!(
+        env_b.n_evals,
+        env_a.n_evals + (probe_cands.len() * steps_a.len()) as u64,
+        "price_candidates must count its oracle queries"
+    );
+
+    // serial ground truth: each price equals the reward a twin env gets
+    // from actually step()ing that candidate at the same point
+    for (t, price_row) in prices.iter().enumerate() {
+        assert_eq!(price_row.len(), probe_cands.len());
+        for (ci, cand) in probe_cands.iter().enumerate() {
+            let mut env_c = mk_env(ENV_SEED);
+            env_c.reset();
+            for a in &ep_actions[..t] {
+                env_c.step(*a).unwrap();
+            }
+            let st = env_c.step(*cand).unwrap();
+            assert_eq!(
+                price_row[ci].to_bits(),
+                st.reward.to_bits(),
+                "price != serial step reward at t={t}, candidate {ci}"
+            );
+        }
+    }
+}
+
+/// A fixed-sequence strategy that (optionally) prices a candidate
+/// batch before every step and records what the env hands back.
+struct ProbingStrategy {
+    actions: Vec<Action>,
+    cands: Vec<Action>,
+    seen: Vec<(usize, Vec<f64>)>,
+    probe: bool,
+}
+
+impl SearchStrategy for ProbingStrategy {
+    fn method(&self) -> &str {
+        "probe"
+    }
+    fn episodes(&self) -> usize {
+        1
+    }
+    fn propose(&mut self, t: usize, _state: &[f32]) -> Action {
+        self.actions[t]
+    }
+    fn propose_candidates(&mut self, _t: usize, _state: &[f32]) -> Option<Vec<Action>> {
+        if self.probe {
+            Some(self.cands.clone())
+        } else {
+            None
+        }
+    }
+    fn observe_candidates(&mut self, t: usize, _cands: &[Action], rewards: &[f64]) {
+        self.seen.push((t, rewards.to_vec()));
+    }
+    fn save_state(&self, _w: &mut hapq::io::bin::BinWriter) {}
+    fn load_state(&mut self, _r: &mut hapq::io::bin::BinReader) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn driver_candidate_hooks_price_batches_without_perturbing_the_search() {
+    let ep_actions = vec![
+        Action { ratio: 0.3, bits: 0.7, alg: 1 },
+        Action { ratio: 0.5, bits: 0.4, alg: 4 },
+    ];
+    let cands: Vec<Action> = (0..3)
+        .map(|i| Action { ratio: 0.2 + 0.2 * i as f64, bits: 0.3 + 0.2 * i as f64, alg: i })
+        .collect();
+
+    let mut env_plain = mk_env(ENV_SEED);
+    let mut s_plain = ProbingStrategy {
+        actions: ep_actions.clone(),
+        cands: vec![],
+        seen: vec![],
+        probe: false,
+    };
+    let out_plain = SearchDriver::plain().run(&mut env_plain, &mut s_plain).unwrap();
+    assert!(s_plain.seen.is_empty(), "no candidates proposed, none observed");
+
+    let mut env_probe = mk_env(ENV_SEED);
+    let mut s_probe = ProbingStrategy {
+        actions: ep_actions.clone(),
+        cands: cands.clone(),
+        seen: vec![],
+        probe: true,
+    };
+    let out_probe = SearchDriver::plain().run(&mut env_probe, &mut s_probe).unwrap();
+
+    // pricing fired at every layer, one reward per candidate, in order
+    assert_eq!(s_probe.seen.len(), env_probe.n_layers());
+    for (t, (seen_t, rewards)) in s_probe.seen.iter().enumerate() {
+        assert_eq!(*seen_t, t, "observe_candidates layer order");
+        assert_eq!(rewards.len(), cands.len(), "one reward per candidate");
+    }
+    // ...and left the search outcome bit-identical to the no-hook run
+    assert_sol_eq(
+        out_plain.best.as_ref().unwrap(),
+        out_probe.best.as_ref().unwrap(),
+        "candidate hooks",
+    );
+    assert_eq!(out_plain.episodes_run, out_probe.episodes_run);
+    assert_eq!(
+        env_probe.n_evals,
+        env_plain.n_evals + (cands.len() * env_probe.n_layers()) as u64,
+        "hook pricing must be accounted as extra oracle evals"
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Checkpoint hygiene
 
 #[test]
