@@ -56,6 +56,15 @@ pub struct RunConfig {
     pub resume: bool,
     /// suspend after N episodes this session (`--stop-after`)
     pub stop_after: Option<usize>,
+    /// structured-trace output file (`--trace PATH`; default
+    /// `HAPQ_TRACE`) — JSONL, `telemetry::SCHEMA` = 1, read back by
+    /// `hapq trace`; `None` keeps telemetry disabled (a near-no-op)
+    pub trace: Option<PathBuf>,
+}
+
+/// `HAPQ_TRACE` (non-empty) as the default `--trace` path.
+fn default_trace() -> Option<PathBuf> {
+    std::env::var("HAPQ_TRACE").ok().filter(|v| !v.is_empty()).map(PathBuf::from)
 }
 
 impl Default for RunConfig {
@@ -80,6 +89,7 @@ impl Default for RunConfig {
             checkpoint_every: 25,
             resume: false,
             stop_after: None,
+            trace: default_trace(),
         }
     }
 }
@@ -193,6 +203,7 @@ impl Cli {
             checkpoint_every: self.usize_flag("checkpoint-every", d.checkpoint_every)?,
             resume: self.bool_flag("resume"),
             stop_after: self.opt_usize_flag("stop-after")?,
+            trace: self.flags.get("trace").map(PathBuf::from).or(d.trace),
         };
         if cfg.seeds > 1 && (cfg.resume || cfg.stop_after.is_some() || cfg.checkpoint.is_some()) {
             bail!(
@@ -309,6 +320,17 @@ mod tests {
         assert_eq!(c.run_config().unwrap().hw, crate::hw::target::default_hw());
         let c = Cli::parse(&args("compare --hw eyeriss-64,mcu")).unwrap();
         assert_eq!(c.run_config().unwrap().hw, "eyeriss-64,mcu");
+    }
+
+    #[test]
+    fn trace_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --trace out/t.jsonl")).unwrap();
+        assert_eq!(c.run_config().unwrap().trace, Some(PathBuf::from("out/t.jsonl")));
+        // absent falls back to HAPQ_TRACE; with neither set, telemetry
+        // stays disabled (env-dependent, so only pin the flagged case
+        // plus the flag-wins-over-default ordering)
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().trace, super::default_trace());
     }
 
     #[test]

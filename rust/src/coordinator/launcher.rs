@@ -98,7 +98,20 @@ impl Job {
             }
             (None, None) => v.extend(["--hw".into(), cfg.hw.clone()]),
         }
+        // tracing leader: each child records its own per-job trace file
+        // (an explicit --trace also overrides any inherited HAPQ_TRACE,
+        // which would otherwise point every child at the same path);
+        // the launcher aggregates them after the sweep
+        if cfg.trace.is_some() {
+            v.extend(["--trace".into(), self.trace_path(&cfg.out).display().to_string()]);
+        }
         v
+    }
+
+    /// Where the child process writes its per-job trace (next to its
+    /// report, inside the job's isolated output directory).
+    pub fn trace_path(&self, out: &Path) -> PathBuf {
+        self.out_dir(out).join("trace.jsonl")
     }
 
     /// Where the child process writes its result JSON.
@@ -217,7 +230,78 @@ pub fn run_grid_with(
             std::thread::sleep(backoff.step());
         }
     }
+    if let Some(dest) = &cfg.trace {
+        match aggregate_traces(cfg, &done, dest) {
+            Ok(n) if n > 0 => {
+                eprintln!("[launcher] aggregated {n} child traces -> {}", dest.display())
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("[launcher] trace aggregation failed: {e:#}"),
+        }
+    }
     Ok(done)
+}
+
+/// Merge the children's per-job trace files into one JSONL at `dest`:
+/// a fresh leader `meta` header, then every child's events — jobs in
+/// deterministic (model, method, hw, seed) order, each event annotated
+/// with a `job` label so `hapq trace` can tell the streams apart.
+/// Returns the number of child traces merged; children that wrote no
+/// trace (or unparsable lines) are skipped, not fatal.
+fn aggregate_traces(
+    cfg: &crate::config::RunConfig,
+    done: &[(Job, Result<json::Value>)],
+    dest: &Path,
+) -> Result<usize> {
+    let mut out = String::new();
+    out.push_str(
+        &json::obj(vec![
+            ("kind", json::s("meta")),
+            ("schema", json::num(crate::telemetry::SCHEMA as f64)),
+            ("source", json::s("hapq-launcher")),
+        ])
+        .to_string(),
+    );
+    out.push('\n');
+    let mut jobs: Vec<&Job> = done.iter().map(|(j, _)| j).collect();
+    jobs.sort_by(|a, b| {
+        (&a.model, &a.method, &a.hw, a.seed).cmp(&(&b.model, &b.method, &b.hw, b.seed))
+    });
+    let mut merged = 0usize;
+    for job in jobs {
+        let path = job.trace_path(&cfg.out);
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let mut label = format!("{}/{}", job.model, job.method);
+        if let Some(hw) = &job.hw {
+            label.push_str(&format!("/hw-{hw}"));
+        }
+        if let Some(s) = job.seed {
+            label.push_str(&format!("/seed{s}"));
+        }
+        let mut any = false;
+        for line in text.lines() {
+            let Ok(mut v) = json::parse(line) else { continue };
+            if v.get("kind").and_then(|k| k.as_str().ok()) == Some("meta") {
+                continue;
+            }
+            set_field(&mut v, "job", json::s(&label))?;
+            out.push_str(&v.to_string());
+            out.push('\n');
+            any = true;
+        }
+        if any {
+            merged += 1;
+        }
+    }
+    if merged > 0 {
+        if let Some(dir) = dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(dest, out).with_context(|| format!("writing trace {dest:?}"))?;
+    }
+    Ok(merged)
 }
 
 /// Overwrite-or-append one field of a report object.
@@ -419,6 +503,53 @@ mod tests {
             j.report_path(Path::new("out")),
             PathBuf::from("out/hw-mcu/seed7/m__haq.json")
         );
+    }
+
+    #[test]
+    fn trace_flag_forwards_per_job_paths_and_aggregates() {
+        // a tracing leader hands every child its own --trace path…
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.trace = None;
+        let j = Job { model: "m".into(), method: "ours".into(), seed: Some(7), hw: None };
+        assert!(!j.args(&cfg).contains(&"--trace".to_string()));
+        cfg.trace = Some(PathBuf::from("out/trace.jsonl"));
+        let a = j.args(&cfg);
+        let ti = a.iter().position(|x| x == "--trace").unwrap();
+        assert_eq!(a[ti + 1], cfg.out.join("seed7/trace.jsonl").display().to_string());
+        // …and folds the child files back into one labelled stream
+        let out = std::env::temp_dir().join(format!("hapq-launcher-trace-{}", std::process::id()));
+        let dest = out.join("trace.jsonl");
+        let cfg =
+            crate::config::RunConfig { out: out.clone(), trace: Some(dest.clone()), ..Default::default() };
+        let mk = |seed: u64| Job { model: "m".into(), method: "haq".into(), seed: Some(seed), hw: None };
+        for seed in [43u64, 42] {
+            let p = mk(seed).trace_path(&out);
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(
+                &p,
+                format!(
+                    "{{\"kind\":\"meta\",\"schema\":1,\"source\":\"hapq\"}}\n\
+                     {{\"kind\":\"count\",\"name\":\"c\",\"thread\":\"main\",\"seq\":0,\"n\":{seed}}}\n"
+                ),
+            )
+            .unwrap();
+        }
+        let done: Vec<(Job, Result<json::Value>)> =
+            vec![(mk(43), Err(anyhow!("x"))), (mk(42), Err(anyhow!("x")))];
+        assert_eq!(aggregate_traces(&cfg, &done, &dest).unwrap(), 2);
+        let text = std::fs::read_to_string(&dest).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // leader meta + one event per child, child metas dropped, and
+        // the jobs land in seed order regardless of completion order
+        assert_eq!(lines.len(), 3, "{text}");
+        let meta = json::parse(lines[0]).unwrap();
+        assert_eq!(meta.req("source").unwrap().as_str().unwrap(), "hapq-launcher");
+        let e1 = json::parse(lines[1]).unwrap();
+        assert_eq!(e1.req("job").unwrap().as_str().unwrap(), "m/haq/seed42");
+        assert_eq!(e1.req("n").unwrap().as_f64().unwrap(), 42.0);
+        let e2 = json::parse(lines[2]).unwrap();
+        assert_eq!(e2.req("job").unwrap().as_str().unwrap(), "m/haq/seed43");
+        let _ = std::fs::remove_dir_all(out);
     }
 
     #[test]

@@ -55,6 +55,16 @@ pub struct PhaseTimers {
     pub steps: u64,
 }
 
+impl crate::telemetry::MetricsSource for PhaseTimers {
+    fn record(&self, reg: &mut crate::telemetry::MetricsRegistry) {
+        reg.counter("env.steps", self.steps);
+        reg.gauge("env.prune_s", self.prune_s);
+        reg.gauge("env.quant_s", self.quant_s);
+        reg.gauge("env.hw_s", self.hw_s);
+        reg.gauge("env.infer_s", self.infer_s);
+    }
+}
+
 /// Hardware metric driving the reward (§4.2.3: "any other hardware
 /// metric (e.g., latency) is seamlessly supported").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -360,6 +370,7 @@ impl CompressionEnv {
 
         // hardware feedback: incremental cost cache + validation
         // inference (only layer t's terms re-price — CostCache)
+        let (rc0, ru0) = (self.cost.recomputed(), self.cost.reused());
         let energy_gain = self.cost.energy_gain(&self.cfgs);
         let latency_gain = self.cost.latency_gain(&self.cfgs);
         let hw_gain = match self.metric {
@@ -370,12 +381,25 @@ impl CompressionEnv {
         let ph3 = std::time::Instant::now();
         let accuracy = self.session.accuracy(&self.work, &self.act_bits)?;
         let ph4 = std::time::Instant::now();
+        let hw_secs = self.cost.take_secs();
         self.timers.prune_s += (ph1 - ph0).as_secs_f64();
         self.timers.quant_s += (ph2 - ph1).as_secs_f64();
-        self.timers.hw_s += self.cost.take_secs();
+        self.timers.hw_s += hw_secs;
         self.timers.infer_s += (ph4 - ph3).as_secs_f64();
         self.timers.steps += 1;
         self.n_evals += 1;
+        if crate::telemetry::enabled() {
+            // retrospective spans reuse the phase clock readings above —
+            // tracing adds zero extra `Instant::now` calls to this path
+            use crate::telemetry::{count, span_at};
+            span_at("env.prune", ph0, (ph1 - ph0).as_secs_f64(), Some(t));
+            span_at("env.quant", ph1, (ph2 - ph1).as_secs_f64(), Some(t));
+            span_at("env.hw", ph2, hw_secs, Some(t));
+            span_at("env.infer", ph3, (ph4 - ph3).as_secs_f64(), Some(t));
+            span_at("env.step", ph0, (ph4 - ph0).as_secs_f64(), Some(t));
+            count("hw.cache.recomputed", self.cost.recomputed() - rc0);
+            count("hw.cache.reused", self.cost.reused() - ru0);
+        }
         let acc_loss = (self.baseline_acc - accuracy).max(0.0);
         let reward = self.lut.reward(acc_loss, hw_gain);
 

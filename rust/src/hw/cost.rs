@@ -171,6 +171,16 @@ impl CostCache {
     }
 }
 
+impl crate::telemetry::MetricsSource for CostCache {
+    fn record(&self, reg: &mut crate::telemetry::MetricsRegistry) {
+        reg.counter("hw.queries", self.queries);
+        reg.counter("hw.recomputed", self.recomputed);
+        reg.counter("hw.reused", self.reused);
+        reg.gauge("hw.cache_hit_rate", self.hit_rate());
+        reg.label("hw.target", &self.model.target.name);
+    }
+}
+
 impl CostModel for CostCache {
     fn n_layers(&self) -> usize {
         self.keys.len()

@@ -40,5 +40,6 @@ pub mod quant;
 pub mod rl;
 pub mod runtime;
 pub mod search;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

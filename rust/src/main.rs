@@ -15,6 +15,7 @@
 //! hapq ablate    --model vgg11                  # agent-design ablations
 //! hapq perf      --model vgg11                  # hot-path latency metrics
 //! hapq hw        --model vgg11                  # per-target cost breakdown
+//! hapq trace     out/trace.jsonl                # analyze a --trace file
 //! ```
 //!
 //! `compare --jobs N` fans out over N worker processes.
@@ -53,6 +54,16 @@
 //! performance knob. `--gemm-tile N` (default: `HAPQ_GEMM_TILE` or 64)
 //! sets the blocked integer GEMM's column tile width — also purely a
 //! perf/testing knob, bit-identical at every width.
+//!
+//! `--trace PATH` (default: `HAPQ_TRACE`) records a structured JSONL
+//! trace of the run — search step/episode events, env phase spans,
+//! exec-pool shard spans — without perturbing results (bit-identical
+//! on/off; `rust/tests/telemetry.rs`). `hapq trace PATH` renders the
+//! file as reward-curve / per-phase / hottest-layer tables, `--chrome
+//! OUT.json` exports it for `chrome://tracing`, and `--canon` prints
+//! the clock-stripped canonical stream (determinism diffs). `hapq perf
+//! --json` / `hapq hw --json` emit the matching `MetricsRegistry`
+//! snapshot instead of human tables.
 
 use std::time::Instant;
 
@@ -77,17 +88,20 @@ fn print_help() {
         "hapq — Hardware-Aware DNN Compression via Diverse Pruning and \
          Mixed-Precision Quantization\n\
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
-         fig5, fig8, ablate, report, perf, hw\n\
+         fig5, fig8, ablate, report, perf, hw, trace\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
          --reward-subset N --model NAME --backend native|pjrt \
          --kernel f32|int --threads N --gemm-tile N \
-         --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json\n\
+         --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json \
+         --trace PATH (JSONL telemetry; default HAPQ_TRACE)\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
          --checkpoint [PATH] --checkpoint-every K --resume --stop-after N\n\
          compare flags: --models a,b|all --methods ours,amc,... --jobs N \
          --hw a,b (cross-target sweep)\n\
          hw flags: --model NAME --sparsity S --bits B (reference config \
-         for the per-layer breakdown and the cross-target table)"
+         for the per-layer breakdown and the cross-target table)\n\
+         perf/hw flags: --json (print the MetricsRegistry snapshot)\n\
+         trace flags: FILE.jsonl [--top N] [--chrome OUT.json] [--canon]"
     );
 }
 
@@ -126,6 +140,32 @@ fn run(args: &[String]) -> Result<()> {
     if let Some(tile) = cfg.gemm_tile {
         hapq::nn::mat::set_gemm_tile(tile);
     }
+    // fan-out commands delegate tracing to the launcher (each child
+    // writes its own trace; the parent aggregates them into the --trace
+    // path) — enabling the in-process sink here would clobber that
+    // file. `hapq trace` reads traces, it never records one.
+    let fan_out = cfg.seeds > 1 || cli.usize_flag("jobs", 1)? > 1;
+    if !fan_out && cli.cmd != "trace" {
+        if let Some(path) = &cfg.trace {
+            hapq::telemetry::init(path);
+        }
+    }
+    let result = dispatch(&cli, cfg);
+    match hapq::telemetry::finish() {
+        Ok(Some(path)) => eprintln!("trace written: {}", path.display()),
+        Ok(None) => {}
+        Err(e) => {
+            if result.is_ok() {
+                return Err(e);
+            }
+            // the run error is the interesting one — don't mask it
+            eprintln!("warning: trace write failed: {e:#}");
+        }
+    }
+    result
+}
+
+fn dispatch(cli: &Cli, cfg: RunConfig) -> Result<()> {
     match cli.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print_help();
@@ -531,41 +571,44 @@ hotspots holding 50% of energy: {hs:?}");
             let cfgs = vec![reference; n];
             let dense = vec![Compression::dense(); n];
 
+            let json_out = cli.bool_flag("json");
             let target = coord.hw_target()?;
             let em = EnergyModel::for_target(dims.clone(), &target, coord.rq.clone());
-            println!("# {model} on {} — {}", target.name, target.description);
-            println!(
-                "# per-layer breakdown at s={sparsity:.2} (structured), {bits}-bit"
-            );
-            println!(
-                "{:<6} {:>12} {:>12} {:>14} {:>7} {:>14} {:>7} {:>14}",
-                "layer", "MACs", "DRAM-words", "E(dense)", "share", "E(cfg)", "gain",
-                "cycles(cfg)"
-            );
-            for r in hapq::hw::report::breakdown(&em, &cfgs) {
+            if !json_out {
+                println!("# {model} on {} — {}", target.name, target.description);
                 println!(
-                    "{:<6} {:>12} {:>12} {:>14.0} {:>6.1}% {:>14.0} {:>6.1}% {:>14.0}",
-                    r.layer,
-                    r.macs,
-                    r.dram,
-                    r.e_dense,
-                    r.dense_share * 100.0,
-                    r.e_compressed,
-                    r.layer_gain * 100.0,
-                    r.cycles
+                    "# per-layer breakdown at s={sparsity:.2} (structured), {bits}-bit"
+                );
+                println!(
+                    "{:<6} {:>12} {:>12} {:>14} {:>7} {:>14} {:>7} {:>14}",
+                    "layer", "MACs", "DRAM-words", "E(dense)", "share", "E(cfg)", "gain",
+                    "cycles(cfg)"
+                );
+                for r in hapq::hw::report::breakdown(&em, &cfgs) {
+                    println!(
+                        "{:<6} {:>12} {:>12} {:>14.0} {:>6.1}% {:>14.0} {:>6.1}% {:>14.0}",
+                        r.layer,
+                        r.macs,
+                        r.dram,
+                        r.e_dense,
+                        r.dense_share * 100.0,
+                        r.e_compressed,
+                        r.layer_gain * 100.0,
+                        r.cycles
+                    );
+                }
+                let hs = hapq::hw::report::hotspots(&em, &cfgs, 0.5);
+                println!("hotspots holding 50% of remaining energy: {hs:?}");
+
+                println!();
+                println!(
+                    "# cross-target comparison at s={sparsity:.2} (structured), {bits}-bit"
+                );
+                println!(
+                    "{:<12} {:>16} {:>16} {:>12} {:>13}",
+                    "target", "E(dense)", "cycles(dense)", "energy-gain", "latency-gain"
                 );
             }
-            let hs = hapq::hw::report::hotspots(&em, &cfgs, 0.5);
-            println!("hotspots holding 50% of remaining energy: {hs:?}");
-
-            println!();
-            println!(
-                "# cross-target comparison at s={sparsity:.2} (structured), {bits}-bit"
-            );
-            println!(
-                "{:<12} {:>16} {:>16} {:>12} {:>13}",
-                "target", "E(dense)", "cycles(dense)", "energy-gain", "latency-gain"
-            );
             let mut table: Vec<(String, HwTarget)> = BUILTIN_TARGETS
                 .iter()
                 .map(|name| (name.to_string(), HwTarget::builtin(name).expect("builtin")))
@@ -580,6 +623,7 @@ hotspots holding 50% of energy: {hs:?}");
             }
             let selected_label =
                 if custom { format!("{}*", target.name) } else { target.name.clone() };
+            let mut reg = hapq::telemetry::MetricsRegistry::new();
             for (label, t) in &table {
                 // the selected target was already mapped for the
                 // breakdown above — reuse it instead of re-running the
@@ -593,16 +637,31 @@ hotspots holding 50% of energy: {hs:?}");
                 let cy0 = tm.cycles(&dense);
                 let eg = tm.energy_gain(&cfgs);
                 let lg = tm.latency_gain(&cfgs);
-                println!(
-                    "{:<12} {:>16.0} {:>16.0} {:>11.1}% {:>12.1}%",
-                    label,
-                    e0,
-                    cy0,
-                    eg * 100.0,
-                    lg * 100.0
-                );
+                if json_out {
+                    // the `*` suffix survives into the key so a custom
+                    // profile shadowing a built-in name keeps both rows
+                    reg.gauge(&format!("hw.{label}.baseline_energy"), e0);
+                    reg.gauge(&format!("hw.{label}.dense_cycles"), cy0);
+                    reg.gauge(&format!("hw.{label}.energy_gain"), eg);
+                    reg.gauge(&format!("hw.{label}.latency_gain"), lg);
+                } else {
+                    println!(
+                        "{:<12} {:>16.0} {:>16.0} {:>11.1}% {:>12.1}%",
+                        label,
+                        e0,
+                        cy0,
+                        eg * 100.0,
+                        lg * 100.0
+                    );
+                }
             }
-            if custom {
+            if json_out {
+                reg.label("hw.target", &target.name);
+                reg.label("hw.model", &model);
+                reg.gauge("hw.reference.sparsity", sparsity);
+                reg.gauge("hw.reference.bits", bits as f64);
+                println!("{}", reg.snapshot().to_string());
+            } else if custom {
                 println!("(* the --hw/--hw-file selection the breakdown above used)");
             }
             Ok(())
@@ -615,7 +674,9 @@ hotspots holding 50% of energy: {hs:?}");
             // reward-oracle latency, phase-accounted (EXPERIMENTS.md §Perf)
             let t0 = Instant::now();
             let iters = 10;
+            let mut iter_secs = Vec::with_capacity(iters);
             for i in 0..iters {
+                let it0 = Instant::now();
                 let actions: Vec<hapq::env::Action> = (0..n)
                     .map(|l| hapq::env::Action {
                         ratio: 0.3,
@@ -624,11 +685,30 @@ hotspots holding 50% of energy: {hs:?}");
                     })
                     .collect();
                 env.evaluate_config(&actions)?;
+                iter_secs.push(it0.elapsed().as_secs_f64());
             }
             let per_ep = t0.elapsed().as_secs_f64() / iters as f64;
             let t = env.timers;
             let steps = t.steps.max(1) as f64;
             let stats = env.session_stats();
+            if cli.bool_flag("json") {
+                // one MetricsRegistry snapshot over every stat source —
+                // the same schema `hapq hw --json` and (later) `hapq
+                // serve` emit
+                let mut reg = hapq::telemetry::MetricsRegistry::new();
+                reg.collect(&env.timers);
+                reg.collect(&stats);
+                reg.collect(&env.cost);
+                for s in &iter_secs {
+                    reg.observe("perf.episode_secs", *s);
+                }
+                reg.gauge("perf.layers", n as f64);
+                reg.gauge("perf.rss_kib", hapq::coordinator::rss_kib() as f64);
+                reg.label("perf.model", &model);
+                reg.label("perf.backend", coord.cfg.backend.name());
+                println!("{}", reg.snapshot().to_string());
+                return Ok(());
+            }
             println!(
                 "{model}: episode {:.1} ms ({} layers, {:.2} ms/step), backend {}, kernel {}, threads {}, rss {} MiB",
                 per_ep * 1e3,
@@ -664,6 +744,43 @@ hotspots holding 50% of energy: {hs:?}");
                 stats.pack_secs * 1e3,
                 stats.gemm_secs * 1e3
             );
+            Ok(())
+        }
+        "trace" => {
+            let file = cli
+                .flags
+                .get("file")
+                .cloned()
+                .or_else(|| cli.positional.first().cloned())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "usage: hapq trace FILE.jsonl [--top N] [--chrome OUT.json] [--canon]"
+                    )
+                })?;
+            let tr = hapq::telemetry::analyze::load(std::path::Path::new(&file))?;
+            if cli.bool_flag("canon") {
+                // clock-stripped canonical stream — byte-diffable across
+                // same-seed runs (the CI determinism check)
+                print!("{}", tr.canonical());
+                return Ok(());
+            }
+            if let Some(out) = cli.flags.get("chrome") {
+                let v = tr.chrome()?;
+                let n = v.req("traceEvents")?.as_arr()?.len();
+                std::fs::write(out, v.to_string())
+                    .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+                println!("wrote {out} ({n} trace events) — load in chrome://tracing");
+                return Ok(());
+            }
+            let top = cli.usize_flag("top", 5)?;
+            println!("# reward curve ({file})");
+            print!("{}", tr.reward_table()?);
+            println!();
+            println!("# per-phase rollup");
+            print!("{}", tr.phase_rollup()?);
+            println!();
+            println!("# top-{top} hottest layers");
+            print!("{}", tr.hottest_layers(top)?);
             Ok(())
         }
         other => {

@@ -429,7 +429,11 @@ impl Engine {
                     st.staged_pack[i] = pack;
                 }
             }
-            st.pack_s += t0.elapsed().as_secs_f64();
+            let pack_secs = t0.elapsed().as_secs_f64();
+            st.pack_s += pack_secs;
+            if crate::telemetry::enabled() {
+                crate::telemetry::span_at("exec.pack", t0, pack_secs, None);
+            }
         }
 
         // batched oracle: build each candidate's pack once, engine-side
@@ -462,7 +466,11 @@ impl Engine {
                 })
                 .collect();
             if !cands.is_empty() {
-                st.pack_s += t0.elapsed().as_secs_f64();
+                let pack_secs = t0.elapsed().as_secs_f64();
+                st.pack_s += pack_secs;
+                if crate::telemetry::enabled() {
+                    crate::telemetry::span_at("exec.pack_cands", t0, pack_secs, None);
+                }
             }
             jobs
         };

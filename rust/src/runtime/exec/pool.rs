@@ -118,11 +118,11 @@ impl Pool {
         let (rtx, rx) = channel();
         let mut txs = Vec::with_capacity(sets.len());
         let mut handles = Vec::with_capacity(sets.len());
-        for set in sets {
+        for (wi, set) in sets.into_iter().enumerate() {
             let (tx, jrx) = channel::<Arc<Job>>();
             let plan = plan.clone();
             let rtx = rtx.clone();
-            handles.push(std::thread::spawn(move || worker_loop(plan, set, jrx, rtx)));
+            handles.push(std::thread::spawn(move || worker_loop(wi, plan, set, jrx, rtx)));
             txs.push(tx);
         }
         Pool { txs, rx, handles }
@@ -212,6 +212,7 @@ fn eval_set(
         ..Partial::default()
     };
     for ((gi, shard), cache) in set.iter().zip(caches.iter_mut()) {
+        let _span = crate::telemetry::span("exec.shard").shard(*gi);
         let out = cache.eval(plan, shard, job)?;
         p.correct += out.correct;
         p.computed += out.computed;
@@ -245,11 +246,13 @@ fn eval_set(
 }
 
 fn worker_loop(
+    wi: usize,
     plan: Arc<Plan>,
     mut set: Vec<(usize, Shard)>,
     jobs: Receiver<Arc<Job>>,
     replies: Sender<Reply>,
 ) {
+    crate::telemetry::set_thread_tag(&format!("worker{wi:02}"));
     let mut caches: Vec<ActCache> =
         set.iter_mut().map(|(_, s)| ActCache::primed(&plan, s)).collect();
     while let Ok(job) = jobs.recv() {
@@ -259,6 +262,9 @@ fn worker_loop(
             eval_set(&plan, &set, &mut caches, &job)
         }))
         .unwrap_or_else(|_| Err(anyhow!("evaluation worker panicked")));
+        // flush before replying: once the engine has every reply it may
+        // drain the sink, and this thread's spans must already be there
+        crate::telemetry::flush_thread();
         if replies.send(Reply { result }).is_err() {
             return; // engine dropped — shut down
         }

@@ -172,6 +172,18 @@ impl RuntimeStats {
     }
 }
 
+impl crate::telemetry::MetricsSource for RuntimeStats {
+    fn record(&self, reg: &mut crate::telemetry::MetricsRegistry) {
+        reg.counter("exec.layers_computed", self.layers_computed);
+        reg.counter("exec.layers_reused", self.layers_reused);
+        reg.gauge("exec.threads", self.threads as f64);
+        reg.gauge("exec.pack_secs", self.pack_secs);
+        reg.gauge("exec.gemm_secs", self.gemm_secs);
+        reg.gauge("exec.cache_hit_rate", self.cache_hit_rate());
+        reg.label("exec.kernel", self.kernel.name());
+    }
+}
+
 /// One proposed layer-config for batched oracle pricing: the
 /// candidate's weights/bias/activation-precision for a single prunable
 /// layer, evaluated against the current base weights with every other

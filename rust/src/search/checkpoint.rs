@@ -215,6 +215,28 @@ impl SearchCheckpoint {
     }
 }
 
+/// Serialise the phase timers field-by-field (`prune`/`quant`/`hw`/
+/// `infer` seconds + the step count) — one shared layout for save and
+/// load so a resumed run's `hapq perf` totals carry over bit-exactly.
+fn write_timers(w: &mut BinWriter, t: &PhaseTimers) {
+    w.f64(t.prune_s);
+    w.f64(t.quant_s);
+    w.f64(t.hw_s);
+    w.f64(t.infer_s);
+    w.u64(t.steps);
+}
+
+/// Inverse of [`write_timers`].
+fn read_timers(r: &mut BinReader) -> Result<PhaseTimers> {
+    Ok(PhaseTimers {
+        prune_s: r.f64()?,
+        quant_s: r.f64()?,
+        hw_s: r.f64()?,
+        infer_s: r.f64()?,
+        steps: r.u64()?,
+    })
+}
+
 fn save(
     path: &Path,
     header: &CheckpointHeader,
@@ -227,11 +249,7 @@ fn save(
     w.usize(progress.episode);
     w.u64(progress.evals);
     w.f64(progress.elapsed_secs);
-    w.f64(progress.timers.prune_s);
-    w.f64(progress.timers.quant_s);
-    w.f64(progress.timers.hw_s);
-    w.f64(progress.timers.infer_s);
-    w.u64(progress.timers.steps);
+    write_timers(&mut w, &progress.timers);
     w.f64s(&progress.curve);
     match &progress.best {
         Some(sol) => {
@@ -271,13 +289,7 @@ fn load(
     let episode = r.usize()?;
     let evals = r.u64()?;
     let elapsed_secs = r.f64()?;
-    let timers = PhaseTimers {
-        prune_s: r.f64()?,
-        quant_s: r.f64()?,
-        hw_s: r.f64()?,
-        infer_s: r.f64()?,
-        steps: r.u64()?,
-    };
+    let timers = read_timers(&mut r)?;
     let curve = r.f64s()?;
     let best = if r.bool()? { Some(read_solution(&mut r)?) } else { None };
     env.restore_rng(&mut r)?;
@@ -290,6 +302,29 @@ fn load(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn timers_roundtrip_is_bit_exact() {
+        // every PhaseTimers field — including hw_s, renamed from
+        // energy_s — survives save/load bit-exactly, so a resumed run's
+        // perf totals continue where the suspended session stopped
+        let t = PhaseTimers {
+            prune_s: 0.1 + 0.2, // no short decimal form
+            quant_s: 1.0 / 3.0,
+            hw_s: 7.25e-3,
+            infer_s: f64::EPSILON,
+            steps: u64::MAX - 7,
+        };
+        let mut w = BinWriter::new();
+        write_timers(&mut w, &t);
+        let mut r = BinReader::new(&w.buf);
+        let back = read_timers(&mut r).unwrap();
+        assert_eq!(back.prune_s.to_bits(), t.prune_s.to_bits());
+        assert_eq!(back.quant_s.to_bits(), t.quant_s.to_bits());
+        assert_eq!(back.hw_s.to_bits(), t.hw_s.to_bits());
+        assert_eq!(back.infer_s.to_bits(), t.infer_s.to_bits());
+        assert_eq!(back.steps, t.steps);
+    }
 
     #[test]
     fn solution_roundtrip_is_bit_exact() {

@@ -315,6 +315,13 @@ impl SearchDriver {
                 let action = strategy.propose(t, &state);
                 let step = env.step(action)?;
                 strategy.observe(&state, &action, &step);
+                crate::telemetry::step_event(
+                    ep,
+                    t,
+                    step.reward,
+                    step.accuracy,
+                    step.energy_gain,
+                );
                 total += step.reward;
                 state = step.state.clone();
                 t += 1;
@@ -326,6 +333,13 @@ impl SearchDriver {
             }
             let sol = env.solution(last.as_ref().unwrap());
             strategy.end_episode(ep, total, &sol);
+            crate::telemetry::episode_event(
+                ep,
+                total,
+                sol.acc_loss,
+                sol.energy_gain,
+                env.n_evals as u64,
+            );
             if strategy.records_curve() {
                 curve.push(total);
             }

@@ -1,0 +1,331 @@
+//! Trace-file analysis — the engine behind `hapq trace`.
+//!
+//! Reads the JSONL written by [`super::finish`] (schema 1: `meta`
+//! header + `span`/`count`/`gauge`/`step`/`episode` events), and
+//! renders:
+//!
+//! * a per-episode **reward-curve table** (Fig 5/8 provenance: episode
+//!   → summed reward, accuracy loss, energy gain),
+//! * a per-phase **rollup** (flamegraph-style: total/mean time and
+//!   share per span name),
+//! * the **top-N hottest layers** (span time attributed to a
+//!   prunable-layer index),
+//! * a **Chrome trace-event export** (`--chrome`) loadable by
+//!   `chrome://tracing` / Perfetto,
+//! * a **canonical form** (`--canon`) with the wall-clock-only
+//!   `ts`/`dur` fields stripped — byte-diffable across same-seed runs
+//!   (the determinism comparator of `rust/tests/telemetry.rs` and CI).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::json::{self, Value};
+
+/// A parsed trace: the event objects of every non-`meta` line, in file
+/// order.
+pub struct Trace {
+    /// non-`meta` event objects, file order
+    pub events: Vec<Value>,
+}
+
+/// Load and validate a JSONL trace file: line 1 must be a `meta` header
+/// carrying a supported `schema`.
+pub fn load(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path:?}"))?;
+    let mut events = Vec::new();
+    let mut saw_meta = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .with_context(|| format!("trace {path:?} line {}", i + 1))?;
+        let kind = v.req("kind")?.as_str()?.to_string();
+        if kind == "meta" {
+            let schema = v.req("schema")?.as_usize()?;
+            if schema as u64 != super::SCHEMA {
+                bail!(
+                    "trace {path:?} has schema {schema}, this build reads schema {}",
+                    super::SCHEMA
+                );
+            }
+            saw_meta = true;
+        } else {
+            events.push(v);
+        }
+    }
+    if !saw_meta {
+        bail!("trace {path:?} has no `meta` header line (not a hapq trace?)");
+    }
+    Ok(Trace { events })
+}
+
+fn kind(v: &Value) -> &str {
+    v.get("kind").and_then(|k| k.as_str().ok()).unwrap_or("")
+}
+
+fn fname(v: &Value) -> &str {
+    v.get("name").and_then(|k| k.as_str().ok()).unwrap_or("")
+}
+
+impl Trace {
+    /// Events of one kind, file order.
+    fn of_kind<'a>(&'a self, k: &str) -> impl Iterator<Item = &'a Value> {
+        let k = k.to_string();
+        self.events.iter().filter(move |v| kind(v) == k)
+    }
+
+    /// Per-episode reward-curve table (one row per `episode` event,
+    /// with the step count folded in from `step` events).
+    pub fn reward_table(&self) -> Result<String> {
+        let mut steps_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for s in self.of_kind("step") {
+            *steps_of.entry(s.req("episode")?.as_usize()?).or_insert(0) += 1;
+        }
+        let mut out = format!(
+            "{:<8} {:>6} {:>10} {:>10} {:>12} {:>8}\n",
+            "episode", "steps", "reward", "acc-loss", "energy-gain", "evals"
+        );
+        let mut rows = 0usize;
+        for e in self.of_kind("episode") {
+            let ep = e.req("episode")?.as_usize()?;
+            out.push_str(&format!(
+                "{:<8} {:>6} {:>10.3} {:>9.2}% {:>11.2}% {:>8}\n",
+                ep,
+                steps_of.get(&ep).copied().unwrap_or(0),
+                e.req("reward")?.as_f64()?,
+                e.req("acc_loss")?.as_f64()? * 100.0,
+                e.req("energy_gain")?.as_f64()? * 100.0,
+                e.req("evals")?.as_usize()?,
+            ));
+            rows += 1;
+        }
+        if rows == 0 {
+            out.push_str("(no episode events — not a search trace?)\n");
+        }
+        Ok(out)
+    }
+
+    /// Per-phase rollup: every span name with call count, total and
+    /// mean time, and share of the summed span time — sorted by total,
+    /// descending (flamegraph-style, one level deep).
+    pub fn phase_rollup(&self) -> Result<String> {
+        let mut agg: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+        for s in self.of_kind("span") {
+            let e = agg.entry(fname(s).to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.req("dur")?.as_f64()?;
+        }
+        let total: f64 = agg.values().map(|(_, d)| *d).sum();
+        let mut rows: Vec<(String, u64, f64)> =
+            agg.into_iter().map(|(n, (c, d))| (n, c, d)).collect();
+        // stable across runs: equal durations fall back to name order
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        let mut out = format!(
+            "{:<16} {:>8} {:>12} {:>12} {:>7}\n",
+            "span", "count", "total-ms", "mean-us", "share"
+        );
+        for (name, count, dur_us) in &rows {
+            out.push_str(&format!(
+                "{:<16} {:>8} {:>12.3} {:>12.1} {:>6.1}%\n",
+                name,
+                count,
+                dur_us / 1e3,
+                dur_us / *count as f64,
+                if total > 0.0 { dur_us / total * 100.0 } else { 0.0 },
+            ));
+        }
+        if rows.is_empty() {
+            out.push_str("(no span events)\n");
+        }
+        Ok(out)
+    }
+
+    /// The `n` prunable layers holding the most span time (spans
+    /// carrying a `layer` field — `env.step` et al.), sorted by total
+    /// time, descending.
+    pub fn hottest_layers(&self, n: usize) -> Result<String> {
+        let mut agg: BTreeMap<usize, (u64, f64)> = BTreeMap::new();
+        for s in self.of_kind("span") {
+            if let Some(l) = s.get("layer") {
+                let e = agg.entry(l.as_usize()?).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += s.req("dur")?.as_f64()?;
+            }
+        }
+        let mut rows: Vec<(usize, u64, f64)> =
+            agg.into_iter().map(|(l, (c, d))| (l, c, d)).collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        rows.truncate(n);
+        let mut out = format!("{:<6} {:>8} {:>12}\n", "layer", "spans", "total-ms");
+        for (layer, count, dur_us) in &rows {
+            out.push_str(&format!("{layer:<6} {count:>8} {:>12.3}\n", dur_us / 1e3));
+        }
+        if rows.is_empty() {
+            out.push_str("(no layer-tagged spans)\n");
+        }
+        Ok(out)
+    }
+
+    /// Chrome trace-event JSON (`chrome://tracing` / Perfetto): spans
+    /// become complete (`ph:"X"`) events on integer thread ids (with
+    /// `thread_name` metadata), `step` events become a `reward` counter
+    /// track (`ph:"C"`).
+    pub fn chrome(&self) -> Result<Value> {
+        // stable tag → tid mapping, in first-appearance order
+        let mut tid_of: BTreeMap<String, usize> = BTreeMap::new();
+        for v in &self.events {
+            if let Some(t) = v.get("thread").and_then(|t| t.as_str().ok()) {
+                let next = tid_of.len();
+                tid_of.entry(t.to_string()).or_insert(next);
+            }
+        }
+        let mut evs: Vec<Value> = Vec::new();
+        for (tag, tid) in &tid_of {
+            evs.push(json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(*tid as f64)),
+                ("args", json::obj(vec![("name", json::s(tag))])),
+            ]));
+        }
+        for v in &self.events {
+            let tid = v
+                .get("thread")
+                .and_then(|t| t.as_str().ok())
+                .and_then(|t| tid_of.get(t).copied())
+                .unwrap_or(0);
+            match kind(v) {
+                "span" => {
+                    let mut args: Vec<(&str, Value)> = Vec::new();
+                    if let Some(l) = v.get("layer") {
+                        args.push(("layer", json::num(l.as_f64()?)));
+                    }
+                    if let Some(s) = v.get("shard") {
+                        args.push(("shard", json::num(s.as_f64()?)));
+                    }
+                    evs.push(json::obj(vec![
+                        ("name", json::s(fname(v))),
+                        ("ph", json::s("X")),
+                        ("ts", json::num(v.req("ts")?.as_f64()?)),
+                        ("dur", json::num(v.req("dur")?.as_f64()?)),
+                        ("pid", json::num(1.0)),
+                        ("tid", json::num(tid as f64)),
+                        ("args", json::obj(args)),
+                    ]));
+                }
+                "step" => {
+                    evs.push(json::obj(vec![
+                        ("name", json::s("reward")),
+                        ("ph", json::s("C")),
+                        ("ts", json::num(v.req("ts")?.as_f64()?)),
+                        ("pid", json::num(1.0)),
+                        ("tid", json::num(tid as f64)),
+                        (
+                            "args",
+                            json::obj(vec![("reward", json::num(v.req("reward")?.as_f64()?))]),
+                        ),
+                    ]));
+                }
+                _ => {}
+            }
+        }
+        Ok(json::obj(vec![("traceEvents", json::arr(evs))]))
+    }
+
+    /// Canonical event stream with the wall-clock-only `ts`/`dur`
+    /// fields stripped: one JSON object per line, byte-identical across
+    /// same-seed runs at a fixed (threads, kernel) configuration.
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        for v in &self.events {
+            let stripped = match v {
+                Value::Obj(kv) => Value::Obj(
+                    kv.iter()
+                        .filter(|(k, _)| k != "ts" && k != "dur")
+                        .cloned()
+                        .collect(),
+                ),
+                other => other.clone(),
+            };
+            out.push_str(&stripped.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Trace {
+        let lines = [
+            r#"{"kind":"span","name":"env.prune","thread":"main","seq":0,"ts":10.0,"dur":4.5,"layer":0}"#,
+            r#"{"kind":"span","name":"env.infer","thread":"main","seq":1,"ts":20.0,"dur":95.5,"layer":0}"#,
+            r#"{"kind":"span","name":"env.infer","thread":"main","seq":2,"ts":130.0,"dur":104.5,"layer":1}"#,
+            r#"{"kind":"span","name":"exec.shard","thread":"worker00","seq":0,"ts":21.0,"dur":90.0,"shard":0}"#,
+            r#"{"kind":"step","thread":"main","seq":3,"ts":120.0,"episode":0,"step":0,"reward":1.5,"acc":0.9,"energy_gain":0.4}"#,
+            r#"{"kind":"step","thread":"main","seq":4,"ts":240.0,"episode":0,"step":1,"reward":2.0,"acc":0.88,"energy_gain":0.5}"#,
+            r#"{"kind":"episode","thread":"main","seq":5,"ts":250.0,"episode":0,"reward":3.5,"acc_loss":0.02,"energy_gain":0.5,"evals":2}"#,
+        ];
+        Trace {
+            events: lines.iter().map(|l| json::parse(l).unwrap()).collect(),
+        }
+    }
+
+    #[test]
+    fn reward_table_rolls_up_steps_per_episode() {
+        let t = fixture().reward_table().unwrap();
+        assert!(t.contains("episode"), "{t}");
+        // episode 0: 2 steps, reward 3.5, 2 evals
+        let row = t.lines().nth(1).unwrap();
+        assert!(row.starts_with('0'), "{row}");
+        assert!(row.contains("3.500"), "{row}");
+        assert!(row.split_whitespace().nth(1) == Some("2"), "{row}");
+    }
+
+    #[test]
+    fn rollup_sorts_by_total_and_layers_rank() {
+        let r = fixture().phase_rollup().unwrap();
+        let infer_line = r.lines().position(|l| l.starts_with("env.infer")).unwrap();
+        let prune_line = r.lines().position(|l| l.starts_with("env.prune")).unwrap();
+        assert!(infer_line < prune_line, "biggest total first:\n{r}");
+        let h = fixture().hottest_layers(1).unwrap();
+        // layer 1 (104.5us) beats layer 0 (100us total), top-1 keeps it
+        assert!(h.lines().nth(1).unwrap().starts_with('1'), "{h}");
+        assert!(!h.contains("\n0 "), "{h}");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_complete() {
+        let c = fixture().chrome().unwrap();
+        let back = json::parse(&c.to_string()).unwrap();
+        let evs = back.req("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata + 4 spans + 2 counters
+        assert_eq!(evs.len(), 8);
+        let complete: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .map(|e| e.req("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(complete.contains(&"env.prune"));
+        assert!(complete.contains(&"env.infer"));
+        assert!(complete.contains(&"exec.shard"));
+    }
+
+    #[test]
+    fn canonical_strips_exactly_the_clock_fields() {
+        let c = fixture().canonical();
+        assert!(!c.contains("\"ts\""), "{c}");
+        assert!(!c.contains("\"dur\""), "{c}");
+        // everything else survives
+        assert!(c.contains("\"reward\":1.5"), "{c}");
+        assert!(c.contains("\"shard\":0"), "{c}");
+        assert_eq!(c.lines().count(), 7);
+    }
+}

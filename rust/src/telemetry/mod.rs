@@ -1,0 +1,583 @@
+//! Unified telemetry: structured trace events + a metrics registry —
+//! the observation seam under `hapq serve` (ROADMAP).
+//!
+//! Two complementary views of one run live here:
+//!
+//! * **Trace events** — a process-global [`TraceSink`]-style facade
+//!   ([`init`] / [`span`] / [`count`] / [`step_event`] / [`finish`])
+//!   buffering span/counter/gauge/step/episode events per thread and
+//!   draining them to a JSONL file at exit (`--trace PATH`, or the
+//!   `HAPQ_TRACE` environment variable). The schema is versioned
+//!   ([`SCHEMA`], currently 1): line 1 is a `meta` header, every other
+//!   line is one event object with a `kind` of `span`, `count`,
+//!   `gauge`, `step` or `episode`. **Wall-clock readings appear only in
+//!   the `ts`/`dur` fields** (microseconds since the sink epoch), so a
+//!   comparator that strips exactly those two keys sees a fully
+//!   deterministic event sequence for a fixed seed
+//!   (`rust/tests/telemetry.rs` pins this). `hapq trace` renders the
+//!   file ([`analyze`]); `--chrome` exports it for `chrome://tracing`.
+//! * **Metrics** — a [`MetricsRegistry`] snapshotting named counters,
+//!   gauges and histograms (p50/p95/max via [`crate::util::percentile`])
+//!   from [`MetricsSource`]s: today's `PhaseTimers`, `RuntimeStats` and
+//!   `CostCache` register themselves instead of growing more parallel
+//!   stat structs. [`metrics_snapshot`] is the JSON call `hapq perf
+//!   --json` / `hapq hw --json` print and a future `hapq serve` will
+//!   wire to an endpoint.
+//!
+//! **Observation-only, by hard constraint**: a disabled sink costs one
+//! relaxed atomic load per call site — no clock reads, no allocation,
+//! no locks — and an enabled one never draws RNG, never reorders float
+//! accumulation, and never touches run results. The golden test pins
+//! that searching with tracing on is bit-identical to tracing off.
+//!
+//! Thread model: every thread buffers its events in thread-local
+//! storage under a tag (`main`, or `workerNN` set by the exec pool);
+//! [`flush_thread`] moves the buffer into the global sink (pool workers
+//! flush before answering each job, so the main thread always drains a
+//! complete set). [`finish`] serialises buffers grouped by tag in
+//! lexicographic order, each thread's events in emission order with a
+//! per-thread `seq` — a deterministic layout because shard→worker
+//! assignment is static.
+
+pub mod analyze;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::io::json::{self, Value};
+
+/// Trace-file schema version (the `meta` header's `schema` field).
+pub const SCHEMA: u64 = 1;
+
+/// One buffered telemetry event. Serialised as a single JSONL object
+/// with `kind`/`thread`/`seq` envelope fields added at drain time.
+/// Wall-clock readings live only in the `ts`/`dur` fields.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// a completed timed region (`ts`/`dur` in µs since the sink epoch)
+    Span {
+        /// region name (`env.prune`, `exec.shard`, …)
+        name: &'static str,
+        /// start, µs since the sink epoch
+        ts_us: f64,
+        /// duration, µs
+        dur_us: f64,
+        /// prunable-layer index the region worked on, when meaningful
+        layer: Option<usize>,
+        /// evaluation-shard index, when meaningful
+        shard: Option<usize>,
+    },
+    /// a monotonic counter increment
+    Count {
+        /// counter name (`hw.cache.reused`, …)
+        name: &'static str,
+        /// increment amount
+        n: u64,
+    },
+    /// an instantaneous sampled value
+    Gauge {
+        /// gauge name
+        name: &'static str,
+        /// sampled value
+        value: f64,
+    },
+    /// one search step (emitted by the `SearchDriver` per `env.step`)
+    Step {
+        /// episode index
+        episode: usize,
+        /// step (= layer) index within the episode
+        step: usize,
+        /// µs since the sink epoch at emission
+        ts_us: f64,
+        /// LUT reward of the step
+        reward: f64,
+        /// reward-subset accuracy after the step
+        accuracy: f64,
+        /// energy gain vs the dense baseline after the step
+        energy_gain: f64,
+    },
+    /// one finished episode (emitted by the `SearchDriver`)
+    Episode {
+        /// episode index
+        episode: usize,
+        /// µs since the sink epoch at emission
+        ts_us: f64,
+        /// summed step reward of the episode
+        reward: f64,
+        /// final accuracy loss of the episode's configuration
+        acc_loss: f64,
+        /// final energy gain of the episode's configuration
+        energy_gain: f64,
+        /// cumulative reward-oracle evaluations after the episode
+        evals: u64,
+    },
+}
+
+impl TraceEvent {
+    /// Serialise with the envelope fields (`kind`, `thread`, `seq`).
+    fn to_json(&self, thread: &str, seq: usize) -> Value {
+        let mut kv: Vec<(&str, Value)> = Vec::with_capacity(10);
+        match self {
+            TraceEvent::Span { name, ts_us, dur_us, layer, shard } => {
+                kv.push(("kind", json::s("span")));
+                kv.push(("name", json::s(name)));
+                kv.push(("thread", json::s(thread)));
+                kv.push(("seq", json::num(seq as f64)));
+                kv.push(("ts", json::num(*ts_us)));
+                kv.push(("dur", json::num(*dur_us)));
+                if let Some(l) = layer {
+                    kv.push(("layer", json::num(*l as f64)));
+                }
+                if let Some(s) = shard {
+                    kv.push(("shard", json::num(*s as f64)));
+                }
+            }
+            TraceEvent::Count { name, n } => {
+                kv.push(("kind", json::s("count")));
+                kv.push(("name", json::s(name)));
+                kv.push(("thread", json::s(thread)));
+                kv.push(("seq", json::num(seq as f64)));
+                kv.push(("n", json::num(*n as f64)));
+            }
+            TraceEvent::Gauge { name, value } => {
+                kv.push(("kind", json::s("gauge")));
+                kv.push(("name", json::s(name)));
+                kv.push(("thread", json::s(thread)));
+                kv.push(("seq", json::num(seq as f64)));
+                kv.push(("value", json::num(*value)));
+            }
+            TraceEvent::Step { episode, step, ts_us, reward, accuracy, energy_gain } => {
+                kv.push(("kind", json::s("step")));
+                kv.push(("thread", json::s(thread)));
+                kv.push(("seq", json::num(seq as f64)));
+                kv.push(("ts", json::num(*ts_us)));
+                kv.push(("episode", json::num(*episode as f64)));
+                kv.push(("step", json::num(*step as f64)));
+                kv.push(("reward", json::num(*reward)));
+                kv.push(("acc", json::num(*accuracy)));
+                kv.push(("energy_gain", json::num(*energy_gain)));
+            }
+            TraceEvent::Episode { episode, ts_us, reward, acc_loss, energy_gain, evals } => {
+                kv.push(("kind", json::s("episode")));
+                kv.push(("thread", json::s(thread)));
+                kv.push(("seq", json::num(seq as f64)));
+                kv.push(("ts", json::num(*ts_us)));
+                kv.push(("episode", json::num(*episode as f64)));
+                kv.push(("reward", json::num(*reward)));
+                kv.push(("acc_loss", json::num(*acc_loss)));
+                kv.push(("energy_gain", json::num(*energy_gain)));
+                kv.push(("evals", json::num(*evals as f64)));
+            }
+        }
+        json::obj(kv)
+    }
+}
+
+/// The one-branch fast path: false = every telemetry call is a no-op.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Monotonic reference point every `ts` is relative to (set at first
+/// [`init`]; any fixed point works — `ts` is wall-clock-only anyway).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Flushed per-thread buffers, keyed by thread tag.
+static SINK: Mutex<Option<SinkState>> = Mutex::new(None);
+
+struct SinkState {
+    path: PathBuf,
+    buffers: BTreeMap<String, Vec<TraceEvent>>,
+}
+
+thread_local! {
+    /// (thread tag, locally buffered events) — no lock on the hot path.
+    static LOCAL: RefCell<(String, Vec<TraceEvent>)> =
+        RefCell::new((String::from("main"), Vec::new()));
+}
+
+/// Enable the global trace sink, draining to `path` (JSONL) at
+/// [`finish`]. Call once near process start (`--trace` / `HAPQ_TRACE`).
+pub fn init(path: &Path) {
+    EPOCH.get_or_init(Instant::now);
+    let mut g = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(SinkState { path: path.to_path_buf(), buffers: BTreeMap::new() });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Is the sink collecting? One relaxed atomic load — cheap enough for
+/// every call site to check (and every emitting call checks itself).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Tag this thread's buffered events (`main` by default; the exec pool
+/// tags its workers `workerNN`). Cheap; safe to call when disabled.
+pub fn set_thread_tag(tag: &str) {
+    LOCAL.with(|l| l.borrow_mut().0 = tag.to_string());
+}
+
+fn push(ev: TraceEvent) {
+    LOCAL.with(|l| l.borrow_mut().1.push(ev));
+}
+
+fn micros_since_epoch(t: Instant) -> f64 {
+    let e = EPOCH.get().copied().unwrap_or(t);
+    t.saturating_duration_since(e).as_secs_f64() * 1e6
+}
+
+/// RAII span guard: times from construction to drop. When the sink is
+/// disabled the guard holds no clock reading and drop is a no-op.
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<Instant>,
+    layer: Option<usize>,
+    shard: Option<usize>,
+}
+
+impl SpanGuard {
+    /// Attach a prunable-layer index to the span.
+    pub fn layer(mut self, l: usize) -> SpanGuard {
+        self.layer = Some(l);
+        self
+    }
+
+    /// Attach an evaluation-shard index to the span.
+    pub fn shard(mut self, s: usize) -> SpanGuard {
+        self.shard = Some(s);
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur = start.elapsed().as_secs_f64();
+            push(TraceEvent::Span {
+                name: self.name,
+                ts_us: micros_since_epoch(start),
+                dur_us: dur * 1e6,
+                layer: self.layer,
+                shard: self.shard,
+            });
+        }
+    }
+}
+
+/// Open a named span ending (and recording) when the guard drops.
+#[must_use = "the span ends when the guard drops"]
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    SpanGuard { name, start, layer: None, shard: None }
+}
+
+/// Record a span retrospectively from an already-taken `Instant` and an
+/// already-measured duration — lets instrumented code reuse the clock
+/// readings it takes anyway (zero extra `Instant::now` calls).
+pub fn span_at(name: &'static str, start: Instant, dur_s: f64, layer: Option<usize>) {
+    if enabled() {
+        push(TraceEvent::Span {
+            name,
+            ts_us: micros_since_epoch(start),
+            dur_us: dur_s * 1e6,
+            layer,
+            shard: None,
+        });
+    }
+}
+
+/// Record a counter increment (skipped when `n == 0`).
+pub fn count(name: &'static str, n: u64) {
+    if enabled() && n > 0 {
+        push(TraceEvent::Count { name, n });
+    }
+}
+
+/// Record a gauge sample.
+pub fn gauge(name: &'static str, value: f64) {
+    if enabled() {
+        push(TraceEvent::Gauge { name, value });
+    }
+}
+
+/// Record one search step (reward / accuracy / energy gain).
+pub fn step_event(episode: usize, step: usize, reward: f64, accuracy: f64, energy_gain: f64) {
+    if enabled() {
+        push(TraceEvent::Step {
+            episode,
+            step,
+            ts_us: micros_since_epoch(Instant::now()),
+            reward,
+            accuracy,
+            energy_gain,
+        });
+    }
+}
+
+/// Record one finished episode's summary.
+pub fn episode_event(episode: usize, reward: f64, acc_loss: f64, energy_gain: f64, evals: u64) {
+    if enabled() {
+        push(TraceEvent::Episode {
+            episode,
+            ts_us: micros_since_epoch(Instant::now()),
+            reward,
+            acc_loss,
+            energy_gain,
+            evals,
+        });
+    }
+}
+
+/// Move this thread's buffered events into the global sink. Pool
+/// workers call this before answering each job; the main thread is
+/// flushed by [`finish`].
+pub fn flush_thread() {
+    if !enabled() {
+        return;
+    }
+    let (tag, events) = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let tag = l.0.clone();
+        (tag, std::mem::take(&mut l.1))
+    });
+    if events.is_empty() {
+        return;
+    }
+    let mut g = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(state) = g.as_mut() {
+        state.buffers.entry(tag).or_default().extend(events);
+    }
+}
+
+/// Drain every buffered event to the configured JSONL file and disable
+/// the sink. Returns the written path, or `None` when the sink was
+/// never enabled. Layout: one `meta` header line, then every thread's
+/// events grouped by tag (lexicographic) in emission order.
+pub fn finish() -> Result<Option<PathBuf>> {
+    if !enabled() {
+        return Ok(None);
+    }
+    flush_thread();
+    ENABLED.store(false, Ordering::Release);
+    let state = SINK.lock().unwrap_or_else(|e| e.into_inner()).take();
+    let Some(state) = state else {
+        return Ok(None);
+    };
+    let mut out = String::new();
+    out.push_str(
+        &json::obj(vec![
+            ("kind", json::s("meta")),
+            ("schema", json::num(SCHEMA as f64)),
+            ("source", json::s("hapq")),
+        ])
+        .to_string(),
+    );
+    out.push('\n');
+    for (tag, events) in &state.buffers {
+        for (seq, ev) in events.iter().enumerate() {
+            out.push_str(&ev.to_json(tag, seq).to_string());
+            out.push('\n');
+        }
+    }
+    if let Some(dir) = state.path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {dir:?}"))?;
+        }
+    }
+    std::fs::write(&state.path, out)
+        .with_context(|| format!("writing trace {:?}", state.path))?;
+    Ok(Some(state.path))
+}
+
+/// A component that can report its current metrics into a registry —
+/// implemented by `PhaseTimers`, `RuntimeStats` and `CostCache` so
+/// `hapq perf --json` / the future `hapq serve` read one schema instead
+/// of three parallel stat structs.
+pub trait MetricsSource {
+    /// Write this source's counters/gauges/histograms into `reg`.
+    fn record(&self, reg: &mut MetricsRegistry);
+}
+
+/// Named counters, gauges and histograms with a JSON snapshot
+/// (`schema:1`) — the metrics half of the telemetry seam.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+    labels: BTreeMap<String, String>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `n` to a named counter (created at 0).
+    pub fn counter(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Set a named gauge to its latest value.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Append one observation to a named histogram.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().push(value);
+    }
+
+    /// Set a named string label (kernel name, target name, …).
+    pub fn label(&mut self, name: &str, value: &str) {
+        self.labels.insert(name.to_string(), value.to_string());
+    }
+
+    /// Let a [`MetricsSource`] record itself.
+    pub fn collect(&mut self, source: &dyn MetricsSource) {
+        source.record(self);
+    }
+
+    /// JSON snapshot: `{schema, counters, gauges, histograms, labels}`;
+    /// each histogram summarises as `{count, p50, p95, max}` via
+    /// [`crate::util::percentile`].
+    pub fn snapshot(&self) -> Value {
+        let counters: Vec<(String, Value)> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), json::num(*v as f64)))
+            .collect();
+        let gauges: Vec<(String, Value)> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), json::num(*v))).collect();
+        let histograms: Vec<(String, Value)> = self
+            .histograms
+            .iter()
+            .map(|(k, xs)| {
+                (
+                    k.clone(),
+                    json::obj(vec![
+                        ("count", json::num(xs.len() as f64)),
+                        ("p50", json::num(crate::util::percentile(xs, 50.0))),
+                        ("p95", json::num(crate::util::percentile(xs, 95.0))),
+                        ("max", json::num(xs.iter().cloned().fold(f64::NAN, f64::max))),
+                    ]),
+                )
+            })
+            .collect();
+        let labels: Vec<(String, Value)> =
+            self.labels.iter().map(|(k, v)| (k.clone(), json::s(v))).collect();
+        json::obj(vec![
+            ("schema", json::num(SCHEMA as f64)),
+            ("counters", Value::Obj(counters)),
+            ("gauges", Value::Obj(gauges)),
+            ("histograms", Value::Obj(histograms)),
+            ("labels", Value::Obj(labels)),
+        ])
+    }
+}
+
+/// One-shot snapshot over a set of sources — the `metrics_snapshot()`
+/// call `hapq perf --json` prints and `hapq serve` will expose.
+pub fn metrics_snapshot(sources: &[&dyn MetricsSource]) -> Value {
+    let mut reg = MetricsRegistry::new();
+    for s in sources {
+        reg.collect(*s);
+    }
+    reg.snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The sink is process-global; tests touching it must not overlap.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!enabled());
+        // all no-ops: nothing panics, nothing is buffered
+        let sp = span("noop");
+        assert!(sp.start.is_none());
+        drop(sp);
+        count("noop", 3);
+        gauge("noop", 1.0);
+        step_event(0, 0, 1.0, 0.9, 0.5);
+        assert!(finish().unwrap().is_none());
+        LOCAL.with(|l| assert!(l.borrow().1.is_empty()));
+    }
+
+    #[test]
+    fn init_buffer_finish_roundtrip() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("hapq-telemetry-test");
+        let path = dir.join("t.jsonl");
+        init(&path);
+        assert!(enabled());
+        {
+            let _sp = span("unit.work").layer(2).shard(1);
+        }
+        count("unit.count", 2);
+        count("unit.count", 0); // zero increments are skipped
+        gauge("unit.gauge", 0.25);
+        step_event(0, 1, 3.5, 0.875, 0.5);
+        episode_event(0, 3.5, 0.125, 0.5, 7);
+        let written = finish().unwrap().expect("sink was enabled");
+        assert_eq!(written, path);
+        assert!(!enabled());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6, "meta + 5 events: {text}");
+        let meta = json::parse(lines[0]).unwrap();
+        assert_eq!(meta.req("kind").unwrap().as_str().unwrap(), "meta");
+        assert_eq!(meta.req("schema").unwrap().as_usize().unwrap(), 1);
+        let sp = json::parse(lines[1]).unwrap();
+        assert_eq!(sp.req("kind").unwrap().as_str().unwrap(), "span");
+        assert_eq!(sp.req("name").unwrap().as_str().unwrap(), "unit.work");
+        assert_eq!(sp.req("thread").unwrap().as_str().unwrap(), "main");
+        assert_eq!(sp.req("layer").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sp.req("shard").unwrap().as_usize().unwrap(), 1);
+        assert!(sp.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let ct = json::parse(lines[2]).unwrap();
+        assert_eq!(ct.req("n").unwrap().as_usize().unwrap(), 2);
+        let ep = json::parse(lines[5]).unwrap();
+        assert_eq!(ep.req("kind").unwrap().as_str().unwrap(), "episode");
+        assert_eq!(ep.req("evals").unwrap().as_usize().unwrap(), 7);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_snapshot_schema() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("a.count", 2);
+        reg.counter("a.count", 3);
+        reg.gauge("a.gauge", 0.5);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            reg.observe("a.hist", x);
+        }
+        reg.label("a.label", "int");
+        let snap = reg.snapshot();
+        // the snapshot must survive its own serialisation (the `--json`
+        // path prints exactly this string)
+        let back = json::parse(&snap.to_string()).unwrap();
+        assert_eq!(back.req("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            back.req("counters").unwrap().req("a.count").unwrap().as_usize().unwrap(),
+            5
+        );
+        let h = back.req("histograms").unwrap().req("a.hist").unwrap();
+        assert_eq!(h.req("count").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(h.req("p50").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(h.req("max").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(
+            back.req("labels").unwrap().req("a.label").unwrap().as_str().unwrap(),
+            "int"
+        );
+    }
+}

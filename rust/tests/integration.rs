@@ -242,6 +242,72 @@ fn hw_flag_selects_target_end_to_end() {
     assert!(c.build_env("vgg11").is_err());
 }
 
+#[test]
+fn perf_and_hw_json_emit_the_metrics_snapshot_schema() {
+    let Some(_) = artifacts() else { return };
+    let bin = env!("CARGO_BIN_EXE_hapq");
+
+    // `hapq perf --json`: one MetricsRegistry snapshot over all live
+    // stat sources (PhaseTimers, RuntimeStats, CostCache + perf's own)
+    let out = std::process::Command::new(bin)
+        .args(["perf", "--model", "vgg11", "--reward-subset", "64", "--json"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "perf --json failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let v = hapq::io::json::parse(std::str::from_utf8(&out.stdout).unwrap().trim()).unwrap();
+    assert_eq!(
+        v.req("schema").unwrap().as_usize().unwrap() as u64,
+        hapq::telemetry::SCHEMA
+    );
+    let counters = v.req("counters").unwrap();
+    assert!(counters.req("env.steps").unwrap().as_usize().unwrap() > 0);
+    assert!(counters.req("hw.queries").unwrap().as_usize().unwrap() > 0);
+    assert!(counters.req("exec.layers_computed").unwrap().as_usize().unwrap() > 0);
+    let hist = v.req("histograms").unwrap().req("perf.episode_secs").unwrap();
+    assert_eq!(hist.req("count").unwrap().as_usize().unwrap(), 10);
+    assert!(hist.req("p50").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        hist.req("max").unwrap().as_f64().unwrap()
+            >= hist.req("p95").unwrap().as_f64().unwrap()
+    );
+    let labels = v.req("labels").unwrap();
+    assert_eq!(labels.req("perf.model").unwrap().as_str().unwrap(), "vgg11");
+    assert!(!labels.req("exec.kernel").unwrap().as_str().unwrap().is_empty());
+
+    // `hapq hw --json`: same snapshot schema from the pure cost model —
+    // one gauge quartet per built-in target
+    let out = std::process::Command::new(bin)
+        .args(["hw", "--model", "vgg11", "--json"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "hw --json failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let v = hapq::io::json::parse(std::str::from_utf8(&out.stdout).unwrap().trim()).unwrap();
+    assert_eq!(
+        v.req("schema").unwrap().as_usize().unwrap() as u64,
+        hapq::telemetry::SCHEMA
+    );
+    let labels = v.req("labels").unwrap();
+    assert_eq!(labels.req("hw.model").unwrap().as_str().unwrap(), "vgg11");
+    let target = labels.req("hw.target").unwrap().as_str().unwrap().to_string();
+    let gauges = v.req("gauges").unwrap();
+    assert!(gauges.req("hw.reference.sparsity").unwrap().as_f64().unwrap() > 0.0);
+    for metric in ["baseline_energy", "dense_cycles", "energy_gain", "latency_gain"] {
+        let key = format!("hw.{target}.{metric}");
+        assert!(
+            gauges.get(&key).is_some(),
+            "hw --json missing gauge {key} for the selected target"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // PJRT-specific round trips: compiled only with `--features pjrt`, and
 // they additionally skip unless both artifacts exist and a *real* xla

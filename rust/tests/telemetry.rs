@@ -1,0 +1,257 @@
+//! Telemetry golden tests, artifact-free (same in-memory fixture family
+//! as `tests/native_backend.rs` / `tests/search_driver.rs`):
+//!
+//! 1. **Observation-only**: a seeded search with the trace sink enabled
+//!    produces a bit-identical `SearchOutcome` (best solution, curve,
+//!    eval count) to the same search with tracing off — at threads
+//!    {1,4} × kernels {f32,int}.
+//! 2. **Determinism**: two traced runs at the same seed produce
+//!    identical event sequences modulo the wall-clock-only `ts`/`dur`
+//!    fields (`Trace::canonical`).
+//! 3. **Schema**: the JSONL file carries the `meta` header, per-step /
+//!    per-episode search events, every env phase span and worker-tagged
+//!    exec spans; the Chrome export holds ≥ 1 complete event per phase.
+//! 4. **Registry**: `metrics_snapshot` over the real stat sources
+//!    (`PhaseTimers`, `RuntimeStats`, `CostCache`) round-trips JSON.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use hapq::baselines;
+use hapq::env::{CompressionEnv, Solution};
+use hapq::hw::energy::EnergyModel;
+use hapq::hw::mac_sim::RqTable;
+use hapq::hw::Accel;
+use hapq::io::json;
+use hapq::model::{ModelArch, Weights};
+use hapq::runtime::{EvalData, InferenceSession, KernelKind, NativeBackend};
+use hapq::search::{SearchDriver, SearchOutcome};
+use hapq::telemetry::{self, analyze};
+use hapq::tensor::Tensor;
+
+/// The trace sink is process-global: tests touching it must not overlap.
+static GUARD: Mutex<()> = Mutex::new(());
+
+const FIX1: &str = r#"{
+  "name": "fix1", "dataset": "synth-fix", "input": [2, 2, 1], "classes": 2,
+  "batch": 2,
+  "layers": [
+    {"name": "c1", "op": "conv", "inputs": ["input"], "k": 1, "stride": 1,
+     "relu": true, "in_shape": [2,2,1], "out_shape": [2,2,1], "in_ch": 1,
+     "out_ch": 1},
+    {"name": "gap", "op": "gap", "inputs": ["c1"], "in_shape": [2,2,1],
+     "out_shape": [1]},
+    {"name": "f1", "op": "fc", "inputs": ["gap"], "relu": false,
+     "in_shape": [1], "out_shape": [2], "in_ch": 1, "out_ch": 2}
+  ],
+  "prunable": ["c1", "f1"],
+  "dep_groups": [],
+  "act_scales": [0.3533568904593639, 0.3533568904593639],
+  "act_signed": [false, false],
+  "acc_int8": 1.0, "n_params": 5
+}"#;
+
+const ENV_SEED: u64 = 7;
+
+fn mk_env(seed: u64, threads: usize, kernel: KernelKind) -> CompressionEnv {
+    let arch = ModelArch::from_json(&json::parse(FIX1).unwrap()).unwrap();
+    let weights = Weights {
+        w: vec![
+            Tensor::new(vec![1, 1, 1, 1], vec![2.0]),
+            Tensor::new(vec![1, 2], vec![1.0, -1.0]),
+        ],
+        b: vec![
+            Tensor::new(vec![1], vec![-0.4]),
+            Tensor::new(vec![2], vec![0.0, 0.25]),
+        ],
+        sal: vec![Tensor::full(vec![1, 1, 1, 1], 1.0), Tensor::full(vec![1, 2], 1.0)],
+        chsq: vec![vec![1.0], vec![1.0, 1.0]],
+    };
+    let images = Tensor::new(
+        vec![4, 2, 2, 1],
+        vec![
+            0.2, 0.4, 0.6, 0.8, //
+            0.05, 0.1, 0.15, 0.1, //
+            0.7, 0.7, 0.2, 0.3, //
+            0.9, 0.8, 0.7, 0.6,
+        ],
+    );
+    let labels = vec![0i64, 1, 0, 0];
+    let data = EvalData::from_arrays(&arch, &images, &labels, 16, arch.batch).unwrap();
+    let backend = NativeBackend::with_options(&arch, data, threads, kernel).unwrap();
+    let session = InferenceSession::from_backend(Box::new(backend));
+    let energy = EnergyModel::new(
+        arch.layer_dims().unwrap(),
+        Accel::default(),
+        RqTable::compute(300, 3),
+    );
+    CompressionEnv::new(arch, weights, energy, session, seed).unwrap()
+}
+
+/// One short, fully deterministic search (ASQ-J: no agent nets, fast in
+/// debug builds) whose outcome the bit-identity assertions compare.
+fn run_search(threads: usize, kernel: KernelKind) -> SearchOutcome {
+    let mut env = mk_env(ENV_SEED, threads, kernel);
+    let cfg = baselines::asqj::AsqjConfig { iters: 6, rho: 0.15, seed: 0 };
+    let mut strategy = baselines::asqj::AsqjStrategy::new(&cfg, env.n_layers());
+    SearchDriver::plain().run(&mut env, &mut strategy).unwrap()
+}
+
+fn assert_sol_bits_eq(a: &Solution, b: &Solution, what: &str) {
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{what}: per_layer len");
+    for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+        assert_eq!(x.sparsity.to_bits(), y.sparsity.to_bits(), "{what}: sparsity");
+        assert_eq!(x.bits, y.bits, "{what}: bits");
+    }
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{what}: accuracy");
+    assert_eq!(a.acc_loss.to_bits(), b.acc_loss.to_bits(), "{what}: acc_loss");
+    assert_eq!(a.energy_gain.to_bits(), b.energy_gain.to_bits(), "{what}: energy_gain");
+    assert_eq!(a.latency_gain.to_bits(), b.latency_gain.to_bits(), "{what}: latency_gain");
+    assert_eq!(a.reward.to_bits(), b.reward.to_bits(), "{what}: reward");
+}
+
+fn assert_outcome_bits_eq(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_sol_bits_eq(a.best.as_ref().unwrap(), b.best.as_ref().unwrap(), what);
+    assert_eq!(a.curve.len(), b.curve.len(), "{what}: curve len");
+    for (x, y) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: curve");
+    }
+    assert_eq!(a.evals, b.evals, "{what}: evals");
+    assert_eq!(a.episodes_run, b.episodes_run, "{what}: episodes");
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hapq-telemetry-{name}-{}.jsonl", std::process::id()))
+}
+
+/// Golden + determinism matrix: for every (threads, kernel) cell, an
+/// untraced run, then two traced runs — results bitwise identical
+/// across all three, traces canonically identical across the pair.
+#[test]
+fn tracing_is_observation_only_and_deterministic() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    for threads in [1usize, 4] {
+        for kernel in [KernelKind::F32, KernelKind::Int] {
+            let what = format!("threads={threads} kernel={}", kernel.name());
+            let plain = run_search(threads, kernel);
+
+            let mut canon = Vec::new();
+            for pass in 0..2 {
+                let path = tmp(&format!("t{threads}-{}-{pass}", kernel.name()));
+                let _ = std::fs::remove_file(&path);
+                telemetry::init(&path);
+                let traced = run_search(threads, kernel);
+                let written = telemetry::finish().unwrap().expect("sink enabled");
+                assert_eq!(written, path);
+                // observation-only: run results do not move with tracing
+                assert_outcome_bits_eq(&plain, &traced, &what);
+                canon.push(analyze::load(&path).unwrap().canonical());
+                let _ = std::fs::remove_file(&path);
+            }
+            // determinism: same seed ⇒ same events modulo ts/dur
+            assert_eq!(canon[0], canon[1], "{what}: canonical trace diverged");
+            assert!(canon[0].contains("\"kind\":\"episode\""), "{what}: no episode events");
+        }
+    }
+}
+
+#[test]
+fn trace_schema_and_chrome_export_cover_every_phase() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let path = tmp("schema");
+    let _ = std::fs::remove_file(&path);
+    telemetry::init(&path);
+    let outcome = run_search(4, KernelKind::Int);
+    telemetry::finish().unwrap().expect("sink enabled");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let meta = json::parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(meta.req("kind").unwrap().as_str().unwrap(), "meta");
+    assert_eq!(meta.req("schema").unwrap().as_usize().unwrap() as u64, telemetry::SCHEMA);
+
+    let tr = analyze::load(&path).unwrap();
+    let kind_count = |k: &str| {
+        tr.events
+            .iter()
+            .filter(|v| v.get("kind").and_then(|x| x.as_str().ok()) == Some(k))
+            .count()
+    };
+    // asqj on the 2-prunable-layer fixture: 6 episodes × 2 steps
+    assert_eq!(kind_count("episode"), 6);
+    assert_eq!(kind_count("step"), 12);
+    let span_names: Vec<&str> = tr
+        .events
+        .iter()
+        .filter(|v| v.get("kind").and_then(|x| x.as_str().ok()) == Some("span"))
+        .filter_map(|v| v.get("name").and_then(|x| x.as_str().ok()))
+        .collect();
+    for phase in ["env.prune", "env.quant", "env.hw", "env.infer", "env.step", "exec.shard"] {
+        assert!(span_names.contains(&phase), "missing {phase} spans: {span_names:?}");
+    }
+    // exec spans come from pool workers, under their own thread tag
+    assert!(
+        tr.events.iter().any(|v| {
+            v.get("thread")
+                .and_then(|x| x.as_str().ok())
+                .map_or(false, |t| t.starts_with("worker"))
+        }),
+        "no worker-tagged events"
+    );
+    // the cost cache reports hit/miss counters through the env
+    assert!(
+        tr.events.iter().any(|v| {
+            v.get("name").and_then(|x| x.as_str().ok()) == Some("hw.cache.reused")
+        }),
+        "no cost-cache counter events"
+    );
+
+    // the human renderings carry the reward curve / rollup content
+    let table = tr.reward_table().unwrap();
+    assert!(table.lines().count() >= 7, "6 episode rows + header: {table}");
+    let rollup = tr.phase_rollup().unwrap();
+    assert!(rollup.contains("env.infer"), "{rollup}");
+    let hot = tr.hottest_layers(5).unwrap();
+    assert!(hot.lines().count() >= 3, "both fixture layers rank: {hot}");
+
+    // Chrome export: valid JSON, ≥ 1 complete ("X") event per env phase
+    let chrome = tr.chrome().unwrap();
+    let back = json::parse(&chrome.to_string()).unwrap();
+    let evs = back.req("traceEvents").unwrap().as_arr().unwrap();
+    for phase in ["env.prune", "env.quant", "env.hw", "env.infer"] {
+        assert!(
+            evs.iter().any(|e| {
+                e.get("ph").and_then(|p| p.as_str().ok()) == Some("X")
+                    && e.get("name").and_then(|n| n.as_str().ok()) == Some(phase)
+            }),
+            "chrome export missing complete {phase} event"
+        );
+    }
+    assert!(outcome.best.is_some());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn metrics_snapshot_reads_the_real_stat_sources() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let mut env = mk_env(ENV_SEED, 2, KernelKind::Int);
+    let actions: Vec<hapq::env::Action> = (0..env.n_layers())
+        .map(|l| hapq::env::Action { ratio: 0.3, bits: 0.8, alg: l % 7 })
+        .collect();
+    env.evaluate_config(&actions).unwrap();
+    let stats = env.session_stats();
+    let snap = telemetry::metrics_snapshot(&[&env.timers, &stats, &env.cost]);
+    // the snapshot is exactly what `hapq perf --json` prints — it must
+    // survive its own serialisation and carry all three sources
+    let back = json::parse(&snap.to_string()).unwrap();
+    assert_eq!(back.req("schema").unwrap().as_usize().unwrap() as u64, telemetry::SCHEMA);
+    let counters = back.req("counters").unwrap();
+    assert!(counters.req("env.steps").unwrap().as_usize().unwrap() > 0);
+    assert!(counters.req("hw.queries").unwrap().as_usize().unwrap() > 0);
+    assert!(counters.req("exec.layers_computed").unwrap().as_usize().unwrap() > 0);
+    let gauges = back.req("gauges").unwrap();
+    assert!(gauges.req("env.infer_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(gauges.req("exec.threads").unwrap().as_usize().unwrap(), 2);
+    let labels = back.req("labels").unwrap();
+    assert_eq!(labels.req("exec.kernel").unwrap().as_str().unwrap(), "int");
+    assert!(!labels.req("hw.target").unwrap().as_str().unwrap().is_empty());
+}
