@@ -105,6 +105,9 @@ fn main() {
     // --- batched candidate pricing vs serial one-at-a-time ---
     batched_rows(bj);
 
+    // --- search-loop memoization: eval memo, pack cache, scratch arena ---
+    memo_rows(bj);
+
     // --- full env step & episode (needs artifacts) ---
     if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
         let mut env = coord.build_env("vgg11").unwrap();
@@ -494,4 +497,134 @@ fn batched_rows(bj: &mut BenchJson) {
     });
     bj.rate("oracle_batched_cands_per_sec", cands.len() as f64 / t_batch);
     bj.speedup("oracle_batched_vs_serial", t_serial, t_batch);
+}
+
+/// Search-loop memoization rows (EXPERIMENTS.md §Perf item 8): the
+/// eval memo on a revisit-heavy RL walk, the config-fingerprinted pack
+/// cache against unconditional re-packing, and the thread-local
+/// code-plane arena against fresh allocation. Parity is asserted
+/// bitwise before every timing — memoization must never change a
+/// result, only skip recomputing it.
+fn memo_rows(bj: &mut BenchJson) {
+    use hapq::env::CompressionEnv;
+    use hapq::hw::energy::EnergyModel;
+    use hapq::runtime::native::set_scratch_arena;
+    use hapq::runtime::{InferenceSession, MemoConfig};
+
+    let on = MemoConfig { enabled: true, pack_cap: 256, eval_cap: 4096 };
+    let mk_env = |memo: MemoConfig| -> CompressionEnv {
+        let (arch, weights, images, labels) = bench5_setup();
+        let data =
+            EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
+        let backend = NativeBackend::with_memo(&arch, data, 1, KernelKind::Int, memo).unwrap();
+        let session = InferenceSession::from_backend(Box::new(backend));
+        let energy = EnergyModel::new(
+            arch.layer_dims().unwrap(),
+            hapq::hw::Accel::default(),
+            RqTable::compute(300, 3),
+        );
+        let mut env = CompressionEnv::new(arch, weights, energy, session, 11).unwrap();
+        env.set_memo(memo);
+        env
+    };
+
+    // a revisit-heavy RL walk: 3 distinct whole-network configs, each
+    // visited 4 times — the pattern a converging agent produces
+    let n = 4;
+    let configs: Vec<Vec<Action>> = (0..3)
+        .map(|v| {
+            (0..n)
+                .map(|l| Action {
+                    ratio: 0.15 + 0.1 * v as f64,
+                    bits: 0.5 + 0.12 * v as f64,
+                    alg: (l + v) % 7,
+                })
+                .collect()
+        })
+        .collect();
+    let walk: Vec<usize> = (0..12).map(|i| i % 3).collect();
+    let run = |env: &mut CompressionEnv| -> Vec<f64> {
+        let mut out = Vec::new();
+        for &c in &walk {
+            let sol = env.evaluate_config(&configs[c]).unwrap();
+            out.extend([sol.accuracy, sol.acc_loss, sol.energy_gain, sol.reward]);
+        }
+        out
+    };
+
+    let mut hot = mk_env(on);
+    let mut cold = mk_env(MemoConfig::off());
+    // parity before timing: every solution field bitwise-equal along
+    // the walk, memo on vs off
+    let (sols_hot, sols_cold) = (run(&mut hot), run(&mut cold));
+    assert_f64_bits_eq("memo on vs off walk solutions", &sols_hot, &sols_cold);
+    assert!(hot.memo_hits > 0, "revisit walk produced no memo hits");
+
+    let t_cold = bj.timed("oracle walk 12 revisit evals, memo off", 5, || {
+        std::hint::black_box(run(&mut cold));
+    });
+    let t_hot = bj.timed("oracle walk 12 revisit evals, memo on", 5, || {
+        std::hint::black_box(run(&mut hot));
+    });
+    bj.speedup("oracle_memo_vs_cold", t_cold, t_hot);
+
+    // pack-cache hit vs re-pack: two weight versions revisited with
+    // full invalidation — the memoized engine re-stages packs from the
+    // fingerprint cache, the cold engine rebuilds them every visit
+    let (arch, weights, images, labels) = bench5_setup();
+    let mut w2 = weights.clone();
+    compress5(&mut w2);
+    let bits = [4.0f32, 4.0, 4.0, 4.0];
+    let mk = |memo: MemoConfig| {
+        let data =
+            EvalData::from_arrays(&arch, &images, &labels, labels.len(), arch.batch).unwrap();
+        NativeBackend::with_memo(&arch, data, 1, KernelKind::Int, memo).unwrap()
+    };
+    let bhot = mk(on);
+    let bcold = mk(MemoConfig::off());
+    for w in [&weights, &w2, &weights] {
+        bhot.invalidate_all();
+        bcold.invalidate_all();
+        assert_f32_bits_eq(
+            "pack cache vs re-pack logits",
+            &bhot.engine_logits(w, &bits).unwrap(),
+            &bcold.engine_logits(w, &bits).unwrap(),
+        );
+    }
+    let mut flip = false;
+    let t_repack = bj.timed("oracle revisit 2 configs, re-pack", 10, || {
+        flip = !flip;
+        let w = if flip { &weights } else { &w2 };
+        bcold.invalidate_all();
+        std::hint::black_box(bcold.accuracy(w, &bits).unwrap());
+    });
+    let mut flip = false;
+    let t_cached = bj.timed("oracle revisit 2 configs, pack cache", 10, || {
+        flip = !flip;
+        let w = if flip { &weights } else { &w2 };
+        bhot.invalidate_all();
+        std::hint::black_box(bhot.accuracy(w, &bits).unwrap());
+    });
+    bj.speedup("pack_cache_vs_repack", t_repack, t_cached);
+
+    // scratch arena vs fresh allocation on the int kernel's code-plane
+    // extraction (full recompute so every layer re-runs im2col)
+    let bar = mk(on);
+    set_scratch_arena(false);
+    let l_fresh = bar.engine_logits(&w2, &bits).unwrap();
+    set_scratch_arena(true);
+    bar.invalidate_all();
+    let l_arena = bar.engine_logits(&w2, &bits).unwrap();
+    assert_f32_bits_eq("arena vs fresh-alloc logits", &l_fresh, &l_arena);
+    set_scratch_arena(false);
+    let t_fresh = bj.timed("oracle full recompute, fresh allocs", 10, || {
+        bar.invalidate_all();
+        std::hint::black_box(bar.accuracy(&w2, &bits).unwrap());
+    });
+    set_scratch_arena(true);
+    let t_arena = bj.timed("oracle full recompute, scratch arena", 10, || {
+        bar.invalidate_all();
+        std::hint::black_box(bar.accuracy(&w2, &bits).unwrap());
+    });
+    bj.speedup("arena_vs_fresh_alloc", t_fresh, t_arena);
 }

@@ -6,7 +6,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{BackendKind, KernelKind};
+use crate::runtime::{BackendKind, KernelKind, MemoConfig};
 
 /// Options shared by every HAPQ run.
 #[derive(Clone, Debug)]
@@ -60,6 +60,11 @@ pub struct RunConfig {
     /// `HAPQ_TRACE`) — JSONL, `telemetry::SCHEMA` = 1, read back by
     /// `hapq trace`; `None` keeps telemetry disabled (a near-no-op)
     pub trace: Option<PathBuf>,
+    /// search-loop memoization (`--memo {on,off}`, `--memo-pack-cap N`,
+    /// `--memo-eval-cap N`; default `HAPQ_MEMO` or on) — eval memo,
+    /// pack cache and scratch arenas; bit-identical on or off, so
+    /// purely a performance switch
+    pub memo: MemoConfig,
 }
 
 /// `HAPQ_TRACE` (non-empty) as the default `--trace` path.
@@ -90,6 +95,7 @@ impl Default for RunConfig {
             resume: false,
             stop_after: None,
             trace: default_trace(),
+            memo: MemoConfig::default(),
         }
     }
 }
@@ -204,6 +210,14 @@ impl Cli {
             resume: self.bool_flag("resume"),
             stop_after: self.opt_usize_flag("stop-after")?,
             trace: self.flags.get("trace").map(PathBuf::from).or(d.trace),
+            memo: MemoConfig {
+                enabled: match self.flags.get("memo") {
+                    Some(v) => crate::runtime::parse_memo(v)?,
+                    None => d.memo.enabled,
+                },
+                pack_cap: self.usize_flag("memo-pack-cap", d.memo.pack_cap)?,
+                eval_cap: self.usize_flag("memo-eval-cap", d.memo.eval_cap)?,
+            },
         };
         if cfg.seeds > 1 && (cfg.resume || cfg.stop_after.is_some() || cfg.checkpoint.is_some()) {
             bail!(
@@ -354,6 +368,25 @@ mod tests {
         assert_eq!(c.run_config().unwrap().gemm_tile, None);
         let c = Cli::parse(&args("compress --gemm-tile wide")).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn memo_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --memo off")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert!(!cfg.memo.enabled);
+        let c = Cli::parse(&args("compress --memo on --memo-pack-cap 7 --memo-eval-cap 9"))
+            .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert!(cfg.memo.enabled);
+        assert_eq!((cfg.memo.pack_cap, cfg.memo.eval_cap), (7, 9));
+        // bad values are rejected, absent falls back to the env default
+        let c = Cli::parse(&args("compress --memo sometimes")).unwrap();
+        assert!(c.run_config().is_err());
+        let c = Cli::parse(&args("compress --memo-pack-cap big")).unwrap();
+        assert!(c.run_config().is_err());
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().memo, MemoConfig::default());
     }
 
     #[test]

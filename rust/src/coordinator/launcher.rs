@@ -5,8 +5,12 @@
 //! summary. Process isolation (rather than threads) keeps one inference
 //! backend per worker (one PJRT client each on `--backend pjrt`),
 //! mirrors how the paper's per-model optimizations are independent, and
-//! sidesteps FFI thread-safety questions. The configured `--backend`,
-//! `--kernel` and `--threads` are forwarded to every worker. Finished children are
+//! sidesteps FFI thread-safety questions. Every run-shaping flag the
+//! leader was given — backend, kernel, threads, subset sizes, GEMM
+//! tile, memoization mode and cache caps — is forwarded to every
+//! worker, so a child process reproduces exactly the leader's
+//! configuration (`worker_args_inherit_every_run_shaping_flag` pins
+//! the full list against drift). Finished children are
 //! reaped under an adaptive poll ([`ReapBackoff`]): 1 ms after a reap,
 //! doubling to a 16 ms ceiling while everyone keeps running.
 //!
@@ -87,7 +91,20 @@ impl Job {
             cfg.kernel.name().to_string(),
             "--threads".into(),
             cfg.threads.to_string(),
+            "--test-subset".into(),
+            cfg.test_subset.to_string(),
+            "--mac-samples".into(),
+            cfg.mac_samples.to_string(),
+            "--memo".into(),
+            if cfg.memo.enabled { "on" } else { "off" }.to_string(),
+            "--memo-pack-cap".into(),
+            cfg.memo.pack_cap.to_string(),
+            "--memo-eval-cap".into(),
+            cfg.memo.eval_cap.to_string(),
         ]);
+        if let Some(tile) = cfg.gemm_tile {
+            v.extend(["--gemm-tile".into(), tile.to_string()]);
+        }
         // hardware target: an explicit per-job override (cross-target
         // sweeps) beats the leader's profile file, which beats the
         // leader's --hw name
@@ -469,6 +486,63 @@ mod tests {
         let b = base.args(&cfg);
         assert_eq!(b[0], "baseline");
         assert!(b.contains(&"amc".to_string()));
+    }
+
+    #[test]
+    fn worker_args_inherit_every_run_shaping_flag() {
+        // one table for the whole inherit list: when a flag that shapes
+        // the run is added to RunConfig, it must be forwarded here too,
+        // or workers silently run a different configuration than the
+        // leader (this is exactly how --gemm-tile / --test-subset /
+        // --mac-samples once drifted)
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.episodes = 123;
+        cfg.warmup = 17;
+        cfg.reward_subset = 640;
+        cfg.test_subset = 1280;
+        cfg.mac_samples = 4096;
+        cfg.seed = 99;
+        cfg.threads = 3;
+        cfg.gemm_tile = Some(32);
+        cfg.memo.enabled = false;
+        cfg.memo.pack_cap = 77;
+        cfg.memo.eval_cap = 888;
+        let j = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: None };
+        let a = j.args(&cfg);
+        let expect: &[(&str, String)] = &[
+            ("--artifacts", cfg.artifacts.display().to_string()),
+            ("--out", cfg.out.display().to_string()),
+            ("--episodes", "123".into()),
+            ("--warmup", "17".into()),
+            ("--reward-subset", "640".into()),
+            ("--test-subset", "1280".into()),
+            ("--mac-samples", "4096".into()),
+            ("--seed", "99".into()),
+            ("--backend", cfg.backend.name().into()),
+            ("--kernel", cfg.kernel.name().into()),
+            ("--threads", "3".into()),
+            ("--gemm-tile", "32".into()),
+            ("--memo", "off".into()),
+            ("--memo-pack-cap", "77".into()),
+            ("--memo-eval-cap", "888".into()),
+            ("--hw", cfg.hw.clone()),
+        ];
+        for (flag, want) in expect {
+            let i = a
+                .iter()
+                .position(|x| x == flag)
+                .unwrap_or_else(|| panic!("{flag} not forwarded to workers"));
+            assert_eq!(&a[i + 1], want, "{flag} forwarded with the wrong value");
+        }
+        // a default config has no tile override, so the flag is omitted
+        // and the worker falls back to the same HAPQ_GEMM_TILE default
+        cfg.gemm_tile = None;
+        assert!(!j.args(&cfg).contains(&"--gemm-tile".to_string()));
+        // memo on forwards as the literal `on`
+        cfg.memo.enabled = true;
+        let a = j.args(&cfg);
+        let mi = a.iter().position(|x| x == "--memo").unwrap();
+        assert_eq!(a[mi + 1], "on");
     }
 
     #[test]

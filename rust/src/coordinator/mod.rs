@@ -102,6 +102,17 @@ pub struct RunReport {
     /// cumulative CPU-seconds the oracle spent in prunable-layer (GEMM)
     /// evaluation, summed over workers
     pub gemm_secs: f64,
+    /// whether search-loop memoization was enabled (`--memo`)
+    pub memo: bool,
+    /// cumulative seconds of eval-memo overhead (fingerprinting +
+    /// cache probes; `PhaseTimers::memo_s`)
+    pub memo_s: f64,
+    /// full-config oracle evals answered by the eval memo
+    pub memo_hits: u64,
+    /// packs served from the config-fingerprinted pack cache
+    pub pack_cache_hits: u64,
+    /// packs actually (re)built by the engine
+    pub pack_cache_misses: u64,
     /// episode-reward curve (ours only)
     pub reward_curve: Vec<f64>,
 }
@@ -148,6 +159,11 @@ impl RunReport {
             ("cache_hit_rate", num(self.cache_hit_rate)),
             ("pack_secs", num(self.pack_secs)),
             ("gemm_secs", num(self.gemm_secs)),
+            ("memo", s(if self.memo { "on" } else { "off" })),
+            ("memo_s", num(self.memo_s)),
+            ("memo_hits", num(self.memo_hits as f64)),
+            ("pack_cache_hits", num(self.pack_cache_hits as f64)),
+            ("pack_cache_misses", num(self.pack_cache_misses as f64)),
             ("per_layer", arr(layers)),
             (
                 "reward_curve",
@@ -222,6 +238,7 @@ impl Coordinator {
             None,
             self.cfg.threads,
             self.cfg.kernel,
+            self.cfg.memo,
         )
     }
 
@@ -238,7 +255,9 @@ impl Coordinator {
         let target = self.hw_target()?;
         let energy = EnergyModel::for_target(arch.layer_dims()?, &target, self.rq.clone());
         let session = self.session(&arch, e, Split::Val, self.cfg.reward_subset)?;
-        CompressionEnv::new(arch, weights, energy, session, self.cfg.seed)
+        let mut env = CompressionEnv::new(arch, weights, energy, session, self.cfg.seed)?;
+        env.set_memo(self.cfg.memo);
+        Ok(env)
     }
 
     /// Test-split session for final reporting.
@@ -329,6 +348,11 @@ impl Coordinator {
             cache_hit_rate: stats.cache_hit_rate(),
             pack_secs: stats.pack_secs,
             gemm_secs: stats.gemm_secs,
+            memo: env.memo().enabled,
+            memo_s: env.timers.memo_s,
+            memo_hits: env.memo_hits,
+            pack_cache_hits: stats.pack_hits,
+            pack_cache_misses: stats.pack_misses,
             reward_curve: outcome.curve,
         })
     }
@@ -604,6 +628,11 @@ mod tests {
             cache_hit_rate: 0.75,
             pack_secs: 0.01,
             gemm_secs: 0.05,
+            memo: true,
+            memo_s: 0.003,
+            memo_hits: 6,
+            pack_cache_hits: 9,
+            pack_cache_misses: 3,
             reward_curve: vec![],
         };
         let v = json::parse(&r.to_json().to_string()).unwrap();
@@ -619,6 +648,13 @@ mod tests {
         // so cross-target sweeps stay auditable from the JSON alone
         assert_eq!(v.req("hw").unwrap().as_str().unwrap(), "eyeriss-64");
         assert!(v.req("hw_s").unwrap().as_f64().unwrap() > 0.0);
+        // the memoization mode and its hit counters ride along so
+        // memo-on/off wall-clock diffs can strip exactly these fields
+        assert_eq!(v.req("memo").unwrap().as_str().unwrap(), "on");
+        assert!(v.req("memo_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(v.req("memo_hits").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(v.req("pack_cache_hits").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(v.req("pack_cache_misses").unwrap().as_f64().unwrap(), 3.0);
         // uniform accounting: every run JSON (ours AND baselines)
         // carries seed, evals and wall_secs
         assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), 42.0);

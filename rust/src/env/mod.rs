@@ -14,14 +14,16 @@
 
 pub mod lut;
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::hw::cost::{CostCache, CostModel};
 use crate::hw::energy::{Compression, EnergyModel};
 use crate::model::{ModelArch, Op, Weights};
 use crate::pruning::{prune, prune_channels, PruneAlg, PruneCtx};
-use crate::quant::quantize_weights;
-use crate::runtime::{Candidate, InferenceSession};
+use crate::quant::{config_fingerprint, quantize_weights};
+use crate::runtime::{Candidate, InferenceSession, MemoConfig};
 use crate::util::rng::Rng;
 use lut::RewardLut;
 
@@ -49,8 +51,13 @@ pub struct PhaseTimers {
     /// hardware cost-model (energy/latency) queries, seconds — timed
     /// inside the [`CostCache`] and drained into this slot every step
     pub hw_s: f64,
-    /// validation inference (the accuracy oracle), seconds
+    /// validation inference (the accuracy oracle), seconds — memo-hit
+    /// steps contribute ~0 here (the skipped inference is the win)
     pub infer_s: f64,
+    /// eval-memoization overhead (fingerprinting + cache probes),
+    /// seconds — reported separately so the memo's cost is visible
+    /// next to the inference time it saves
+    pub memo_s: f64,
     /// steps accumulated into the totals above
     pub steps: u64,
 }
@@ -62,6 +69,105 @@ impl crate::telemetry::MetricsSource for PhaseTimers {
         reg.gauge("env.quant_s", self.quant_s);
         reg.gauge("env.hw_s", self.hw_s);
         reg.gauge("env.infer_s", self.infer_s);
+        reg.gauge("env.memo_s", self.memo_s);
+    }
+}
+
+/// Bounded-LRU memo of full-config oracle results: key = the
+/// whole-network per-layer [`config_fingerprint`] vector (exact
+/// `Vec<u64>` equality — no truncation, no tolerance), value = the
+/// accuracy the oracle returned for that exact configuration. A hit
+/// replays the *identical* `f64`, draws no RNG and reorders no float
+/// arithmetic, which is what keeps a memoized run bitwise-equal to a
+/// cold one (the exec-engine proptest and the `HAPQ_MEMO=0` CI lane
+/// both pin this).
+struct EvalCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<Vec<u64>, (u64, f64)>,
+}
+
+impl EvalCache {
+    fn new(cap: usize) -> EvalCache {
+        EvalCache { cap, tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, key: &[u64]) -> Option<f64> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.0 = tick;
+            e.1
+        })
+    }
+
+    fn insert(&mut self, key: Vec<u64>, acc: f64) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.len() >= self.cap {
+            // LRU: evict the stalest tick (O(len) scan — one miss also
+            // pays a full inference, so the scan is noise)
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(key, (self.tick, acc));
+    }
+}
+
+/// One snapshot of every cache seam's counters, under a single `cache.*`
+/// metrics namespace so `hapq perf --json` reports them uniformly
+/// (hardware cost model, activation checkpoints, pack cache, eval memo).
+/// Built by [`CompressionEnv::cache_counters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheCounters {
+    /// hardware cost-model layer terms re-priced / served from cache
+    pub cost_recomputed: u64,
+    /// hardware cost-model layer terms reused
+    pub cost_reused: u64,
+    /// graph-layer activations recomputed by the exec engine
+    pub act_computed: u64,
+    /// graph-layer activations served from checkpoint caches
+    pub act_reused: u64,
+    /// packs served from the config-fingerprinted pack cache
+    pub pack_hits: u64,
+    /// packs actually (re)built
+    pub pack_misses: u64,
+    /// full-config oracle evals answered by the eval memo
+    pub eval_hits: u64,
+    /// full-config oracle evals that ran real inference (memo on)
+    pub eval_misses: u64,
+}
+
+impl CacheCounters {
+    fn rate(hits: u64, misses: u64) -> f64 {
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
+impl crate::telemetry::MetricsSource for CacheCounters {
+    fn record(&self, reg: &mut crate::telemetry::MetricsRegistry) {
+        reg.counter("cache.cost.hits", self.cost_reused);
+        reg.counter("cache.cost.misses", self.cost_recomputed);
+        reg.gauge("cache.cost.hit_rate", Self::rate(self.cost_reused, self.cost_recomputed));
+        reg.counter("cache.act.hits", self.act_reused);
+        reg.counter("cache.act.misses", self.act_computed);
+        reg.gauge("cache.act.hit_rate", Self::rate(self.act_reused, self.act_computed));
+        reg.counter("cache.pack.hits", self.pack_hits);
+        reg.counter("cache.pack.misses", self.pack_misses);
+        reg.gauge("cache.pack.hit_rate", Self::rate(self.pack_hits, self.pack_misses));
+        reg.counter("cache.eval.hits", self.eval_hits);
+        reg.counter("cache.eval.misses", self.eval_misses);
+        reg.gauge("cache.eval.hit_rate", Self::rate(self.eval_hits, self.eval_misses));
     }
 }
 
@@ -188,8 +294,22 @@ pub struct CompressionEnv {
 
     // normalisation constants for the state embedding
     norm: StateNorm,
-    /// count of reward-oracle invocations (Table 3/4 accounting)
+    /// count of reward-oracle invocations (Table 3/4 accounting) —
+    /// memo hits still count: the budget is over *logical* evals
     pub n_evals: u64,
+
+    // search-loop memoization (the --memo family)
+    memo: MemoConfig,
+    eval_cache: EvalCache,
+    /// lazily maintained per-layer config fingerprints of `work` +
+    /// `act_bits` (`None` = dirty, recomputed at the next memo probe);
+    /// dirtied exactly where the session is invalidated, so the memo
+    /// key always describes what the oracle would see
+    fps: Vec<Option<u64>>,
+    /// full-config evals answered from the memo instead of inference
+    pub memo_hits: u64,
+    /// full-config evals that ran real inference while the memo was on
+    pub memo_misses: u64,
 }
 
 struct StateNorm {
@@ -249,7 +369,85 @@ impl CompressionEnv {
             norm,
             dense: weights,
             n_evals: 0,
+            memo: MemoConfig::default(),
+            eval_cache: EvalCache::new(MemoConfig::default().eval_cap),
+            fps: vec![None; n],
+            memo_hits: 0,
+            memo_misses: 0,
         })
+    }
+
+    /// Replace the memoization config (the CLI's `--memo` family). The
+    /// eval cache restarts empty at the new capacity; counters keep
+    /// accumulating. Purely a speed knob — memoized results are the
+    /// exact previously computed values.
+    pub fn set_memo(&mut self, memo: MemoConfig) {
+        self.eval_cache = EvalCache::new(if memo.enabled { memo.eval_cap } else { 0 });
+        self.memo = memo;
+    }
+
+    /// The active memoization config.
+    pub fn memo(&self) -> MemoConfig {
+        self.memo
+    }
+
+    /// Snapshot every cache seam's counters under the unified `cache.*`
+    /// namespace (cost model, activation checkpoints, pack cache, eval
+    /// memo) — collected into `hapq perf --json` and the run report.
+    pub fn cache_counters(&self) -> CacheCounters {
+        let stats = self.session.stats();
+        CacheCounters {
+            cost_recomputed: self.cost.recomputed(),
+            cost_reused: self.cost.reused(),
+            act_computed: stats.layers_computed,
+            act_reused: stats.layers_reused,
+            pack_hits: stats.pack_hits,
+            pack_misses: stats.pack_misses,
+            eval_hits: self.memo_hits,
+            eval_misses: self.memo_misses,
+        }
+    }
+
+    /// Answer one full-config oracle query through the eval memo.
+    /// Returns `(accuracy, memo_overhead_secs)`; the overhead is also
+    /// accumulated into [`PhaseTimers::memo_s`] so the caller can
+    /// subtract it from its own inference-phase attribution. On a hit
+    /// the session is *not* queried — its staged state stays stale and
+    /// the pending invalidate marks remain, which is safe: the engine
+    /// re-diffs dirty layers against the weights at the next real eval.
+    fn memo_accuracy(&mut self) -> Result<(f64, f64)> {
+        if !self.memo.enabled || self.memo.eval_cap == 0 {
+            let acc = self.session.accuracy(&self.work, &self.act_bits)?;
+            return Ok((acc, 0.0));
+        }
+        let m0 = std::time::Instant::now();
+        for (i, fp) in self.fps.iter_mut().enumerate() {
+            if fp.is_none() {
+                *fp = Some(config_fingerprint(&self.work.w[i], self.act_bits[i]));
+            }
+        }
+        let key: Vec<u64> = self.fps.iter().map(|fp| fp.unwrap()).collect();
+        if let Some(acc) = self.eval_cache.get(&key) {
+            self.memo_hits += 1;
+            let memo_secs = m0.elapsed().as_secs_f64();
+            self.timers.memo_s += memo_secs;
+            if crate::telemetry::enabled() {
+                crate::telemetry::span_at("env.memo", m0, memo_secs, None);
+                crate::telemetry::count("env.memo.hits", 1);
+            }
+            return Ok((acc, memo_secs));
+        }
+        self.memo_misses += 1;
+        let probe_secs = m0.elapsed().as_secs_f64();
+        let acc = self.session.accuracy(&self.work, &self.act_bits)?;
+        let m1 = std::time::Instant::now();
+        self.eval_cache.insert(key, acc);
+        let memo_secs = probe_secs + m1.elapsed().as_secs_f64();
+        self.timers.memo_s += memo_secs;
+        if crate::telemetry::enabled() {
+            crate::telemetry::count("env.memo.misses", 1);
+        }
+        Ok((acc, memo_secs))
     }
 
     /// Number of prunable layers (= episode length).
@@ -269,6 +467,9 @@ impl CompressionEnv {
         self.t = 0;
         self.last_action = (0.0, 1.0);
         self.session.invalidate_all();
+        // every layer is back to dense/8-bit: recompute fingerprints at
+        // the next memo probe (mirrors the invalidate_all above)
+        self.fps.iter_mut().for_each(|fp| *fp = None);
         self.state(0)
     }
 
@@ -358,6 +559,7 @@ impl CompressionEnv {
         quantize_weights(&mut self.work.w[t], bits);
         let ph2 = std::time::Instant::now();
         self.session.invalidate(t);
+        self.fps[t] = None; // layer t's (weights, bits) just changed
         self.act_bits[t] = bits as f32;
         let sparsity = result.sparsity;
         if alg.coarse() && result.channels.is_none() {
@@ -379,13 +581,14 @@ impl CompressionEnv {
             Metric::Edp => 1.0 - (1.0 - energy_gain) * (1.0 - latency_gain),
         };
         let ph3 = std::time::Instant::now();
-        let accuracy = self.session.accuracy(&self.work, &self.act_bits)?;
+        let (accuracy, memo_secs) = self.memo_accuracy()?;
         let ph4 = std::time::Instant::now();
+        let infer_secs = ((ph4 - ph3).as_secs_f64() - memo_secs).max(0.0);
         let hw_secs = self.cost.take_secs();
         self.timers.prune_s += (ph1 - ph0).as_secs_f64();
         self.timers.quant_s += (ph2 - ph1).as_secs_f64();
         self.timers.hw_s += hw_secs;
-        self.timers.infer_s += (ph4 - ph3).as_secs_f64();
+        self.timers.infer_s += infer_secs;
         self.timers.steps += 1;
         self.n_evals += 1;
         if crate::telemetry::enabled() {
@@ -395,7 +598,7 @@ impl CompressionEnv {
             span_at("env.prune", ph0, (ph1 - ph0).as_secs_f64(), Some(t));
             span_at("env.quant", ph1, (ph2 - ph1).as_secs_f64(), Some(t));
             span_at("env.hw", ph2, hw_secs, Some(t));
-            span_at("env.infer", ph3, (ph4 - ph3).as_secs_f64(), Some(t));
+            span_at("env.infer", ph3, infer_secs, Some(t));
             span_at("env.step", ph0, (ph4 - ph0).as_secs_f64(), Some(t));
             count("hw.cache.recomputed", self.cost.recomputed() - rc0);
             count("hw.cache.reused", self.cost.reused() - ru0);
@@ -569,5 +772,32 @@ mod tests {
         assert_eq!(b.precision(), 8);
         let c = Action { ratio: 0.0, bits: 0.5, alg: 0 };
         assert_eq!(c.precision(), 5);
+    }
+
+    #[test]
+    fn eval_cache_lru_exact_keys() {
+        let mut c = EvalCache::new(2);
+        assert!(c.get(&[1, 2]).is_none());
+        c.insert(vec![1, 2], 0.5);
+        assert_eq!(c.get(&[1, 2]), Some(0.5));
+        c.insert(vec![3, 4], 0.25);
+        c.get(&[1, 2]); // refresh: [3,4] is now the LRU entry
+        c.insert(vec![5, 6], 0.75); // at capacity -> evicts [3,4]
+        assert!(c.get(&[3, 4]).is_none());
+        assert_eq!(c.get(&[1, 2]), Some(0.5));
+        assert_eq!(c.get(&[5, 6]), Some(0.75));
+        // a different fingerprint vector is a different config
+        assert!(c.get(&[1, 2, 3]).is_none());
+        // cap 0 retains nothing (--memo off)
+        let mut off = EvalCache::new(0);
+        off.insert(vec![1], 0.1);
+        assert!(off.get(&[1]).is_none());
+    }
+
+    #[test]
+    fn cache_counters_rates_handle_zero_totals() {
+        let c = CacheCounters::default();
+        assert_eq!(CacheCounters::rate(c.eval_hits, c.eval_misses), 0.0);
+        assert_eq!(CacheCounters::rate(3, 1), 0.75);
     }
 }

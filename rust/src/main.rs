@@ -53,7 +53,12 @@
 //! way (`rust/tests/kernel_conformance.rs`), so the flag is purely a
 //! performance knob. `--gemm-tile N` (default: `HAPQ_GEMM_TILE` or 64)
 //! sets the blocked integer GEMM's column tile width — also purely a
-//! perf/testing knob, bit-identical at every width.
+//! perf/testing knob, bit-identical at every width. `--memo {on,off}`
+//! (default: `HAPQ_MEMO` or `on`) toggles search-loop memoization —
+//! config-fingerprinted eval/pack caches plus the kernel scratch
+//! arenas — with `--memo-pack-cap N` / `--memo-eval-cap N` sizing the
+//! two LRU caches; results are bit-identical either way (memo hits
+//! replay exactly the value a cold eval computed).
 //!
 //! `--trace PATH` (default: `HAPQ_TRACE`) records a structured JSONL
 //! trace of the run — search step/episode events, env phase spans,
@@ -92,6 +97,7 @@ fn print_help() {
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
          --reward-subset N --model NAME --backend native|pjrt \
          --kernel f32|int --threads N --gemm-tile N \
+         --memo on|off --memo-pack-cap N --memo-eval-cap N \
          --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json \
          --trace PATH (JSONL telemetry; default HAPQ_TRACE)\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
@@ -140,6 +146,9 @@ fn run(args: &[String]) -> Result<()> {
     if let Some(tile) = cfg.gemm_tile {
         hapq::nn::mat::set_gemm_tile(tile);
     }
+    // the scratch arenas follow the memo switch: one process-wide knob
+    // so `--memo off` disables every reuse path at once
+    hapq::runtime::native::set_scratch_arena(cfg.memo.enabled);
     // fan-out commands delegate tracing to the launcher (each child
     // writes its own trace; the parent aggregates them into the --trace
     // path) — enabling the in-process sink here would clobber that
@@ -699,6 +708,9 @@ hotspots holding 50% of energy: {hs:?}");
                 reg.collect(&env.timers);
                 reg.collect(&stats);
                 reg.collect(&env.cost);
+                // unified cache counters: cost, act-checkpoint, pack,
+                // eval-memo under one `cache.*` group
+                reg.collect(&env.cache_counters());
                 for s in &iter_secs {
                     reg.observe("perf.episode_secs", *s);
                 }
@@ -743,6 +755,16 @@ hotspots holding 50% of energy: {hs:?}");
                 "  oracle kernel phases: pack {:.1} ms | prunable-layer eval {:.1} ms (cumulative)",
                 stats.pack_secs * 1e3,
                 stats.gemm_secs * 1e3
+            );
+            println!(
+                "  memo [{}]: eval hits {} / misses {} | pack-cache hit-rate {:.1}% ({} hits, {} misses) | overhead {:.3} ms",
+                if env.memo().enabled { "on" } else { "off" },
+                env.memo_hits,
+                env.memo_misses,
+                stats.pack_cache_hit_rate() * 100.0,
+                stats.pack_hits,
+                stats.pack_misses,
+                t.memo_s * 1e3
             );
             Ok(())
         }

@@ -23,6 +23,41 @@ pub use grid::QuantGrid;
 
 use crate::tensor::Tensor;
 
+/// FNV-1a offset basis (64-bit).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a_u32(mut h: u64, word: u32) -> u64 {
+    for shift in [0u32, 8, 16, 24] {
+        h ^= ((word >> shift) & 0xff) as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical per-layer **config fingerprint**: a 64-bit FNV-1a hash of
+/// the layer's weight tensor *bit patterns* (so `-0.0` vs `0.0` and
+/// every rounding decision are distinguished — the same exactness
+/// standard as the bit-identity contracts) followed by the bit pattern
+/// of the layer's activation precision (`act_bits` travels the oracle
+/// seam as `f32`). One (pruning mask ⊕ quantized values ⊕ bits)
+/// configuration maps to one key, which is what makes it safe as the
+/// cache key for the search-loop memoization subsystem: the exec
+/// engine's `PackCache` (a `PackedLayer` is a pure function of
+/// `(weights, grid)` and the grid is a pure function of
+/// `(bits, act_scale, act_signed)` — the latter two constants per
+/// layer) and the environment's `EvalCache` (which keys on the
+/// whole-network fingerprint vector, exact-compared).
+pub fn config_fingerprint(w: &Tensor, act_bits: f32) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in &w.data {
+        h = fnv1a_u32(h, v.to_bits());
+    }
+    fnv1a_u32(h, act_bits.to_bits())
+}
+
 /// Fake-quantize `w` in place to `bits` per channel. Returns the mean
 /// squared quantization error (used by the OPQ baseline's analytics).
 pub fn quantize_weights(w: &mut Tensor, bits: u32) -> f64 {
@@ -162,6 +197,51 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn fingerprint_separates_masks_values_and_bits() {
+        let w = toy();
+        let base = config_fingerprint(&w, 4.0);
+        // deterministic
+        assert_eq!(base, config_fingerprint(&toy(), 4.0));
+        // bits are part of the key
+        assert_ne!(base, config_fingerprint(&w, 5.0));
+        // a mask change (prune one weight) changes the key
+        let mut masked = toy();
+        masked.data[3] = 0.0;
+        assert_ne!(base, config_fingerprint(&masked, 4.0));
+        // a value-only change (same mask) changes the key
+        let mut tweaked = toy();
+        tweaked.data[3] *= 1.5;
+        assert_ne!(base, config_fingerprint(&tweaked, 4.0));
+        // bit patterns, not float equality: -0.0 != 0.0
+        let mut neg = toy();
+        neg.data[0] = 0.0;
+        let mut pos = toy();
+        pos.data[0] = -0.0;
+        assert_ne!(config_fingerprint(&neg, 4.0), config_fingerprint(&pos, 4.0));
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_prune_quant_pipeline() {
+        // the intended call pattern: fingerprint after prune+quant —
+        // identical pipelines yield identical keys, different ratios
+        // or precisions yield different keys
+        use crate::pruning::{prune, PruneAlg, PruneCtx};
+        use crate::util::rng::Rng;
+        let mk = |ratio: f64, bits: u32| {
+            let mut w = Tensor::new(vec![16, 4], (0..64).map(|i| (i as f32).sin()).collect());
+            let sal = Tensor::zeros(vec![64]);
+            let mut rng = Rng::new(7);
+            let mut ctx = PruneCtx { saliency: &sal, chsq: &[], dwconv: false, rng: &mut rng };
+            prune(&mut w, PruneAlg::Level, ratio, &mut ctx);
+            quantize_weights(&mut w, bits);
+            config_fingerprint(&w, bits as f32)
+        };
+        assert_eq!(mk(0.5, 4), mk(0.5, 4));
+        assert_ne!(mk(0.5, 4), mk(0.3, 4));
+        assert_ne!(mk(0.5, 4), mk(0.5, 6));
     }
 
     #[test]

@@ -51,8 +51,9 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::model::{ModelArch, Weights};
+use crate::quant::config_fingerprint;
 use crate::runtime::native::{pack_layer, quant_params, PackedLayer};
-use crate::runtime::{Candidate, EvalData, KernelKind, RuntimeStats};
+use crate::runtime::{Candidate, EvalData, KernelKind, MemoConfig, RuntimeStats};
 use crate::tensor::Tensor;
 
 use pool::{CandJob, Job, Pool};
@@ -188,6 +189,66 @@ fn build_shards(data: &EvalData, threads: usize) -> Vec<Shard> {
     shards
 }
 
+/// Bounded-LRU cache of int-kernel packs keyed by
+/// `(prunable index, config fingerprint)` — the search loop's discrete
+/// action space revisits identical `(mask, values, bits)` layer configs
+/// constantly, and a [`PackedLayer`] is a pure function of
+/// `(weights, grid)` where the grid is itself a pure function of
+/// `(bits, act_scale, act_signed)` with the latter two constant per
+/// layer. So one [`config_fingerprint`] key identifies one pack
+/// exactly, and a hit hands back the very same `Arc` a fresh
+/// [`pack_layer`] call would rebuild — bit-identical by construction.
+/// Degenerate-grid layers cache their `None` (f32 fallback) too.
+///
+/// Eviction is least-recently-used via a monotone access tick and an
+/// `O(len)` min-scan at capacity — packs are worth milliseconds each
+/// and the capacity is small (hundreds), so a scan beats the bookkeeping
+/// of an intrusive list. `cap == 0` disables caching entirely
+/// (`--memo off`): every call builds fresh, nothing is retained.
+struct PackCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<(usize, u64), (u64, Option<Arc<PackedLayer>>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PackCache {
+    fn new(cap: usize) -> PackCache {
+        PackCache { cap, tick: 0, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Look up `(pi, fp)`, building (and retaining) via `build` on a
+    /// miss. The returned pack is shared: hits clone the cached `Arc`.
+    fn get_or_pack(
+        &mut self,
+        pi: usize,
+        fp: u64,
+        build: impl FnOnce() -> Option<Arc<PackedLayer>>,
+    ) -> Option<Arc<PackedLayer>> {
+        if self.cap == 0 {
+            self.misses += 1;
+            return build();
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(entry) = self.map.get_mut(&(pi, fp)) {
+            entry.0 = tick;
+            self.hits += 1;
+            return entry.1.clone();
+        }
+        self.misses += 1;
+        let pack = build();
+        if self.map.len() >= self.cap {
+            if let Some(&oldest) = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k) {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert((pi, fp), (tick, pack.clone()));
+        pack
+    }
+}
+
 /// Mutable engine state behind the `&self` backend API: the staged
 /// weight snapshot (plus, on the int kernel, the per-layer packs), the
 /// pending dirty hints, and the cache statistics.
@@ -203,6 +264,7 @@ struct EngineState {
     reused: u64,
     pack_s: f64,
     gemm_s: f64,
+    pack_cache: PackCache,
 }
 
 /// What one engine evaluation produces.
@@ -237,6 +299,20 @@ impl Engine {
         data: &EvalData,
         threads: usize,
         kernel: KernelKind,
+    ) -> Result<Engine> {
+        Self::with_memo(arch, data, threads, kernel, MemoConfig::default())
+    }
+
+    /// [`Engine::new`] with an explicit memoization config: sizes the
+    /// pack cache (`--memo-pack-cap`), or disables pack caching
+    /// entirely when `memo.enabled` is false — a pure speed knob; the
+    /// cached pack is the same `Arc` a rebuild would produce.
+    pub fn with_memo(
+        arch: &ModelArch,
+        data: &EvalData,
+        threads: usize,
+        kernel: KernelKind,
+        memo: MemoConfig,
     ) -> Result<Engine> {
         let threads = threads.max(1);
         let n = arch.prunable.len();
@@ -275,6 +351,7 @@ impl Engine {
                 reused: 0,
                 pack_s: 0.0,
                 gemm_s: 0.0,
+                pack_cache: PackCache::new(if memo.enabled { memo.pack_cap } else { 0 }),
             }),
             threads,
             kernel,
@@ -356,6 +433,8 @@ impl Engine {
             layers_reused: st.reused,
             pack_secs: st.pack_s,
             gemm_secs: st.gemm_s,
+            pack_hits: st.pack_cache.hits,
+            pack_misses: st.pack_cache.misses,
         }
     }
 
@@ -409,13 +488,16 @@ impl Engine {
         st.marked.iter_mut().for_each(|m| *m = false);
         st.all_dirty = false;
 
-        // int kernel: (re)pack exactly the dirty layers — an
-        // incremental resume never re-packs clean ones
+        // int kernel: (re)stage exactly the dirty layers' packs — an
+        // incremental resume never touches clean ones, and a revisited
+        // (mask, values, bits) config pulls its pack from the LRU
+        // cache instead of rebuilding it
         if self.kernel == KernelKind::Int {
             let t0 = Instant::now();
             if st.staged_pack.len() != n {
                 st.staged_pack = vec![None; n];
             }
+            let EngineState { staged_w, staged_pack, pack_cache, .. } = &mut *st;
             for (i, dirty) in dirty_p.iter().enumerate() {
                 if *dirty {
                     let li = self.plan.layer_of_prunable[i];
@@ -425,8 +507,10 @@ impl Engine {
                         self.plan.arch.act_scales[i],
                         self.plan.arch.act_signed[i],
                     );
-                    let pack = pack_layer(layer, &st.staged_w[i], grid).map(Arc::new);
-                    st.staged_pack[i] = pack;
+                    let fp = config_fingerprint(&staged_w[i], act_bits[i]);
+                    let w = &staged_w[i];
+                    staged_pack[i] =
+                        pack_cache.get_or_pack(i, fp, || pack_layer(layer, w, grid).map(Arc::new));
                 }
             }
             let pack_secs = t0.elapsed().as_secs_f64();
@@ -441,30 +525,33 @@ impl Engine {
         // base restage packs
         let cand_jobs: Vec<CandJob> = {
             let t0 = Instant::now();
-            let jobs = cands
-                .iter()
-                .map(|c| {
-                    let pack = if self.kernel == KernelKind::Int {
-                        let li = self.plan.layer_of_prunable[c.layer];
-                        let layer = &self.plan.arch.layers[li];
-                        let grid = quant_params(
-                            c.bits,
-                            self.plan.arch.act_scales[c.layer],
-                            self.plan.arch.act_signed[c.layer],
-                        );
-                        pack_layer(layer, &c.w, grid).map(Arc::new)
-                    } else {
-                        None
-                    };
-                    CandJob {
-                        pi: c.layer,
-                        w: c.w.clone(),
-                        b: c.b.clone(),
-                        bits: c.bits,
-                        pack,
-                    }
-                })
-                .collect();
+            let mut jobs = Vec::with_capacity(cands.len());
+            for c in cands {
+                let pack = if self.kernel == KernelKind::Int {
+                    let li = self.plan.layer_of_prunable[c.layer];
+                    let layer = &self.plan.arch.layers[li];
+                    let grid = quant_params(
+                        c.bits,
+                        self.plan.arch.act_scales[c.layer],
+                        self.plan.arch.act_signed[c.layer],
+                    );
+                    // candidates share the staged packs' cache keyspace:
+                    // an accepted candidate's next staging is a hit, and
+                    // re-priced candidates stop re-packing
+                    let fp = config_fingerprint(&c.w, c.bits);
+                    st.pack_cache
+                        .get_or_pack(c.layer, fp, || pack_layer(layer, &c.w, grid).map(Arc::new))
+                } else {
+                    None
+                };
+                jobs.push(CandJob {
+                    pi: c.layer,
+                    w: c.w.clone(),
+                    b: c.b.clone(),
+                    bits: c.bits,
+                    pack,
+                });
+            }
             if !cands.is_empty() {
                 let pack_secs = t0.elapsed().as_secs_f64();
                 st.pack_s += pack_secs;
@@ -556,5 +643,28 @@ mod tests {
     #[test]
     fn default_threads_is_at_least_one() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn pack_cache_lru_hits_and_evicts() {
+        let none = || None;
+        let mut pc = PackCache::new(2);
+        assert!(pc.get_or_pack(0, 1, none).is_none()); // miss: builds
+        // a hit must not invoke the builder — it returns the cached
+        // entry (here the cached `None` of a degenerate-grid layer)
+        assert!(pc.get_or_pack(0, 1, || panic!("hit rebuilt")).is_none());
+        assert_eq!((pc.hits, pc.misses), (1, 1));
+        pc.get_or_pack(0, 2, none); // miss: cache now full
+        pc.get_or_pack(0, 1, || panic!("hit rebuilt")); // refreshes (0,1)
+        pc.get_or_pack(1, 3, none); // miss: evicts LRU (0,2)
+        pc.get_or_pack(0, 2, none); // miss again — it was evicted
+        assert_eq!((pc.hits, pc.misses), (2, 4));
+        assert_eq!(pc.map.len(), 2);
+        // cap 0 disables retention entirely (--memo off)
+        let mut off = PackCache::new(0);
+        off.get_or_pack(0, 1, none);
+        off.get_or_pack(0, 1, none);
+        assert_eq!((off.hits, off.misses), (0, 2));
+        assert!(off.map.is_empty());
     }
 }

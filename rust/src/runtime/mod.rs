@@ -125,6 +125,58 @@ pub fn default_kernel() -> KernelKind {
         .unwrap_or_default()
 }
 
+/// Parse a `--memo` flag value / `HAPQ_MEMO` setting (`on`/`off`,
+/// `1`/`0`, `true`/`false`).
+pub fn parse_memo(s: &str) -> Result<bool> {
+    match s {
+        "on" | "1" | "true" => Ok(true),
+        "off" | "0" | "false" => Ok(false),
+        other => bail!("unknown memo setting `{other}` (expected `on` or `off`)"),
+    }
+}
+
+/// Memoization default for new sessions: the `HAPQ_MEMO` environment
+/// variable when set to a valid value, else **on**. Like the kernel
+/// knob this is purely a performance switch — memoized results are the
+/// *exact* previously computed values, so runs are bit-identical with
+/// it on or off (the `HAPQ_MEMO=0` CI lane drives the whole suite
+/// through the cold path).
+pub fn default_memo() -> bool {
+    std::env::var("HAPQ_MEMO").ok().and_then(|v| parse_memo(&v).ok()).unwrap_or(true)
+}
+
+/// Search-loop memoization configuration (the CLI's `--memo` /
+/// `--memo-pack-cap` / `--memo-eval-cap`), threaded from `RunConfig`
+/// through the coordinator into the exec engine (pack cache, scratch
+/// arenas) and the compression environment (eval cache).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoConfig {
+    /// master switch: false disables the pack cache, the eval cache and
+    /// the scratch arenas (fresh allocations / re-packs everywhere)
+    pub enabled: bool,
+    /// bounded-LRU capacity of the engine's `PackedLayer` cache
+    /// (entries, across all prunable layers)
+    pub pack_cap: usize,
+    /// bounded-LRU capacity of the environment's full-config eval cache
+    /// (entries; one entry = one whole-network fingerprint vector)
+    pub eval_cap: usize,
+}
+
+impl Default for MemoConfig {
+    /// Environment-resolved default: `HAPQ_MEMO` for the switch
+    /// ([`default_memo`]), 256 pack entries, 4096 eval entries.
+    fn default() -> Self {
+        MemoConfig { enabled: default_memo(), pack_cap: 256, eval_cap: 4096 }
+    }
+}
+
+impl MemoConfig {
+    /// A disabled configuration (the `--memo off` cold path).
+    pub fn off() -> MemoConfig {
+        MemoConfig { enabled: false, pack_cap: 0, eval_cap: 0 }
+    }
+}
+
 /// Execution statistics a backend may expose for perf reporting and
 /// the run-JSON measurement conventions (EXPERIMENTS.md).
 #[derive(Clone, Copy, Debug)]
@@ -144,6 +196,11 @@ pub struct RuntimeStats {
     /// cumulative CPU-seconds inside prunable-layer (GEMM) evaluation,
     /// summed across workers — compare at equal `threads` only
     pub gemm_secs: f64,
+    /// packs served from the config-fingerprinted `PackCache` instead
+    /// of being rebuilt (0 with `--memo off` or the f32 kernel)
+    pub pack_hits: u64,
+    /// packs actually (re)built — the pack-cache miss count
+    pub pack_misses: u64,
 }
 
 impl Default for RuntimeStats {
@@ -155,6 +212,8 @@ impl Default for RuntimeStats {
             layers_reused: 0,
             pack_secs: 0.0,
             gemm_secs: 0.0,
+            pack_hits: 0,
+            pack_misses: 0,
         }
     }
 }
@@ -170,16 +229,30 @@ impl RuntimeStats {
             self.layers_reused as f64 / total as f64
         }
     }
+
+    /// Fraction of pack requests served from the `PackCache` (0 when no
+    /// pack was ever requested — the f32 kernel or `--memo off`).
+    pub fn pack_cache_hit_rate(&self) -> f64 {
+        let total = self.pack_hits + self.pack_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.pack_hits as f64 / total as f64
+        }
+    }
 }
 
 impl crate::telemetry::MetricsSource for RuntimeStats {
     fn record(&self, reg: &mut crate::telemetry::MetricsRegistry) {
         reg.counter("exec.layers_computed", self.layers_computed);
         reg.counter("exec.layers_reused", self.layers_reused);
+        reg.counter("exec.pack_hits", self.pack_hits);
+        reg.counter("exec.pack_misses", self.pack_misses);
         reg.gauge("exec.threads", self.threads as f64);
         reg.gauge("exec.pack_secs", self.pack_secs);
         reg.gauge("exec.gemm_secs", self.gemm_secs);
         reg.gauge("exec.cache_hit_rate", self.cache_hit_rate());
+        reg.gauge("exec.pack_cache_hit_rate", self.pack_cache_hit_rate());
         reg.label("exec.kernel", self.kernel.name());
     }
 }
@@ -429,11 +502,23 @@ impl InferenceSession {
         batch: Option<usize>,
         threads: usize,
     ) -> Result<InferenceSession> {
-        Self::open_with(kind, arch, hlo, data_npz, split, limit, batch, threads, default_kernel())
+        Self::open_with(
+            kind,
+            arch,
+            hlo,
+            data_npz,
+            split,
+            limit,
+            batch,
+            threads,
+            default_kernel(),
+            MemoConfig::default(),
+        )
     }
 
     /// [`Self::open`] with an explicit compute kernel (the CLI's
-    /// `--kernel`; ignored by PJRT, whose executor is the AOT graph).
+    /// `--kernel`) and memoization config (the CLI's `--memo` family);
+    /// both ignored by PJRT, whose executor is the AOT graph.
     #[allow(clippy::too_many_arguments)]
     pub fn open_with(
         kind: BackendKind,
@@ -445,13 +530,14 @@ impl InferenceSession {
         batch: Option<usize>,
         threads: usize,
         kernel: KernelKind,
+        memo: MemoConfig,
     ) -> Result<InferenceSession> {
         let batch = batch.unwrap_or(arch.batch);
         match kind {
             BackendKind::Native => {
                 let data = EvalData::load(arch, data_npz, split, limit, batch)?;
-                Ok(Self::from_backend(Box::new(NativeBackend::with_options(
-                    arch, data, threads, kernel,
+                Ok(Self::from_backend(Box::new(NativeBackend::with_memo(
+                    arch, data, threads, kernel, memo,
                 )?)))
             }
             #[cfg(feature = "pjrt")]
@@ -539,6 +625,22 @@ mod tests {
         // backends without the native engine report the f32 reference
         assert_eq!(RuntimeStats::default().kernel, KernelKind::F32);
         assert_eq!(RuntimeStats::default().pack_secs, 0.0);
+    }
+
+    #[test]
+    fn memo_flag_parses() {
+        assert!(parse_memo("on").unwrap());
+        assert!(parse_memo("1").unwrap());
+        assert!(parse_memo("true").unwrap());
+        assert!(!parse_memo("off").unwrap());
+        assert!(!parse_memo("0").unwrap());
+        assert!(!parse_memo("false").unwrap());
+        assert!(parse_memo("maybe").is_err());
+        let off = MemoConfig::off();
+        assert!(!off.enabled);
+        assert_eq!((off.pack_cap, off.eval_cap), (0, 0));
+        // the disabled stats report a 0 pack hit rate, not NaN
+        assert_eq!(RuntimeStats::default().pack_cache_hit_rate(), 0.0);
     }
 
     #[test]

@@ -65,14 +65,73 @@
 //! surfaces for activations landing exactly on a grid midpoint, which
 //! calibration-scaled real data essentially never does.
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
 use anyhow::{bail, Result};
 
 use super::exec::{default_threads, Engine};
-use super::{default_kernel, Candidate, EvalData, InferenceBackend, KernelKind, RuntimeStats};
+use super::{
+    default_kernel, default_memo, Candidate, EvalData, InferenceBackend, KernelKind, MemoConfig,
+    RuntimeStats,
+};
 use crate::model::{Layer, ModelArch, Op, Weights};
 use crate::nn::mat::{CodeMat, Mat, PackedMat};
 use crate::quant::QuantGrid;
 use crate::tensor::Tensor;
+
+/// Process-wide scratch-arena override set by [`set_scratch_arena`]
+/// (0 = unset → follow [`default_memo`], 1 = off, 2 = on).
+static SCRATCH_ARENA_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Enable/disable the thread-local i16 code-plane scratch arena
+/// process-wide (wired from `--memo` / `HAPQ_MEMO` in `main.rs`, and
+/// toggled directly by the arena micro-benchmark). Purely an allocation
+/// strategy: results are bit-identical either way — the arena hands the
+/// int kernel the same code values, just in a reused buffer.
+pub fn set_scratch_arena(on: bool) {
+    SCRATCH_ARENA_OVERRIDE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Whether the code-plane scratch arena is active: the explicit
+/// [`set_scratch_arena`] override when one was made, else the
+/// [`default_memo`] resolution (`HAPQ_MEMO`, default on).
+pub fn scratch_arena_enabled() -> bool {
+    match SCRATCH_ARENA_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => default_memo(),
+    }
+}
+
+thread_local! {
+    /// Per-thread reusable i16 code-plane buffer: every int-kernel
+    /// layer evaluation on a worker thread codes its input feature map
+    /// into this arena instead of a fresh allocation (the single
+    /// biggest allocation churn in the oracle hot loop — one plane per
+    /// prunable layer per shard per step).
+    static CODE_ARENA: RefCell<Vec<i16>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Code `x` through `grid` into an i16 plane and hand it to `f`. With
+/// the scratch arena enabled the plane lives in the thread-local
+/// [`CODE_ARENA`] buffer (cleared, not reallocated, between calls);
+/// otherwise it is a fresh `Vec`. The values are identical either way,
+/// so both int-kernel consumers ([`im2col_codes`], [`dwconv2d_codes`])
+/// stay bit-identical to the f32 reference regardless of the toggle.
+fn code_plane<R>(x: &[f32], grid: &QuantGrid, f: impl FnOnce(&[i16]) -> R) -> R {
+    if scratch_arena_enabled() {
+        CODE_ARENA.with(|a| {
+            let mut buf = a.borrow_mut();
+            buf.clear();
+            buf.extend(x.iter().map(|&v| grid.code(v)));
+            f(&buf)
+        })
+    } else {
+        let codes: Vec<i16> = x.iter().map(|&v| grid.code(v)).collect();
+        f(&codes)
+    }
+}
 
 /// Optimal clipping ratio α*/b for a Laplace(b) distribution, bits 2..8
 /// (Banner et al., NeurIPS 2019) — same table as the Python exporter.
@@ -224,8 +283,8 @@ fn im2col_codes(
     grid: &QuantGrid,
 ) -> Result<(CodeMat, usize, usize)> {
     let (b, h, w, c) = x.nhwc()?;
-    let codes: Vec<i16> = x.data.iter().map(|&v| grid.code(v)).collect();
-    let (d, oh, ow) = gather_patches(&codes, (b, h, w, c), k, stride, -1i16);
+    let (d, oh, ow) =
+        code_plane(&x.data, grid, |codes| gather_patches(codes, (b, h, w, c), k, stride, -1i16));
     Ok((CodeMat { r: b * oh * ow, c: k * k * c, d }, oh, ow))
 }
 
@@ -294,8 +353,9 @@ fn dwconv2d_codes(
     stride: usize,
 ) -> Result<Feat> {
     let dims = x.nhwc()?;
-    let codes: Vec<i16> = x.data.iter().map(|&v| grid.code(v)).collect();
-    dwconv2d_any(|i| lut[(codes[i] + 1) as usize], dims, w, bias, stride)
+    code_plane(&x.data, grid, |codes| {
+        dwconv2d_any(|i| lut[(codes[i] + 1) as usize], dims, w, bias, stride)
+    })
 }
 
 /// Pack-time state of one prunable layer on the int kernel: the
@@ -628,7 +688,21 @@ impl NativeBackend {
         threads: usize,
         kernel: KernelKind,
     ) -> Result<NativeBackend> {
-        let engine = Engine::new(arch, &data, threads, kernel)?;
+        Self::with_memo(arch, data, threads, kernel, MemoConfig::default())
+    }
+
+    /// Build with an explicit memoization configuration (`--memo` and
+    /// the cache-capacity flags) on top of [`Self::with_options`]. The
+    /// memo config sizes the engine's `PackCache`; caching is purely
+    /// a speed knob — results are bit-identical with it on or off.
+    pub fn with_memo(
+        arch: &ModelArch,
+        data: EvalData,
+        threads: usize,
+        kernel: KernelKind,
+        memo: MemoConfig,
+    ) -> Result<NativeBackend> {
+        let engine = Engine::with_memo(arch, &data, threads, kernel, memo)?;
         Ok(NativeBackend { arch: arch.clone(), data, engine })
     }
 
@@ -762,6 +836,26 @@ impl InferenceBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn code_plane_arena_matches_fresh_alloc() {
+        // the arena is an allocation strategy, not a numeric path: the
+        // coded plane must be identical with it forced on, forced off,
+        // and repeated (reused buffer fully overwritten)
+        let grid = QuantGrid::new(0.0, 1.0, 0.25);
+        let data: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let fresh: Vec<i16> = data.iter().map(|&v| grid.code(v)).collect();
+        set_scratch_arena(true);
+        let on = code_plane(&data, &grid, |c| c.to_vec());
+        let on_again = code_plane(&data[..32], &grid, |c| c.to_vec());
+        set_scratch_arena(false);
+        let off = code_plane(&data, &grid, |c| c.to_vec());
+        // restore the env-default resolution for the rest of the process
+        SCRATCH_ARENA_OVERRIDE.store(0, Ordering::Relaxed);
+        assert_eq!(on, fresh);
+        assert_eq!(off, fresh);
+        assert_eq!(on_again, fresh[..32].to_vec());
+    }
 
     #[test]
     fn same_pad_matches_exporter() {

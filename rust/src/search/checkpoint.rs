@@ -28,8 +28,10 @@ use super::SearchStrategy;
 
 /// File magic ("HAPQSRCH").
 pub const MAGIC: &[u8; 8] = b"HAPQSRCH";
-/// Format version (2: the header gained the hardware-target name).
-pub const VERSION: u32 = 2;
+/// Format version (3: the phase timers gained `memo_s` — the
+/// eval-memoization overhead slot; 2: the header gained the
+/// hardware-target name).
+pub const VERSION: u32 = 3;
 
 /// Identity of a search run — written into every checkpoint and
 /// validated on resume, so a checkpoint can never silently continue a
@@ -223,6 +225,7 @@ fn write_timers(w: &mut BinWriter, t: &PhaseTimers) {
     w.f64(t.quant_s);
     w.f64(t.hw_s);
     w.f64(t.infer_s);
+    w.f64(t.memo_s);
     w.u64(t.steps);
 }
 
@@ -233,6 +236,7 @@ fn read_timers(r: &mut BinReader) -> Result<PhaseTimers> {
         quant_s: r.f64()?,
         hw_s: r.f64()?,
         infer_s: r.f64()?,
+        memo_s: r.f64()?,
         steps: r.u64()?,
     })
 }
@@ -313,6 +317,7 @@ mod tests {
             quant_s: 1.0 / 3.0,
             hw_s: 7.25e-3,
             infer_s: f64::EPSILON,
+            memo_s: 0.7 / 11.0,
             steps: u64::MAX - 7,
         };
         let mut w = BinWriter::new();
@@ -323,6 +328,7 @@ mod tests {
         assert_eq!(back.quant_s.to_bits(), t.quant_s.to_bits());
         assert_eq!(back.hw_s.to_bits(), t.hw_s.to_bits());
         assert_eq!(back.infer_s.to_bits(), t.infer_s.to_bits());
+        assert_eq!(back.memo_s.to_bits(), t.memo_s.to_bits());
         assert_eq!(back.steps, t.steps);
     }
 

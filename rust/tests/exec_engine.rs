@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use hapq::model::{Layer, ModelArch, Op, Weights};
-use hapq::runtime::{EvalData, InferenceBackend, NativeBackend};
+use hapq::runtime::{EvalData, InferenceBackend, KernelKind, MemoConfig, NativeBackend};
 use hapq::tensor::Tensor;
 use hapq::util::proptest::forall;
 use hapq::util::rng::Rng;
@@ -267,6 +267,81 @@ fn incremental_matches_from_scratch_after_arbitrary_invalidate_sequences() {
                 != scratch.accuracy(&weights, &bits).unwrap()
             {
                 return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn memoized_engine_is_bit_identical_to_memo_off_across_threads_and_kernels() {
+    // the perf contract of the search-loop memoization (ISSUE 8): a
+    // backend with the config-fingerprinted pack cache enabled must
+    // produce bitwise the same logits and accuracy as one with every
+    // cache disabled, over revisit-heavy walks — the RL-search pattern
+    // where the agent keeps returning to configurations it already
+    // evaluated — at every (thread count, kernel) combination
+    forall("memo on == memo off over revisit-heavy walks", gen_fixture, |fx| {
+        let n = fx.arch.prunable.len();
+        // three weight snapshots the walk cycles through: revisits give
+        // the memoized backend pack-cache hits the cold one never sees
+        let snapshots: Vec<Weights> = (0..3)
+            .map(|s| {
+                let mut w = fx.weights.clone();
+                for wt in w.w.iter_mut() {
+                    for v in wt.data.iter_mut() {
+                        *v = *v * (1.0 + s as f32 * 0.25) + 0.01 * s as f32;
+                    }
+                }
+                w
+            })
+            .collect();
+        for &threads in &[1usize, 4] {
+            for &kernel in &[KernelKind::F32, KernelKind::Int] {
+                let data = || {
+                    EvalData::from_arrays(&fx.arch, &fx.images, &fx.labels, 1000, fx.arch.batch)
+                        .unwrap()
+                };
+                // small pack cap: with 4 prunable layers x 3 snapshots
+                // the cache also exercises LRU eviction mid-walk
+                let memo = MemoConfig { enabled: true, pack_cap: 8, eval_cap: 64 };
+                let hot = NativeBackend::with_memo(&fx.arch, data(), threads, kernel, memo)
+                    .unwrap();
+                let cold =
+                    NativeBackend::with_memo(&fx.arch, data(), threads, kernel, MemoConfig::off())
+                        .unwrap();
+                let mut rng = Rng::new(fx.seed ^ (threads as u64) ^ ((kernel as u64) << 8));
+                let mut cur = 0usize;
+                for _step in 0..8 {
+                    match rng.below(4) {
+                        // revisit a snapshot (episode-reset pattern)
+                        s @ 0..=2 => {
+                            cur = s;
+                            hot.invalidate_all();
+                            cold.invalidate_all();
+                        }
+                        // spurious single-layer invalidate: weights are
+                        // unchanged, so the hot backend must serve the
+                        // re-staged pack from cache and still match the
+                        // cold backend's rebuild bit for bit
+                        _ => {
+                            let i = rng.below(n);
+                            hot.invalidate(i);
+                            cold.invalidate(i);
+                        }
+                    }
+                    let w = &snapshots[cur];
+                    if hot.engine_logits(w, &fx.act_bits).unwrap()
+                        != cold.engine_logits(w, &fx.act_bits).unwrap()
+                    {
+                        return false;
+                    }
+                    if hot.accuracy(w, &fx.act_bits).unwrap()
+                        != cold.accuracy(w, &fx.act_bits).unwrap()
+                    {
+                        return false;
+                    }
+                }
             }
         }
         true
