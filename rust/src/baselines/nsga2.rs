@@ -64,8 +64,9 @@ fn decode(genes: &[f64]) -> Vec<Action> {
         .collect()
 }
 
-/// a dominates b (all ≤, one <).
-fn dominates(a: &[f64], b: &[f64]) -> bool {
+/// a dominates b (all ≤, one <) — also the dominance test of the
+/// cross-run [`crate::search::archive::ParetoArchive`].
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
     let mut strictly = false;
     for (x, y) in a.iter().zip(b) {
         if x > y {
@@ -123,7 +124,7 @@ pub fn crowding(objs: &[Vec<f64>], members: &[usize]) -> Vec<f64> {
     for k in 0..m {
         let mut order: Vec<usize> = (0..members.len()).collect();
         order.sort_by(|&a, &b| {
-            objs[members[a]][k].partial_cmp(&objs[members[b]][k]).unwrap()
+            objs[members[a]][k].total_cmp(&objs[members[b]][k])
         });
         let lo = objs[members[order[0]]][k];
         let hi = objs[members[*order.last().unwrap()]][k];
@@ -271,7 +272,7 @@ impl Nsga2Strategy {
         order.sort_by(|&a, &b| {
             fronts[a]
                 .cmp(&fronts[b])
-                .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
+                .then(crowd[b].total_cmp(&crowd[a]))
         });
         self.parents = order[..self.pop_size]
             .iter()

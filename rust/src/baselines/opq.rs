@@ -54,7 +54,7 @@ fn sparsity_allocation(env: &CompressionEnv, global: f64) -> Vec<f64> {
         normed.push(t.data.iter().map(|x| x.abs() / sigma).collect());
     }
     let mut pooled: Vec<f32> = normed.iter().flatten().copied().collect();
-    pooled.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    pooled.sort_unstable_by(|a, b| a.total_cmp(b));
     let k = ((pooled.len() as f64) * global) as usize;
     let lambda = pooled[k.min(pooled.len() - 1)];
     normed

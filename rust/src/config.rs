@@ -154,12 +154,15 @@ impl Cli {
         Ok(self.usize_flag(name, default as usize)? as u64)
     }
 
-    /// Float flag with a default; errors on non-numeric values.
+    /// Float flag with a default; errors on non-numeric and non-finite
+    /// values (`NaN`/`inf` would otherwise flow silently into reward
+    /// and cost-model math).
     pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
         match self.flags.get(name) {
             None => Ok(default),
-            Some(v) => match v.parse() {
-                Ok(x) => Ok(x),
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => Ok(x),
+                Ok(_) => bail!("--{name} expects a finite number, got `{v}`"),
                 Err(_) => bail!("--{name} expects a number, got `{v}`"),
             },
         }
@@ -354,6 +357,20 @@ mod tests {
         assert!((c.f64_flag("missing", 0.5).unwrap() - 0.5).abs() < 1e-12);
         let c = Cli::parse(&args("hw --sparsity lots")).unwrap();
         assert!(c.f64_flag("sparsity", 0.5).is_err());
+        // non-finite values parse as f64 but are rejected here: NaN or
+        // inf sparsity would silently corrupt the hw-breakdown math
+        for bad in ["NaN", "nan", "inf", "infinity"] {
+            let c = Cli::parse(&["hw".to_string(), "--sparsity".into(), bad.into()]).unwrap();
+            let err = c.f64_flag("sparsity", 0.5).unwrap_err().to_string();
+            assert!(err.contains("finite"), "`{bad}` not rejected: {err}");
+        }
+        // `-inf` is consumed as a flag value (only `--` marks flags)
+        let c = Cli::parse(&["hw".into(), "--sparsity".into(), "-inf".into()]).unwrap();
+        assert!(c.f64_flag("sparsity", 0.5).is_err());
+        // a non-finite *default* is still returned untouched: callers
+        // use NAN defaults as an "unset" sentinel
+        let c = Cli::parse(&args("hw")).unwrap();
+        assert!(c.f64_flag("sparsity", f64::NAN).unwrap().is_nan());
     }
 
     #[test]

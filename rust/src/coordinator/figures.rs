@@ -145,7 +145,7 @@ pub fn pareto(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
             out.push((l, g));
         }
     }
-    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out.sort_by(|a, b| a.0.total_cmp(&b.0));
     out
 }
 

@@ -256,7 +256,34 @@ pub fn run_grid_with(
             Err(e) => eprintln!("[launcher] trace aggregation failed: {e:#}"),
         }
     }
+    archive_reports(cfg, &done)?;
     Ok(done)
+}
+
+/// Fold every successful worker report into the leader's cross-run
+/// Pareto archive (`<out>/pareto.json`) in deterministic
+/// (model, method, hw, seed) order. Workers already archived into
+/// their own isolated out dirs; this leader-side fold is what makes
+/// `--jobs`/`--seeds` fan-outs land in *one* cumulative archive, with
+/// bytes identical to the equivalent sequential runs (and it re-heals
+/// any insert a concurrent same-dir worker may have overwritten).
+fn archive_reports(
+    cfg: &crate::config::RunConfig,
+    done: &[(Job, Result<json::Value>)],
+) -> Result<()> {
+    let mut ok: Vec<(&Job, &json::Value)> =
+        done.iter().filter_map(|(j, r)| r.as_ref().ok().map(|v| (j, v))).collect();
+    if ok.is_empty() {
+        return Ok(());
+    }
+    ok.sort_by(|(a, _), (b, _)| {
+        (&a.model, &a.method, &a.hw, a.seed).cmp(&(&b.model, &b.method, &b.hw, b.seed))
+    });
+    let reports: Vec<&json::Value> = ok.iter().map(|(_, v)| *v).collect();
+    let path = cfg.out.join(crate::search::archive::ARCHIVE_FILE);
+    crate::search::archive::record_reports(&path, &reports)
+        .with_context(|| format!("archiving sweep reports into {path:?}"))?;
+    Ok(())
 }
 
 /// Merge the children's per-job trace files into one JSONL at `dest`:
@@ -351,13 +378,25 @@ pub fn merge_seed_reports(per_seed: &[(u64, json::Value)]) -> Result<json::Value
     let mut best_i = 0usize;
     let mut best_r = f64::NEG_INFINITY;
     let mut rewards = Vec::with_capacity(per_seed.len());
-    for (i, (_, v)) in per_seed.iter().enumerate() {
+    let mut non_finite: Vec<u64> = Vec::new();
+    for (i, (seed, v)) in per_seed.iter().enumerate() {
         let r = v.req("reward")?.as_f64()?;
+        if !r.is_finite() {
+            // NaN can never win `r > best_r`, so without this check an
+            // all-NaN sweep would silently crown the first seed
+            non_finite.push(*seed);
+        }
         rewards.push(r);
         if r > best_r {
             best_r = r;
             best_i = i;
         }
+    }
+    if !non_finite.is_empty() {
+        bail!(
+            "non-finite reward in seed report(s) {non_finite:?} — refusing to merge \
+             a corrupt sweep (re-run the offending seed(s) or drop their reports)"
+        );
     }
     let (seed, best) = &per_seed[best_i];
     let mut merged = best.clone();
@@ -675,6 +714,92 @@ mod tests {
             vec![1.5, 2.25, 2.25]
         );
         assert!(merge_seed_reports(&[]).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_non_finite_rewards_naming_the_seeds() {
+        // json::parse cannot produce NaN, so build the reports
+        // programmatically — exactly what a corrupt worker report
+        // deserialises to before the reward comparison
+        let report = |seed: u64, reward: f64| {
+            (
+                seed,
+                json::obj(vec![
+                    ("model", json::s("m")),
+                    ("method", json::s("haq")),
+                    ("seed", json::num(seed as f64)),
+                    ("reward", json::num(reward)),
+                ]),
+            )
+        };
+        // mixed: one NaN seed must abort the merge and be named, even
+        // though a finite winner exists
+        let err = merge_seed_reports(&[report(42, 1.5), report(43, f64::NAN)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[43]"), "offending seed not named: {err}");
+        // all-NaN: the old `r > best_r` scan silently crowned seed
+        // index 0 here — now every seed is listed
+        let err = merge_seed_reports(&[report(42, f64::NAN), report(43, f64::NAN)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[42, 43]"), "{err}");
+        // infinities are just as un-mergeable as NaN
+        assert!(merge_seed_reports(&[report(7, f64::INFINITY)]).is_err());
+        assert!(merge_seed_reports(&[report(7, f64::NEG_INFINITY)]).is_err());
+    }
+
+    #[test]
+    fn grid_archives_successful_reports_into_one_leader_archive() {
+        use crate::search::archive;
+        let out =
+            std::env::temp_dir().join(format!("hapq-launcher-archive-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&out);
+        let cfg = crate::config::RunConfig { out: out.clone(), ..Default::default() };
+        let mk = |hw: &str, seed: u64, eg: f64| {
+            let job = Job {
+                model: "m".into(),
+                method: "ours".into(),
+                seed: Some(seed),
+                hw: Some(hw.to_string()),
+            };
+            let v = json::obj(vec![
+                ("model", json::s("m")),
+                ("fingerprint", json::s("00000000000000aa")),
+                ("hw", json::s(hw)),
+                ("method", json::s("ours")),
+                ("seed", json::num(seed as f64)),
+                ("test_acc", json::num(0.88)),
+                ("test_acc_loss", json::num(0.02)),
+                ("val_acc_loss", json::num(0.018)),
+                ("energy_gain", json::num(eg)),
+                ("latency_gain", json::num(0.4)),
+                ("reward", json::num(1.0 + eg)),
+                ("per_layer", json::arr(vec![])),
+            ]);
+            (job, Ok(v))
+        };
+        // two targets + one failed job: the failure is skipped, the two
+        // successes land in one leader archive, one group per target
+        let done: Vec<(Job, Result<json::Value>)> = vec![
+            mk("mcu", 7, 0.6),
+            (
+                Job { model: "m".into(), method: "amc".into(), seed: None, hw: None },
+                Err(anyhow!("worker exploded")),
+            ),
+            mk("eyeriss-64", 3, 0.5),
+        ];
+        archive_reports(&cfg, &done).unwrap();
+        let a = archive::ParetoArchive::load(&out.join(archive::ARCHIVE_FILE)).unwrap();
+        assert_eq!(a.entries().len(), 2);
+        assert_eq!(a.groups().len(), 2);
+        assert!(archive::agrees_with_nondominated_sort(&a));
+        // re-folding the same reports is idempotent (byte-stable file)
+        let before = std::fs::read_to_string(out.join(archive::ARCHIVE_FILE)).unwrap();
+        archive_reports(&cfg, &done).unwrap();
+        let after = std::fs::read_to_string(out.join(archive::ARCHIVE_FILE)).unwrap();
+        assert_eq!(before, after);
+        let _ = std::fs::remove_dir_all(out);
     }
 
     #[test]

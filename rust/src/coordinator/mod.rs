@@ -73,6 +73,11 @@ pub struct RunReport {
     pub method: String,
     /// RNG seed of the run (multi-seed merges report the winner's)
     pub seed: u64,
+    /// dense-weight fingerprint of the compressed artifact
+    /// ([`crate::search::archive::model_fingerprint`]) — the Pareto
+    /// archive's group key, so retrained weights under the same model
+    /// name never share a front
+    pub fingerprint: String,
     /// the best solution found (per-layer policy + metrics)
     pub best: Solution,
     /// dense 8-bit baseline accuracy on the test split
@@ -143,7 +148,9 @@ impl RunReport {
             ("dataset", s(&self.dataset)),
             ("method", s(&self.method)),
             ("seed", num(self.seed as f64)),
+            ("fingerprint", s(&self.fingerprint)),
             ("energy_gain", num(self.best.energy_gain)),
+            ("latency_gain", num(self.best.latency_gain)),
             ("val_acc_loss", num(self.best.acc_loss)),
             ("test_acc_dense", num(self.test_acc_dense)),
             ("test_acc", num(self.test_acc)),
@@ -335,6 +342,7 @@ impl Coordinator {
             dataset: e.dataset.clone(),
             method: method.to_string(),
             seed: self.cfg.seed,
+            fingerprint: crate::search::archive::model_fingerprint(env.dense_weights()),
             best,
             test_acc_dense: dense_acc,
             test_acc,
@@ -507,7 +515,10 @@ impl Coordinator {
         )))
     }
 
-    /// Persist a report under `out/`.
+    /// Persist a report under `out/` and fold it into the cross-run
+    /// Pareto archive (`<out>/pareto.json`) — the hook that makes every
+    /// single-process run cumulative; launcher fan-outs additionally
+    /// fold worker reports into the *leader's* archive after the sweep.
     pub fn save_report(&self, report: &RunReport) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.cfg.out)?;
         let path = self
@@ -515,6 +526,11 @@ impl Coordinator {
             .out
             .join(format!("{}__{}.json", report.model, report.method));
         std::fs::write(&path, report.to_json().to_string())?;
+        crate::search::archive::record_report(
+            &self.cfg.out.join(crate::search::archive::ARCHIVE_FILE),
+            &report.to_json(),
+        )
+        .with_context(|| format!("archiving report for {}/{}", report.model, report.method))?;
         Ok(path)
     }
 }
@@ -607,6 +623,7 @@ mod tests {
             dataset: "d".into(),
             method: "ours".into(),
             seed: 42,
+            fingerprint: "00000000000000aa".into(),
             best: Solution {
                 per_layer: vec![],
                 actions: vec![],
@@ -655,6 +672,14 @@ mod tests {
         assert_eq!(v.req("memo_hits").unwrap().as_f64().unwrap(), 6.0);
         assert_eq!(v.req("pack_cache_hits").unwrap().as_f64().unwrap(), 9.0);
         assert_eq!(v.req("pack_cache_misses").unwrap().as_f64().unwrap(), 3.0);
+        // the dense-weight fingerprint and latency gain ride along so
+        // the Pareto archive can group and judge dominance from the
+        // run JSON alone
+        assert_eq!(
+            v.req("fingerprint").unwrap().as_str().unwrap(),
+            "00000000000000aa"
+        );
+        assert!((v.req("latency_gain").unwrap().as_f64().unwrap() - 0.15).abs() < 1e-12);
         // uniform accounting: every run JSON (ours AND baselines)
         // carries seed, evals and wall_secs
         assert_eq!(v.req("seed").unwrap().as_f64().unwrap(), 42.0);

@@ -52,9 +52,7 @@ pub fn hotspots(model: &EnergyModel, cfgs: &[Compression], frac: f64) -> Vec<usi
     let rows = breakdown(model, cfgs);
     let total: f64 = rows.iter().map(|r| r.e_compressed).sum();
     let mut order: Vec<usize> = (0..rows.len()).collect();
-    order.sort_by(|&a, &b| {
-        rows[b].e_compressed.partial_cmp(&rows[a].e_compressed).unwrap()
-    });
+    order.sort_by(|&a, &b| rows[b].e_compressed.total_cmp(&rows[a].e_compressed));
     let mut acc = 0.0;
     let mut out = Vec::new();
     for &l in &order {
@@ -115,7 +113,7 @@ mod tests {
         let rows = breakdown(&m, &cfgs);
         // first hotspot is the most expensive layer
         let max = (0..3)
-            .max_by(|&a, &b| rows[a].e_compressed.partial_cmp(&rows[b].e_compressed).unwrap())
+            .max_by(|&a, &b| rows[a].e_compressed.total_cmp(&rows[b].e_compressed))
             .unwrap();
         assert_eq!(hs[0], max);
     }

@@ -16,6 +16,7 @@
 //! hapq perf      --model vgg11                  # hot-path latency metrics
 //! hapq hw        --model vgg11                  # per-target cost breakdown
 //! hapq trace     out/trace.jsonl                # analyze a --trace file
+//! hapq pareto    [--hw mcu --max-acc-loss 0.012]  # query the Pareto archive
 //! ```
 //!
 //! `compare --jobs N` fans out over N worker processes.
@@ -69,6 +70,17 @@
 //! the clock-stripped canonical stream (determinism diffs). `hapq perf
 //! --json` / `hapq hw --json` emit the matching `MetricsRegistry`
 //! snapshot instead of human tables.
+//!
+//! Every finished run also folds its best solution into the
+//! cross-run Pareto archive at `<out>/pareto.json` (non-dominated per
+//! model fingerprint × hw target; launcher fan-outs fold worker reports
+//! into the leader's archive deterministically). `hapq pareto` prints
+//! the per-group front tables and a cross-target summary, answers
+//! constrained queries (`--max-acc-loss FRAC` with `--metric
+//! energy|latency`, filters `--model`/`--hw`), exports byte-stable
+//! front JSON (`--export OUT.json`), and emits archive counters as a
+//! `MetricsRegistry` snapshot (`--json`). `--archive PATH` points it at
+//! a non-default archive file.
 
 use std::time::Instant;
 
@@ -93,7 +105,7 @@ fn print_help() {
         "hapq — Hardware-Aware DNN Compression via Diverse Pruning and \
          Mixed-Precision Quantization\n\
          commands: list, compress, baseline, compare, fig1, fig2a, fig2b, \
-         fig5, fig8, ablate, report, perf, hw, trace\n\
+         fig5, fig8, ablate, report, perf, hw, trace, pareto\n\
          common flags: --artifacts DIR --out DIR --episodes N --seed N \
          --reward-subset N --model NAME --backend native|pjrt \
          --kernel f32|int --threads N --gemm-tile N \
@@ -107,7 +119,10 @@ fn print_help() {
          hw flags: --model NAME --sparsity S --bits B (reference config \
          for the per-layer breakdown and the cross-target table)\n\
          perf/hw flags: --json (print the MetricsRegistry snapshot)\n\
-         trace flags: FILE.jsonl [--top N] [--chrome OUT.json] [--canon]"
+         trace flags: FILE.jsonl [--top N] [--chrome OUT.json] [--canon]\n\
+         pareto flags: [--archive PATH] [--model NAME] [--hw TARGET] \
+         [--max-acc-loss FRAC] [--metric energy|latency] \
+         [--export OUT.json] [--json]"
     );
 }
 
@@ -351,6 +366,16 @@ fn dispatch(cli: &Cli, cfg: RunConfig) -> Result<()> {
                                 tcoord.run_baseline(model, method)?
                             };
                             tcoord.save_report(&report)?;
+                            // save_report archived into the per-target
+                            // subdir; the sequential sweep additionally
+                            // folds every target's winner into the
+                            // leader archive, exactly like the --jobs
+                            // fan-out does, so both paths populate one
+                            // cumulative `<out>/pareto.json`
+                            hapq::search::archive::record_report(
+                                &coord.cfg.out.join(hapq::search::archive::ARCHIVE_FILE),
+                                &report.to_json(),
+                            )?;
                             println!(
                                 "{:<12} {:<12} {:<8} {:>10.1}% {:>9.2}% {:>8}",
                                 t,
@@ -803,6 +828,195 @@ hotspots holding 50% of energy: {hs:?}");
             println!();
             println!("# top-{top} hottest layers");
             print!("{}", tr.hottest_layers(top)?);
+            Ok(())
+        }
+        "pareto" => {
+            // query the cross-run Pareto archive: pure file analysis —
+            // no artifacts, weights or inference involved
+            use hapq::io::json;
+            use hapq::search::archive::{self, ParetoArchive, QueryMetric};
+            let path = match cli.flags.get("archive") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => cfg.out.join(archive::ARCHIVE_FILE),
+            };
+            let a = ParetoArchive::load(&path)?;
+            if a.entries().is_empty() {
+                anyhow::bail!(
+                    "archive {} is empty or missing — finished search runs feed \
+                     <out>/pareto.json automatically (run compress/baseline/compare \
+                     first, or point --archive at an existing file)",
+                    path.display()
+                );
+            }
+            let model = cli.flags.get("model").map(String::as_str);
+            // the raw --hw flag, NOT cfg.hw: the config default
+            // (eyeriss-64) must not silently filter the tables
+            let hw = cli.flags.get("hw").map(String::as_str);
+            let metric = QueryMetric::parse(&cli.str_flag("metric", "energy"))?;
+            let cap = match cli.flags.get("max-acc-loss") {
+                None => None,
+                Some(_) => {
+                    let c = cli.f64_flag("max-acc-loss", 0.0)?;
+                    if !(0.0..=1.0).contains(&c) {
+                        anyhow::bail!(
+                            "--max-acc-loss is an accuracy-loss fraction in [0,1], got {c}"
+                        );
+                    }
+                    Some(c)
+                }
+            };
+            if let Some(out) = cli.flags.get("export") {
+                // canonical front JSON (filters + cap applied): bytes
+                // depend only on the archived set and the query, never
+                // on run order — CI diffs two exports for equality
+                let entries: Vec<json::Value> =
+                    a.front(model, hw, cap).iter().map(|e| e.to_json()).collect();
+                let n = entries.len();
+                let mut query = vec![("metric", json::s(metric.name()))];
+                if let Some(m) = model {
+                    query.push(("model", json::s(m)));
+                }
+                if let Some(h) = hw {
+                    query.push(("hw", json::s(h)));
+                }
+                if let Some(c) = cap {
+                    query.push(("max_acc_loss", json::num(c)));
+                }
+                let doc = json::obj(vec![
+                    ("schema", json::num(archive::SCHEMA as f64)),
+                    ("kind", json::s("hapq-pareto-front")),
+                    ("query", json::obj(query)),
+                    ("entries", json::arr(entries)),
+                ]);
+                std::fs::write(out, doc.to_string())
+                    .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+                println!("front exported: {out} ({n} entries)");
+                return Ok(());
+            }
+            if cli.bool_flag("json") {
+                // archive counters/gauges in the same MetricsRegistry
+                // snapshot schema as `hapq perf --json` / `hapq hw --json`
+                let mut reg = hapq::telemetry::MetricsRegistry::new();
+                reg.collect(&a);
+                reg.label("archive.path", &path.display().to_string());
+                println!("{}", reg.snapshot().to_string());
+                return Ok(());
+            }
+            if let Some(cap) = cap {
+                // constrained query: best gain subject to the loss cap
+                let Some(best) = a.query(model, hw, cap, metric) else {
+                    anyhow::bail!(
+                        "no archived config satisfies acc_loss <= {:.2}%{}{} — \
+                         relax the cap or archive more runs",
+                        cap * 100.0,
+                        model.map(|m| format!(" for model {m}")).unwrap_or_default(),
+                        hw.map(|h| format!(" on {h}")).unwrap_or_default()
+                    );
+                };
+                println!(
+                    "# best {}-gain config with acc-loss <= {:.2}% (model {}, hw {})",
+                    metric.name(),
+                    cap * 100.0,
+                    model.unwrap_or("any"),
+                    hw.unwrap_or("any")
+                );
+                println!(
+                    "{:<12} {:<18} {:<12} {:<10} {:>6} {:>9} {:>12} {:>13} {:>8}",
+                    "model", "fingerprint", "hw", "method", "seed", "acc-loss",
+                    "energy-gain", "latency-gain", "reward"
+                );
+                println!(
+                    "{:<12} {:<18} {:<12} {:<10} {:>6} {:>8.2}% {:>11.1}% {:>12.1}% {:>8.2}",
+                    best.model,
+                    best.fingerprint,
+                    best.hw,
+                    best.method,
+                    best.seed,
+                    best.acc_loss * 100.0,
+                    best.energy_gain * 100.0,
+                    best.latency_gain * 100.0,
+                    best.reward
+                );
+                println!("# per-layer policy");
+                println!("{:<6} {:<14} {:>9} {:>5}", "layer", "alg", "sparsity", "bits");
+                for (i, l) in best.per_layer.iter().enumerate() {
+                    println!("{:<6} {:<14} {:>9.2} {:>5}", i, l.alg, l.sparsity, l.bits);
+                }
+                return Ok(());
+            }
+            // no cap: per-group front tables + a cross-target summary
+            // extending `hapq hw`'s comparison with archived real runs
+            let groups: Vec<(String, String, String)> = a
+                .groups()
+                .into_iter()
+                .filter(|(m, _, _)| model.map_or(true, |f| m == f))
+                .filter(|(_, _, h)| hw.map_or(true, |f| h == f))
+                .collect();
+            if groups.is_empty() {
+                anyhow::bail!(
+                    "no archived entries match the filters (model {}, hw {})",
+                    model.unwrap_or("any"),
+                    hw.unwrap_or("any")
+                );
+            }
+            println!(
+                "# pareto archive {} — {} entries, {} groups",
+                path.display(),
+                a.entries().len(),
+                a.groups().len()
+            );
+            for (m, fp, h) in &groups {
+                let entries: Vec<&archive::ArchiveEntry> = a
+                    .front(Some(m.as_str()), Some(h.as_str()), None)
+                    .into_iter()
+                    .filter(|e| &e.fingerprint == fp)
+                    .collect();
+                println!();
+                println!("## {m} [{fp}] on {h} — {} non-dominated", entries.len());
+                println!(
+                    "{:<10} {:>6} {:>9} {:>12} {:>13} {:>8}",
+                    "method", "seed", "acc-loss", "energy-gain", "latency-gain", "reward"
+                );
+                for e in entries {
+                    println!(
+                        "{:<10} {:>6} {:>8.2}% {:>11.1}% {:>12.1}% {:>8.2}",
+                        e.method,
+                        e.seed,
+                        e.acc_loss * 100.0,
+                        e.energy_gain * 100.0,
+                        e.latency_gain * 100.0,
+                        e.reward
+                    );
+                }
+            }
+            println!();
+            println!("# cross-target summary");
+            println!(
+                "{:<12} {:<12} {:>8} {:>13} {:>17} {:>18}",
+                "model", "hw", "entries", "min-acc-loss", "best-energy-gain",
+                "best-latency-gain"
+            );
+            for (m, fp, h) in &groups {
+                let entries: Vec<&archive::ArchiveEntry> = a
+                    .front(Some(m.as_str()), Some(h.as_str()), None)
+                    .into_iter()
+                    .filter(|e| &e.fingerprint == fp)
+                    .collect();
+                let min_loss = entries.iter().map(|e| e.acc_loss).fold(f64::INFINITY, f64::min);
+                let best_eg =
+                    entries.iter().map(|e| e.energy_gain).fold(f64::NEG_INFINITY, f64::max);
+                let best_lg =
+                    entries.iter().map(|e| e.latency_gain).fold(f64::NEG_INFINITY, f64::max);
+                println!(
+                    "{:<12} {:<12} {:>8} {:>12.2}% {:>16.1}% {:>17.1}%",
+                    m,
+                    h,
+                    entries.len(),
+                    min_loss * 100.0,
+                    best_eg * 100.0,
+                    best_lg * 100.0
+                );
+            }
             Ok(())
         }
         other => {

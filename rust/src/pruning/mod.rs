@@ -173,7 +173,7 @@ fn splice(w: &mut Tensor, ratio: f64, ctx: &mut PruneCtx) -> PruneResult {
         return PruneResult { sparsity: w.sparsity() as f64, channels: None };
     }
     let mut mags: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
-    mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.sort_unstable_by(|a, b| a.total_cmp(b));
     let t = mags[(k - 1).min(n - 1)];
     let (t_lo, t_hi) = (0.9 * t, 1.1 * t);
     let sal = &ctx.saliency.data;
@@ -188,7 +188,7 @@ fn splice(w: &mut Tensor, ratio: f64, ctx: &mut PruneCtx) -> PruneResult {
         })
         .map(|(i, _)| sal.get(i).copied().unwrap_or(0.0))
         .collect();
-    band_sal.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    band_sal.sort_unstable_by(|a, b| a.total_cmp(b));
     let med = band_sal.get(band_sal.len() / 2).copied().unwrap_or(0.0);
     for i in 0..n {
         let a = w.data[i].abs();

@@ -1,0 +1,694 @@
+//! Persistent cross-target Pareto archive — the seam that makes
+//! multi-seed / multi-target searches cumulative instead of throwaway.
+//!
+//! Every finished run (all six methods, every `--seed`, every `--hw`
+//! target) feeds one [`ParetoArchive`] at `<out>/pareto.json`:
+//! [`crate::coordinator::Coordinator::save_report`] records the
+//! single-process runs, and the launcher folds worker reports into the
+//! leader's archive in deterministic (model, method, hw, seed) order
+//! after every fan-out, so `--jobs`/`--seeds` sweeps produce the same
+//! archive bytes as the equivalent sequential runs. `hapq pareto`
+//! queries it ("best config under 1.2% accuracy loss on mcu"), prints
+//! front tables extending `hapq hw`'s cross-target comparison, and
+//! exports fronts as JSON.
+//!
+//! Entries are keyed by **model fingerprint × hardware target**: the
+//! fingerprint ([`model_fingerprint`]) hashes the dense weight bits, so
+//! retrained artifacts under the same model name never pollute each
+//! other's fronts, and dominance is only ever judged between runs that
+//! compressed the same network for the same target. Within a group the
+//! archive keeps exactly the non-dominated set under the paper's three
+//! objectives — minimise `[acc_loss, -energy_gain, -latency_gain]` —
+//! reusing [`crate::baselines::nsga2::dominates`] verbatim, so archive
+//! contents always equal front 0 of
+//! [`crate::baselines::nsga2::nondominated_sort`] over everything ever
+//! inserted (`rust/tests/pareto_archive.rs` pins this, along with
+//! insertion-order independence).
+//!
+//! Persistence uses the checkpoint discipline
+//! (`search/checkpoint.rs`): write `<path>.tmp`, then atomically
+//! rename. The file holds only the canonically sorted entries — no
+//! session counters — so its bytes are a pure function of the entry
+//! *set*, never of insertion order or fan-out interleaving. Session
+//! counters (insert/evict/dominated/duplicate) live in the
+//! [`MetricsRegistry`] and the trace stream instead. Concurrent
+//! workers sharing one out directory may transiently lose each other's
+//! in-place updates (last rename wins); the launcher's post-sweep fold
+//! re-inserts every report, which makes the leader's archive
+//! authoritative and self-healing.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::nsga2::{dominates, nondominated_sort};
+use crate::io::json::{self, arr, num, obj, s, Value};
+use crate::telemetry::{self, MetricsRegistry, MetricsSource};
+
+/// Archive-file schema version (the JSON `schema` field).
+pub const SCHEMA: u64 = 1;
+
+/// The `kind` tag of the archive file.
+pub const KIND: &str = "hapq-pareto-archive";
+
+/// Conventional archive file name inside an output directory.
+pub const ARCHIVE_FILE: &str = "pareto.json";
+
+/// One per-layer compression decision of an archived solution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PerLayerPolicy {
+    /// pruning algorithm name (`l2-norm`, `sensitivity`, …)
+    pub alg: String,
+    /// achieved weight sparsity
+    pub sparsity: f64,
+    /// applied precision (weights & activations)
+    pub bits: u32,
+}
+
+/// One archived solution: identity, objectives, and the per-layer
+/// policy needed to reproduce it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveEntry {
+    /// model name (`vgg11`, …)
+    pub model: String,
+    /// dense-weight fingerprint ([`model_fingerprint`], 16 hex chars)
+    pub fingerprint: String,
+    /// hardware target the run was priced against
+    pub hw: String,
+    /// method that produced the solution (`ours`, `amc`, …)
+    pub method: String,
+    /// RNG seed of the producing run
+    pub seed: u64,
+    /// compressed-model accuracy on the test split
+    pub test_acc: f64,
+    /// accuracy loss vs the dense baseline on the test split (fraction;
+    /// the archive's primary objective)
+    pub acc_loss: f64,
+    /// accuracy loss on the reward (validation) subset
+    pub val_acc_loss: f64,
+    /// energy gain vs the dense baseline (fraction)
+    pub energy_gain: f64,
+    /// latency gain vs the dense baseline (fraction)
+    pub latency_gain: f64,
+    /// final LUT reward of the solution
+    pub reward: f64,
+    /// the per-layer policy
+    pub per_layer: Vec<PerLayerPolicy>,
+}
+
+impl ArchiveEntry {
+    /// The minimisation objectives dominance is judged on:
+    /// `[acc_loss, -energy_gain, -latency_gain]`.
+    pub fn objectives(&self) -> Vec<f64> {
+        vec![self.acc_loss, -self.energy_gain, -self.latency_gain]
+    }
+
+    /// True when every objective (and the reward) is finite — the
+    /// archive refuses non-finite entries outright.
+    pub fn is_finite(&self) -> bool {
+        self.acc_loss.is_finite()
+            && self.energy_gain.is_finite()
+            && self.latency_gain.is_finite()
+            && self.reward.is_finite()
+    }
+
+    /// Same dominance group: model fingerprint × hardware target (the
+    /// model name rides along for readability and sorting).
+    pub fn same_group(&self, other: &ArchiveEntry) -> bool {
+        self.model == other.model
+            && self.fingerprint == other.fingerprint
+            && self.hw == other.hw
+    }
+
+    /// Build an entry from a run-report JSON document
+    /// ([`crate::coordinator::RunReport::to_json`] schema).
+    pub fn from_report(v: &Value) -> Result<ArchiveEntry> {
+        let mut per_layer = Vec::new();
+        for l in v.req("per_layer")?.as_arr()? {
+            per_layer.push(PerLayerPolicy {
+                alg: l.req("alg")?.as_str()?.to_string(),
+                sparsity: l.req("sparsity")?.as_f64()?,
+                bits: l.req("bits")?.as_usize()? as u32,
+            });
+        }
+        let e = ArchiveEntry {
+            model: v.req("model")?.as_str()?.to_string(),
+            fingerprint: v.req("fingerprint")?.as_str()?.to_string(),
+            hw: v.req("hw")?.as_str()?.to_string(),
+            method: v.req("method")?.as_str()?.to_string(),
+            seed: v.req("seed")?.as_f64()? as u64,
+            test_acc: v.req("test_acc")?.as_f64()?,
+            acc_loss: v.req("test_acc_loss")?.as_f64()?,
+            val_acc_loss: v.req("val_acc_loss")?.as_f64()?,
+            energy_gain: v.req("energy_gain")?.as_f64()?,
+            latency_gain: v.req("latency_gain")?.as_f64()?,
+            reward: v.req("reward")?.as_f64()?,
+            per_layer,
+        };
+        Ok(e)
+    }
+
+    /// Serialise one entry (fixed key order, diff-friendly).
+    pub fn to_json(&self) -> Value {
+        let layers: Vec<Value> = self
+            .per_layer
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("alg", s(&l.alg)),
+                    ("sparsity", num(l.sparsity)),
+                    ("bits", num(l.bits as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("model", s(&self.model)),
+            ("fingerprint", s(&self.fingerprint)),
+            ("hw", s(&self.hw)),
+            ("method", s(&self.method)),
+            ("seed", num(self.seed as f64)),
+            ("test_acc", num(self.test_acc)),
+            ("acc_loss", num(self.acc_loss)),
+            ("val_acc_loss", num(self.val_acc_loss)),
+            ("energy_gain", num(self.energy_gain)),
+            ("latency_gain", num(self.latency_gain)),
+            ("reward", num(self.reward)),
+            ("per_layer", arr(layers)),
+        ])
+    }
+
+    /// Parse one entry back from its [`Self::to_json`] form.
+    pub fn from_json(v: &Value) -> Result<ArchiveEntry> {
+        let mut per_layer = Vec::new();
+        for l in v.req("per_layer")?.as_arr()? {
+            per_layer.push(PerLayerPolicy {
+                alg: l.req("alg")?.as_str()?.to_string(),
+                sparsity: l.req("sparsity")?.as_f64()?,
+                bits: l.req("bits")?.as_usize()? as u32,
+            });
+        }
+        Ok(ArchiveEntry {
+            model: v.req("model")?.as_str()?.to_string(),
+            fingerprint: v.req("fingerprint")?.as_str()?.to_string(),
+            hw: v.req("hw")?.as_str()?.to_string(),
+            method: v.req("method")?.as_str()?.to_string(),
+            seed: v.req("seed")?.as_f64()? as u64,
+            test_acc: v.req("test_acc")?.as_f64()?,
+            acc_loss: v.req("acc_loss")?.as_f64()?,
+            val_acc_loss: v.req("val_acc_loss")?.as_f64()?,
+            energy_gain: v.req("energy_gain")?.as_f64()?,
+            latency_gain: v.req("latency_gain")?.as_f64()?,
+            reward: v.req("reward")?.as_f64()?,
+            per_layer,
+        })
+    }
+}
+
+/// Canonical archive order: a pure function of the entry set (never of
+/// insertion order), so serialised archives are byte-stable across
+/// `--jobs`/`--seeds` fan-out vs sequential runs.
+fn canonical_cmp(a: &ArchiveEntry, b: &ArchiveEntry) -> std::cmp::Ordering {
+    a.model
+        .cmp(&b.model)
+        .then_with(|| a.fingerprint.cmp(&b.fingerprint))
+        .then_with(|| a.hw.cmp(&b.hw))
+        .then_with(|| a.acc_loss.total_cmp(&b.acc_loss))
+        .then_with(|| b.energy_gain.total_cmp(&a.energy_gain))
+        .then_with(|| b.latency_gain.total_cmp(&a.latency_gain))
+        .then_with(|| a.method.cmp(&b.method))
+        .then_with(|| a.seed.cmp(&b.seed))
+        .then_with(|| b.reward.total_cmp(&a.reward))
+}
+
+/// What happened to an inserted candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// the candidate joined the front, evicting `evicted` entries it
+    /// now dominates
+    Inserted {
+        /// entries the candidate evicted from its group
+        evicted: usize,
+    },
+    /// an existing entry in the candidate's group dominates it
+    Dominated,
+    /// an identical entry is already archived (idempotent re-fold)
+    Duplicate,
+}
+
+/// Which gain a constrained `hapq pareto` query maximises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryMetric {
+    /// maximise `energy_gain`
+    Energy,
+    /// maximise `latency_gain`
+    Latency,
+}
+
+impl QueryMetric {
+    /// Parse a `--metric` value.
+    pub fn parse(v: &str) -> Result<QueryMetric> {
+        match v {
+            "energy" => Ok(QueryMetric::Energy),
+            "latency" => Ok(QueryMetric::Latency),
+            other => bail!("--metric expects `energy` or `latency`, got `{other}`"),
+        }
+    }
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryMetric::Energy => "energy",
+            QueryMetric::Latency => "latency",
+        }
+    }
+
+    /// The gain this metric reads off an entry.
+    pub fn gain(self, e: &ArchiveEntry) -> f64 {
+        match self {
+            QueryMetric::Energy => e.energy_gain,
+            QueryMetric::Latency => e.latency_gain,
+        }
+    }
+}
+
+/// The persistent non-dominated archive (see the module docs).
+#[derive(Debug, Default)]
+pub struct ParetoArchive {
+    entries: Vec<ArchiveEntry>,
+    /// entries that joined the front this session
+    pub inserted: u64,
+    /// entries evicted by a dominating insert this session
+    pub evicted: u64,
+    /// candidates rejected as dominated this session
+    pub dominated: u64,
+    /// exact re-inserts answered from the archive this session
+    pub duplicates: u64,
+}
+
+impl ParetoArchive {
+    /// An empty archive.
+    pub fn new() -> ParetoArchive {
+        ParetoArchive::default()
+    }
+
+    /// Load an archive file; a missing file is an empty archive.
+    pub fn load(path: &Path) -> Result<ParetoArchive> {
+        if !path.exists() {
+            return Ok(ParetoArchive::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading archive {path:?}"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing archive {path:?}"))?;
+        let kind = v.req("kind")?.as_str()?;
+        if kind != KIND {
+            bail!("{path:?} is not a pareto archive (kind `{kind}`)");
+        }
+        let schema = v.req("schema")?.as_f64()? as u64;
+        if schema != SCHEMA {
+            bail!("archive {path:?} has schema {schema}, this build reads {SCHEMA}");
+        }
+        let mut a = ParetoArchive::new();
+        for e in v.req("entries")?.as_arr()? {
+            a.entries.push(ArchiveEntry::from_json(e)?);
+        }
+        Ok(a)
+    }
+
+    /// The archived entries (canonical order after `load`/`save`;
+    /// otherwise insertion order).
+    pub fn entries(&self) -> &[ArchiveEntry] {
+        &self.entries
+    }
+
+    /// Insert one candidate, keeping the per-group non-dominated
+    /// invariant. Equal-objective candidates from different runs are
+    /// all kept (equal vectors never dominate each other), which is
+    /// exactly what makes the surviving set independent of insertion
+    /// order. Non-finite objectives are refused.
+    pub fn insert(&mut self, e: ArchiveEntry) -> Result<InsertOutcome> {
+        if !e.is_finite() {
+            bail!(
+                "refusing non-finite archive entry for {}/{} on {} (seed {}): \
+                 acc_loss={} energy_gain={} latency_gain={} reward={}",
+                e.model, e.method, e.hw, e.seed,
+                e.acc_loss, e.energy_gain, e.latency_gain, e.reward
+            );
+        }
+        if self.entries.iter().any(|x| x == &e) {
+            self.duplicates += 1;
+            telemetry::count("archive.duplicate", 1);
+            return Ok(InsertOutcome::Duplicate);
+        }
+        let eo = e.objectives();
+        if self
+            .entries
+            .iter()
+            .any(|x| x.same_group(&e) && dominates(&x.objectives(), &eo))
+        {
+            self.dominated += 1;
+            telemetry::count("archive.dominated", 1);
+            return Ok(InsertOutcome::Dominated);
+        }
+        let before = self.entries.len();
+        self.entries
+            .retain(|x| !(x.same_group(&e) && dominates(&eo, &x.objectives())));
+        let evicted = before - self.entries.len();
+        self.entries.push(e);
+        self.inserted += 1;
+        self.evicted += evicted as u64;
+        telemetry::count("archive.insert", 1);
+        if evicted > 0 {
+            telemetry::count("archive.evict", evicted as u64);
+        }
+        Ok(InsertOutcome::Inserted { evicted })
+    }
+
+    /// Serialise the whole archive (canonically sorted entries).
+    pub fn to_json(&self) -> Value {
+        let mut sorted: Vec<&ArchiveEntry> = self.entries.iter().collect();
+        sorted.sort_by(|a, b| canonical_cmp(a, b));
+        obj(vec![
+            ("schema", num(SCHEMA as f64)),
+            ("kind", s(KIND)),
+            ("entries", arr(sorted.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Atomically persist the archive (`<path>.tmp` + rename, the
+    /// checkpoint discipline) and leave `self.entries` in canonical
+    /// order.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        self.entries.sort_by(canonical_cmp);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating archive dir {dir:?}"))?;
+            }
+        }
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .context("archive path has no file name")?;
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    /// Sorted distinct (model, fingerprint, hw) groups.
+    pub fn groups(&self) -> Vec<(String, String, String)> {
+        let mut g: Vec<(String, String, String)> = self
+            .entries
+            .iter()
+            .map(|e| (e.model.clone(), e.fingerprint.clone(), e.hw.clone()))
+            .collect();
+        g.sort();
+        g.dedup();
+        g
+    }
+
+    /// Entries matching the filters, in canonical order. `cap` keeps
+    /// only entries with `acc_loss <= cap`.
+    pub fn front(
+        &self,
+        model: Option<&str>,
+        hw: Option<&str>,
+        cap: Option<f64>,
+    ) -> Vec<&ArchiveEntry> {
+        let mut v: Vec<&ArchiveEntry> = self
+            .entries
+            .iter()
+            .filter(|e| model.map_or(true, |m| e.model == m))
+            .filter(|e| hw.map_or(true, |h| e.hw == h))
+            .filter(|e| cap.map_or(true, |c| e.acc_loss <= c))
+            .collect();
+        v.sort_by(|a, b| canonical_cmp(a, b));
+        v
+    }
+
+    /// Best entry maximising `metric`'s gain subject to
+    /// `acc_loss <= cap`, with deterministic canonical tie-breaks.
+    pub fn query(
+        &self,
+        model: Option<&str>,
+        hw: Option<&str>,
+        cap: f64,
+        metric: QueryMetric,
+    ) -> Option<&ArchiveEntry> {
+        let mut v = self.front(model, hw, Some(cap));
+        v.sort_by(|a, b| {
+            metric
+                .gain(b)
+                .total_cmp(&metric.gain(a))
+                .then_with(|| canonical_cmp(a, b))
+        });
+        v.into_iter().next()
+    }
+}
+
+impl MetricsSource for ParetoArchive {
+    fn record(&self, reg: &mut MetricsRegistry) {
+        reg.counter("archive.inserted", self.inserted);
+        reg.counter("archive.evicted", self.evicted);
+        reg.counter("archive.dominated", self.dominated);
+        reg.counter("archive.duplicates", self.duplicates);
+        reg.gauge("archive.entries", self.entries.len() as f64);
+        reg.gauge("archive.groups", self.groups().len() as f64);
+    }
+}
+
+/// Fold one run-report JSON into the archive at `path`
+/// (load → insert → save; the file is only rewritten when the front
+/// actually changed).
+pub fn record_report(path: &Path, report: &Value) -> Result<InsertOutcome> {
+    Ok(record_reports(path, std::slice::from_ref(report))?[0])
+}
+
+/// Fold a batch of run-report JSONs into the archive at `path` with a
+/// single load/save round-trip. Callers pass reports in a
+/// deterministic order (the launcher sorts by model/method/hw/seed);
+/// the resulting file bytes are order-independent regardless.
+pub fn record_reports(path: &Path, reports: &[&Value]) -> Result<Vec<InsertOutcome>> {
+    let mut a = ParetoArchive::load(path)?;
+    let mut outcomes = Vec::with_capacity(reports.len());
+    let mut changed = false;
+    for r in reports {
+        let out = a.insert(ArchiveEntry::from_report(r)?)?;
+        changed |= matches!(out, InsertOutcome::Inserted { .. });
+        outcomes.push(out);
+    }
+    if changed {
+        a.save(path)?;
+    }
+    Ok(outcomes)
+}
+
+/// FNV-1a fingerprint of a model's dense weights (the archive's group
+/// key, 16 lowercase hex chars): hashes every weight tensor's f32 bit
+/// pattern in prunable order, so two artifacts agree iff their dense
+/// weights are bit-identical. Same construction as
+/// [`crate::quant::config_fingerprint`], widened to the whole network.
+pub fn model_fingerprint(w: &crate::model::Weights) -> String {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for t in &w.w {
+        for v in &t.data {
+            h = (h ^ v.to_bits() as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Check `[acc_loss, -energy_gain, -latency_gain]` front membership of
+/// every archived entry against [`nondominated_sort`] — the
+/// archive-invariant assertion the determinism tests use.
+pub fn agrees_with_nondominated_sort(a: &ParetoArchive) -> bool {
+    for (model, fp, hw) in a.groups() {
+        let group: Vec<&ArchiveEntry> = a
+            .entries()
+            .iter()
+            .filter(|e| e.model == model && e.fingerprint == fp && e.hw == hw)
+            .collect();
+        let objs: Vec<Vec<f64>> = group.iter().map(|e| e.objectives()).collect();
+        if nondominated_sort(&objs).iter().any(|&f| f != 0) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(method: &str, seed: u64, loss: f64, eg: f64, lg: f64) -> ArchiveEntry {
+        ArchiveEntry {
+            model: "m".into(),
+            fingerprint: "00000000000000aa".into(),
+            hw: "eyeriss-64".into(),
+            method: method.into(),
+            seed,
+            test_acc: 0.9 - loss,
+            acc_loss: loss,
+            val_acc_loss: loss * 0.9,
+            energy_gain: eg,
+            latency_gain: lg,
+            reward: 1.0 + eg,
+            per_layer: vec![PerLayerPolicy { alg: "l2-norm".into(), sparsity: 0.5, bits: 6 }],
+        }
+    }
+
+    #[test]
+    fn insert_keeps_nondominated_set_and_counts() {
+        let mut a = ParetoArchive::new();
+        assert_eq!(
+            a.insert(entry("ours", 1, 0.02, 0.5, 0.4)).unwrap(),
+            InsertOutcome::Inserted { evicted: 0 }
+        );
+        // strictly worse on every objective: rejected
+        assert_eq!(a.insert(entry("amc", 2, 0.03, 0.4, 0.3)).unwrap(), InsertOutcome::Dominated);
+        // trades accuracy for energy: joins the front
+        assert_eq!(
+            a.insert(entry("haq", 3, 0.01, 0.3, 0.2)).unwrap(),
+            InsertOutcome::Inserted { evicted: 0 }
+        );
+        // dominates the first entry: evicts it
+        assert_eq!(
+            a.insert(entry("nsga2", 4, 0.015, 0.6, 0.5)).unwrap(),
+            InsertOutcome::Inserted { evicted: 1 }
+        );
+        // exact re-insert is answered from the archive
+        assert_eq!(
+            a.insert(entry("nsga2", 4, 0.015, 0.6, 0.5)).unwrap(),
+            InsertOutcome::Duplicate
+        );
+        assert_eq!(a.entries().len(), 2);
+        assert_eq!((a.inserted, a.evicted, a.dominated, a.duplicates), (3, 1, 1, 1));
+        assert!(agrees_with_nondominated_sort(&a));
+        let mut reg = MetricsRegistry::new();
+        reg.collect(&a);
+        let snap = reg.snapshot();
+        let counters = snap.req("counters").unwrap();
+        assert_eq!(counters.req("archive.inserted").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(counters.req("archive.evicted").unwrap().as_f64().unwrap(), 1.0);
+        let gauges = snap.req("gauges").unwrap();
+        assert_eq!(gauges.req("archive.entries").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(gauges.req("archive.groups").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn dominance_is_scoped_to_the_fingerprint_and_target_group() {
+        let mut a = ParetoArchive::new();
+        a.insert(entry("ours", 1, 0.02, 0.5, 0.4)).unwrap();
+        // same numbers, different target: separate front, kept
+        let mut other_hw = entry("ours", 1, 0.03, 0.4, 0.3);
+        other_hw.hw = "mcu".into();
+        assert_eq!(a.insert(other_hw).unwrap(), InsertOutcome::Inserted { evicted: 0 });
+        // dominated numbers but a different dense-weight fingerprint:
+        // separate front, kept
+        let mut other_fp = entry("ours", 1, 0.03, 0.4, 0.3);
+        other_fp.fingerprint = "00000000000000bb".into();
+        assert_eq!(a.insert(other_fp).unwrap(), InsertOutcome::Inserted { evicted: 0 });
+        assert_eq!(a.groups().len(), 3);
+    }
+
+    #[test]
+    fn equal_objectives_from_different_runs_all_survive() {
+        let mut a = ParetoArchive::new();
+        a.insert(entry("ours", 1, 0.02, 0.5, 0.4)).unwrap();
+        assert_eq!(
+            a.insert(entry("haq", 7, 0.02, 0.5, 0.4)).unwrap(),
+            InsertOutcome::Inserted { evicted: 0 }
+        );
+        assert_eq!(a.entries().len(), 2);
+    }
+
+    #[test]
+    fn non_finite_entries_are_refused() {
+        let mut a = ParetoArchive::new();
+        let e = entry("ours", 1, f64::NAN, 0.5, 0.4);
+        assert!(a.insert(e).unwrap_err().to_string().contains("non-finite"));
+        let e = entry("ours", 1, 0.01, f64::INFINITY, 0.4);
+        assert!(a.insert(e).is_err());
+        assert!(a.entries().is_empty());
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_canonical_and_atomic() {
+        let dir = std::env::temp_dir().join(format!("hapq-archive-{}", std::process::id()));
+        let path = dir.join("pareto.json");
+        let mut a = ParetoArchive::new();
+        a.insert(entry("haq", 3, 0.01, 0.3, 0.2)).unwrap();
+        a.insert(entry("ours", 1, 0.02, 0.5, 0.4)).unwrap();
+        a.save(&path).unwrap();
+        assert!(!path.with_file_name("pareto.json.tmp").exists());
+        let b = ParetoArchive::load(&path).unwrap();
+        assert_eq!(b.entries(), a.entries());
+        // bytes are a pure function of the set: reversed insertion
+        // order serialises identically
+        let mut c = ParetoArchive::new();
+        c.insert(entry("ours", 1, 0.02, 0.5, 0.4)).unwrap();
+        c.insert(entry("haq", 3, 0.01, 0.3, 0.2)).unwrap();
+        assert_eq!(c.to_json().to_string(), a.to_json().to_string());
+        // a missing file loads as empty; a wrong kind is refused
+        assert!(ParetoArchive::load(&dir.join("absent.json")).unwrap().entries().is_empty());
+        std::fs::write(dir.join("bad.json"), "{\"kind\":\"other\",\"schema\":1}").unwrap();
+        assert!(ParetoArchive::load(&dir.join("bad.json")).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn entry_json_roundtrips_exactly() {
+        let e = entry("ours", 42, 0.0123456789012345, 0.57, 0.41);
+        let v = json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(ArchiveEntry::from_json(&v).unwrap(), e);
+    }
+
+    #[test]
+    fn query_maximises_gain_under_the_loss_cap() {
+        let mut a = ParetoArchive::new();
+        a.insert(entry("ours", 1, 0.005, 0.3, 0.5)).unwrap();
+        a.insert(entry("haq", 2, 0.012, 0.5, 0.2)).unwrap();
+        a.insert(entry("amc", 3, 0.030, 0.7, 0.7)).unwrap();
+        // under a 1.2% cap the 3% entry is excluded
+        let best = a.query(Some("m"), Some("eyeriss-64"), 0.012, QueryMetric::Energy).unwrap();
+        assert_eq!(best.method, "haq");
+        let best = a.query(None, None, 0.012, QueryMetric::Latency).unwrap();
+        assert_eq!(best.method, "ours");
+        // an unsatisfiable cap yields no answer, not a panic
+        assert!(a.query(None, None, 0.001, QueryMetric::Energy).is_none());
+        // filters restrict the candidate set
+        assert!(a.query(Some("other"), None, 1.0, QueryMetric::Energy).is_none());
+        assert!(a.query(None, Some("mcu"), 1.0, QueryMetric::Energy).is_none());
+    }
+
+    #[test]
+    fn record_report_requires_finite_objectives() {
+        let dir = std::env::temp_dir().join(format!("hapq-archive-rr-{}", std::process::id()));
+        let path = dir.join("pareto.json");
+        let mut report = entry("ours", 1, 0.02, 0.5, 0.4).to_json();
+        // from_report reads the run-JSON field names
+        if let Value::Obj(kv) = &mut report {
+            for (k, _) in kv.iter_mut() {
+                if k == "acc_loss" {
+                    *k = "test_acc_loss".into();
+                }
+            }
+        }
+        assert_eq!(record_report(&path, &report).unwrap(), InsertOutcome::Inserted { evicted: 0 });
+        assert_eq!(record_report(&path, &report).unwrap(), InsertOutcome::Duplicate);
+        let mut bad = report.clone();
+        if let Value::Obj(kv) = &mut bad {
+            for (k, v) in kv.iter_mut() {
+                if k == "reward" {
+                    *v = num(f64::NAN);
+                }
+            }
+        }
+        assert!(record_report(&path, &bad).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -27,6 +27,7 @@
 //! [`crate::coordinator::launcher`], which runs one driver per seed in
 //! the worker pool and merges the reports.
 
+pub mod archive;
 pub mod checkpoint;
 
 use std::path::PathBuf;

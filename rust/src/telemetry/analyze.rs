@@ -123,7 +123,7 @@ impl Trace {
         let mut rows: Vec<(String, u64, f64)> =
             agg.into_iter().map(|(n, (c, d))| (n, c, d)).collect();
         // stable across runs: equal durations fall back to name order
-        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        rows.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)));
         let mut out = format!(
             "{:<16} {:>8} {:>12} {:>12} {:>7}\n",
             "span", "count", "total-ms", "mean-us", "share"
@@ -158,7 +158,7 @@ impl Trace {
         }
         let mut rows: Vec<(usize, u64, f64)> =
             agg.into_iter().map(|(l, (c, d))| (l, c, d)).collect();
-        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+        rows.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)));
         rows.truncate(n);
         let mut out = format!("{:<6} {:>8} {:>12}\n", "layer", "spans", "total-ms");
         for (layer, count, dur_us) in &rows {

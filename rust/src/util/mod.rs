@@ -4,12 +4,19 @@ pub mod proptest;
 pub mod rng;
 
 /// Simple percentile on a copy (used by benches/metrics).
+///
+/// Samples are ordered with `f64::total_cmp` — the IEEE total order —
+/// so NaN samples (e.g. a hit-rate gauge observed with zero lookups)
+/// can never panic the sort. NaN-present semantics: positive NaN sorts
+/// after every finite value, so mid-range percentiles of mostly-finite
+/// data stay finite, while a percentile whose rank lands on a NaN slot
+/// returns NaN (and an all-NaN input returns NaN at every rank).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
     v[idx]
 }
@@ -32,6 +39,17 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
         assert_eq!(percentile(&v, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: the old unwrapped-partial_cmp sort panicked on
+        // any NaN sample; total_cmp sorts NaN after the finite values
+        let v = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert!(percentile(&v, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]
