@@ -108,6 +108,9 @@ fn main() {
     // --- search-loop memoization: eval memo, pack cache, scratch arena ---
     memo_rows(bj);
 
+    // --- work-stealing shard scheduler + parallel dirty-layer packing ---
+    sched_rows(bj);
+
     // --- full env step & episode (needs artifacts) ---
     if let Ok(coord) = std::panic::catch_unwind(common::coordinator) {
         let mut env = coord.build_env("vgg11").unwrap();
@@ -627,4 +630,97 @@ fn memo_rows(bj: &mut BenchJson) {
         std::hint::black_box(bar.accuracy(&w2, &bits).unwrap());
     });
     bj.speedup("arena_vs_fresh_alloc", t_fresh, t_arena);
+}
+
+/// Work-stealing shard scheduler rows (EXPERIMENTS.md §Perf items 9–10):
+/// steal vs static claim order on deliberately skewed shard sizes, and
+/// the dirty-layer pack fan-out vs the serial restage loop. Logits are
+/// asserted bit-identical before any timing — the scheduler is a pure
+/// performance knob (`rust/tests/exec_engine.rs`).
+fn sched_rows(bj: &mut BenchJson) {
+    use hapq::runtime::{MemoConfig, SchedKind};
+
+    // --- steal vs static on skewed shards: 16 shards of rows
+    //     [24,2,2,2] x 4 at 4 threads — the static round-robin pins
+    //     every 24-row shard onto worker 0 (96 of the 120 rows) while
+    //     workers 1..3 finish their 8 rows and idle; stealing drains
+    //     the backlog ---
+    let (arch, mut weights, images5, labels5) = bench5_setup();
+    compress5(&mut weights);
+    let bits = [4.0f32, 4.0, 4.0, 4.0];
+    let per = 16 * 16 * 3;
+    let n_ex = 120usize;
+    let mut rng = Rng::new(41);
+    let images: Vec<f32> = (0..n_ex * per).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let labels: Vec<i64> = (0..n_ex).map(|i| (i % 10) as i64).collect();
+    let batch = 24usize;
+    let rows_pattern: Vec<usize> = (0..4).flat_map(|_| [24usize, 2, 2, 2]).collect();
+    let mk = |sched: SchedKind| {
+        let mut image_batches = Vec::new();
+        let mut label_batches = Vec::new();
+        let mut i = 0usize;
+        for &rows in &rows_pattern {
+            // pad to the executor batch size by repeating the first row
+            // (padded rows are ignored at scoring time)
+            let mut buf = Vec::with_capacity(batch * per);
+            buf.extend_from_slice(&images[i * per..(i + rows) * per]);
+            while buf.len() < batch * per {
+                buf.extend_from_slice(&images[i * per..i * per + per]);
+            }
+            image_batches.push(buf);
+            label_batches.push(labels[i..i + rows].to_vec());
+            i += rows;
+        }
+        let data = EvalData {
+            batch,
+            input: arch.input,
+            image_batches,
+            label_batches,
+            n_examples: n_ex,
+        };
+        NativeBackend::with_sched(&arch, data, 4, KernelKind::Int, MemoConfig::default(), sched)
+            .unwrap()
+    };
+    let bs = mk(SchedKind::Static);
+    let bw = mk(SchedKind::Steal);
+    assert_f32_bits_eq(
+        "sched steal vs static logits (skewed shards)",
+        &bs.engine_logits(&weights, &bits).unwrap(),
+        &bw.engine_logits(&weights, &bits).unwrap(),
+    );
+    let t_static = bj.timed("oracle skewed shards, static sched", 10, || {
+        bs.invalidate_all();
+        std::hint::black_box(bs.accuracy(&weights, &bits).unwrap());
+    });
+    let t_steal = bj.timed("oracle skewed shards, steal sched", 10, || {
+        bw.invalidate_all();
+        std::hint::black_box(bw.accuracy(&weights, &bits).unwrap());
+    });
+    bj.speedup("steal_vs_static_skewed", t_static, t_steal);
+
+    // --- pack fan-out vs the serial restage loop: memo off so every
+    //     query rebuilds all four packs; bench5's shards are balanced,
+    //     so the delta isolates the packing prong ---
+    let mk2 = |sched: SchedKind| {
+        let data =
+            EvalData::from_arrays(&arch, &images5, &labels5, labels5.len(), arch.batch).unwrap();
+        NativeBackend::with_sched(&arch, data, 4, KernelKind::Int, MemoConfig::off(), sched)
+            .unwrap()
+    };
+    let ps = mk2(SchedKind::Static);
+    let pw = mk2(SchedKind::Steal);
+    assert_f32_bits_eq(
+        "pack fan-out vs serial logits",
+        &ps.engine_logits(&weights, &bits).unwrap(),
+        &pw.engine_logits(&weights, &bits).unwrap(),
+    );
+    let t_serial = bj.timed("oracle full recompute, serial pack", 10, || {
+        ps.invalidate_all();
+        std::hint::black_box(ps.accuracy(&weights, &bits).unwrap());
+    });
+    let t_fan = bj.timed("oracle full recompute, pack fan-out", 10, || {
+        pw.invalidate_all();
+        std::hint::black_box(pw.accuracy(&weights, &bits).unwrap());
+    });
+    bj.speedup("pack_parallel_vs_serial", t_serial, t_fan);
 }

@@ -6,7 +6,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{BackendKind, KernelKind, MemoConfig};
+use crate::runtime::{BackendKind, KernelKind, MemoConfig, SchedKind};
 
 /// Options shared by every HAPQ run.
 #[derive(Clone, Debug)]
@@ -65,6 +65,11 @@ pub struct RunConfig {
     /// pack cache and scratch arenas; bit-identical on or off, so
     /// purely a performance switch
     pub memo: MemoConfig,
+    /// oracle shard scheduler (`--sched {static,steal}`; default
+    /// `HAPQ_SCHED` or steal) — work-stealing claim order over the
+    /// shard slab; bit-identical to the static broadcast at every
+    /// thread count, so purely a performance switch
+    pub sched: SchedKind,
 }
 
 /// `HAPQ_TRACE` (non-empty) as the default `--trace` path.
@@ -96,6 +101,7 @@ impl Default for RunConfig {
             stop_after: None,
             trace: default_trace(),
             memo: MemoConfig::default(),
+            sched: crate::runtime::default_sched(),
         }
     }
 }
@@ -221,6 +227,7 @@ impl Cli {
                 pack_cap: self.usize_flag("memo-pack-cap", d.memo.pack_cap)?,
                 eval_cap: self.usize_flag("memo-eval-cap", d.memo.eval_cap)?,
             },
+            sched: SchedKind::parse(&self.str_flag("sched", d.sched.name()))?,
         };
         if cfg.seeds > 1 && (cfg.resume || cfg.stop_after.is_some() || cfg.checkpoint.is_some()) {
             bail!(
@@ -404,6 +411,19 @@ mod tests {
         assert!(c.run_config().is_err());
         let c = Cli::parse(&args("compress")).unwrap();
         assert_eq!(c.run_config().unwrap().memo, MemoConfig::default());
+    }
+
+    #[test]
+    fn sched_flag_threads_into_config() {
+        let c = Cli::parse(&args("compress --sched static")).unwrap();
+        assert_eq!(c.run_config().unwrap().sched, SchedKind::Static);
+        let c = Cli::parse(&args("compress --sched steal")).unwrap();
+        assert_eq!(c.run_config().unwrap().sched, SchedKind::Steal);
+        let c = Cli::parse(&args("compress --sched greedy")).unwrap();
+        assert!(c.run_config().is_err());
+        // default is the process default (HAPQ_SCHED or steal)
+        let c = Cli::parse(&args("compress")).unwrap();
+        assert_eq!(c.run_config().unwrap().sched, crate::runtime::default_sched());
     }
 
     #[test]

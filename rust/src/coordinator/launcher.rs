@@ -101,6 +101,8 @@ impl Job {
             cfg.memo.pack_cap.to_string(),
             "--memo-eval-cap".into(),
             cfg.memo.eval_cap.to_string(),
+            "--sched".into(),
+            cfg.sched.name().to_string(),
         ]);
         if let Some(tile) = cfg.gemm_tile {
             v.extend(["--gemm-tile".into(), tile.to_string()]);
@@ -546,6 +548,7 @@ mod tests {
         cfg.memo.enabled = false;
         cfg.memo.pack_cap = 77;
         cfg.memo.eval_cap = 888;
+        cfg.sched = crate::runtime::SchedKind::Static;
         let j = Job { model: "vgg11".into(), method: "ours".into(), seed: None, hw: None };
         let a = j.args(&cfg);
         let expect: &[(&str, String)] = &[
@@ -564,6 +567,7 @@ mod tests {
             ("--memo", "off".into()),
             ("--memo-pack-cap", "77".into()),
             ("--memo-eval-cap", "888".into()),
+            ("--sched", "static".into()),
             ("--hw", cfg.hw.clone()),
         ];
         for (flag, want) in expect {

@@ -94,6 +94,11 @@ pub struct RunReport {
     pub threads: usize,
     /// native compute kernel that evaluated prunable layers (`--kernel`)
     pub kernel: crate::runtime::KernelKind,
+    /// shard scheduler that served the oracle queries (`--sched`)
+    pub sched: crate::runtime::SchedKind,
+    /// shards evaluated by a non-preferred worker over the run
+    /// (work-stealing claims; always 0 under `--sched static`)
+    pub steals: u64,
     /// hardware target the cost model priced the run against (`--hw`)
     pub hw: String,
     /// cumulative seconds spent in hardware cost-model queries
@@ -161,6 +166,8 @@ impl RunReport {
             ("wall_secs", num(self.wall_secs)),
             ("threads", num(self.threads as f64)),
             ("kernel", s(self.kernel.name())),
+            ("sched", s(self.sched.name())),
+            ("steals", num(self.steals as f64)),
             ("hw", s(&self.hw)),
             ("hw_s", num(self.hw_s)),
             ("cache_hit_rate", num(self.cache_hit_rate)),
@@ -246,6 +253,7 @@ impl Coordinator {
             self.cfg.threads,
             self.cfg.kernel,
             self.cfg.memo,
+            self.cfg.sched,
         )
     }
 
@@ -351,6 +359,8 @@ impl Coordinator {
             wall_secs: outcome.wall_secs + t_score.elapsed().as_secs_f64(),
             threads: stats.threads,
             kernel: stats.kernel,
+            sched: stats.sched,
+            steals: stats.steals,
             hw: env.cost.model().target.name.clone(),
             hw_s: env.timers.hw_s,
             cache_hit_rate: stats.cache_hit_rate(),
@@ -640,6 +650,8 @@ mod tests {
             wall_secs: 0.1,
             threads: 4,
             kernel: crate::runtime::KernelKind::Int,
+            sched: crate::runtime::SchedKind::Steal,
+            steals: 5,
             hw: "eyeriss-64".into(),
             hw_s: 0.002,
             cache_hit_rate: 0.75,
@@ -661,6 +673,10 @@ mod tests {
         assert_eq!(v.req("kernel").unwrap().as_str().unwrap(), "int");
         assert!(v.req("pack_secs").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.req("gemm_secs").unwrap().as_f64().unwrap() > 0.0);
+        // the shard scheduler and its steal count ride along so
+        // steal-vs-static wall-clock diffs can control for claim order
+        assert_eq!(v.req("sched").unwrap().as_str().unwrap(), "steal");
+        assert_eq!(v.req("steals").unwrap().as_f64().unwrap(), 5.0);
         // the hardware target and its cost-query phase timer ride along
         // so cross-target sweeps stay auditable from the JSON alone
         assert_eq!(v.req("hw").unwrap().as_str().unwrap(), "eyeriss-64");

@@ -59,7 +59,13 @@
 //! config-fingerprinted eval/pack caches plus the kernel scratch
 //! arenas — with `--memo-pack-cap N` / `--memo-eval-cap N` sizing the
 //! two LRU caches; results are bit-identical either way (memo hits
-//! replay exactly the value a cold eval computed).
+//! replay exactly the value a cold eval computed). `--sched
+//! {static,steal}` (default: `HAPQ_SCHED` or `steal`) picks the shard
+//! scheduler: `steal` lets drained workers claim shards from loaded
+//! ones (and fans dirty-layer packing across the idle pool), `static`
+//! keeps the fixed round-robin ownership — logits are bit-identical
+//! at every thread count and steal order, so the flag is purely a
+//! performance knob.
 //!
 //! `--trace PATH` (default: `HAPQ_TRACE`) records a structured JSONL
 //! trace of the run — search step/episode events, env phase spans,
@@ -110,6 +116,7 @@ fn print_help() {
          --reward-subset N --model NAME --backend native|pjrt \
          --kernel f32|int --threads N --gemm-tile N \
          --memo on|off --memo-pack-cap N --memo-eval-cap N \
+         --sched static|steal \
          --hw eyeriss-64|eyeriss-128|bitfusion|mcu --hw-file PROFILE.json \
          --trace PATH (JSONL telemetry; default HAPQ_TRACE)\n\
          search flags: --seeds N (best-of multi-seed; with compare/--jobs) \
@@ -790,6 +797,11 @@ hotspots holding 50% of energy: {hs:?}");
                 stats.pack_hits,
                 stats.pack_misses,
                 t.memo_s * 1e3
+            );
+            println!(
+                "  sched [{}]: {} shards stolen",
+                stats.sched.name(),
+                stats.steals
             );
             Ok(())
         }

@@ -1,6 +1,9 @@
 //! Per-shard activation checkpoint cache: records every graph node's
 //! post-op feature map along the exported topological order and resumes
-//! the forward pass from the first dirty layer on the next query.
+//! the forward pass from the first dirty layer on the next query. The
+//! cache lives in the shard's slab slot (`pool`), primed lazily on the
+//! shard's first claim, so whichever worker claims the shard — its
+//! preferred owner or a stealer — evaluates against the same state.
 //!
 //! Correctness across branches: a slot is recomputed iff its layer was
 //! invalidated, it was never computed, or **any** of its input slots

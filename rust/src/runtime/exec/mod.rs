@@ -18,12 +18,17 @@
 //! 2. **Data parallelism** (`pool`): evaluation examples are
 //!    independent, so the engine shards them across a long-lived,
 //!    std-only worker pool (no new dependencies — the crate's vendoring
-//!    policy). Each worker owns its shards' caches; one query is a
-//!    broadcast of the staged weights + dirty set, and the reduction
-//!    sums per-shard `top1_correct` counts. Every operator in the
-//!    interpreter treats examples independently, so the result is
-//!    **bit-identical at any thread count** (asserted by the property
-//!    tests in `tests/exec_engine.rs`).
+//!    policy). Shards and their caches live in a shared slab; workers
+//!    claim them through atomic ticket counters, preferring their own
+//!    round-robin slice and stealing from other workers only when it
+//!    is drained (`--sched steal`, the default; `--sched static` is
+//!    the fixed pre-stealing ownership). One query is a broadcast of
+//!    the staged weights + dirty set, and the reduction sorts partials
+//!    by shard index and sums per-shard `top1_correct` counts. Every
+//!    operator in the interpreter treats examples independently, so
+//!    the result is **bit-identical at any thread count and any steal
+//!    order** (asserted by the property tests in
+//!    `tests/exec_engine.rs`).
 //!
 //! Weight staging mirrors the PJRT literal cache: the engine keeps an
 //! `Arc` snapshot per prunable layer and re-clones only layers that
@@ -44,7 +49,7 @@
 pub(crate) mod actcache;
 pub(crate) mod pool;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -53,10 +58,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::model::{ModelArch, Weights};
 use crate::quant::config_fingerprint;
 use crate::runtime::native::{pack_layer, quant_params, PackedLayer};
-use crate::runtime::{Candidate, EvalData, KernelKind, MemoConfig, RuntimeStats};
+use crate::runtime::{Candidate, EvalData, KernelKind, MemoConfig, RuntimeStats, SchedKind};
 use crate::tensor::Tensor;
 
-use pool::{CandJob, Job, Pool};
+use pool::{CandJob, Job, PackTask, Pool};
 
 /// Worker-thread default for new sessions: the `HAPQ_THREADS`
 /// environment variable when set to a positive integer, else 1. The
@@ -144,14 +149,14 @@ impl Plan {
     }
 }
 
-/// One worker-owned slice of the evaluation data: a contiguous run of
+/// One slab-resident slice of the evaluation data: a contiguous run of
 /// real (non-padded) examples with their labels.
 pub(crate) struct Shard {
     /// number of examples in this shard
     pub rows: usize,
-    /// flattened `[rows, H, W, C]` images; the worker moves this buffer
-    /// into its activation cache's slot 0 at startup (single resident
-    /// copy per shard)
+    /// flattened `[rows, H, W, C]` images; moved into the shard's
+    /// activation cache's slot 0 on first claim (single resident copy
+    /// per shard)
     pub images: Vec<f32>,
     /// ground-truth labels, length `rows`
     pub labels: Vec<i64>,
@@ -200,22 +205,85 @@ fn build_shards(data: &EvalData, threads: usize) -> Vec<Shard> {
 /// [`pack_layer`] call would rebuild — bit-identical by construction.
 /// Degenerate-grid layers cache their `None` (f32 fallback) too.
 ///
-/// Eviction is least-recently-used via a monotone access tick and an
-/// `O(len)` min-scan at capacity — packs are worth milliseconds each
-/// and the capacity is small (hundreds), so a scan beats the bookkeeping
-/// of an intrusive list. `cap == 0` disables caching entirely
-/// (`--memo off`): every call builds fresh, nothing is retained.
+/// Eviction is least-recently-used via an index-linked recency list
+/// over a slot arena (`entries` + free list): hits unlink/relink in
+/// `O(1)` and eviction pops the tail in `O(1)`, replacing the old
+/// monotone-tick `O(len)` min-scan. Hit/miss semantics are unchanged
+/// (the memo bit-identity proptest is the guard). `cap == 0` disables
+/// caching entirely (`--memo off`): every call builds fresh, nothing
+/// is retained.
+struct PackEntry {
+    key: (usize, u64),
+    pack: Option<Arc<PackedLayer>>,
+    /// neighbor toward the most-recently-used end (`NIL` at the head)
+    prev: usize,
+    /// neighbor toward the least-recently-used end (`NIL` at the tail)
+    next: usize,
+}
+
+/// Sentinel slot index terminating the recency list.
+const NIL: usize = usize::MAX;
+
 struct PackCache {
     cap: usize,
-    tick: u64,
-    map: HashMap<(usize, u64), (u64, Option<Arc<PackedLayer>>)>,
+    /// key → slot index into `entries`
+    map: HashMap<(usize, u64), usize>,
+    entries: Vec<PackEntry>,
+    /// slots vacated by eviction, reused before growing `entries`
+    free: Vec<usize>,
+    /// most-recently-used slot (`NIL` when empty)
+    head: usize,
+    /// least-recently-used slot — the eviction victim (`NIL` when empty)
+    tail: usize,
     hits: u64,
     misses: u64,
 }
 
 impl PackCache {
     fn new(cap: usize) -> PackCache {
-        PackCache { cap, tick: 0, map: HashMap::new(), hits: 0, misses: 0 }
+        PackCache {
+            cap,
+            map: HashMap::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Is `(pi, fp)` currently resident? Non-mutating (no recency
+    /// refresh, no stats) — the parallel pack fan-out peeks with this
+    /// to predict which keys the serial walk of record will miss.
+    fn contains(&self, pi: usize, fp: u64) -> bool {
+        self.cap > 0 && self.map.contains_key(&(pi, fp))
+    }
+
+    fn unlink(&mut self, s: usize) {
+        let (p, nx) = (self.entries[s].prev, self.entries[s].next);
+        if p == NIL {
+            self.head = nx;
+        } else {
+            self.entries[p].next = nx;
+        }
+        if nx == NIL {
+            self.tail = p;
+        } else {
+            self.entries[nx].prev = p;
+        }
+    }
+
+    fn push_front(&mut self, s: usize) {
+        self.entries[s].prev = NIL;
+        self.entries[s].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = s;
+        }
+        self.head = s;
+        if self.tail == NIL {
+            self.tail = s;
+        }
     }
 
     /// Look up `(pi, fp)`, building (and retaining) via `build` on a
@@ -230,21 +298,34 @@ impl PackCache {
             self.misses += 1;
             return build();
         }
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some(entry) = self.map.get_mut(&(pi, fp)) {
-            entry.0 = tick;
+        if let Some(&s) = self.map.get(&(pi, fp)) {
             self.hits += 1;
-            return entry.1.clone();
+            self.unlink(s);
+            self.push_front(s);
+            return self.entries[s].pack.clone();
         }
         self.misses += 1;
         let pack = build();
         if self.map.len() >= self.cap {
-            if let Some(&oldest) = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k) {
-                self.map.remove(&oldest);
-            }
+            let lru = self.tail;
+            self.unlink(lru);
+            self.map.remove(&self.entries[lru].key);
+            self.entries[lru].pack = None;
+            self.free.push(lru);
         }
-        self.map.insert((pi, fp), (tick, pack.clone()));
+        let entry = PackEntry { key: (pi, fp), pack: pack.clone(), prev: NIL, next: NIL };
+        let s = match self.free.pop() {
+            Some(s) => {
+                self.entries[s] = entry;
+                s
+            }
+            None => {
+                self.entries.push(entry);
+                self.entries.len() - 1
+            }
+        };
+        self.map.insert((pi, fp), s);
+        self.push_front(s);
         pack
     }
 }
@@ -264,6 +345,8 @@ struct EngineState {
     reused: u64,
     pack_s: f64,
     gemm_s: f64,
+    /// shards claimed off another worker's preference list, cumulative
+    steals: u64,
     pack_cache: PackCache,
 }
 
@@ -285,6 +368,7 @@ pub struct Engine {
     state: Mutex<EngineState>,
     threads: usize,
     kernel: KernelKind,
+    sched: SchedKind,
     n_examples: usize,
     n_prunable: usize,
 }
@@ -306,13 +390,29 @@ impl Engine {
     /// [`Engine::new`] with an explicit memoization config: sizes the
     /// pack cache (`--memo-pack-cap`), or disables pack caching
     /// entirely when `memo.enabled` is false — a pure speed knob; the
-    /// cached pack is the same `Arc` a rebuild would produce.
+    /// cached pack is the same `Arc` a rebuild would produce. Uses the
+    /// process-default scheduler ([`crate::runtime::default_sched`]).
     pub fn with_memo(
         arch: &ModelArch,
         data: &EvalData,
         threads: usize,
         kernel: KernelKind,
         memo: MemoConfig,
+    ) -> Result<Engine> {
+        Self::with_sched(arch, data, threads, kernel, memo, crate::runtime::default_sched())
+    }
+
+    /// [`Engine::with_memo`] with an explicit shard scheduler (the
+    /// CLI's `--sched`). Both schedulers are bit-identical at every
+    /// thread count — `steal` only changes which worker evaluates a
+    /// shard, never what the reduction folds.
+    pub fn with_sched(
+        arch: &ModelArch,
+        data: &EvalData,
+        threads: usize,
+        kernel: KernelKind,
+        memo: MemoConfig,
+        sched: SchedKind,
     ) -> Result<Engine> {
         let threads = threads.max(1);
         let n = arch.prunable.len();
@@ -336,7 +436,7 @@ impl Engine {
         for (gi, shard) in shards.into_iter().enumerate() {
             sets[gi % threads].push((gi, shard));
         }
-        let pool = Pool::spawn(plan.clone(), sets);
+        let pool = Pool::spawn(plan.clone(), sets, sched);
         Ok(Engine {
             plan,
             pool,
@@ -351,10 +451,12 @@ impl Engine {
                 reused: 0,
                 pack_s: 0.0,
                 gemm_s: 0.0,
+                steals: 0,
                 pack_cache: PackCache::new(if memo.enabled { memo.pack_cap } else { 0 }),
             }),
             threads,
             kernel,
+            sched,
             n_examples: data.n_examples,
             n_prunable: n,
         })
@@ -435,6 +537,8 @@ impl Engine {
             gemm_secs: st.gemm_s,
             pack_hits: st.pack_cache.hits,
             pack_misses: st.pack_cache.misses,
+            sched: self.sched,
+            steals: st.steals,
         }
     }
 
@@ -492,10 +596,71 @@ impl Engine {
         // incremental resume never touches clean ones, and a revisited
         // (mask, values, bits) config pulls its pack from the LRU
         // cache instead of rebuilding it
+        let cand_fps: Vec<u64> = if self.kernel == KernelKind::Int {
+            cands.iter().map(|c| config_fingerprint(&c.w, c.bits)).collect()
+        } else {
+            Vec::new()
+        };
+        let mut prebuilt: HashMap<(usize, u64), Option<Arc<PackedLayer>>> = HashMap::new();
         if self.kernel == KernelKind::Int {
             let t0 = Instant::now();
             if st.staged_pack.len() != n {
                 st.staged_pack = vec![None; n];
+            }
+            // fingerprint each dirty layer once, shared by the fan-out
+            // prediction and the serial walk of record
+            let fps: Vec<Option<u64>> = (0..n)
+                .map(|i| dirty_p[i].then(|| config_fingerprint(&st.staged_w[i], act_bits[i])))
+                .collect();
+            // work-stealing pack fan-out: predict which keys the walk
+            // below will miss (base restage + candidate batch), build
+            // those on the idle pool, then let the walk consume the
+            // prebuilt results. The walk replays the exact get_or_pack
+            // sequence, so recency order, hit/miss counts, eviction
+            // and insertion order stay byte-identical to serial
+            // packing; a mispredicted entry just builds inline.
+            if self.sched == SchedKind::Steal && self.threads >= 2 {
+                let mut tasks: Vec<PackTask> = Vec::new();
+                let mut keys: Vec<(usize, u64)> = Vec::new();
+                let mut scheduled: HashSet<(usize, u64)> = HashSet::new();
+                for (i, fp) in fps.iter().enumerate() {
+                    if let Some(fp) = *fp {
+                        if !st.pack_cache.contains(i, fp) && scheduled.insert((i, fp)) {
+                            tasks.push(PackTask {
+                                pi: i,
+                                w: st.staged_w[i].clone(),
+                                bits: act_bits[i],
+                            });
+                            keys.push((i, fp));
+                        }
+                    }
+                }
+                for (c, &fp) in cands.iter().zip(&cand_fps) {
+                    if !st.pack_cache.contains(c.layer, fp) && scheduled.insert((c.layer, fp)) {
+                        tasks.push(PackTask { pi: c.layer, w: c.w.clone(), bits: c.bits });
+                        keys.push((c.layer, fp));
+                    }
+                }
+                if tasks.len() >= 2 {
+                    let t1 = Instant::now();
+                    for (key, r) in
+                        keys.into_iter().zip(self.pool.pack_parallel(&self.plan, tasks))
+                    {
+                        // a failed parallel build falls back to the
+                        // inline build in the walk of record
+                        if let Ok(pack) = r {
+                            prebuilt.insert(key, pack);
+                        }
+                    }
+                    if crate::telemetry::enabled() {
+                        crate::telemetry::span_at(
+                            "exec.pack_fanout",
+                            t1,
+                            t1.elapsed().as_secs_f64(),
+                            None,
+                        );
+                    }
+                }
             }
             let EngineState { staged_w, staged_pack, pack_cache, .. } = &mut *st;
             for (i, dirty) in dirty_p.iter().enumerate() {
@@ -507,10 +672,13 @@ impl Engine {
                         self.plan.arch.act_scales[i],
                         self.plan.arch.act_signed[i],
                     );
-                    let fp = config_fingerprint(&staged_w[i], act_bits[i]);
+                    let fp = fps[i].expect("dirty layers were fingerprinted above");
                     let w = &staged_w[i];
-                    staged_pack[i] =
-                        pack_cache.get_or_pack(i, fp, || pack_layer(layer, w, grid).map(Arc::new));
+                    staged_pack[i] = pack_cache.get_or_pack(i, fp, || {
+                        prebuilt
+                            .remove(&(i, fp))
+                            .unwrap_or_else(|| pack_layer(layer, w, grid).map(Arc::new))
+                    });
                 }
             }
             let pack_secs = t0.elapsed().as_secs_f64();
@@ -526,7 +694,7 @@ impl Engine {
         let cand_jobs: Vec<CandJob> = {
             let t0 = Instant::now();
             let mut jobs = Vec::with_capacity(cands.len());
-            for c in cands {
+            for (ci, c) in cands.iter().enumerate() {
                 let pack = if self.kernel == KernelKind::Int {
                     let li = self.plan.layer_of_prunable[c.layer];
                     let layer = &self.plan.arch.layers[li];
@@ -538,9 +706,12 @@ impl Engine {
                     // candidates share the staged packs' cache keyspace:
                     // an accepted candidate's next staging is a hit, and
                     // re-priced candidates stop re-packing
-                    let fp = config_fingerprint(&c.w, c.bits);
-                    st.pack_cache
-                        .get_or_pack(c.layer, fp, || pack_layer(layer, &c.w, grid).map(Arc::new))
+                    let fp = cand_fps[ci];
+                    st.pack_cache.get_or_pack(c.layer, fp, || {
+                        prebuilt
+                            .remove(&(c.layer, fp))
+                            .unwrap_or_else(|| pack_layer(layer, &c.w, grid).map(Arc::new))
+                    })
                 } else {
                     None
                 };
@@ -576,12 +747,22 @@ impl Engine {
             dirty_layers,
             want_logits,
             cands: cand_jobs,
+            hooks: Default::default(),
         });
         match self.pool.run(job) {
             Ok(agg) => {
                 st.computed += agg.computed;
                 st.reused += agg.reused;
                 st.gemm_s += agg.gemm_s;
+                st.steals += agg.stolen;
+                if crate::telemetry::enabled() && !agg.worker_shards.is_empty() {
+                    let max = *agg.worker_shards.iter().max().expect("non-empty") as f64;
+                    let mean = agg.worker_shards.iter().sum::<usize>() as f64
+                        / agg.worker_shards.len() as f64;
+                    if mean > 0.0 {
+                        crate::telemetry::gauge("exec.imbalance", max / mean);
+                    }
+                }
                 Ok(EvalOut {
                     correct: agg.correct,
                     logits: agg.logits,

@@ -1,18 +1,35 @@
-//! Std-only long-lived worker pool: one thread per shard set, each
-//! owning its shards' activation caches for the lifetime of the
-//! engine. A query is a broadcast of one [`Job`] (staged weights +
-//! dirty layers) over per-worker channels; the reduction sums the
-//! per-shard `top1_correct` counts and cache statistics. No external
-//! dependencies — `std::sync::mpsc` + `std::thread`, matching the
-//! crate's vendoring policy.
+//! Std-only long-lived worker pool with a work-stealing shard
+//! scheduler. Shards — and their activation caches — live in per-shard
+//! slots of a shared slab; workers claim slots through per-worker
+//! atomic ticket counters, preferring their own round-robin slice (so
+//! a shard's cache stays warm on the thread that evaluated it last)
+//! and stealing from other workers' preference lists only once their
+//! own is drained (`--sched steal`, the default). `--sched static`
+//! stops after the worker's own list — exactly the pre-stealing
+//! assignment. A query is a broadcast of one [`Job`] over per-worker
+//! channels; the reduction sorts partials by shard index and sums
+//! integer counts, so results are **bit-identical at every thread
+//! count and every steal order** (`tests/exec_engine.rs`,
+//! `tests/kernel_conformance.rs`).
+//!
+//! Every dispatch carries a sequence number and replies echo it, so a
+//! late reply from an abandoned (failed) query can never be folded
+//! into the next one; a bumped `current_seq` additionally tells a
+//! worker still chewing on an abandoned job to stop claiming slots.
+//! The same channels also carry [`PackBatch`] messages — the engine
+//! fans dirty-layer pack builds out across the idle pool before the
+//! eval broadcast. No external dependencies — `std::sync::mpsc` +
+//! `std::thread`, matching the crate's vendoring policy.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::native::PackedLayer;
+use crate::runtime::native::{pack_layer, quant_params, PackedLayer};
+use crate::runtime::SchedKind;
 use crate::tensor::Tensor;
 
 use super::actcache::ActCache;
@@ -34,6 +51,20 @@ pub(crate) struct CandJob {
     /// int-kernel pack of the proposal (built once engine-side);
     /// `None` = f32 path, exactly like a missing entry in `Job::packs`
     pub pack: Option<Arc<PackedLayer>>,
+}
+
+/// Fault-injection hooks for the pool's own regression tests: delay or
+/// panic while evaluating a specific shard. Always present (two
+/// `Option`s per job, set only from `#[cfg(test)]` code) so production
+/// and test jobs build the same struct.
+#[derive(Default)]
+pub(crate) struct TestHooks {
+    /// panic while evaluating this shard index (exercises the
+    /// worker-panic → error-reply conversion and the fail-fast fold)
+    pub panic_on_shard: Option<usize>,
+    /// sleep this many milliseconds before evaluating this shard index
+    /// (holds a worker mid-job so late replies can be provoked)
+    pub delay_ms_on_shard: Option<(usize, u64)>,
 }
 
 /// One broadcast evaluation request: the engine's staged per-layer
@@ -59,9 +90,65 @@ pub(crate) struct Job {
     /// after the base pass (batched oracle mode); empty on plain
     /// queries
     pub cands: Vec<CandJob>,
+    /// test-only fault injection (defaulted everywhere else)
+    pub hooks: TestHooks,
 }
 
-/// One worker's fold over its shards.
+/// One pack-build task the engine fans out before an int-kernel eval:
+/// exactly the inputs of the serial restage's `pack_layer` call.
+pub(crate) struct PackTask {
+    /// prunable index of the layer to pack
+    pub pi: usize,
+    /// the staged (or candidate) weight tensor to pack
+    pub w: Arc<Tensor>,
+    /// activation precision selecting the dequant grid
+    pub bits: f32,
+}
+
+/// A batch of pack tasks claimed via an atomic cursor by workers *and*
+/// the engine thread; each claimed task sends its `(index, pack)`
+/// result exactly once over `out`.
+pub(crate) struct PackBatch {
+    tasks: Vec<PackTask>,
+    cursor: AtomicUsize,
+    out: Sender<(usize, Result<Option<Arc<PackedLayer>>>)>,
+}
+
+impl PackBatch {
+    /// Claim and build tasks until the cursor is exhausted. A panic
+    /// inside `pack_layer` becomes an error result so the collector
+    /// never starves.
+    fn drain(&self, plan: &Plan) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::SeqCst);
+            if i >= self.tasks.len() {
+                return;
+            }
+            let t = &self.tasks[i];
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                build_pack(plan, t)
+            }))
+            .map_err(|_| anyhow!("pack worker panicked"));
+            // send fails only when the engine already gave up on the
+            // batch and dropped the receiver — nothing left to do
+            if self.out.send((i, result)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// The one authoritative pack-build recipe, shared by the engine's
+/// serial walk and the parallel pack fan-out: grid from the plan's
+/// calibration constants, pack from [`pack_layer`].
+fn build_pack(plan: &Plan, t: &PackTask) -> Option<Arc<PackedLayer>> {
+    let li = plan.layer_of_prunable[t.pi];
+    let layer = &plan.arch.layers[li];
+    let grid = quant_params(t.bits, plan.arch.act_scales[t.pi], plan.arch.act_signed[t.pi]);
+    pack_layer(layer, &t.w, grid).map(Arc::new)
+}
+
+/// One worker's fold over the shards it claimed.
 #[derive(Default)]
 pub(crate) struct Partial {
     /// correctly classified rows
@@ -72,17 +159,24 @@ pub(crate) struct Partial {
     pub reused: u64,
     /// seconds spent in prunable-layer (GEMM) evaluation
     pub gemm_s: f64,
-    /// `(shard index, final-layer logits)` per owned shard
+    /// `(shard index, final-layer logits)` per claimed shard
     pub shards: Vec<(usize, Vec<f32>)>,
     /// per-candidate correct counts, `Job::cands` order
     pub cand_correct: Vec<usize>,
-    /// `(shard index, per-candidate final-layer logits)` per owned
+    /// `(shard index, per-candidate final-layer logits)` per claimed
     /// shard — populated only when the job wants logits and carries
     /// candidates
     pub cand_shards: Vec<(usize, Vec<Vec<f32>>)>,
+    /// shards this worker claimed for this job
+    pub shards_done: usize,
+    /// shards claimed from another worker's preference list
+    pub stolen: u64,
 }
 
 struct Reply {
+    /// dispatch sequence number this reply answers — the fold discards
+    /// replies from abandoned earlier queries
+    seq: u64,
     result: Result<Partial>,
 }
 
@@ -102,80 +196,144 @@ pub(crate) struct Aggregate {
     pub cand_correct: Vec<usize>,
     /// per-candidate final-layer logits concatenated in example order
     pub cand_logits: Vec<Vec<f32>>,
+    /// shards claimed from another worker's preference list (total)
+    pub stolen: u64,
+    /// shards evaluated per worker reply (unordered) — the imbalance
+    /// telemetry input
+    pub worker_shards: Vec<usize>,
 }
 
-/// The pool: job senders + the shared reply channel + join handles.
+/// One slab slot: a shard and its (lazily primed) activation cache.
+/// The mutex makes a claim exclusive; under the static scheduler each
+/// slot is only ever touched by its preferred worker, so the lock is
+/// uncontended.
+struct Slot {
+    gi: usize,
+    shard: Shard,
+    cache: Option<ActCache>,
+}
+
+/// One dispatched query: the job plus this dispatch's claim state.
+/// Cursors are allocated fresh per dispatch, so an abandoned query's
+/// half-consumed cursors can never leak into the next one.
+struct Dispatch {
+    seq: u64,
+    /// one ticket counter per worker preference list
+    cursors: Vec<AtomicUsize>,
+    job: Arc<Job>,
+}
+
+enum Msg {
+    Eval(Arc<Dispatch>),
+    Pack(Arc<PackBatch>),
+}
+
+/// The pool: job senders, the shared reply channel, the shard slab and
+/// join handles.
 pub(crate) struct Pool {
-    txs: Vec<Sender<Arc<Job>>>,
+    txs: Vec<Sender<Msg>>,
     rx: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
+    /// monotone dispatch counter; the next dispatch gets `seq + 1`
+    seq: AtomicU64,
+    /// the seq workers must match to keep claiming slots (stale-abort)
+    current_seq: Arc<AtomicU64>,
 }
 
 impl Pool {
-    /// Spawn one worker per shard set. Workers build their caches once
-    /// and then serve queries until the pool is dropped.
-    pub fn spawn(plan: Arc<Plan>, sets: Vec<Vec<(usize, Shard)>>) -> Pool {
+    /// Spawn one worker per shard set. `sets[w]` becomes worker `w`'s
+    /// preference list (the static scheduler's exact ownership);
+    /// shards live in the shared slab and caches are primed on first
+    /// claim.
+    pub fn spawn(plan: Arc<Plan>, sets: Vec<Vec<(usize, Shard)>>, sched: SchedKind) -> Pool {
+        let n_workers = sets.len();
+        let mut slots = Vec::new();
+        let mut prefs: Vec<Vec<usize>> = Vec::with_capacity(n_workers);
+        for set in sets {
+            let mut list = Vec::with_capacity(set.len());
+            for (gi, shard) in set {
+                list.push(slots.len());
+                slots.push(Mutex::new(Slot { gi, shard, cache: None }));
+            }
+            prefs.push(list);
+        }
+        let slab: Arc<Vec<Mutex<Slot>>> = Arc::new(slots);
+        let prefs: Arc<Vec<Vec<usize>>> = Arc::new(prefs);
+        let current_seq = Arc::new(AtomicU64::new(0));
         let (rtx, rx) = channel();
-        let mut txs = Vec::with_capacity(sets.len());
-        let mut handles = Vec::with_capacity(sets.len());
-        for (wi, set) in sets.into_iter().enumerate() {
-            let (tx, jrx) = channel::<Arc<Job>>();
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let (tx, mrx) = channel::<Msg>();
             let plan = plan.clone();
+            let slab = slab.clone();
+            let prefs = prefs.clone();
+            let cur = current_seq.clone();
             let rtx = rtx.clone();
-            handles.push(std::thread::spawn(move || worker_loop(wi, plan, set, jrx, rtx)));
+            handles.push(std::thread::spawn(move || {
+                worker_loop(wi, plan, slab, prefs, sched, cur, mrx, rtx)
+            }));
             txs.push(tx);
         }
-        Pool { txs, rx, handles }
+        Pool { txs, rx, handles, seq: AtomicU64::new(0), current_seq }
     }
 
     /// Broadcast one job to every worker and fold the partial results.
-    /// Exactly one reply per worker is consumed, so queries cannot
-    /// interleave (the engine additionally serializes callers).
+    /// The fold counts exactly one reply per worker *for this
+    /// dispatch's sequence number*; late replies from an abandoned
+    /// earlier query are discarded, and the first error fails the
+    /// query immediately (the engine marks everything dirty, so any
+    /// cache state the stragglers still write is recomputed next time).
     pub fn run(&self, job: Arc<Job>) -> Result<Aggregate> {
-        // drop any stale replies a previously failed dispatch left behind
-        while self.rx.try_recv().is_ok() {}
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        // publish before broadcasting: a worker still on an abandoned
+        // job observes the bump and stops claiming slots
+        self.current_seq.store(seq, Ordering::SeqCst);
+        let cursors = (0..self.txs.len()).map(|_| AtomicUsize::new(0)).collect();
+        let d = Arc::new(Dispatch { seq, cursors, job: job.clone() });
         for tx in &self.txs {
-            tx.send(job.clone())
+            tx.send(Msg::Eval(d.clone()))
                 .map_err(|_| anyhow!("evaluation worker channel closed"))?;
         }
         let mut correct = 0usize;
         let mut computed = 0u64;
         let mut reused = 0u64;
         let mut gemm_s = 0.0f64;
+        let mut stolen = 0u64;
+        let mut worker_shards = Vec::with_capacity(self.txs.len());
         let mut parts: Vec<(usize, Vec<f32>)> = Vec::new();
         let mut cand_correct = vec![0usize; job.cands.len()];
         let mut cand_parts: Vec<(usize, Vec<Vec<f32>>)> = Vec::new();
-        let mut first_err: Option<anyhow::Error> = None;
-        for _ in 0..self.txs.len() {
+        while worker_shards.len() < self.txs.len() {
             match self.rx.recv() {
-                Ok(reply) => match reply.result {
-                    Ok(p) => {
-                        correct += p.correct;
-                        computed += p.computed;
-                        reused += p.reused;
-                        gemm_s += p.gemm_s;
-                        parts.extend(p.shards);
-                        for (a, &b) in cand_correct.iter_mut().zip(&p.cand_correct) {
-                            *a += b;
-                        }
-                        cand_parts.extend(p.cand_shards);
+                Ok(reply) => {
+                    if reply.seq != seq {
+                        continue; // late reply from an abandoned query
                     }
-                    Err(e) => {
-                        if first_err.is_none() {
-                            first_err = Some(e);
+                    match reply.result {
+                        Ok(p) => {
+                            correct += p.correct;
+                            computed += p.computed;
+                            reused += p.reused;
+                            gemm_s += p.gemm_s;
+                            stolen += p.stolen;
+                            worker_shards.push(p.shards_done);
+                            parts.extend(p.shards);
+                            for (a, &b) in cand_correct.iter_mut().zip(&p.cand_correct) {
+                                *a += b;
+                            }
+                            cand_parts.extend(p.cand_shards);
                         }
+                        // fail fast: stragglers of this query abort at
+                        // the next seq bump and their replies are
+                        // discarded by the seq check above
+                        Err(e) => return Err(e),
                     }
-                },
+                }
                 Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow!("evaluation worker terminated unexpectedly"));
-                    }
-                    break;
+                    return Err(anyhow!("evaluation worker terminated unexpectedly"));
                 }
             }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
         }
         parts.sort_by_key(|(gi, _)| *gi);
         let logits = parts.into_iter().flat_map(|(_, l)| l).collect();
@@ -186,7 +344,49 @@ impl Pool {
                 cand_logits[ci].extend(l);
             }
         }
-        Ok(Aggregate { correct, computed, reused, gemm_s, logits, cand_correct, cand_logits })
+        Ok(Aggregate {
+            correct,
+            computed,
+            reused,
+            gemm_s,
+            logits,
+            cand_correct,
+            cand_logits,
+            stolen,
+            worker_shards,
+        })
+    }
+
+    /// Build a batch of packs on the pool, the engine thread included:
+    /// fan the batch out, claim tasks alongside the workers, then
+    /// collect every task's result (indexed like `tasks`). Callers
+    /// only use this while no eval query is in flight (the engine's
+    /// state lock serializes both).
+    pub fn pack_parallel(
+        &self,
+        plan: &Plan,
+        tasks: Vec<PackTask>,
+    ) -> Vec<Result<Option<Arc<PackedLayer>>>> {
+        let n = tasks.len();
+        let (otx, orx) = channel();
+        let batch = Arc::new(PackBatch { tasks, cursor: AtomicUsize::new(0), out: otx });
+        for tx in &self.txs {
+            // a closed channel only means that worker is gone; the
+            // engine's own drain below still covers every task
+            let _ = tx.send(Msg::Pack(batch.clone()));
+        }
+        batch.drain(plan);
+        let mut out: Vec<Option<Result<Option<Arc<PackedLayer>>>>> =
+            (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            match orx.recv() {
+                Ok((i, r)) => out[i] = Some(r),
+                Err(_) => break,
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow!("pack worker terminated unexpectedly"))))
+            .collect()
     }
 }
 
@@ -200,73 +400,308 @@ impl Drop for Pool {
     }
 }
 
-/// Fold one job over a worker's shards, updating the caches in place.
-fn eval_set(
+/// Evaluate one claimed slot (priming its cache on first claim) and
+/// fold the outcome into the worker's partial.
+fn eval_slot(plan: &Plan, slot: &mut Slot, job: &Job, p: &mut Partial) -> Result<()> {
+    let Slot { gi, shard, cache } = slot;
+    let gi = *gi;
+    let _span = crate::telemetry::span("exec.shard").shard(gi);
+    if let Some((dgi, ms)) = job.hooks.delay_ms_on_shard {
+        if dgi == gi {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+    if job.hooks.panic_on_shard == Some(gi) {
+        panic!("injected test panic on shard {gi}");
+    }
+    if cache.is_none() {
+        *cache = Some(ActCache::primed(plan, shard));
+    }
+    let cache = cache.as_mut().expect("cache primed above");
+    let out = cache.eval(plan, shard, job)?;
+    p.correct += out.correct;
+    p.computed += out.computed;
+    p.reused += out.reused;
+    p.gemm_s += out.gemm_s;
+    if job.want_logits {
+        p.shards.push((gi, out.logits));
+    }
+    // batched oracle: the base pass above synced this shard's
+    // checkpoint cache, so every candidate reuses the shared prefix
+    // and recomputes only its own suffix (scratch slots — the cache
+    // itself is never touched)
+    if !job.cands.is_empty() {
+        let mut per_cand: Vec<Vec<f32>> = Vec::new();
+        for (ci, cand) in job.cands.iter().enumerate() {
+            let co = cache.eval_candidate(plan, shard, job, cand, job.want_logits)?;
+            p.cand_correct[ci] += co.correct;
+            p.computed += co.computed;
+            p.reused += co.reused;
+            p.gemm_s += co.gemm_s;
+            if job.want_logits {
+                per_cand.push(co.logits);
+            }
+        }
+        if job.want_logits {
+            p.cand_shards.push((gi, per_cand));
+        }
+    }
+    Ok(())
+}
+
+/// Claim and evaluate slots for one dispatch: the worker's own
+/// preference list first (warm caches), then — under the stealing
+/// scheduler — the other workers' lists in circular order. The
+/// stale-abort check runs before each claim *and again under the slot
+/// lock*: the engine bumps `current_seq` before broadcasting a new
+/// dispatch, and any fresh claimer must acquire the slot lock after
+/// that bump is visible, so a stale worker can never overwrite
+/// fresh-query cache state.
+fn eval_claimed(
+    wi: usize,
     plan: &Plan,
-    set: &[(usize, Shard)],
-    caches: &mut [ActCache],
-    job: &Job,
+    slab: &[Mutex<Slot>],
+    prefs: &[Vec<usize>],
+    sched: SchedKind,
+    current_seq: &AtomicU64,
+    d: &Dispatch,
 ) -> Result<Partial> {
+    let job = &*d.job;
     let mut p = Partial {
         cand_correct: vec![0usize; job.cands.len()],
         ..Partial::default()
     };
-    for ((gi, shard), cache) in set.iter().zip(caches.iter_mut()) {
-        let _span = crate::telemetry::span("exec.shard").shard(*gi);
-        let out = cache.eval(plan, shard, job)?;
-        p.correct += out.correct;
-        p.computed += out.computed;
-        p.reused += out.reused;
-        p.gemm_s += out.gemm_s;
-        if job.want_logits {
-            p.shards.push((*gi, out.logits));
-        }
-        // batched oracle: the base pass above synced this shard's
-        // checkpoint cache, so every candidate reuses the shared
-        // prefix and recomputes only its own suffix (scratch slots —
-        // the cache itself is never touched)
-        if !job.cands.is_empty() {
-            let mut per_cand: Vec<Vec<f32>> = Vec::new();
-            for (ci, cand) in job.cands.iter().enumerate() {
-                let co = cache.eval_candidate(plan, shard, job, cand, job.want_logits)?;
-                p.cand_correct[ci] += co.correct;
-                p.computed += co.computed;
-                p.reused += co.reused;
-                p.gemm_s += co.gemm_s;
-                if job.want_logits {
-                    per_cand.push(co.logits);
-                }
+    let n_workers = prefs.len();
+    let lists = match sched {
+        SchedKind::Static => 1,
+        SchedKind::Steal => n_workers,
+    };
+    'outer: for k in 0..lists {
+        let src = (wi + k) % n_workers;
+        loop {
+            let i = d.cursors[src].fetch_add(1, Ordering::SeqCst);
+            if i >= prefs[src].len() {
+                break;
             }
-            if job.want_logits {
-                p.cand_shards.push((*gi, per_cand));
+            if current_seq.load(Ordering::SeqCst) != d.seq {
+                break 'outer; // the engine moved on — stop claiming
+            }
+            let mut slot = slab[prefs[src][i]].lock().unwrap_or_else(|e| e.into_inner());
+            if current_seq.load(Ordering::SeqCst) != d.seq {
+                break 'outer; // re-check under the lock (see above)
+            }
+            eval_slot(plan, &mut slot, job, &mut p)?;
+            p.shards_done += 1;
+            if src != wi {
+                p.stolen += 1;
             }
         }
     }
+    // gauges, not counts: a zero is part of the balance picture, and
+    // emitting unconditionally keeps the trace schema independent of
+    // whether this particular query happened to steal
+    crate::telemetry::gauge("exec.steal", p.stolen as f64);
+    crate::telemetry::gauge("exec.worker_shards", p.shards_done as f64);
     Ok(p)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wi: usize,
     plan: Arc<Plan>,
-    mut set: Vec<(usize, Shard)>,
-    jobs: Receiver<Arc<Job>>,
+    slab: Arc<Vec<Mutex<Slot>>>,
+    prefs: Arc<Vec<Vec<usize>>>,
+    sched: SchedKind,
+    current_seq: Arc<AtomicU64>,
+    msgs: Receiver<Msg>,
     replies: Sender<Reply>,
 ) {
     crate::telemetry::set_thread_tag(&format!("worker{wi:02}"));
-    let mut caches: Vec<ActCache> =
-        set.iter_mut().map(|(_, s)| ActCache::primed(&plan, s)).collect();
-    while let Ok(job) = jobs.recv() {
-        // a panic must not starve the engine's reply count — convert it
-        // into an error reply instead
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            eval_set(&plan, &set, &mut caches, &job)
-        }))
-        .unwrap_or_else(|_| Err(anyhow!("evaluation worker panicked")));
-        // flush before replying: once the engine has every reply it may
-        // drain the sink, and this thread's spans must already be there
-        crate::telemetry::flush_thread();
-        if replies.send(Reply { result }).is_err() {
-            return; // engine dropped — shut down
+    while let Ok(msg) = msgs.recv() {
+        match msg {
+            Msg::Pack(batch) => {
+                batch.drain(&plan);
+            }
+            Msg::Eval(d) => {
+                // a panic must not starve the engine's reply count —
+                // convert it into an error reply instead
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    eval_claimed(wi, &plan, &slab, &prefs, sched, &current_seq, &d)
+                }))
+                .unwrap_or_else(|_| Err(anyhow!("evaluation worker panicked")));
+                // flush before replying: once the engine has every
+                // reply it may drain the sink, and this thread's spans
+                // must already be there
+                crate::telemetry::flush_thread();
+                if replies.send(Reply { seq: d.seq, result }).is_err() {
+                    return; // engine dropped — shut down
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelArch;
+
+    /// Minimal 2-layer graph (gap → fc) with one prunable layer: small
+    /// enough that the pool tests can hand-build jobs and shards.
+    const POOL_ARCH: &str = r#"{
+      "name": "pooltoy", "dataset": "synth", "input": [2, 2, 1], "classes": 2,
+      "batch": 4,
+      "layers": [
+        {"name": "gap", "op": "gap", "inputs": ["input"], "in_shape": [2,2,1],
+         "out_shape": [1]},
+        {"name": "f1", "op": "fc", "inputs": ["gap"], "relu": false,
+         "in_shape": [1], "out_shape": [2], "in_ch": 1, "out_ch": 2}
+      ],
+      "prunable": ["f1"],
+      "dep_groups": [],
+      "act_scales": [0.5],
+      "act_signed": [true],
+      "acc_int8": 0.0, "n_params": 0
+    }"#;
+
+    fn pool_plan() -> Arc<Plan> {
+        let arch = ModelArch::from_json(&crate::io::json::parse(POOL_ARCH).unwrap()).unwrap();
+        Arc::new(Plan::build(&arch, [2, 2, 1]).unwrap())
+    }
+
+    /// Two 2-row shards with asymmetric labels, so swapping the fc
+    /// weight sign flips which shard scores correct rows.
+    fn pool_sets() -> Vec<Vec<(usize, Shard)>> {
+        let mk = |base: f32, labels: Vec<i64>| Shard {
+            rows: 2,
+            images: (0..2 * 4).map(|i| base + 0.1 * i as f32).collect(),
+            labels,
+        };
+        vec![
+            vec![(0, mk(1.0, vec![1, 1]))],
+            vec![(1, mk(2.0, vec![0, 1]))],
+        ]
+    }
+
+    /// A job whose fc weights make class `cls` the argmax everywhere
+    /// (positive gap output times a signed weight pair).
+    fn pool_job(cls: usize, hooks: TestHooks) -> Arc<Job> {
+        let wdata = if cls == 0 { vec![1.0f32, -1.0] } else { vec![-1.0f32, 1.0] };
+        Arc::new(Job {
+            w: vec![Arc::new(Tensor::new(vec![1, 2], wdata))],
+            b: vec![Arc::new(Tensor::new(vec![2], vec![0.0, 0.0]))],
+            packs: vec![None],
+            bits: vec![8.0],
+            dirty_layers: vec![true, true],
+            want_logits: true,
+            cands: Vec::new(),
+            hooks,
+        })
+    }
+
+    #[test]
+    fn steal_and_static_agree_bitwise() {
+        for sched in [SchedKind::Static, SchedKind::Steal] {
+            let pool = Pool::spawn(pool_plan(), pool_sets(), sched);
+            let a = pool.run(pool_job(0, TestHooks::default())).unwrap();
+            assert_eq!(a.correct, 1, "class-0 weights vs labels [1,1] + [0,1]");
+            let b = pool.run(pool_job(1, TestHooks::default())).unwrap();
+            assert_eq!(b.correct, 3, "class-1 weights vs labels [1,1] + [0,1]");
+            assert_eq!(b.worker_shards.iter().sum::<usize>(), 2);
+        }
+        // bitwise parity of the logits across schedulers
+        let ps = Pool::spawn(pool_plan(), pool_sets(), SchedKind::Static);
+        let pw = Pool::spawn(pool_plan(), pool_sets(), SchedKind::Steal);
+        let ls = ps.run(pool_job(1, TestHooks::default())).unwrap().logits;
+        let lw = pw.run(pool_job(1, TestHooks::default())).unwrap().logits;
+        assert_eq!(
+            ls.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            lw.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    /// Stealing must actually happen when a worker stalls: worker 1
+    /// owns no shards, so any shard it evaluates is by definition a
+    /// steal, and the stolen/worker_shards accounting must record it.
+    #[test]
+    fn worker_with_empty_preference_list_steals_its_work() {
+        // worker 1 owns nothing, so every shard it evaluates is by
+        // definition stolen; holding shard 0's claimer asleep for
+        // 200 ms guarantees worker 1 wakes in time to claim at least
+        // one of the remaining tickets, whatever the interleaving
+        let mk = |base: f32, labels: Vec<i64>| Shard {
+            rows: 2,
+            images: (0..2 * 4).map(|i| base + 0.1 * i as f32).collect(),
+            labels,
+        };
+        let sets = vec![
+            vec![
+                (0, mk(1.0, vec![1, 1])),
+                (1, mk(2.0, vec![0, 1])),
+                (2, mk(3.0, vec![1, 0])),
+            ],
+            vec![],
+        ];
+        let pool = Pool::spawn(pool_plan(), sets, SchedKind::Steal);
+        let agg = pool
+            .run(pool_job(
+                1,
+                TestHooks { panic_on_shard: None, delay_ms_on_shard: Some((0, 200)) },
+            ))
+            .unwrap();
+        assert_eq!(agg.correct, 4, "class-1 weights vs labels [1,1]+[0,1]+[1,0]");
+        assert_eq!(agg.worker_shards.iter().sum::<usize>(), 3);
+        assert!(agg.stolen >= 1, "idle worker never claimed off-list work");
+    }
+
+    /// Regression for the reply-correlation bug: a worker still
+    /// *processing* a failed job replies late, and that reply must not
+    /// be folded into the next query. Job A panics on shard 0 (fails
+    /// the query fast) while shard 1's worker is held mid-job; job B
+    /// then runs immediately and must see only its own replies.
+    #[test]
+    fn late_reply_from_failed_job_is_discarded() {
+        let pool = Pool::spawn(pool_plan(), pool_sets(), SchedKind::Steal);
+        let job_a = pool_job(
+            0,
+            TestHooks { panic_on_shard: Some(0), delay_ms_on_shard: Some((1, 200)) },
+        );
+        let err = pool.run(job_a).expect_err("injected panic must fail the query");
+        assert!(err.to_string().contains("panicked"), "unexpected error: {err}");
+        // worker 1 is still asleep inside job A; its late Ok reply
+        // lands during job B's fold and must be discarded by seq
+        let agg = pool.run(pool_job(1, TestHooks::default())).unwrap();
+        let fresh = Pool::spawn(pool_plan(), pool_sets(), SchedKind::Steal)
+            .run(pool_job(1, TestHooks::default()))
+            .unwrap();
+        assert_eq!(agg.correct, fresh.correct);
+        assert_eq!(
+            agg.logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fresh.logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // and the pool stays healthy for further queries
+        let again = pool.run(pool_job(0, TestHooks::default())).unwrap();
+        assert_eq!(again.correct, 1);
+    }
+
+    #[test]
+    fn pack_parallel_builds_every_task() {
+        let plan = pool_plan();
+        let pool = Pool::spawn(plan.clone(), pool_sets(), SchedKind::Steal);
+        let w = Arc::new(Tensor::new(vec![1, 2], vec![0.5f32, -0.5]));
+        let tasks: Vec<PackTask> = (0..5)
+            .map(|k| PackTask { pi: 0, w: w.clone(), bits: 2.0 + k as f32 })
+            .collect();
+        let results = pool.pack_parallel(&plan, tasks);
+        assert_eq!(results.len(), 5);
+        for (k, r) in results.into_iter().enumerate() {
+            let built = r.unwrap();
+            // parity with the serial recipe, task by task
+            let serial = build_pack(
+                &plan,
+                &PackTask { pi: 0, w: w.clone(), bits: 2.0 + k as f32 },
+            );
+            assert_eq!(built.is_some(), serial.is_some());
         }
     }
 }

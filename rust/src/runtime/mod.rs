@@ -125,6 +125,57 @@ pub fn default_kernel() -> KernelKind {
         .unwrap_or_default()
 }
 
+/// How the native engine's worker pool schedules cache shards (the
+/// CLI's `--sched`). Both produce **bit-identical** results at every
+/// thread count and every steal order — the reduction sorts partials by
+/// shard index and sums integer counts, so evaluation order never leaks
+/// into the fold (pinned by `rust/tests/exec_engine.rs` and
+/// `rust/tests/kernel_conformance.rs`). Purely a performance knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedKind {
+    /// The pre-stealing assignment: worker `w` evaluates exactly the
+    /// shards `gi % threads == w` (round-robin), never touching another
+    /// worker's slots. A straggler stalls the reduction barrier.
+    Static,
+    /// Work stealing (default): workers claim shards from a shared slab
+    /// via atomic ticket counters, preferring their round-robin slots
+    /// (warm `ActCache`s) and stealing from other workers' preference
+    /// lists only once their own is drained. Dirty-layer packing also
+    /// fans out across the idle pool before the eval broadcast.
+    #[default]
+    Steal,
+}
+
+impl SchedKind {
+    /// Parse a `--sched` flag value (`static` | `steal`).
+    pub fn parse(s: &str) -> Result<SchedKind> {
+        match s {
+            "static" => Ok(SchedKind::Static),
+            "steal" => Ok(SchedKind::Steal),
+            other => bail!("unknown scheduler `{other}` (expected `static` or `steal`)"),
+        }
+    }
+
+    /// Flag-style name of the scheduler.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Static => "static",
+            SchedKind::Steal => "steal",
+        }
+    }
+}
+
+/// Scheduler default for new sessions: the `HAPQ_SCHED` environment
+/// variable when set to a valid scheduler name, else
+/// [`SchedKind::Steal`]. The `HAPQ_SCHED=static` CI lane drives the
+/// whole suite through the static assignment.
+pub fn default_sched() -> SchedKind {
+    std::env::var("HAPQ_SCHED")
+        .ok()
+        .and_then(|v| SchedKind::parse(&v).ok())
+        .unwrap_or_default()
+}
+
 /// Parse a `--memo` flag value / `HAPQ_MEMO` setting (`on`/`off`,
 /// `1`/`0`, `true`/`false`).
 pub fn parse_memo(s: &str) -> Result<bool> {
@@ -201,6 +252,12 @@ pub struct RuntimeStats {
     pub pack_hits: u64,
     /// packs actually (re)built — the pack-cache miss count
     pub pack_misses: u64,
+    /// shard scheduler answering accuracy queries (`--sched`; backends
+    /// without the native engine report [`SchedKind::Static`])
+    pub sched: SchedKind,
+    /// shards claimed from another worker's preference list, summed
+    /// across all queries so far (0 under `--sched static`)
+    pub steals: u64,
 }
 
 impl Default for RuntimeStats {
@@ -214,6 +271,8 @@ impl Default for RuntimeStats {
             gemm_secs: 0.0,
             pack_hits: 0,
             pack_misses: 0,
+            sched: SchedKind::Static,
+            steals: 0,
         }
     }
 }
@@ -248,12 +307,14 @@ impl crate::telemetry::MetricsSource for RuntimeStats {
         reg.counter("exec.layers_reused", self.layers_reused);
         reg.counter("exec.pack_hits", self.pack_hits);
         reg.counter("exec.pack_misses", self.pack_misses);
+        reg.counter("exec.steals", self.steals);
         reg.gauge("exec.threads", self.threads as f64);
         reg.gauge("exec.pack_secs", self.pack_secs);
         reg.gauge("exec.gemm_secs", self.gemm_secs);
         reg.gauge("exec.cache_hit_rate", self.cache_hit_rate());
         reg.gauge("exec.pack_cache_hit_rate", self.pack_cache_hit_rate());
         reg.label("exec.kernel", self.kernel.name());
+        reg.label("exec.sched", self.sched.name());
     }
 }
 
@@ -513,12 +574,14 @@ impl InferenceSession {
             threads,
             default_kernel(),
             MemoConfig::default(),
+            default_sched(),
         )
     }
 
     /// [`Self::open`] with an explicit compute kernel (the CLI's
-    /// `--kernel`) and memoization config (the CLI's `--memo` family);
-    /// both ignored by PJRT, whose executor is the AOT graph.
+    /// `--kernel`), memoization config (the CLI's `--memo` family) and
+    /// shard scheduler (the CLI's `--sched`); all ignored by PJRT,
+    /// whose executor is the AOT graph.
     #[allow(clippy::too_many_arguments)]
     pub fn open_with(
         kind: BackendKind,
@@ -531,13 +594,14 @@ impl InferenceSession {
         threads: usize,
         kernel: KernelKind,
         memo: MemoConfig,
+        sched: SchedKind,
     ) -> Result<InferenceSession> {
         let batch = batch.unwrap_or(arch.batch);
         match kind {
             BackendKind::Native => {
                 let data = EvalData::load(arch, data_npz, split, limit, batch)?;
-                Ok(Self::from_backend(Box::new(NativeBackend::with_memo(
-                    arch, data, threads, kernel, memo,
+                Ok(Self::from_backend(Box::new(NativeBackend::with_sched(
+                    arch, data, threads, kernel, memo, sched,
                 )?)))
             }
             #[cfg(feature = "pjrt")]
@@ -625,6 +689,19 @@ mod tests {
         // backends without the native engine report the f32 reference
         assert_eq!(RuntimeStats::default().kernel, KernelKind::F32);
         assert_eq!(RuntimeStats::default().pack_secs, 0.0);
+    }
+
+    #[test]
+    fn sched_kind_parses() {
+        assert_eq!(SchedKind::parse("static").unwrap(), SchedKind::Static);
+        assert_eq!(SchedKind::parse("steal").unwrap(), SchedKind::Steal);
+        assert!(SchedKind::parse("greedy").is_err());
+        // stealing is the default; HAPQ_SCHED can override it
+        assert_eq!(SchedKind::default(), SchedKind::Steal);
+        assert_eq!(SchedKind::default().name(), "steal");
+        // backends without the native engine report the static scheduler
+        assert_eq!(RuntimeStats::default().sched, SchedKind::Static);
+        assert_eq!(RuntimeStats::default().steals, 0);
     }
 
     #[test]

@@ -72,8 +72,8 @@ use anyhow::{bail, Result};
 
 use super::exec::{default_threads, Engine};
 use super::{
-    default_kernel, default_memo, Candidate, EvalData, InferenceBackend, KernelKind, MemoConfig,
-    RuntimeStats,
+    default_kernel, default_memo, default_sched, Candidate, EvalData, InferenceBackend,
+    KernelKind, MemoConfig, RuntimeStats, SchedKind,
 };
 use crate::model::{Layer, ModelArch, Op, Weights};
 use crate::nn::mat::{CodeMat, Mat, PackedMat};
@@ -702,7 +702,23 @@ impl NativeBackend {
         kernel: KernelKind,
         memo: MemoConfig,
     ) -> Result<NativeBackend> {
-        let engine = Engine::with_memo(arch, &data, threads, kernel, memo)?;
+        Self::with_sched(arch, data, threads, kernel, memo, default_sched())
+    }
+
+    /// Build with an explicit shard scheduler (`--sched`) on top of
+    /// [`Self::with_memo`]. `steal` (the default) lets idle workers
+    /// claim shards from loaded ones; `static` is the fixed round-robin
+    /// ownership. Both are bit-identical at every thread count — the
+    /// scheduler only changes which worker evaluates a shard.
+    pub fn with_sched(
+        arch: &ModelArch,
+        data: EvalData,
+        threads: usize,
+        kernel: KernelKind,
+        memo: MemoConfig,
+        sched: SchedKind,
+    ) -> Result<NativeBackend> {
+        let engine = Engine::with_sched(arch, &data, threads, kernel, memo, sched)?;
         Ok(NativeBackend { arch: arch.clone(), data, engine })
     }
 

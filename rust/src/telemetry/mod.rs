@@ -36,8 +36,12 @@
 //! flush before answering each job, so the main thread always drains a
 //! complete set). [`finish`] serialises buffers grouped by tag in
 //! lexicographic order, each thread's events in emission order with a
-//! per-thread `seq` — a deterministic layout because shard→worker
-//! assignment is static.
+//! per-thread `seq`. The layout is deterministic whenever shard→worker
+//! assignment is — under `--sched static` at any thread count, or
+//! under `--sched steal` single-threaded. Multi-thread stealing claims
+//! shards in a timing-dependent order by design, so there the trace
+//! faithfully records whichever worker ran each shard (run results
+//! stay bit-identical regardless; `rust/tests/telemetry.rs`).
 
 pub mod analyze;
 

@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use hapq::model::{Layer, ModelArch, Op, Weights};
-use hapq::runtime::{EvalData, InferenceBackend, KernelKind, MemoConfig, NativeBackend};
+use hapq::runtime::{EvalData, InferenceBackend, KernelKind, MemoConfig, NativeBackend, SchedKind};
 use hapq::tensor::Tensor;
 use hapq::util::proptest::forall;
 use hapq::util::rng::Rng;
@@ -341,6 +341,120 @@ fn memoized_engine_is_bit_identical_to_memo_off_across_threads_and_kernels() {
                     {
                         return false;
                     }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Deliberately skewed evaluation data: one fat batch holding most of
+/// the examples plus single-row tail batches. Under `--sched static`
+/// this loads one worker's preferred range far heavier than the rest —
+/// exactly the imbalance the work-stealing scheduler exists to drain.
+fn skewed_data(fx: &Fixture) -> EvalData {
+    let [h, w, c] = fx.arch.input;
+    let per = h * w * c;
+    let n_ex = fx.labels.len();
+    let fat = (n_ex - 2).max(1); // 3..=6 examples -> fat batch of 1..=4
+    let mut rows_per_batch = vec![fat];
+    rows_per_batch.extend(std::iter::repeat(1).take(n_ex - fat));
+    let batch = fat.max(1);
+    let mut image_batches = Vec::new();
+    let mut label_batches = Vec::new();
+    let mut i = 0usize;
+    for rows in rows_per_batch {
+        // pad to the executor batch size by repeating the first row
+        // (padded rows are ignored at scoring time, as in from_arrays)
+        let mut buf = Vec::with_capacity(batch * per);
+        buf.extend_from_slice(&fx.images.data[i * per..(i + rows) * per]);
+        while buf.len() < batch * per {
+            buf.extend_from_slice(&fx.images.data[i * per..i * per + per]);
+        }
+        image_batches.push(buf);
+        label_batches.push(fx.labels[i..i + rows].to_vec());
+        i += rows;
+    }
+    EvalData { batch, input: [h, w, c], image_batches, label_batches, n_examples: n_ex }
+}
+
+#[test]
+fn steal_scheduler_is_bit_identical_to_static_across_threads_and_kernels() {
+    // the perf contract of the work-stealing shard scheduler (ISSUE
+    // 10): whatever order workers claim (or steal) shards in, and
+    // whether the dirty-layer packs were fanned across the pool or
+    // built serially, the logits, correct counts and pack-cache stats
+    // must match the static broadcast bit for bit — on skewed shard
+    // sizes, at every (thread count, kernel) combination, across
+    // arbitrary dirty sequences
+    forall("steal == static over dirty sequences", gen_fixture, |fx| {
+        let n = fx.arch.prunable.len();
+        for &threads in &[1usize, 4] {
+            for &kernel in &[KernelKind::F32, KernelKind::Int] {
+                let mk = |sched| {
+                    NativeBackend::with_sched(
+                        &fx.arch,
+                        skewed_data(fx),
+                        threads,
+                        kernel,
+                        MemoConfig::default(),
+                        sched,
+                    )
+                    .unwrap()
+                };
+                let st = mk(SchedKind::Static);
+                let wk = mk(SchedKind::Steal);
+                let mut weights = fx.weights.clone();
+                let mut bits = fx.act_bits.clone();
+                let mut rng = Rng::new(fx.seed ^ (threads as u64) ^ ((kernel as u64) << 8));
+                for _round in 0..4 {
+                    match rng.below(3) {
+                        0 => {
+                            // RL-step pattern: one layer's weights move
+                            let i = rng.below(n);
+                            for v in weights.w[i].data.iter_mut() {
+                                *v = *v * 1.25 + 0.01;
+                            }
+                            st.invalidate(i);
+                            wk.invalidate(i);
+                        }
+                        1 => {
+                            // unhinted precision change
+                            let i = rng.below(n);
+                            bits[i] = (2 + rng.below(7)) as f32;
+                        }
+                        _ => {
+                            // episode reset
+                            for wt in weights.w.iter_mut() {
+                                for v in wt.data.iter_mut() {
+                                    *v *= 0.9;
+                                }
+                            }
+                            st.invalidate_all();
+                            wk.invalidate_all();
+                        }
+                    }
+                    if st.engine_logits(&weights, &bits).unwrap()
+                        != wk.engine_logits(&weights, &bits).unwrap()
+                    {
+                        return false;
+                    }
+                    if st.accuracy(&weights, &bits).unwrap()
+                        != wk.accuracy(&weights, &bits).unwrap()
+                    {
+                        return false;
+                    }
+                }
+                // claim order must not perturb the bookkeeping either:
+                // every shard is evaluated exactly once per query and
+                // the pack-cache walk of record is serial under both
+                // schedulers, so computed/reused/hit/miss totals agree
+                let (a, b) = (st.stats(), wk.stats());
+                if (a.layers_computed, a.layers_reused) != (b.layers_computed, b.layers_reused) {
+                    return false;
+                }
+                if (a.pack_hits, a.pack_misses) != (b.pack_hits, b.pack_misses) {
+                    return false;
                 }
             }
         }

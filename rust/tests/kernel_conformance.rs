@@ -23,7 +23,9 @@ use hapq::nn::mat::{set_gemm_tile, CodeMat, Mat, PackedMat, DEFAULT_GEMM_TILE};
 use hapq::pruning::{prune, PruneAlg, PruneCtx};
 use hapq::quant::{quantize_weights, QuantGrid};
 use hapq::runtime::native::quant_params;
-use hapq::runtime::{Candidate, EvalData, InferenceBackend, KernelKind, NativeBackend};
+use hapq::runtime::{
+    Candidate, EvalData, InferenceBackend, KernelKind, MemoConfig, NativeBackend, SchedKind,
+};
 use hapq::tensor::Tensor;
 use hapq::util::proptest::forall;
 use hapq::util::rng::Rng;
@@ -464,8 +466,26 @@ fn engine_logits_bitwise_invariant_under_gemm_tile_and_threads() {
         let ok = [1usize, 3, 8, 17].iter().all(|&tile| {
             set_gemm_tile(tile);
             [1usize, 4].iter().all(|&threads| {
-                let bi = backend(fx, threads, KernelKind::Int);
-                bi.engine_logits(&fx.weights, &fx.act_bits).unwrap() == reference
+                [SchedKind::Static, SchedKind::Steal].iter().all(|&sched| {
+                    let data = EvalData::from_arrays(
+                        &fx.arch,
+                        &fx.images,
+                        &fx.labels,
+                        1000,
+                        fx.arch.batch,
+                    )
+                    .unwrap();
+                    let bi = NativeBackend::with_sched(
+                        &fx.arch,
+                        data,
+                        threads,
+                        KernelKind::Int,
+                        MemoConfig::default(),
+                        sched,
+                    )
+                    .unwrap();
+                    bi.engine_logits(&fx.weights, &fx.act_bits).unwrap() == reference
+                })
             })
         });
         set_gemm_tile(0); // clear the override for the other tests
